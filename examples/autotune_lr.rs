@@ -1,0 +1,58 @@
+//! MODAK autotuning pass (paper §III: "Application runtime parameters can
+//! be further autotuned for improved application performance").
+//!
+//! After the static optimiser picks a container, this example probes the
+//! learning-rate grid with short real training runs inside that container
+//! and reports the best setting (objective: loss after 6 probe steps).
+//!
+//! Run: `cargo run --release --example autotune_lr` (after `make artifacts`).
+
+use anyhow::Result;
+use modak::executor::TrainSession;
+use modak::optimiser::autotune::{grid_search, LR_GRID};
+use modak::registry::Registry;
+use modak::runtime::{Engine, Manifest};
+use modak::trainer::data::Dataset;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let mut registry = Registry::open("images");
+    let tag = "tensorflow:2.1-cpu-src";
+    let image = registry.ensure_built(tag, &manifest)?;
+    println!("== autotune: learning rate inside {tag} ==");
+
+    let engine = Engine::cpu()?;
+    let bundle_manifest = Manifest::load(image.rootfs())?;
+    let probe_steps = 6;
+
+    let result = grid_search(LR_GRID, |lr| {
+        let mut session = TrainSession::new(
+            &engine,
+            &bundle_manifest,
+            image.workload.as_deref().unwrap(),
+            image.variant.as_deref().unwrap(),
+            image.policy,
+            0,
+            lr,
+        )?;
+        let mut data = Dataset::for_workload(&session.workload, 42);
+        let mut loss = f32::NAN;
+        for _ in 0..probe_steps {
+            let (x, y) = data.next_batch();
+            loss = session.step(&x, &y)?;
+        }
+        println!("  probe lr={lr:<5} -> loss {loss:.4} after {probe_steps} steps");
+        Ok(loss as f64)
+    })
+    .ok_or_else(|| anyhow::anyhow!("all probes failed"))?;
+
+    println!(
+        "\nbest learning rate: {} (objective {:.4})",
+        result.best.value, result.best.objective
+    );
+    println!(
+        "MODAK would bake `--lr {}` into the generated job script.",
+        result.best.value
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python package: L1 Pallas kernels + L2 JAX models + AOT lowering.
+
+Never imported at runtime — `python -m compile.aot` runs once under
+`make artifacts` and the Rust binary is self-contained afterwards.
+"""

@@ -1,0 +1,202 @@
+"""AOT lowering: every (workload, variant) -> artifacts/*.hlo.txt + manifest.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+All functions are lowered with return_tuple=True; the Rust runtime unwraps
+the result tuple. `manifest.json` records, for every artifact, the ordered
+input/output tensor specs plus the workload-level structure (param list,
+stage param ranges, variant -> artifact bindings) that drives the generic
+Rust executor.
+
+Run via `make artifacts` (no-op when inputs are unchanged). Python never
+runs after this.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .stages import Model
+from .variants import Variant, Workload, workloads
+
+F32 = jnp.float32
+S32 = jnp.int32
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    Single-output artifacts are lowered *untupled* so the Rust executor can
+    chain their result buffer straight into the next stage via execute_b
+    (device-resident policy) without a host round-trip; multi-output
+    artifacts must be tupled (XLA computations return one value) and are
+    decomposed on the host.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> dict:
+    name = {"float32": "f32", "int32": "s32"}[jnp.dtype(dtype).name]
+    return {"shape": list(shape), "dtype": name}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Emitter:
+    """Lowers functions and accumulates the artifact index."""
+
+    def __init__(self, outdir: pathlib.Path, verbose: bool = True):
+        self.outdir = outdir
+        self.artifacts: dict = {}
+        self.verbose = verbose
+
+    def emit(self, aid: str, fn, in_specs: list) -> str:
+        """Lower `fn` at the given input specs; write `<aid>.hlo.txt`."""
+        lowered = jax.jit(fn).lower(
+            *[_sds(s["shape"], {"f32": F32, "s32": S32}[s["dtype"]])
+              for s in in_specs])
+        out_avals = lowered.out_info
+        flat, _ = jax.tree_util.tree_flatten(out_avals)
+        out_specs = [_spec(o.shape, o.dtype) for o in flat]
+        tupled = len(out_specs) > 1
+        text = to_hlo_text(lowered, return_tuple=tupled)
+        path = self.outdir / f"{aid}.hlo.txt"
+        path.write_text(text)
+        self.artifacts[aid] = {
+            "file": path.name,
+            "inputs": in_specs,
+            "outputs": out_specs,
+            "tupled": tupled,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if self.verbose:
+            print(f"  {aid}: {len(in_specs)} in / {len(out_specs)} out, "
+                  f"{len(text)} chars")
+        return aid
+
+
+def _param_specs(model: Model) -> list:
+    return [_spec(p.shape, F32) for p in model.params]
+
+
+def lower_workload(em: Emitter, wl: Workload) -> dict:
+    """Emit every artifact for one workload; return its manifest entry."""
+    ref_model = wl.model("ref")
+    n = len(ref_model.params)
+    pspecs = _param_specs(ref_model)
+    x_spec = _spec(ref_model.input_shape, F32)
+    y_spec = _spec((ref_model.input_shape[0],), S32)
+    lr_spec = _spec((), F32)
+    seed_spec = _spec((), S32)
+    print(f"workload {wl.name}: {ref_model.param_count} params, "
+          f"input {ref_model.input_shape}")
+
+    # shared artifacts (kernel-independent numerics)
+    init_id = em.emit(f"{wl.name}_init", ref_model.init_fn(), [seed_spec])
+    update_id = em.emit(f"{wl.name}_update", ref_model.update_fn(),
+                        pspecs + pspecs + [lr_spec])
+
+    variants = {}
+    for var in wl.variants:
+        model = wl.model(var.kernel)
+        vkey = f"{wl.name}_{var.name}"
+        if var.kind == "fused":
+            step = em.emit(f"{vkey}_step", model.fused_step_fn(),
+                           pspecs + [x_spec, y_spec, lr_spec])
+            variants[var.name] = {"kind": "fused", "step": step}
+        elif var.kind == "staged":
+            fwd_ids, bwd_ids = [], []
+            h_spec = x_spec
+            act_specs = [h_spec]
+            for gi, st in enumerate(model.stages[:-1]):
+                sp = [pspecs[i] for i in range(*st.prange)]
+                fid = em.emit(f"{vkey}_fwd{gi}_{st.name}",
+                              model.fwd_stage_fn(gi), [h_spec] + sp)
+                fwd_ids.append(fid)
+                h_spec = em.artifacts[fid]["outputs"][0]
+                act_specs.append(h_spec)
+            for gi, st in enumerate(model.stages):
+                sp = [pspecs[i] for i in range(*st.prange)]
+                if st.is_loss:
+                    ins = [act_specs[gi], y_spec] + sp
+                else:
+                    ins = [act_specs[gi], act_specs[gi + 1]] + sp
+                bid = em.emit(f"{vkey}_bwd{gi}_{st.name}",
+                              model.bwd_stage_fn(gi), ins)
+                bwd_ids.append(bid)
+            variants[var.name] = {"kind": "staged", "fwd": fwd_ids,
+                                  "bwd": bwd_ids}
+        elif var.kind == "threestage":
+            n_interior = model.stages[-1].prange[0]
+            fwd = em.emit(f"{vkey}_fwdall", model.fwd_all_fn(),
+                          [x_spec] + pspecs[:n_interior])
+            act_specs = em.artifacts[fwd]["outputs"]
+            bwd = em.emit(f"{vkey}_bwdall", model.bwd_all_fn(),
+                          [x_spec] + act_specs + [y_spec] + pspecs)
+            variants[var.name] = {"kind": "threestage", "fwd": fwd,
+                                  "bwd": bwd}
+        else:
+            raise ValueError(f"unknown variant kind {var.kind}")
+
+    return {
+        "input": x_spec,
+        "labels": y_spec,
+        "batch": ref_model.input_shape[0],
+        "num_classes": ref_model.num_classes,
+        "param_count": ref_model.param_count,
+        "params": [{"name": p.name, **_spec(p.shape, F32)}
+                   for p in ref_model.params],
+        "stages": [{"name": st.name, "prange": list(st.prange),
+                    "is_loss": st.is_loss} for st in ref_model.stages],
+        "init": init_id,
+        "update": update_id,
+        "variants": variants,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--mnist-batch", type=int, default=32)
+    ap.add_argument("--resnet-batch", type=int, default=8)
+    ap.add_argument("--resnet-image", type=int, default=32)
+    ap.add_argument("--resnet-depth", type=int, default=26, choices=(26, 50))
+    ap.add_argument("--resnet-width", type=float, default=0.25)
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    em = Emitter(outdir)
+
+    manifest = {"version": 1, "workloads": {}, "artifacts": em.artifacts,
+                "config": vars(args)}
+    for wl in workloads(mnist_batch=args.mnist_batch,
+                        resnet_batch=args.resnet_batch,
+                        resnet_image=args.resnet_image,
+                        resnet_depth=args.resnet_depth,
+                        resnet_width=args.resnet_width):
+        manifest["workloads"][wl.name] = lower_workload(em, wl)
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(em.artifacts)} artifacts + manifest.json to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

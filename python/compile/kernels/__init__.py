@@ -1,0 +1,52 @@
+"""L1: Pallas kernels for the training hot-spots + pure-jnp oracles.
+
+`ops(kernel)` returns the op table the L2 models are written against, so
+container variants differ only in kernel implementation, never in maths.
+Quality ladder: naive (channel-looped, CNTK-CPU) < generic (per-tap GEMMs,
+old DockerHub binaries) < ref (tuned lowering, custom src builds) ~= pallas
+(the TPU-target blocked kernels, run under interpret on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import ref
+from .conv2d import conv2d_pallas, dense_pallas
+from .matmul import matmul as matmul_pallas
+from .maxpool import maxpool2_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class Ops:
+    """Op table bound to one kernel implementation (see variants.py)."""
+    name: str
+    conv2d: Callable
+    dense: Callable
+    maxpool2: Callable
+    matmul: Callable
+
+
+REF_OPS = Ops("ref", ref.conv2d, ref.dense, ref.maxpool2, ref.matmul)
+PALLAS_OPS = Ops("pallas", conv2d_pallas, dense_pallas, maxpool2_pallas,
+                 matmul_pallas)
+NAIVE_OPS = Ops(
+    "naive", ref.conv2d_naive,
+    # naive profile still uses plain dense (its documented weakness is convs)
+    ref.dense, ref.maxpool2, ref.matmul,
+)
+GENERIC_OPS = Ops(
+    "generic", ref.conv2d_generic,
+    # generic binaries still GEMM dense layers fine; convs are the gap
+    ref.dense, ref.maxpool2, ref.matmul,
+)
+
+
+def ops(kernel: str) -> Ops:
+    """Resolve a kernel-set name ('ref' | 'pallas' | 'naive') to an op table."""
+    table = {"ref": REF_OPS, "pallas": PALLAS_OPS, "naive": NAIVE_OPS,
+             "generic": GENERIC_OPS}
+    if kernel not in table:
+        raise KeyError(f"unknown kernel set {kernel!r}; "
+                       f"expected one of {sorted(table)}")
+    return table[kernel]

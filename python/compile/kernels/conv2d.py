@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: convolution as im2col + blocked GEMM.
+
+cuDNN/MKL implement direct/implicit-GEMM convolutions; the transferable
+insight (DESIGN.md §Hardware-Adaptation) is that conv throughput is set by
+how the contraction is tiled for the memory hierarchy. On TPU the natural
+lowering is im2col (cheap strided slices, fusable by XLA) feeding the
+MXU-blocked Pallas matmul, which is exactly what this module does.
+
+`conv2d_pallas` is the "optimised source build"/nGraph kernel; the naive
+channel-looped conv used by the CNTK-CPU profile lives in ref.py
+(`conv2d_naive`) because it is *deliberately* not a Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .matmul import matmul as pallas_matmul
+
+
+def conv2d_pallas(x: jax.Array, w: jax.Array, stride: int = 1,
+                  padding: str = "VALID") -> jax.Array:
+    """conv2d (NHWC, HWIO) = im2col + Pallas blocked GEMM.
+
+    Matches `ref.conv2d` bit-for-bit up to f32 accumulation order.
+    """
+    kh, kw, ci, co = w.shape
+    patches = ref.im2col(x, kh, kw, stride, padding)
+    n, oh, ow, k = patches.shape
+    out = pallas_matmul(patches.reshape(n * oh * ow, k), w.reshape(k, co))
+    return out.reshape(n, oh, ow, co)
+
+
+def dense_pallas(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully connected layer on the Pallas GEMM."""
+    return pallas_matmul(x, w) + b

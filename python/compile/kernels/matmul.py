@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: blocked matmul (the GEMM hot-spot).
+
+The paper's "custom source build" / MKL / cuDNN wins all reduce to one
+question: is the GEMM inside conv/dense blocked for the memory hierarchy?
+This kernel is the TPU-shaped answer (see DESIGN.md §Hardware-Adaptation):
+MXU-shaped (bm, bk) x (bk, bn) tiles and a BlockSpec grid expressing the
+HBM->VMEM schedule that MKL expresses with cache tiling and cuDNN with
+threadblocks.
+
+Everything here trains in f32, so the accumulator lives directly in the
+output block (revisited at every k step by the BlockSpec index map) — on a
+real TPU with bf16 inputs this would be a pltpu.VMEM f32 scratch instead.
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom-calls); the
+BlockSpec structure is what real-TPU perf is estimated from in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Default MXU-shaped tiles. f32: 3 blocks * 128*128*4B = 192 KiB of VMEM per
+# grid step, ~27x headroom in 16 MiB VMEM for double buffering.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: O[i,j] += A[i,k] @ B[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    rem = x.shape[axis] % m
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, m - rem)
+    return jnp.pad(x, pads)
+
+
+def _fit_tile(dim: int, tile: int) -> int:
+    """Shrink a tile to the next pow2 >= dim when the problem is smaller than
+    the tile, so tiny matmuls are not padded out to 128x128."""
+    return min(tile, max(8, 1 << (dim - 1).bit_length()))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_tiled(a: jax.Array, b: jax.Array, *, bm: int = DEFAULT_BM,
+                 bk: int = DEFAULT_BK, bn: int = DEFAULT_BN) -> jax.Array:
+    """C = A @ B via the blocked Pallas kernel.
+
+    Shapes need not be tile-multiples: inputs are zero-padded up to the tile
+    grid and the result sliced back (zero padding is exact for matmul).
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bk, bn = _fit_tile(m, bm), _fit_tile(k, bk), _fit_tile(n, bn)
+    ap = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    bp = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Differentiable blocked-Pallas GEMM (default MXU tiles).
+
+    pallas_call has no JVP rule, so the training graphs reach the kernel
+    through this custom_vjp: the backward pass is itself two blocked Pallas
+    GEMMs (dA = g @ B^T, dB = A^T @ g) — optimised kernels on the backward
+    hot path too, as a source-built MKL/cuDNN stack would have.
+    """
+    return matmul_tiled(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_tiled(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return matmul_tiled(g, b.T), matmul_tiled(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+               bn: int = DEFAULT_BN, itemsize: int = 4) -> int:
+    """VMEM footprint of one grid step (A, B and O blocks), for the §Perf
+    roofline estimate."""
+    return itemsize * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: 2x2/stride-2 max pooling over NHWC.
+
+Pooling is bandwidth-bound; the kernel processes one batch row of the image
+per grid step with the full channel dim resident (a (1, H, W, C) VMEM block),
+reducing each 2x2 window with jnp.maximum — the TPU-shaped equivalent of the
+vectorised pooling loops in MKL-DNN.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, window: int, stride: int):
+    x = x_ref[...]  # (1, H, W, C)
+    _, h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    acc = None
+    for i in range(window):
+        for j in range(window):
+            sl = jax.lax.slice(
+                x, (0, i, j, 0),
+                (1, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1))
+            acc = sl if acc is None else jnp.maximum(acc, sl)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def maxpool2_pallas(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    """Max pool (VALID) matching ref.maxpool2.
+
+    custom_vjp because pallas_call is not differentiable: the backward pass
+    reuses the reduce_window vjp of the ref oracle (outputs are identical,
+    so the subgradient choice matches).
+    """
+    return _maxpool2_impl(x, window, stride)
+
+
+def _maxpool2_impl(x: jax.Array, window: int, stride: int) -> jax.Array:
+    n, h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, window=window, stride=stride),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _maxpool2_fwd(x, window, stride):
+    # custom_vjp: fwd keeps the primal signature; bwd gets nondiff args first.
+    return _maxpool2_impl(x, window, stride), x
+
+
+def _maxpool2_bwd(window, stride, x, g):
+    from . import ref
+    _, vjp = jax.vjp(lambda xx: ref.maxpool2(xx, window, stride), x)
+    return vjp(g)
+
+
+maxpool2_pallas.defvjp(_maxpool2_fwd, _maxpool2_bwd)

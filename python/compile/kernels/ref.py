@@ -1,0 +1,183 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground
+truth) and the building blocks shared by the staged/fused model graphs.
+
+Every Pallas kernel in this package has an exact functional twin here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts allclose between the two. The model code (L2) is written against this
+module so that swapping `use_pallas=True` in `variants.py` changes only the
+kernel implementation, never the maths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Matmul
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation (matches the Pallas kernel)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (NHWC, HWIO weights, VALID padding, stride configurable)
+# ---------------------------------------------------------------------------
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+           padding: str = "VALID") -> jax.Array:
+    """Standard convolution via lax.conv_general_dilated.
+
+    x: (N, H, W, Ci)   w: (KH, KW, Ci, Co)   ->  (N, OH, OW, Co)
+    """
+    return lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _same_pads(size: int, k: int, stride: int) -> tuple:
+    """XLA-style SAME padding: out = ceil(size/stride), low = total // 2."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: str = "VALID") -> jax.Array:
+    """Extract patches: (N, OH, OW, KH*KW*Ci) in (kh, kw, ci) minor order.
+
+    This is the lowering used by the Pallas conv kernel: conv = im2col + GEMM.
+    SAME padding matches XLA's asymmetric convention exactly, so the Pallas
+    conv is bit-comparable with ref.conv2d at any stride.
+    """
+    n, h, w, ci = x.shape
+    if padding == "SAME":
+        (pt, pb), (pl, pr) = _same_pads(h, kh, stride), _same_pads(w, kw, stride)
+        x = jnp.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+        n, h, w, ci = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = lax.slice(
+                x, (0, i, j, 0),
+                (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, ci),
+                (1, stride, stride, 1))
+            cols.append(sl)
+    # (N, OH, OW, KH*KW, Ci) -> (N, OH, OW, KH*KW*Ci)
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(n, oh, ow, kh * kw * ci)
+
+
+def conv2d_im2col(x: jax.Array, w: jax.Array, stride: int = 1,
+                  padding: str = "VALID") -> jax.Array:
+    """conv2d lowered as im2col + matmul — the reference for the Pallas path."""
+    kh, kw, ci, co = w.shape
+    patches = im2col(x, kh, kw, stride, padding)
+    n, oh, ow, k = patches.shape
+    out = matmul(patches.reshape(n * oh * ow, k), w.reshape(k, co))
+    return out.reshape(n, oh, ow, co)
+
+
+def conv2d_generic(x: jax.Array, w: jax.Array, stride: int = 1,
+                   padding: str = "VALID") -> jax.Array:
+    """Mid-quality convolution: one GEMM per kernel tap (KH*KW dots), no
+    im2col locality, no algorithm selection.
+
+    Models the paper's *generic DockerHub binaries* (TF <= 1.5 images were
+    famously built without AVX2/FMA and with older Eigen conv paths): still
+    vectorised, measurably slower than the tuned lowering. Used by the
+    `*-hub` container profiles; custom `-src` builds get `conv2d`/Pallas.
+    """
+    kh, kw, ci, co = w.shape
+    if padding == "SAME":
+        (pt, pb) = _same_pads(x.shape[1], kh, stride)
+        (pl, pr) = _same_pads(x.shape[2], kw, stride)
+        x = jnp.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+    n, h, wd, _ = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    acc = None
+    for i in range(kh):
+        for j in range(kw):
+            sl = lax.slice(
+                x, (0, i, j, 0),
+                (n, i + (oh - 1) * stride + 1,
+                 j + (ow - 1) * stride + 1, ci),
+                (1, stride, stride, 1))
+            term = jnp.tensordot(sl, w[i, j], axes=[[3], [0]])
+            acc = term if acc is None else acc + term
+    return acc
+
+
+def conv2d_naive(x: jax.Array, w: jax.Array, stride: int = 1,
+                 padding: str = "VALID") -> jax.Array:
+    """Deliberately unoptimised convolution: explicit loop over output
+    channels and kernel taps, all-elementwise (no GEMM/dot anywhere).
+
+    Models the CNTK-CPU profile — its docs state the CPU path lacks the
+    optimised kernels the GPU path has. XLA cannot rescue this into a dot,
+    so it executes as Co*KH*KW broadcast-multiply-accumulate passes.
+    """
+    kh, kw, ci, co = w.shape
+    if padding == "SAME":
+        (pt, pb) = _same_pads(x.shape[1], kh, stride)
+        (pl, pr) = _same_pads(x.shape[2], kw, stride)
+        x = jnp.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+    n, h, wd, _ = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    outs = []
+    for c in range(co):
+        acc = jnp.zeros((n, oh, ow), x.dtype)
+        for i in range(kh):
+            for j in range(kw):
+                sl = lax.slice(
+                    x, (0, i, j, 0),
+                    (n, i + (oh - 1) * stride + 1,
+                     j + (ow - 1) * stride + 1, ci),
+                    (1, stride, stride, 1))
+                acc = acc + jnp.sum(sl * w[i, j, :, c], axis=-1)
+        outs.append(acc)
+    return jnp.stack(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MaxPool (2x2 stride 2 default), ReLU, softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+def maxpool2(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    """Max pooling over NHWC."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return matmul(x, w) + b
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, labels[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,5 @@
+"""L2 model zoo: the paper's two training workloads as staged Models."""
+from .mnist_cnn import mnist_cnn
+from .resnet import resnet
+
+__all__ = ["mnist_cnn", "resnet"]

@@ -1,0 +1,74 @@
+"""The paper's MNIST CNN (§V-E): the canonical Keras `mnist_cnn.py` network.
+
+Architecture (exactly reproducing the paper's 1,199,882 trainable params):
+
+    conv 3x3x32 + relu        ->  26x26x32      (320 params)
+    conv 3x3x64 + relu        ->  24x24x64      (18,496)
+    maxpool 2x2               ->  12x12x64
+    flatten -> dense 128+relu ->  128           (1,179,776)
+    dense 10 + softmax xent   ->  10            (1,290)
+                                         total:  1,199,882
+
+Trained with batch 128 for 12 epochs in the paper; batch and epoch length are
+deployment parameters here (scaled defaults in the Rust testbed — see
+DESIGN.md §1). Stage boundaries mirror where the eager frameworks dispatch:
+conv1 / conv2+pool / dense1 / dense2+loss.
+"""
+from __future__ import annotations
+
+from .. import kernels
+from ..kernels import ref
+from ..stages import Model, ParamSpec, Stage
+
+
+def mnist_cnn(kernel: str = "ref", batch: int = 128,
+              image: int = 28, classes: int = 10) -> Model:
+    """Build the staged MNIST CNN against the given kernel set."""
+    ops = kernels.ops(kernel)
+    c1, c2, d1 = 32, 64, 128
+    # spatial sizes after the two VALID 3x3 convs and the 2x2 pool
+    s_conv2 = image - 4          # 24 for 28x28
+    s_pool = s_conv2 // 2        # 12
+    flat = s_pool * s_pool * c2  # 9216
+
+    params = [
+        ParamSpec("conv1_w", (3, 3, 1, c1), "he_conv"),
+        ParamSpec("conv1_b", (c1,), "zeros"),
+        ParamSpec("conv2_w", (3, 3, c1, c2), "he_conv"),
+        ParamSpec("conv2_b", (c2,), "zeros"),
+        ParamSpec("dense1_w", (flat, d1), "he_dense"),
+        ParamSpec("dense1_b", (d1,), "zeros"),
+        ParamSpec("dense2_w", (d1, classes), "he_dense"),
+        ParamSpec("dense2_b", (classes,), "zeros"),
+    ]
+
+    def conv1(sp, x):
+        w, b = sp
+        return ref.relu(ops.conv2d(x, w) + b)
+
+    def conv2pool(sp, x):
+        w, b = sp
+        return ops.maxpool2(ref.relu(ops.conv2d(x, w) + b))
+
+    def dense1(sp, x):
+        w, b = sp
+        n = x.shape[0]
+        return ref.relu(ops.dense(x.reshape(n, flat), w, b))
+
+    def dense2loss(sp, x, labels):
+        w, b = sp
+        return ref.softmax_xent(ops.dense(x, w, b), labels)
+
+    stages = [
+        Stage("conv1", conv1, (0, 2)),
+        Stage("conv2pool", conv2pool, (2, 4)),
+        Stage("dense1", dense1, (4, 6)),
+        Stage("dense2loss", dense2loss, (6, 8), is_loss=True),
+    ]
+    return Model(
+        name="mnist_cnn",
+        params=params,
+        stages=stages,
+        input_shape=(batch, image, image, 1),
+        num_classes=classes,
+    )

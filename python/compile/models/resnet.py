@@ -1,0 +1,177 @@
+"""The paper's ResNet-50 workload (§V-E), faithful bottleneck architecture.
+
+The paper trains ResNet-50 on ImageNet (224x224, batch 96, fp32) on a
+GTX 1080 Ti. This host is a single CPU core, so the *benchmark config*
+(`resnet50s`) keeps the depth-50 bottleneck topology but scales width and
+input resolution (DESIGN.md §1 substitution table); the full-size config is
+available via `resnet("ref", depth=50, width_mult=1.0, image=224)`.
+
+BatchNorm runs in pure training mode (batch statistics; no running averages
+are carried because the paper never evaluates, it times training epochs).
+Stage boundaries are the canonical block groups — stem / layer1..4 /
+head+loss — which is also where frameworks put their kernel-launch
+boundaries.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import kernels
+from ..kernels import ref
+from ..stages import Model, ParamSpec, Stage
+
+# depth -> blocks per group (all bottleneck, as in He et al. 2016)
+_DEPTHS = {26: (1, 1, 1, 1), 50: (3, 4, 6, 3)}
+_EPS = 1e-5
+
+
+class _P:
+    """Incremental param-spec builder: records specs, hands out indices."""
+
+    def __init__(self):
+        self.specs: list[ParamSpec] = []
+
+    def add(self, name, shape, init) -> int:
+        self.specs.append(ParamSpec(name, tuple(shape), init))
+        return len(self.specs) - 1
+
+    def conv(self, name, kh, kw, ci, co) -> int:
+        return self.add(f"{name}_w", (kh, kw, ci, co), "he_conv")
+
+
+def resnet(kernel: str = "ref", depth: int = 26, width_mult: float = 0.25,
+           image: int = 32, batch: int = 8, classes: int = 10,
+           name: str | None = None) -> Model:
+    """Build a staged bottleneck ResNet.
+
+    depth=50/width_mult=1.0/image=224/classes=1000 is the paper's exact
+    network (25.5M params); the defaults are the scaled benchmark config.
+    """
+    ops = kernels.ops(kernel)
+    blocks = _DEPTHS[depth]
+    base = max(8, int(64 * width_mult))
+    group_width = [base, base * 2, base * 4, base * 8]
+    expansion = 4
+
+    pb = _P()
+    small = image <= 64  # CIFAR-style stem for small inputs
+
+    # ---- stem ----
+    if small:
+        stem_w = pb.conv("stem", 3, 3, 3, base)
+    else:
+        stem_w = pb.conv("stem", 7, 7, 3, base)
+    stem_g = pb.add("stem_bn_g", (base,), "ones")
+    stem_b = pb.add("stem_bn_b", (base,), "zeros")
+
+    # ---- block groups ----
+    # each bottleneck block: 1x1 reduce, 3x3, 1x1 expand (+ projection on
+    # the first block of a group); every conv followed by BN.
+    group_params = []  # [(block_param_idxs...)] per group
+    cin = base
+    for g, (nblocks, width) in enumerate(zip(blocks, group_width)):
+        gp = []
+        cout = width * expansion
+        for b in range(nblocks):
+            stride = 2 if (b == 0 and g > 0) else 1
+            pfx = f"l{g + 1}b{b + 1}"
+            idxs = {
+                "w1": pb.conv(f"{pfx}_c1", 1, 1, cin, width),
+                "g1": pb.add(f"{pfx}_bn1_g", (width,), "ones"),
+                "b1": pb.add(f"{pfx}_bn1_b", (width,), "zeros"),
+                "w2": pb.conv(f"{pfx}_c2", 3, 3, width, width),
+                "g2": pb.add(f"{pfx}_bn2_g", (width,), "ones"),
+                "b2": pb.add(f"{pfx}_bn2_b", (width,), "zeros"),
+                "w3": pb.conv(f"{pfx}_c3", 1, 1, width, cout),
+                "g3": pb.add(f"{pfx}_bn3_g", (cout,), "ones"),
+                "b3": pb.add(f"{pfx}_bn3_b", (cout,), "zeros"),
+                "stride": stride,
+            }
+            if cin != cout or stride != 1:
+                idxs["wp"] = pb.conv(f"{pfx}_proj", 1, 1, cin, cout)
+                idxs["gp"] = pb.add(f"{pfx}_bnp_g", (cout,), "ones")
+                idxs["bp"] = pb.add(f"{pfx}_bnp_b", (cout,), "zeros")
+            gp.append(idxs)
+            cin = cout
+        group_params.append(gp)
+
+    # ---- head ----
+    feat = group_width[3] * expansion
+    head_w = pb.add("head_w", (feat, classes), "he_dense")
+    head_b = pb.add("head_b", (classes,), "zeros")
+
+    specs = pb.specs
+
+    # Stage fns receive the *global-index-shifted* param tuple for their
+    # range; build per-stage index maps so block code stays readable.
+    def make_group_fn(g):
+        gp = group_params[g]
+        s, _ = group_ranges[g]
+
+        def group_fn(sp, x):
+            def at(i):
+                return sp[i - s]
+
+            h = x
+            for idxs in gp:
+                stride = idxs["stride"]
+                inp = h
+                c = ops.conv2d(h, at(idxs["w1"]), stride=1, padding="SAME")
+                c = ref.relu(bn_sp(c, at(idxs["g1"]), at(idxs["b1"])))
+                c = ops.conv2d(c, at(idxs["w2"]), stride=stride,
+                               padding="SAME")
+                c = ref.relu(bn_sp(c, at(idxs["g2"]), at(idxs["b2"])))
+                c = ops.conv2d(c, at(idxs["w3"]), stride=1, padding="SAME")
+                c = bn_sp(c, at(idxs["g3"]), at(idxs["b3"]))
+                if "wp" in idxs:
+                    inp = ops.conv2d(inp, at(idxs["wp"]), stride=stride,
+                                     padding="SAME")
+                    inp = bn_sp(inp, at(idxs["gp"]), at(idxs["bp"]))
+                h = ref.relu(c + inp)
+            return h
+
+        return group_fn
+
+    def bn_sp(x, gamma, beta):
+        mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+        var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+        return gamma * (x - mean) / jnp.sqrt(var + _EPS) + beta
+
+    # ---- stage ranges over the flat param list ----
+    stem_range = (0, 3)
+    group_ranges = []
+    for g, gp in enumerate(group_params):
+        first = gp[0]["w1"]
+        last_idxs = gp[-1]
+        last = max(v for k, v in last_idxs.items() if k != "stride")
+        group_ranges.append((first, last + 1))
+    head_range = (head_w, head_b + 1)
+
+    def stem_fn(sp, x):
+        w, g, b = sp
+        if small:
+            h = ops.conv2d(x, w, stride=1, padding="SAME")
+            return ref.relu(bn_sp(h, g, b))
+        h = ops.conv2d(x, w, stride=2, padding="SAME")
+        h = ref.relu(bn_sp(h, g, b))
+        return ref.maxpool2(h, window=2, stride=2)
+
+    def head_fn(sp, x, labels):
+        w, b = sp
+        pooled = jnp.mean(x, axis=(1, 2))  # global average pool
+        logits = ops.dense(pooled, w, b)
+        return ref.softmax_xent(logits, labels)
+
+    stages = [Stage("stem", stem_fn, stem_range)]
+    for g in range(4):
+        stages.append(Stage(f"layer{g + 1}", make_group_fn(g),
+                            group_ranges[g]))
+    stages.append(Stage("headloss", head_fn, head_range, is_loss=True))
+
+    return Model(
+        name=name or f"resnet{depth}s",
+        params=specs,
+        stages=stages,
+        input_shape=(batch, image, image, 3),
+        num_classes=classes,
+    )

@@ -1,0 +1,237 @@
+"""L2 stage framework: one model definition, many lowering granularities.
+
+The paper's framework/compiler deltas come from *how* a fixed computation is
+dispatched: whole-graph (TF2.x jit / nGraph bridge / XLA clusters) vs per-op
+eager (PyTorch/MXNet) vs session feed-dict (TF1.x). We model that by slicing
+a training step into named stages and lowering the same maths at three
+granularities:
+
+* fused      — one HLO artifact: fwd + bwd + SGD update.
+* staged     — one fwd artifact per stage plus one bwd artifact per stage;
+               the bwd artifact *recomputes* its stage's forward via jax.vjp
+               (activation checkpointing), so only block-boundary
+               activations cross artifact boundaries.
+* threestage — fwd-all / bwd-all / update artifacts (the GPU "hub" regime:
+               few dispatches, large compute per dispatch).
+
+All granularities are numerically equivalent to `jax.grad` of the fused loss
+(pytest asserts this), so the Rust executor's measured differences are pure
+dispatch/copy/kernel effects — exactly the mechanisms the paper measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One trainable tensor: name, shape and initialiser kind."""
+    name: str
+    shape: tuple
+    init: str  # 'he_conv' | 'he_dense' | 'zeros' | 'ones'
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """A contiguous slice of the network.
+
+    `fn(params_tuple, x)` -> activation for interior stages;
+    the final (loss) stage is `fn(params_tuple, x, labels)` -> scalar loss.
+    `prange` is the [start, end) slice of the model's flat param list.
+    """
+    name: str
+    fn: Callable
+    prange: tuple
+    is_loss: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """A staged training workload (see mnist_cnn.py / resnet.py)."""
+    name: str
+    params: Sequence[ParamSpec]
+    stages: Sequence[Stage]
+    input_shape: tuple       # per-batch, e.g. (N, 28, 28, 1)
+    num_classes: int
+
+    @property
+    def param_count(self) -> int:
+        return sum(p.size for p in self.params)
+
+    def stage_params(self, params: Sequence[jax.Array], stage: Stage):
+        s, e = stage.prange
+        return tuple(params[s:e])
+
+    # -- whole-model loss ---------------------------------------------------
+
+    def loss(self, params: Sequence[jax.Array], x: jax.Array,
+             labels: jax.Array) -> jax.Array:
+        h = x
+        for st in self.stages[:-1]:
+            h = st.fn(self.stage_params(params, st), h)
+        last = self.stages[-1]
+        assert last.is_loss
+        return last.fn(self.stage_params(params, last), h, labels)
+
+    # -- initialisation -----------------------------------------------------
+
+    def init_fn(self) -> Callable:
+        """(seed: s32 scalar) -> tuple of all params. Lowered as one artifact
+        so parameter numerics are identical across every container variant
+        and live entirely in jax."""
+        specs = tuple(self.params)
+
+        def init(seed):
+            key = jax.random.PRNGKey(seed)
+            keys = jax.random.split(key, len(specs))
+            out = []
+            for k, spec in zip(keys, specs):
+                if spec.init == "zeros":
+                    out.append(jnp.zeros(spec.shape, jnp.float32))
+                elif spec.init == "ones":
+                    out.append(jnp.ones(spec.shape, jnp.float32))
+                elif spec.init == "he_conv":
+                    kh, kw, ci, _ = spec.shape
+                    std = jnp.sqrt(2.0 / (kh * kw * ci))
+                    out.append(std * jax.random.normal(k, spec.shape,
+                                                       jnp.float32))
+                elif spec.init == "he_dense":
+                    fan_in = spec.shape[0]
+                    std = jnp.sqrt(2.0 / fan_in)
+                    out.append(std * jax.random.normal(k, spec.shape,
+                                                       jnp.float32))
+                else:
+                    raise ValueError(f"unknown init {spec.init!r}")
+            return tuple(out)
+
+        return init
+
+    # -- fused lowering -----------------------------------------------------
+
+    def fused_step_fn(self) -> Callable:
+        """(*params, x, labels, lr) -> (*new_params, loss): one artifact."""
+        n = len(self.params)
+
+        def step(*args):
+            params = args[:n]
+            x, labels, lr = args[n], args[n + 1], args[n + 2]
+            loss, grads = jax.value_and_grad(
+                lambda p: self.loss(p, x, labels))(params)
+            new = tuple(p - lr * g for p, g in zip(params, grads))
+            return new + (loss,)
+
+        return step
+
+    # -- staged lowering ----------------------------------------------------
+
+    def fwd_stage_fn(self, gi: int) -> Callable:
+        """(x, *stage_params) -> y for interior stage `gi`."""
+        st = self.stages[gi]
+        assert not st.is_loss
+
+        def fwd(x, *sp):
+            return st.fn(sp, x)
+
+        return fwd
+
+    def bwd_stage_fn(self, gi: int) -> Callable:
+        """Backward artifact for stage `gi`, recomputing its forward.
+
+        interior: (x, dy, *stage_params) -> (dx, *dparams)
+        loss:     (x, labels, *stage_params) -> (dx, *dparams, loss)
+        """
+        st = self.stages[gi]
+
+        if st.is_loss:
+            def bwd_loss(x, labels, *sp):
+                loss, vjp = jax.vjp(lambda p, xx: st.fn(p, xx, labels), sp, x)
+                dsp, dx = vjp(jnp.ones((), jnp.float32))
+                return (dx,) + tuple(dsp) + (loss,)
+            return bwd_loss
+
+        def bwd(x, dy, *sp):
+            _, vjp = jax.vjp(lambda p, xx: st.fn(p, xx), sp, x)
+            dsp, dx = vjp(dy)
+            return (dx,) + tuple(dsp)
+
+        return bwd
+
+    # -- three-stage lowering -----------------------------------------------
+
+    def fwd_all_fn(self) -> Callable:
+        """(x, *interior_params) -> (x_1, .., x_L) block-boundary activations.
+
+        Takes only the interior (non-loss) stage params: the loss stage's
+        params are unused here and XLA prunes unused entry parameters during
+        the stablehlo->HLO conversion, which would break the positional
+        contract with the Rust executor.
+        """
+        n_interior = self.stages[-1].prange[0]
+
+        def fwd(x, *params):
+            assert len(params) == n_interior
+            h = x
+            acts = []
+            for st in self.stages[:-1]:
+                h = st.fn(self.stage_params(params, st), h)
+                acts.append(h)
+            return tuple(acts)
+        return fwd
+
+    def bwd_all_fn(self) -> Callable:
+        """(x, x_1..x_L, labels, *params) -> (*grads, loss).
+
+        Walks the stages in reverse, re-running each stage's vjp from its
+        stored input — the whole backward pass as a single artifact.
+        """
+        nstages = len(self.stages)
+
+        def bwd(*args):
+            x = args[0]
+            acts = (x,) + tuple(args[1:nstages])       # inputs to stage g
+            labels = args[nstages]
+            params = args[nstages + 1:]
+            grads = [None] * len(self.params)
+
+            last = self.stages[-1]
+            sp = self.stage_params(params, last)
+            loss, vjp = jax.vjp(
+                lambda p, xx: last.fn(p, xx, labels), sp, acts[-1])
+            dsp, dx = vjp(jnp.ones((), jnp.float32))
+            s, e = last.prange
+            grads[s:e] = list(dsp)
+
+            for gi in range(nstages - 2, -1, -1):
+                st = self.stages[gi]
+                sp = self.stage_params(params, st)
+                _, vjp = jax.vjp(lambda p, xx: st.fn(p, xx), sp, acts[gi])
+                dsp, dx = vjp(dx)
+                s, e = st.prange
+                grads[s:e] = list(dsp)
+
+            return tuple(grads) + (loss,)
+
+        return bwd
+
+    # -- optimiser ----------------------------------------------------------
+
+    def update_fn(self) -> Callable:
+        """(*params, *grads, lr) -> (*new_params): plain SGD."""
+        n = len(self.params)
+
+        def update(*args):
+            params, grads, lr = args[:n], args[n:2 * n], args[2 * n]
+            return tuple(p - lr * g for p, g in zip(params, grads))
+
+        return update

@@ -1,0 +1,84 @@
+"""Container-variant definitions: which lowering granularity x kernel set
+each artifact flavour uses.
+
+A *variant* here is an artifact set; the Rust `frameworks` module binds a
+variant to an execution policy (host round-trips vs device-resident buffers,
+recompile-per-epoch, ...) to form a framework container profile. Several
+profiles share one variant (e.g. TF1.4-hub and PyTorch-hub both execute the
+`staged_ref` artifacts, differing only in copy policy), which keeps the
+artifact matrix small and the comparisons honest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .models import mnist_cnn, resnet
+from .stages import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One artifact flavour of a workload."""
+    name: str       # e.g. 'staged_pallas'
+    kind: str       # 'fused' | 'staged' | 'threestage'
+    kernel: str     # 'ref' | 'pallas' | 'naive'
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A benchmark workload: model builder + its variant matrix."""
+    name: str
+    build: callable          # (kernel: str) -> Model
+    variants: Sequence[Variant]
+
+    def model(self, kernel: str = "ref") -> Model:
+        return self.build(kernel)
+
+
+def _mnist(kernel: str, batch: int) -> Model:
+    return mnist_cnn(kernel, batch=batch)
+
+
+def _resnet(kernel: str, batch: int, image: int, depth: int,
+            width_mult: float) -> Model:
+    return resnet(kernel, depth=depth, width_mult=width_mult, image=image,
+                  batch=batch, name="resnet50s")
+
+
+def workloads(mnist_batch: int = 32, resnet_batch: int = 8,
+              resnet_image: int = 32, resnet_depth: int = 26,
+              resnet_width: float = 0.25) -> list:
+    """The paper's two workloads with their artifact matrices.
+
+    The paper uses MNIST bs=128 x 12 epochs (CPU) and ResNet-50 ImageNet
+    bs=96 x 3 epochs (GPU); batch/geometry are scaled for the single-core
+    testbed (DESIGN.md §1) and settable from `aot.py` flags.
+    """
+    return [
+        Workload(
+            name="mnist_cnn",
+            build=lambda k: _mnist(k, mnist_batch),
+            variants=[
+                Variant("fused_ref", "fused", "ref"),
+                Variant("fused_generic", "fused", "generic"),
+                Variant("fused_pallas", "fused", "pallas"),
+                Variant("staged_ref", "staged", "ref"),
+                Variant("staged_generic", "staged", "generic"),
+                Variant("staged_pallas", "staged", "pallas"),
+                Variant("staged_naive", "staged", "naive"),
+            ],
+        ),
+        Workload(
+            name="resnet50s",
+            build=lambda k: _resnet(k, resnet_batch, resnet_image,
+                                    resnet_depth, resnet_width),
+            variants=[
+                Variant("fused_ref", "fused", "ref"),
+                Variant("fused_generic", "fused", "generic"),
+                Variant("threestage_ref", "threestage", "ref"),
+                Variant("threestage_generic", "threestage", "generic"),
+                Variant("threestage_pallas", "threestage", "pallas"),
+            ],
+        ),
+    ]

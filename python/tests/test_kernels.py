@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/strides/paddings; assert_allclose against ref.
+This is the CORE correctness signal for the kernels that every optimised
+container variant ships.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ops, ref
+from compile.kernels.matmul import matmul_tiled, vmem_bytes
+
+RNG = np.random.default_rng(0)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70))
+def test_matmul_matches_ref_shapes(m, k, n):
+    a, b = randf(m, k), randf(k, n)
+    np.testing.assert_allclose(ops("pallas").matmul(a, b),
+                               ref.matmul(a, b), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("tiles", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_tile_sweep(tiles):
+    bm, bk, bn = tiles
+    a, b = randf(96, 160), randf(160, 64)
+    np.testing.assert_allclose(matmul_tiled(a, b, bm=bm, bk=bk, bn=bn),
+                               ref.matmul(a, b), atol=2e-4, rtol=2e-4)
+
+
+def test_matmul_non_tile_multiple_padding_exact():
+    # 1 past a tile boundary in every dim
+    a, b = randf(129, 129), randf(129, 129)
+    np.testing.assert_allclose(ops("pallas").matmul(a, b),
+                               ref.matmul(a, b), atol=3e-4, rtol=3e-4)
+
+
+def test_matmul_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        ops("pallas").matmul(randf(3, 4), randf(5, 6))
+
+
+def test_matmul_grad_matches_ref():
+    import jax
+    a, b = randf(24, 40), randf(40, 16)
+    f_pal = lambda a, b: jnp.sum(ops("pallas").matmul(a, b) ** 2)
+    f_ref = lambda a, b: jnp.sum(ref.matmul(a, b) ** 2)
+    ga_p, gb_p = jax.grad(f_pal, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(gb_p, gb_r, atol=2e-3, rtol=2e-3)
+
+
+def test_vmem_budget_default_tiles():
+    # 3 f32 blocks at 128^2 = 192 KiB; must fit 16 MiB VMEM with headroom
+    assert vmem_bytes() == 3 * 128 * 128 * 4
+    assert vmem_bytes() * 2 < 16 * 1024 * 1024  # double-buffered
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 3), hw=st.integers(5, 14), ci=st.integers(1, 4),
+    co=st.integers(1, 6), k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]), pad=st.sampled_from(["VALID", "SAME"]),
+)
+def test_conv_pallas_and_naive_match_ref(n, hw, ci, co, k, stride, pad):
+    x, w = randf(n, hw, hw, ci), randf(k, k, ci, co)
+    want = ref.conv2d(x, w, stride, pad)
+    np.testing.assert_allclose(ops("pallas").conv2d(x, w, stride, pad), want,
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(ref.conv2d_naive(x, w, stride, pad), want,
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(ref.conv2d_generic(x, w, stride, pad), want,
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(ref.conv2d_im2col(x, w, stride, pad), want,
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_conv_same_stride2_asymmetric_padding():
+    # regression: XLA SAME pads (low=0, high=1) for k=3,s=2,h=32
+    x, w = randf(1, 32, 32, 2), randf(3, 3, 2, 4)
+    want = ref.conv2d(x, w, 2, "SAME")
+    assert want.shape == (1, 16, 16, 4)
+    np.testing.assert_allclose(ref.conv2d_im2col(x, w, 2, "SAME"), want,
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_conv_grad_matches_ref():
+    import jax
+    x, w = randf(2, 10, 10, 3), randf(3, 3, 3, 8)
+    f_pal = lambda x, w: jnp.sum(ops("pallas").conv2d(x, w) ** 2)
+    f_ref = lambda x, w: jnp.sum(ref.conv2d(x, w) ** 2)
+    gx_p, gw_p = jax.grad(f_pal, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, atol=5e-3, rtol=5e-3)
+    np.testing.assert_allclose(gw_p, gw_r, atol=5e-3, rtol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 3), hw=st.sampled_from([4, 8, 12, 26]),
+       c=st.integers(1, 8))
+def test_maxpool_matches_ref(n, hw, c):
+    x = randf(n, hw, hw, c)
+    np.testing.assert_allclose(ops("pallas").maxpool2(x), ref.maxpool2(x))
+
+
+def test_maxpool_grad_routes_to_argmax():
+    import jax
+    x = jnp.array([[1.0, 2.0], [3.0, 4.0]]).reshape(1, 2, 2, 1)
+    g = jax.grad(lambda x: jnp.sum(ops("pallas").maxpool2(x)))(x)
+    np.testing.assert_allclose(
+        g.reshape(2, 2), [[0.0, 0.0], [0.0, 1.0]])
+
+
+# ---------------------------------------------------------------------------
+# loss / misc ops
+# ---------------------------------------------------------------------------
+
+def test_softmax_xent_uniform_logits():
+    logits = jnp.zeros((4, 10))
+    labels = jnp.arange(4, dtype=jnp.int32)
+    np.testing.assert_allclose(ref.softmax_xent(logits, labels),
+                               np.log(10.0), rtol=1e-6)
+
+
+def test_accuracy():
+    logits = jnp.eye(4, 10)
+    labels = jnp.array([0, 1, 2, 9], dtype=jnp.int32)
+    assert float(ref.accuracy(logits, labels)) == pytest.approx(0.75)
+
+
+def test_ops_table_lookup():
+    assert ops("ref").name == "ref"
+    assert ops("pallas").name == "pallas"
+    assert ops("naive").name == "naive"
+    assert ops("generic").name == "generic"
+    with pytest.raises(KeyError):
+        ops("cuda")

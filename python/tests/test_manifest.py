@@ -1,0 +1,113 @@
+"""AOT manifest integrity: the contract between `make artifacts` and the
+Rust runtime. Runs against the real artifacts/ directory when present
+(post-`make artifacts`), otherwise against a fresh lowering of a tiny
+workload into tmp_path.
+"""
+import json
+import pathlib
+
+import pytest
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(),
+    reason="artifacts/ not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ARTIFACTS / "manifest.json").read_text())
+
+
+def test_manifest_lists_both_workloads(manifest):
+    assert set(manifest["workloads"]) == {"mnist_cnn", "resnet50s"}
+
+
+def test_every_artifact_file_exists(manifest):
+    for aid, art in manifest["artifacts"].items():
+        path = ARTIFACTS / art["file"]
+        assert path.exists(), f"missing artifact file for {aid}"
+        head = path.read_text()[:200]
+        assert "HloModule" in head, f"{aid} does not look like HLO text"
+
+
+def test_variant_bindings_reference_known_artifacts(manifest):
+    arts = manifest["artifacts"]
+    for wname, wl in manifest["workloads"].items():
+        assert wl["init"] in arts and wl["update"] in arts
+        for vname, var in wl["variants"].items():
+            if var["kind"] == "fused":
+                assert var["step"] in arts
+            elif var["kind"] == "staged":
+                assert all(a in arts for a in var["fwd"] + var["bwd"])
+                assert len(var["bwd"]) == len(var["fwd"]) + 1
+            elif var["kind"] == "threestage":
+                assert var["fwd"] in arts and var["bwd"] in arts
+            else:
+                pytest.fail(f"unknown kind in {wname}/{vname}")
+
+
+def test_fused_step_io_convention(manifest):
+    wl = manifest["workloads"]["mnist_cnn"]
+    n = len(wl["params"])
+    step = manifest["artifacts"][wl["variants"]["fused_ref"]["step"]]
+    # inputs: params + x + labels + lr ; outputs: new params + loss
+    assert len(step["inputs"]) == n + 3
+    assert len(step["outputs"]) == n + 1
+    assert step["inputs"][n]["shape"] == wl["input"]["shape"]
+    assert step["inputs"][n + 1]["dtype"] == "s32"
+    assert step["outputs"][-1]["shape"] == []  # scalar loss
+
+
+def test_update_io_convention(manifest):
+    for wl in manifest["workloads"].values():
+        n = len(wl["params"])
+        upd = manifest["artifacts"][wl["update"]]
+        assert len(upd["inputs"]) == 2 * n + 1
+        assert len(upd["outputs"]) == n
+
+
+def test_init_emits_all_params(manifest):
+    for wl in manifest["workloads"].values():
+        init = manifest["artifacts"][wl["init"]]
+        assert len(init["outputs"]) == len(wl["params"])
+        for out, p in zip(init["outputs"], wl["params"]):
+            assert out["shape"] == p["shape"], p["name"]
+
+
+def test_param_count_matches_specs(manifest):
+    for wl in manifest["workloads"].values():
+        total = 0
+        for p in wl["params"]:
+            size = 1
+            for d in p["shape"]:
+                size *= d
+            total += size
+        assert total == wl["param_count"]
+
+
+def test_mnist_param_count_is_papers(manifest):
+    assert manifest["workloads"]["mnist_cnn"]["param_count"] == 1_199_882
+
+
+def test_staged_chain_shapes_connect(manifest):
+    """fwd_g output shape == fwd_{g+1} input shape == bwd cotangent shape."""
+    arts = manifest["artifacts"]
+    for wl in manifest["workloads"].values():
+        for var in wl["variants"].values():
+            if var["kind"] != "staged":
+                continue
+            fwd = [arts[a] for a in var["fwd"]]
+            bwd = [arts[a] for a in var["bwd"]]
+            h = wl["input"]
+            for gi, f in enumerate(fwd):
+                assert f["inputs"][0]["shape"] == h["shape"]
+                # interior bwd: (x_g, dy, ...params)
+                assert bwd[gi]["inputs"][0]["shape"] == h["shape"]
+                h = f["outputs"][0]
+            # loss-stage bwd consumes the last activation + labels
+            assert bwd[-1]["inputs"][0]["shape"] == h["shape"]
+            assert bwd[-1]["inputs"][1]["dtype"] == "s32"
+            assert bwd[-1]["outputs"][-1]["shape"] == []  # loss scalar

@@ -1,0 +1,85 @@
+//! `cargo bench` entrypoint: regenerates every table and figure of the
+//! paper's evaluation (Table I, Fig 3, Fig 4 L/R, Fig 5 L/R) through the
+//! full stack and prints the reports with shape checks.
+//!
+//! criterion is not in the vendored crate set; this is a harness=false
+//! bench binary. Select a subset with
+//! `cargo bench --bench paper_figures -- fig3 fig5_left`.
+
+use modak::figures::{FigureConfig, Harness};
+use modak::perfmodel::PerfModel;
+use modak::registry::Registry;
+use modak::runtime::Manifest;
+use modak::util::timer::Stopwatch;
+
+fn main() {
+    // cargo passes --bench; ignore flags, keep figure ids
+    let want: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let all = [
+        "table1",
+        "fig3",
+        "fig4_left",
+        "fig4_right",
+        "fig5_left",
+        "fig5_right",
+    ];
+    let selected: Vec<&str> = if want.is_empty() {
+        all.to_vec()
+    } else {
+        all.iter().copied().filter(|id| want.iter().any(|w| w == id)).collect()
+    };
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("paper_figures bench skipped (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let mut registry = Registry::open("images");
+    let mut model = PerfModel::open("perf_history.json").expect("perf history");
+    let mut harness = Harness::new(&manifest, &mut registry);
+    harness.model = Some(&mut model);
+
+    let mut failed = Vec::new();
+    for id in selected {
+        let sw = Stopwatch::start();
+        let report = match id {
+            "table1" => Ok(harness.table1()),
+            "fig3" => harness.fig3(&FigureConfig::mnist()),
+            "fig4_left" => harness.fig4_left(&FigureConfig::mnist()),
+            "fig4_right" => harness.fig4_right(&FigureConfig::resnet()),
+            "fig5_left" => harness.fig5_left(&FigureConfig::mnist_compilers()),
+            "fig5_right" => harness.fig5_right(&FigureConfig::resnet()),
+            _ => unreachable!(),
+        };
+        match report {
+            Ok(rep) => {
+                println!("{}", rep.render());
+                println!("  [bench harness: {id} regenerated in {:.1}s]\n", sw.elapsed_secs());
+                if !rep.all_checks_hold() {
+                    failed.push(id);
+                }
+            }
+            Err(e) => {
+                eprintln!("{id} FAILED: {e:#}");
+                failed.push(id);
+            }
+        }
+    }
+    model.save().expect("saving perf history");
+    if model.is_trained() {
+        println!(
+            "performance model: {} observations, r2 = {:.3}",
+            model.history.len(),
+            model.r2
+        );
+    }
+    if !failed.is_empty() {
+        eprintln!("shape checks failed for: {failed:?}");
+        std::process::exit(1);
+    }
+}

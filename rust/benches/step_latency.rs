@@ -1,0 +1,83 @@
+//! Microbenchmark: per-step latency of every (variant, policy) combination —
+//! the calibration data behind the framework-profile bindings
+//! (frameworks/mod.rs) and the §Perf iteration log in EXPERIMENTS.md.
+//!
+//! harness=false (no criterion in the vendored set): warms up one step,
+//! then reports median / mean over N timed steps.
+//!
+//! Usage: `cargo bench --bench step_latency -- [steps]`
+
+use modak::executor::{ExecPolicy, TrainSession};
+use modak::runtime::{Engine, Manifest};
+use modak::trainer::data::Dataset;
+use modak::util::stats::Summary;
+use modak::util::timer::Stopwatch;
+
+fn main() {
+    let steps: usize = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("step_latency bench skipped (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let engine = Engine::cpu().expect("PJRT cpu client");
+
+    // (workload, variant, policy, what it models)
+    let combos: &[(&str, &str, ExecPolicy, &str)] = &[
+        ("mnist_cnn", "fused_ref", ExecPolicy::host(), "TF2.x src build"),
+        ("mnist_cnn", "fused_generic", ExecPolicy::host(), "TF2.x hub binary"),
+        ("mnist_cnn", "staged_ref", ExecPolicy::device(), "PyTorch src build"),
+        ("mnist_cnn", "staged_generic", ExecPolicy::device(), "PyTorch/MXNet hub"),
+        ("mnist_cnn", "staged_generic", ExecPolicy::host(), "TF1.x hub session"),
+        ("mnist_cnn", "staged_naive", ExecPolicy::host(), "CNTK cpu"),
+        ("resnet50s", "fused_ref", ExecPolicy::host(), "XLA gpu-sim"),
+        ("resnet50s", "threestage_ref", ExecPolicy::host(), "TF gpu-sim src"),
+        ("resnet50s", "threestage_generic", ExecPolicy::host(), "TF gpu-sim hub"),
+    ];
+
+    println!(
+        "{:<11} {:<18} {:<8} {:>10} {:>10} {:>9}  models",
+        "workload", "variant", "policy", "median", "mean", "compile"
+    );
+    for (workload, variant, policy, models) in combos {
+        let mut session =
+            match TrainSession::new(&engine, &manifest, workload, variant, *policy, 0, 0.05) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("{workload}/{variant}: {e:#}");
+                    continue;
+                }
+            };
+        let compile_secs = session.stats.compile_secs;
+        let mut data = Dataset::for_workload(&session.workload, 7);
+        // warmup (first step pays one-time costs; the paper notes the same
+        // first-epoch effect)
+        let (x, y) = data.next_batch();
+        session.step(&x, &y).expect("warmup step");
+        let mut samples = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let (x, y) = data.next_batch();
+            let sw = Stopwatch::start();
+            session.step(&x, &y).expect("timed step");
+            samples.push(sw.elapsed_secs());
+        }
+        let s = Summary::of(&samples);
+        let pol = match policy.copy {
+            modak::executor::CopyPolicy::HostRoundTrip => "host",
+            modak::executor::CopyPolicy::DeviceResident => "device",
+        };
+        println!(
+            "{workload:<11} {variant:<18} {pol:<8} {:>8.1}ms {:>8.1}ms {:>8.2}s  {models}",
+            s.median * 1e3,
+            s.mean * 1e3,
+            compile_secs
+        );
+    }
+}

@@ -1,0 +1,34 @@
+// Debug probe: run one (variant, policy) combo for 2 steps.
+use modak::executor::{ExecPolicy, TrainSession};
+use modak::runtime::{Engine, Manifest};
+use modak::trainer::data::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let variant = args.get(1).map(String::as_str).unwrap_or("fused_ref");
+    let policy = match args.get(2).map(String::as_str).unwrap_or("host") {
+        "host" => ExecPolicy::host(),
+        "device" => ExecPolicy::device(),
+        "recompiling" => ExecPolicy::recompiling(),
+        other => anyhow::bail!("unknown policy {other}"),
+    };
+    let workload = args.get(3).map(String::as_str).unwrap_or("mnist_cnn");
+    let m = Manifest::load("artifacts")?;
+    let engine = Engine::cpu()?;
+    let mut sess = TrainSession::new(&engine, &m, workload, variant, policy, 3, 0.05)?;
+    let mut data = Dataset::for_workload(&sess.workload, 11);
+    let steps: usize = args.get(4).map(|s| s.parse().unwrap()).unwrap_or(2);
+    // warmup step excluded from timing
+    let (x, y) = data.next_batch();
+    let loss = sess.step(&x, &y)?;
+    println!("warmup: loss {loss}");
+    let t0 = std::time::Instant::now();
+    for i in 0..steps {
+        let (x, y) = data.next_batch();
+        let loss = sess.step(&x, &y)?;
+        println!("step {i}: loss {loss:.4} ({:.1} ms/step avg)",
+                 t0.elapsed().as_secs_f64() * 1e3 / (i + 1) as f64);
+    }
+    println!("stats: {:?}", sess.stats);
+    Ok(())
+}

@@ -1,0 +1,31 @@
+// Concurrency probe: N threads each with own Engine running training steps.
+use modak::executor::{ExecPolicy, TrainSession};
+use modak::runtime::{Engine, Manifest};
+use modak::trainer::data::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).map(|s| s.parse().unwrap()).unwrap_or(3);
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            std::thread::spawn(move || -> anyhow::Result<f32> {
+                let m = Manifest::load("artifacts")?;
+                let engine = Engine::cpu()?;
+                let mut sess = TrainSession::new(
+                    &engine, &m, "mnist_cnn", "fused_ref", ExecPolicy::host(), i as i32, 0.05,
+                )?;
+                let mut data = Dataset::for_workload(&sess.workload, i as u64);
+                let mut loss = 0.0;
+                for _ in 0..2 {
+                    let (x, y) = data.next_batch();
+                    loss = sess.step(&x, &y)?;
+                }
+                Ok(loss)
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        println!("thread {i}: loss {:?}", h.join().unwrap()?);
+    }
+    println!("concurrency OK");
+    Ok(())
+}

@@ -1,0 +1,358 @@
+//! The container builder: definition file -> image bundle (paper §V-B/C/D:
+//! `singularity build --fakeroot`).
+//!
+//! %post commands get interpreted against a small vocabulary:
+//!
+//! * `modak-install framework=<fw> version=<v> variant=<artifact-variant>` —
+//!   "installs the framework": copies the variant's AOT artifacts (plus
+//!   init/update) into the bundle rootfs with a pruned manifest. This is the
+//!   moment a real build compiles TensorFlow from source; ours stages the
+//!   compiled stack the contained runtime will execute.
+//! * `modak-policy copy=<host|device> [recompile=true]` — configures the
+//!   contained framework runtime's execution policy.
+//! * `apt-get ...` / `pip install ...` / anything else — recorded as opaque
+//!   layers (they shape the digest, as layers do).
+//!
+//! Builds are reproducible: digest = hash(base, layers, payload bytes).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::executor::{CopyPolicy, ExecPolicy};
+use crate::runtime::{Manifest, VariantBinding};
+use crate::util::json::Json;
+
+use super::definition::DefinitionFile;
+use super::image::{Digest, Image, Layer};
+
+/// Builder options (the paper's build flags).
+#[derive(Debug, Clone)]
+pub struct BuildOptions {
+    /// `--fakeroot`: required on the testbed because users may not run
+    /// privileged builds (paper §V-B). Builds fail without it, as they do
+    /// on an HPC system without the UID/GID mappings.
+    pub fakeroot: bool,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions { fakeroot: true }
+    }
+}
+
+/// Builds image bundles into a store directory.
+pub struct Builder {
+    store: PathBuf,
+    /// Source of AOT artifacts ("the framework binaries").
+    artifacts: Manifest,
+}
+
+impl Builder {
+    pub fn new(store: impl AsRef<Path>, artifacts: Manifest) -> Builder {
+        Builder {
+            store: store.as_ref().to_path_buf(),
+            artifacts,
+        }
+    }
+
+    pub fn store(&self) -> &Path {
+        &self.store
+    }
+
+    /// Build `def` into `<store>/<name>/<tag>/`.
+    pub fn build(
+        &self,
+        name: &str,
+        tag: &str,
+        def: &DefinitionFile,
+        opts: &BuildOptions,
+    ) -> Result<Image> {
+        if !opts.fakeroot {
+            bail!(
+                "unprivileged build requires --fakeroot (admin must add \
+                 user-namespace UID/GID mappings, paper §V-B)"
+            );
+        }
+        let dir = self.store.join(name).join(tag);
+        let rootfs = dir.join("rootfs");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&rootfs)?;
+
+        let gpu_base = def.from.to_ascii_lowercase().contains("nvidia")
+            || def.from.to_ascii_lowercase().contains("cuda");
+        let mut layers = vec![Layer {
+            command: format!("FROM {}", def.from),
+            effect: if gpu_base {
+                "base OS with NVIDIA userland (cuda toolkit, cudnn)".into()
+            } else {
+                "base OS".into()
+            },
+        }];
+        let mut policy = ExecPolicy::host();
+        let mut workload = None;
+        let mut variant = None;
+        let mut digest = Digest::new();
+        digest.update(def.from.as_bytes());
+
+        // %files copies
+        for (src, dst) in &def.files {
+            let data = std::fs::read(src)
+                .with_context(|| format!("%files source missing: {src}"))?;
+            let dst_rel = dst.trim_start_matches('/');
+            let dst_path = rootfs.join(dst_rel);
+            if let Some(parent) = dst_path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            digest.update(&data);
+            std::fs::write(&dst_path, data)?;
+            layers.push(Layer {
+                command: format!("COPY {src} {dst}"),
+                effect: format!("file staged at {dst_rel}"),
+            });
+        }
+
+        // %post commands
+        for cmd in &def.post {
+            digest.update(cmd.as_bytes());
+            let layer = if cmd.starts_with("modak-install") {
+                let args = parse_kv(cmd);
+                let v = args
+                    .get("variant")
+                    .ok_or_else(|| anyhow!("modak-install needs variant="))?;
+                let w = args
+                    .get("workload")
+                    .map(String::as_str)
+                    .unwrap_or("mnist_cnn");
+                let bytes = self.stage_variant(&rootfs, w, v)?;
+                digest.update(&bytes.to_le_bytes());
+                workload = Some(w.to_string());
+                variant = Some(v.to_string());
+                Layer {
+                    command: cmd.clone(),
+                    effect: format!("staged {bytes} bytes of compiled artifacts for {w}/{v}"),
+                }
+            } else if cmd.starts_with("modak-policy") {
+                let args = parse_kv(cmd);
+                if let Some(c) = args.get("copy") {
+                    policy.copy = match c.as_str() {
+                        "host" => CopyPolicy::HostRoundTrip,
+                        "device" => CopyPolicy::DeviceResident,
+                        other => bail!("modak-policy copy={other:?} unknown"),
+                    };
+                }
+                if args.get("recompile").map(String::as_str) == Some("true") {
+                    policy.recompile_each_epoch = true;
+                }
+                Layer {
+                    command: cmd.clone(),
+                    effect: format!("runtime policy {policy:?}"),
+                }
+            } else {
+                Layer {
+                    command: cmd.clone(),
+                    effect: "opaque build command".into(),
+                }
+            };
+            layers.push(layer);
+        }
+
+        let image = Image {
+            name: name.to_string(),
+            tag: tag.to_string(),
+            dir,
+            base: def.from.clone(),
+            layers,
+            env: def.environment.clone(),
+            workload,
+            variant,
+            policy,
+            gpu: gpu_base,
+            digest: digest.finish(),
+        };
+        image.save()?;
+        image.verify().or_else(|e| {
+            // images without a variant (pure base OS) have no manifest
+            if image.variant.is_none() {
+                Ok(())
+            } else {
+                Err(e)
+            }
+        })?;
+        Ok(image)
+    }
+
+    /// Copy the artifacts a variant needs into the bundle rootfs, writing a
+    /// pruned manifest restricted to that workload+variant. Returns bytes
+    /// staged.
+    fn stage_variant(&self, rootfs: &Path, workload: &str, variant: &str) -> Result<u64> {
+        let wl = self.artifacts.workload(workload)?;
+        let binding = wl
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("workload {workload} has no variant {variant:?}"))?;
+        let mut ids: Vec<String> = vec![wl.init.clone(), wl.update.clone()];
+        match binding {
+            VariantBinding::Fused { step } => ids.push(step.clone()),
+            VariantBinding::Staged { fwd, bwd } => {
+                ids.extend(fwd.iter().cloned());
+                ids.extend(bwd.iter().cloned());
+            }
+            VariantBinding::ThreeStage { fwd, bwd } => {
+                ids.push(fwd.clone());
+                ids.push(bwd.clone());
+            }
+        }
+
+        let mut total = 0u64;
+        for id in &ids {
+            let src = self.artifacts.artifact_path(id)?;
+            let data = std::fs::read(&src)
+                .with_context(|| format!("artifact file {src:?}"))?;
+            total += data.len() as u64;
+            std::fs::write(rootfs.join(&self.artifacts.artifact(id)?.file), data)?;
+        }
+
+        // pruned manifest: same schema, only this workload + variant
+        let full = std::fs::read_to_string(self.artifacts.dir.join("manifest.json"))?;
+        let full = Json::parse(&full).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut pruned_arts = Json::obj();
+        if let Some(obj) = full.get("artifacts").as_obj() {
+            for id in &ids {
+                if let Some(a) = obj.get(id.as_str()) {
+                    pruned_arts.set(id, a.clone());
+                }
+            }
+        }
+        let mut wl_entry = full.at(&["workloads", workload]).clone();
+        if let Json::Obj(ref mut o) = wl_entry {
+            let mut variants = Json::obj();
+            if let Some(v) = full.at(&["workloads", workload, "variants", variant]).as_obj() {
+                variants.set(variant, Json::Obj(v.clone()));
+            }
+            o.insert("variants".into(), variants);
+        }
+        let mut pruned = Json::obj();
+        let mut wls = Json::obj();
+        wls.set(workload, wl_entry);
+        pruned
+            .set("version", Json::from(1usize))
+            .set("workloads", wls)
+            .set("artifacts", pruned_arts);
+        std::fs::write(rootfs.join("manifest.json"), pruned.to_string_pretty())?;
+        Ok(total)
+    }
+}
+
+fn parse_kv(cmd: &str) -> BTreeMap<String, String> {
+    cmd.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::definition::Bootstrap;
+
+    fn test_manifest() -> Option<Manifest> {
+        Manifest::load("artifacts").ok()
+    }
+
+    fn store(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modak_builder_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn build_stages_variant_artifacts() {
+        let Some(m) = test_manifest() else {
+            eprintln!("skipping (run `make artifacts`)");
+            return;
+        };
+        let builder = Builder::new(store("stage"), m);
+        let mut def = DefinitionFile::new(Bootstrap::Library, "ubuntu:18.04");
+        def.post.push("apt-get install -y python3".into());
+        def.post.push(
+            "modak-install framework=tensorflow version=2.1 workload=mnist_cnn variant=fused_ref"
+                .into(),
+        );
+        def.post.push("modak-policy copy=host".into());
+        let img = builder
+            .build("tensorflow", "2.1-cpu-src", &def, &BuildOptions::default())
+            .unwrap();
+        assert_eq!(img.variant.as_deref(), Some("fused_ref"));
+        assert!(img.rootfs().join("manifest.json").exists());
+        // the pruned manifest must load + validate against the bundle dir
+        let pruned = Manifest::load(img.rootfs()).unwrap();
+        assert!(pruned.workload("mnist_cnn").is_ok());
+        assert_eq!(pruned.workload("mnist_cnn").unwrap().variants.len(), 1);
+        assert!(!img.gpu);
+        assert_eq!(img.layers.len(), 4); // FROM + 3 post commands
+    }
+
+    #[test]
+    fn build_without_fakeroot_fails() {
+        let Some(m) = test_manifest() else { return };
+        let builder = Builder::new(store("nofakeroot"), m);
+        let def = DefinitionFile::new(Bootstrap::Library, "ubuntu:18.04");
+        let err = builder
+            .build("base", "os", &def, &BuildOptions { fakeroot: false })
+            .unwrap_err();
+        assert!(err.to_string().contains("fakeroot"));
+    }
+
+    #[test]
+    fn nvidia_base_marks_gpu() {
+        let Some(m) = test_manifest() else { return };
+        let builder = Builder::new(store("gpu"), m);
+        let mut def = DefinitionFile::new(
+            Bootstrap::Docker,
+            "nvidia/cuda:10.1-cudnn7-devel-ubuntu18.04",
+        );
+        def.post.push(
+            "modak-install framework=tensorflow version=2.1 workload=resnet50s variant=threestage_ref"
+                .into(),
+        );
+        let img = builder
+            .build("tensorflow", "2.1-gpu-hub", &def, &BuildOptions::default())
+            .unwrap();
+        assert!(img.gpu);
+    }
+
+    #[test]
+    fn identical_builds_share_digest() {
+        let Some(m) = test_manifest() else { return };
+        let builder = Builder::new(store("digest"), m);
+        let mut def = DefinitionFile::new(Bootstrap::Library, "ubuntu:18.04");
+        def.post
+            .push("modak-install workload=mnist_cnn variant=staged_ref".into());
+        let a = builder
+            .build("pytorch", "a", &def, &BuildOptions::default())
+            .unwrap();
+        let b = builder
+            .build("pytorch", "b", &def, &BuildOptions::default())
+            .unwrap();
+        assert_eq!(a.digest, b.digest);
+        def.post.push("pip install extras".into());
+        let c = builder
+            .build("pytorch", "c", &def, &BuildOptions::default())
+            .unwrap();
+        assert_ne!(a.digest, c.digest);
+    }
+
+    #[test]
+    fn unknown_variant_fails_build() {
+        let Some(m) = test_manifest() else { return };
+        let builder = Builder::new(store("badvariant"), m);
+        let mut def = DefinitionFile::new(Bootstrap::Library, "ubuntu:18.04");
+        def.post
+            .push("modak-install workload=mnist_cnn variant=cuda_magic".into());
+        assert!(builder
+            .build("x", "y", &def, &BuildOptions::default())
+            .is_err());
+    }
+}

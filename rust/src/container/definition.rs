@@ -1,0 +1,233 @@
+//! Singularity definition files (paper §V-B/C/D).
+//!
+//! MODAK encodes container builds as definition files with a header
+//! (Bootstrap/From) and sections (%post, %environment, %files, %labels),
+//! exactly like the Singularity def format the paper describes. The builder
+//! interprets a small command vocabulary in %post (see builder.rs); unknown
+//! commands are recorded as opaque layers so real-world defs still parse.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Where the base image comes from (header `Bootstrap:`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Bootstrap {
+    /// `Bootstrap: docker` — e.g. the NVIDIA base images for GPU builds.
+    Docker,
+    /// `Bootstrap: localimage` — a previously built bundle.
+    LocalImage,
+    /// `Bootstrap: library` — base OS images.
+    Library,
+}
+
+impl Bootstrap {
+    fn parse(s: &str) -> Result<Bootstrap> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "docker" => Ok(Bootstrap::Docker),
+            "localimage" => Ok(Bootstrap::LocalImage),
+            "library" => Ok(Bootstrap::Library),
+            other => bail!("unknown bootstrap agent {other:?}"),
+        }
+    }
+
+    fn as_str(&self) -> &'static str {
+        match self {
+            Bootstrap::Docker => "docker",
+            Bootstrap::LocalImage => "localimage",
+            Bootstrap::Library => "library",
+        }
+    }
+}
+
+/// A parsed Singularity definition file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DefinitionFile {
+    pub bootstrap: Bootstrap,
+    pub from: String,
+    /// %post — build commands run inside the container.
+    pub post: Vec<String>,
+    /// %environment — variables set at container runtime.
+    pub environment: BTreeMap<String, String>,
+    /// %files — (host source, container destination) copies.
+    pub files: Vec<(String, String)>,
+    /// %labels — free-form metadata.
+    pub labels: BTreeMap<String, String>,
+}
+
+impl DefinitionFile {
+    pub fn new(bootstrap: Bootstrap, from: &str) -> DefinitionFile {
+        DefinitionFile {
+            bootstrap,
+            from: from.to_string(),
+            post: Vec::new(),
+            environment: BTreeMap::new(),
+            files: Vec::new(),
+            labels: BTreeMap::new(),
+        }
+    }
+
+    /// Parse the Singularity definition format.
+    pub fn parse(text: &str) -> Result<DefinitionFile> {
+        let mut bootstrap = None;
+        let mut from = None;
+        let mut section = String::new();
+        let mut post = Vec::new();
+        let mut environment = BTreeMap::new();
+        let mut files = Vec::new();
+        let mut labels = BTreeMap::new();
+
+        for raw in text.lines() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('%') {
+                section = rest.split_whitespace().next().unwrap_or("").to_ascii_lowercase();
+                continue;
+            }
+            if section.is_empty() {
+                // header
+                if let Some((k, v)) = line.split_once(':') {
+                    match k.trim().to_ascii_lowercase().as_str() {
+                        "bootstrap" => bootstrap = Some(Bootstrap::parse(v)?),
+                        "from" => from = Some(v.trim().to_string()),
+                        _ => {} // other header keys ignored
+                    }
+                }
+                continue;
+            }
+            match section.as_str() {
+                "post" => post.push(line.to_string()),
+                "environment" => {
+                    let line = line.strip_prefix("export ").unwrap_or(line);
+                    if let Some((k, v)) = line.split_once('=') {
+                        environment.insert(k.trim().to_string(), v.trim().to_string());
+                    }
+                }
+                "files" => {
+                    let mut parts = line.split_whitespace();
+                    if let (Some(src), dst) = (parts.next(), parts.next()) {
+                        files.push((
+                            src.to_string(),
+                            dst.unwrap_or(src).to_string(),
+                        ));
+                    }
+                }
+                "labels" => {
+                    let mut parts = line.splitn(2, char::is_whitespace);
+                    if let (Some(k), Some(v)) = (parts.next(), parts.next()) {
+                        labels.insert(k.to_string(), v.trim().to_string());
+                    }
+                }
+                _ => {} // %runscript etc. tolerated
+            }
+        }
+
+        let Some(bootstrap) = bootstrap else {
+            bail!("definition missing Bootstrap header")
+        };
+        let Some(from) = from else {
+            bail!("definition missing From header")
+        };
+        Ok(DefinitionFile {
+            bootstrap,
+            from,
+            post,
+            environment,
+            files,
+            labels,
+        })
+    }
+
+    /// Render back to the definition-file format.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("Bootstrap: {}\n", self.bootstrap.as_str()));
+        out.push_str(&format!("From: {}\n", self.from));
+        if !self.files.is_empty() {
+            out.push_str("\n%files\n");
+            for (src, dst) in &self.files {
+                out.push_str(&format!("    {src} {dst}\n"));
+            }
+        }
+        if !self.environment.is_empty() {
+            out.push_str("\n%environment\n");
+            for (k, v) in &self.environment {
+                out.push_str(&format!("    export {k}={v}\n"));
+            }
+        }
+        if !self.post.is_empty() {
+            out.push_str("\n%post\n");
+            for cmd in &self.post {
+                out.push_str(&format!("    {cmd}\n"));
+            }
+        }
+        if !self.labels.is_empty() {
+            out.push_str("\n%labels\n");
+            for (k, v) in &self.labels {
+                out.push_str(&format!("    {k} {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# CPU base for custom framework builds (paper §V-C)
+Bootstrap: library
+From: ubuntu:18.04
+
+%files
+    artifacts/manifest.json /opt/modak/manifest.json
+
+%environment
+    export LC_ALL=C
+    export MODAK_TARGET=cpu
+
+%post
+    apt-get install -y llvm-8 clang-8 python3
+    modak-install framework=tensorflow version=2.1 variant=fused_generic
+    modak-policy copy=host
+
+%labels
+    maintainer modak
+    version 2.1
+"#;
+
+    #[test]
+    fn parses_and_rerenders() {
+        let def = DefinitionFile::parse(EXAMPLE).unwrap();
+        assert_eq!(def.bootstrap, Bootstrap::Library);
+        assert_eq!(def.from, "ubuntu:18.04");
+        assert_eq!(def.post.len(), 3);
+        assert_eq!(def.environment.get("MODAK_TARGET").unwrap(), "cpu");
+        assert_eq!(def.files.len(), 1);
+        assert_eq!(def.labels.get("version").unwrap(), "2.1");
+
+        let rendered = def.render();
+        let def2 = DefinitionFile::parse(&rendered).unwrap();
+        assert_eq!(def, def2);
+    }
+
+    #[test]
+    fn missing_headers_rejected() {
+        assert!(DefinitionFile::parse("%post\n  ls\n").is_err());
+        assert!(DefinitionFile::parse("Bootstrap: docker\n").is_err());
+        assert!(DefinitionFile::parse("Bootstrap: rocket\nFrom: x\n").is_err());
+    }
+
+    #[test]
+    fn nvidia_gpu_base_parses() {
+        let def = DefinitionFile::parse(
+            "Bootstrap: docker\nFrom: nvidia/cuda:10.1-cudnn7-devel-ubuntu18.04\n%post\n x\n",
+        )
+        .unwrap();
+        assert_eq!(def.bootstrap, Bootstrap::Docker);
+        assert!(def.from.contains("cudnn7"));
+    }
+}

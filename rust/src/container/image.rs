@@ -1,0 +1,263 @@
+//! Container image bundles: the on-disk product of a build.
+//!
+//! A bundle is a directory `<store>/<name>/<tag>/` holding:
+//!   * `image.json`    — metadata: layers, env, workload binding, digest
+//!   * `rootfs/`       — the payload: the AOT artifact files the contained
+//!                        "framework" executes (the paper's framework
+//!                        binaries), plus any %files copies
+//!
+//! The digest is a content hash over layer descriptions + payload bytes so
+//! identical builds are reproducible and the registry can deduplicate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::executor::{CopyPolicy, ExecPolicy};
+use crate::util::json::Json;
+
+/// One recorded build layer (a %post command and what it did).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub command: String,
+    pub effect: String,
+}
+
+/// Parsed `image.json` + location of a built bundle.
+#[derive(Debug, Clone)]
+pub struct Image {
+    pub name: String,
+    pub tag: String,
+    pub dir: PathBuf,
+    pub base: String,
+    pub layers: Vec<Layer>,
+    pub env: BTreeMap<String, String>,
+    /// Workload the contained framework stack runs.
+    pub workload: Option<String>,
+    /// Artifact variant baked into the image.
+    pub variant: Option<String>,
+    /// Execution policy of the contained framework runtime.
+    pub policy: ExecPolicy,
+    /// Whether the image contains the GPU userland (the paper: GPU images
+    /// must carry the nvidia stack and be launched with --nv).
+    pub gpu: bool,
+    pub digest: String,
+}
+
+impl Image {
+    /// `name:tag` reference.
+    pub fn reference(&self) -> String {
+        format!("{}:{}", self.name, self.tag)
+    }
+
+    pub fn rootfs(&self) -> PathBuf {
+        self.dir.join("rootfs")
+    }
+
+    /// Write `image.json` into the bundle dir.
+    pub fn save(&self) -> Result<()> {
+        let mut j = Json::obj();
+        let mut layers = Vec::new();
+        for l in &self.layers {
+            let mut lj = Json::obj();
+            lj.set("command", Json::from(l.command.as_str()))
+                .set("effect", Json::from(l.effect.as_str()));
+            layers.push(lj);
+        }
+        let mut env = Json::obj();
+        for (k, v) in &self.env {
+            env.set(k, Json::from(v.as_str()));
+        }
+        j.set("name", Json::from(self.name.as_str()))
+            .set("tag", Json::from(self.tag.as_str()))
+            .set("base", Json::from(self.base.as_str()))
+            .set("layers", Json::Arr(layers))
+            .set("env", env)
+            .set("gpu", Json::from(self.gpu))
+            .set(
+                "policy_copy",
+                Json::from(match self.policy.copy {
+                    CopyPolicy::HostRoundTrip => "host",
+                    CopyPolicy::DeviceResident => "device",
+                }),
+            )
+            .set(
+                "policy_recompile",
+                Json::from(self.policy.recompile_each_epoch),
+            )
+            .set("digest", Json::from(self.digest.as_str()));
+        if let Some(w) = &self.workload {
+            j.set("workload", Json::from(w.as_str()));
+        }
+        if let Some(v) = &self.variant {
+            j.set("variant", Json::from(v.as_str()));
+        }
+        std::fs::create_dir_all(&self.dir)?;
+        std::fs::write(self.dir.join("image.json"), j.to_string_pretty())
+            .with_context(|| format!("writing image.json in {:?}", self.dir))?;
+        Ok(())
+    }
+
+    /// Load a bundle from its directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Image> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("image.json"))
+            .with_context(|| format!("no image.json in {dir:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("image.json: {e}"))?;
+        let policy = ExecPolicy {
+            copy: match j.get("policy_copy").as_str() {
+                Some("device") => CopyPolicy::DeviceResident,
+                _ => CopyPolicy::HostRoundTrip,
+            },
+            recompile_each_epoch: j.get("policy_recompile").as_bool().unwrap_or(false),
+        };
+        let layers = j
+            .get("layers")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|l| Layer {
+                command: l.get("command").as_str().unwrap_or("").to_string(),
+                effect: l.get("effect").as_str().unwrap_or("").to_string(),
+            })
+            .collect();
+        let mut env = BTreeMap::new();
+        if let Some(e) = j.get("env").as_obj() {
+            for (k, v) in e {
+                env.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+        }
+        let need = |key: &str| -> Result<String> {
+            Ok(j.get(key)
+                .as_str()
+                .ok_or_else(|| anyhow!("image.json missing {key}"))?
+                .to_string())
+        };
+        Ok(Image {
+            name: need("name")?,
+            tag: need("tag")?,
+            dir,
+            base: need("base")?,
+            layers,
+            env,
+            workload: j.get("workload").as_str().map(str::to_string),
+            variant: j.get("variant").as_str().map(str::to_string),
+            policy,
+            gpu: j.get("gpu").as_bool().unwrap_or(false),
+            digest: need("digest")?,
+        })
+    }
+
+    /// Validate the bundle: payload files referenced by the manifest exist.
+    pub fn verify(&self) -> Result<()> {
+        if !self.rootfs().exists() {
+            bail!("bundle {:?} has no rootfs", self.reference());
+        }
+        if self.variant.is_some() && !self.rootfs().join("manifest.json").exists() {
+            bail!(
+                "bundle {:?} declares a variant but carries no artifact manifest",
+                self.reference()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over arbitrary byte chunks — a dependency-free content digest.
+pub struct Digest {
+    state: u64,
+}
+
+impl Digest {
+    pub fn new() -> Digest {
+        Digest {
+            state: 0xcbf29ce484222325,
+        }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x100000001b3);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> String {
+        format!("fnv1a:{:016x}", self.state)
+    }
+}
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modak_image_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(dir: PathBuf) -> Image {
+        Image {
+            name: "tensorflow".into(),
+            tag: "2.1-cpu-hub".into(),
+            dir,
+            base: "ubuntu:18.04".into(),
+            layers: vec![Layer {
+                command: "modak-install framework=tensorflow".into(),
+                effect: "bound variant fused_generic".into(),
+            }],
+            env: BTreeMap::from([("MODAK_TARGET".into(), "cpu".into())]),
+            workload: Some("mnist_cnn".into()),
+            variant: Some("fused_generic".into()),
+            policy: ExecPolicy::host(),
+            gpu: false,
+            digest: "fnv1a:0000000000000000".into(),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let img = sample(dir.clone());
+        img.save().unwrap();
+        let back = Image::load(&dir).unwrap();
+        assert_eq!(back.reference(), "tensorflow:2.1-cpu-hub");
+        assert_eq!(back.variant.as_deref(), Some("fused_generic"));
+        assert_eq!(back.policy, ExecPolicy::host());
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.env.get("MODAK_TARGET").unwrap(), "cpu");
+        assert!(!back.gpu);
+    }
+
+    #[test]
+    fn verify_requires_rootfs_and_manifest() {
+        let dir = tmpdir("verify");
+        let img = sample(dir.clone());
+        img.save().unwrap();
+        assert!(img.verify().is_err());
+        std::fs::create_dir_all(img.rootfs()).unwrap();
+        assert!(img.verify().is_err()); // variant declared, no manifest
+        std::fs::write(img.rootfs().join("manifest.json"), "{}").unwrap();
+        img.verify().unwrap();
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let a = Digest::new().update(b"layer1").update(b"layer2").finish();
+        let b = Digest::new().update(b"layer1").update(b"layer2").finish();
+        let c = Digest::new().update(b"layer1").update(b"layerX").finish();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.starts_with("fnv1a:"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Singularity-like container subsystem (paper §IV-A, §V-B/C/D): definition
+//! files, a fakeroot builder producing image bundles, and a runtime with
+//! --nv GPU semantics. See DESIGN.md §1 for what this substitutes.
+
+pub mod builder;
+pub mod definition;
+pub mod image;
+pub mod runtime;
+
+pub use builder::{BuildOptions, Builder};
+pub use definition::{Bootstrap, DefinitionFile};
+pub use image::{Digest, Image, Layer};
+pub use runtime::{ContainerRun, ContainerRuntime, RunOptions};

@@ -1,0 +1,265 @@
+//! The SODALITE optimisation DSL (paper §V-A, Listing 1).
+//!
+//! The data scientist encodes optimisation options as JSON in the IDE;
+//! MODAK consumes them to select/build an optimised container. The exact
+//! Listing-1 document parses here (there is a golden test for it).
+//!
+//! ```json
+//! "optimisation": {
+//!   "enable_opt_build": true,
+//!   "app_type": "ai_training",
+//!   "opt_build": { "cpu_type": "x86", "acc_type": "Nvidia" },
+//!   "ai_training": { "tensorflow": { "version": "1.1", "xla": true } }
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// MODAK's three supported application types (paper §III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppType {
+    AiTraining,
+    AiInference,
+    BigData,
+    Hpc,
+}
+
+impl AppType {
+    pub fn parse(s: &str) -> Result<AppType> {
+        match s {
+            "ai_training" => Ok(AppType::AiTraining),
+            "ai_inference" => Ok(AppType::AiInference),
+            "big_data" => Ok(AppType::BigData),
+            "hpc" => Ok(AppType::Hpc),
+            other => bail!("unknown app_type {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AppType::AiTraining => "ai_training",
+            AppType::AiInference => "ai_inference",
+            AppType::BigData => "big_data",
+            AppType::Hpc => "hpc",
+        }
+    }
+}
+
+/// Target hardware for an optimised build (Listing 1 `opt_build`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct OptBuild {
+    pub cpu_type: Option<String>,
+    pub acc_type: Option<String>,
+}
+
+/// Per-framework options inside `ai_training`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameworkOpts {
+    pub framework: String,
+    pub version: Option<String>,
+    /// Graph compilers toggled on (xla / ngraph / glow).
+    pub compilers: Vec<String>,
+}
+
+/// A parsed optimisation request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Optimisation {
+    pub enable_opt_build: bool,
+    pub app_type: AppType,
+    pub opt_build: OptBuild,
+    pub frameworks: Vec<FrameworkOpts>,
+    /// Optional workload override (which benchmark to run).
+    pub workload: Option<String>,
+    /// Optional autotune toggle (paper §III: "runtime parameters can be
+    /// further autotuned").
+    pub autotune: bool,
+}
+
+const KNOWN_COMPILERS: &[&str] = &["xla", "ngraph", "glow"];
+const KNOWN_FRAMEWORKS: &[&str] = &["tensorflow", "pytorch", "mxnet", "cntk", "keras"];
+
+impl Optimisation {
+    /// Parse a DSL document. Accepts either the bare object or one wrapped
+    /// in an `"optimisation"` key (as in Listing 1).
+    pub fn parse(text: &str) -> Result<Optimisation> {
+        let root = Json::parse(text).map_err(|e| anyhow!("DSL parse error: {e}"))?;
+        let o = if root.get("optimisation").is_null() {
+            &root
+        } else {
+            root.get("optimisation")
+        };
+        Self::from_json(o)
+    }
+
+    pub fn from_json(o: &Json) -> Result<Optimisation> {
+        let app_type = AppType::parse(
+            o.get("app_type")
+                .as_str()
+                .ok_or_else(|| anyhow!("DSL missing app_type"))?,
+        )?;
+        let ob = o.get("opt_build");
+        let opt_build = OptBuild {
+            cpu_type: ob.get("cpu_type").as_str().map(str::to_string),
+            acc_type: ob.get("acc_type").as_str().map(str::to_string),
+        };
+
+        let mut frameworks = Vec::new();
+        if let Some(section) = o.get(app_type.as_str()).as_obj() {
+            for (fw, fj) in section {
+                if !KNOWN_FRAMEWORKS.contains(&fw.as_str()) {
+                    bail!("unknown framework {fw:?} in DSL");
+                }
+                let mut compilers = Vec::new();
+                for c in KNOWN_COMPILERS {
+                    if fj.get(c).as_bool() == Some(true) {
+                        compilers.push(c.to_string());
+                    }
+                }
+                frameworks.push(FrameworkOpts {
+                    framework: fw.clone(),
+                    version: fj
+                        .get("version")
+                        .as_str()
+                        .map(str::to_string)
+                        .or_else(|| fj.get("version").as_f64().map(|v| format!("{v}"))),
+                    compilers,
+                });
+            }
+        }
+
+        Ok(Optimisation {
+            enable_opt_build: o.get("enable_opt_build").as_bool().unwrap_or(false),
+            app_type,
+            opt_build,
+            frameworks,
+            workload: o.get("workload").as_str().map(str::to_string),
+            autotune: o.get("autotune").as_bool().unwrap_or(false),
+        })
+    }
+
+    /// Serialize back to the Listing-1 JSON shape (round-trip tested).
+    pub fn to_json(&self) -> Json {
+        let mut ob = Json::obj();
+        if let Some(c) = &self.opt_build.cpu_type {
+            ob.set("cpu_type", Json::from(c.as_str()));
+        }
+        if let Some(a) = &self.opt_build.acc_type {
+            ob.set("acc_type", Json::from(a.as_str()));
+        }
+        let mut fws = Json::obj();
+        for fw in &self.frameworks {
+            let mut fj = Json::obj();
+            if let Some(v) = &fw.version {
+                fj.set("version", Json::from(v.as_str()));
+            }
+            for c in &fw.compilers {
+                fj.set(c, Json::from(true));
+            }
+            fws.set(&fw.framework, fj);
+        }
+        let mut inner = Json::obj();
+        inner
+            .set("enable_opt_build", Json::from(self.enable_opt_build))
+            .set("app_type", Json::from(self.app_type.as_str()))
+            .set("opt_build", ob)
+            .set(self.app_type.as_str(), fws);
+        if let Some(w) = &self.workload {
+            inner.set("workload", Json::from(w.as_str()));
+        }
+        if self.autotune {
+            inner.set("autotune", Json::from(true));
+        }
+        let mut root = Json::obj();
+        root.set("optimisation", inner);
+        root
+    }
+
+    /// The target implied by `opt_build` (paper: x86 + Nvidia).
+    pub fn wants_gpu(&self) -> bool {
+        self.opt_build
+            .acc_type
+            .as_deref()
+            .map(|a| {
+                let a = a.to_ascii_lowercase();
+                a.contains("nvidia") || a.contains("gpu")
+            })
+            .unwrap_or(false)
+    }
+}
+
+/// The paper's Listing 1, verbatim.
+pub const LISTING_1: &str = r#"{
+ "optimisation": {
+  "enable_opt_build": true,
+  "app_type": "ai_training",
+  "opt_build": {
+   "cpu_type": "x86",
+   "acc_type": "Nvidia"},
+  "ai_training": {
+   "tensorflow": {
+    "version": "1.1",
+    "xla": true }}}}"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_papers_listing_1() {
+        let opt = Optimisation::parse(LISTING_1).unwrap();
+        assert!(opt.enable_opt_build);
+        assert_eq!(opt.app_type, AppType::AiTraining);
+        assert_eq!(opt.opt_build.cpu_type.as_deref(), Some("x86"));
+        assert_eq!(opt.opt_build.acc_type.as_deref(), Some("Nvidia"));
+        assert_eq!(opt.frameworks.len(), 1);
+        let fw = &opt.frameworks[0];
+        assert_eq!(fw.framework, "tensorflow");
+        assert_eq!(fw.version.as_deref(), Some("1.1"));
+        assert_eq!(fw.compilers, vec!["xla".to_string()]);
+        assert!(opt.wants_gpu());
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let opt = Optimisation::parse(LISTING_1).unwrap();
+        let text = opt.to_json().to_string_pretty();
+        let opt2 = Optimisation::parse(&text).unwrap();
+        assert_eq!(opt, opt2);
+    }
+
+    #[test]
+    fn bare_object_without_wrapper_parses() {
+        let opt = Optimisation::parse(
+            r#"{"app_type": "ai_training", "ai_training": {"pytorch": {"version": "1.14"}}}"#,
+        )
+        .unwrap();
+        assert!(!opt.enable_opt_build);
+        assert_eq!(opt.frameworks[0].framework, "pytorch");
+        assert!(opt.frameworks[0].compilers.is_empty());
+        assert!(!opt.wants_gpu());
+    }
+
+    #[test]
+    fn rejects_unknown_app_type_and_framework() {
+        assert!(Optimisation::parse(r#"{"app_type": "quantum"}"#).is_err());
+        assert!(Optimisation::parse(
+            r#"{"app_type": "ai_training", "ai_training": {"caffe": {}}}"#
+        )
+        .is_err());
+        assert!(Optimisation::parse("not json").is_err());
+    }
+
+    #[test]
+    fn multiple_compilers_and_autotune() {
+        let opt = Optimisation::parse(
+            r#"{"app_type": "ai_training", "autotune": true, "workload": "mnist_cnn",
+                "ai_training": {"tensorflow": {"version": "2.1", "xla": true, "ngraph": true}}}"#,
+        )
+        .unwrap();
+        assert!(opt.autotune);
+        assert_eq!(opt.workload.as_deref(), Some("mnist_cnn"));
+        assert_eq!(opt.frameworks[0].compilers.len(), 2);
+    }
+}

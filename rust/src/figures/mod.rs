@@ -1,0 +1,478 @@
+//! Figure/table regeneration harness (DESIGN.md §3): every table and figure
+//! in the paper's evaluation, reproduced end-to-end through the full stack —
+//! registry -> container build -> Torque qsub -> node -> PJRT training ->
+//! report.
+//!
+//! Timing protocol: benches boot a single node of the relevant class so job
+//! timings never contend for the host's one core; the paper's Y axis is
+//! reproduced as `first_epoch + (N-1) * steady_epoch` extrapolated to the
+//! paper's epoch count (MNIST N=12; ResNet reports sec/epoch), with
+//! container/session startup (artifact compilation) excluded — the paper
+//! also excludes container startup and notes first-epoch overhead
+//! separately. The XLA profile's per-epoch recompiles land *inside* epochs,
+//! which is the effect Fig 5 measures.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::frameworks::Target;
+use crate::metrics::{speedup_pct, FigureReport};
+use crate::perfmodel::{Features, PerfModel, Record};
+use crate::registry::Registry;
+use crate::runtime::Manifest;
+use crate::scheduler::{JobScript, JobState, Payload, Resources, TorqueServer};
+use crate::trainer::TrainConfig;
+
+/// How a figure's jobs are sized.
+#[derive(Debug, Clone)]
+pub struct FigureConfig {
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    /// Extrapolate the reported wallclock to this many epochs (None =
+    /// report sec/epoch instead, ResNet-style).
+    pub scale_to_epochs: Option<usize>,
+    pub lr: f32,
+    pub seed: i32,
+}
+
+impl FigureConfig {
+    /// MNIST figures: measure 3 epochs, report the paper's 12-epoch number.
+    pub fn mnist() -> FigureConfig {
+        FigureConfig {
+            epochs: 3,
+            steps_per_epoch: 4,
+            scale_to_epochs: Some(12),
+            lr: 0.05,
+            seed: 0,
+        }
+    }
+
+    /// Graph-compiler figure: the paper's full-length epochs matter here —
+    /// the XLA verdict *is* the compile/compute ratio, so short epochs
+    /// would overstate the penalty (see EXPERIMENTS.md).
+    pub fn mnist_compilers() -> FigureConfig {
+        FigureConfig {
+            steps_per_epoch: 30,
+            ..FigureConfig::mnist()
+        }
+    }
+
+    /// ResNet figures: average sec/epoch, steady state (paper protocol:
+    /// 3 epochs; we run 4 with longer epochs so the 1-core host's timing
+    /// noise stays well under the effects being measured).
+    pub fn resnet() -> FigureConfig {
+        FigureConfig {
+            epochs: 4,
+            steps_per_epoch: 8,
+            scale_to_epochs: None,
+            lr: 0.02,
+            seed: 0,
+        }
+    }
+
+    fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            epochs: self.epochs,
+            steps_per_epoch: self.steps_per_epoch,
+            seed: self.seed as u64,
+        }
+    }
+}
+
+/// Outcome of one container benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchRun {
+    pub label: String,
+    pub tag: String,
+    /// The figure metric (extrapolated total or sec/epoch).
+    pub metric_secs: f64,
+    pub first_epoch_secs: f64,
+    pub steady_epoch_secs: f64,
+    pub final_loss: f64,
+    pub dispatches: u64,
+    pub bytes_host: u64,
+    pub compile_secs: f64,
+}
+
+/// Shared context for running figures.
+pub struct Harness<'a> {
+    pub manifest: &'a Manifest,
+    pub registry: &'a mut Registry,
+    /// When set, every run is recorded into the performance model.
+    pub model: Option<&'a mut PerfModel>,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl<'a> Harness<'a> {
+    pub fn new(manifest: &'a Manifest, registry: &'a mut Registry) -> Harness<'a> {
+        Harness {
+            manifest,
+            registry,
+            model: None,
+            verbose: true,
+        }
+    }
+
+    /// Run one container benchmark through the full scheduler stack.
+    pub fn run_container(&mut self, tag: &str, cfg: &FigureConfig) -> Result<BenchRun> {
+        let profile = self.registry.get(tag)?.profile.clone();
+        let image = self.registry.ensure_built(tag, self.manifest)?;
+        if self.verbose {
+            eprintln!("[bench] {tag}: image {} ({})", image.reference(), image.digest);
+        }
+
+        // one node of the right class: exclusive timing on a 1-core host
+        let mut server = match profile.target {
+            Target::Cpu => TorqueServer::boot(1, 0),
+            Target::GpuSim => TorqueServer::boot(0, 1),
+        };
+        server.register_image(tag, image.dir.clone());
+        let script = JobScript {
+            name: format!("bench-{}", profile.label().to_lowercase()),
+            queue: "batch".into(),
+            resources: Resources {
+                nodes: 1,
+                gpus: if profile.target == Target::GpuSim { 1 } else { 0 },
+                walltime: Duration::from_secs(4 * 3600),
+            },
+            payload: Payload {
+                image: tag.to_string(),
+                epochs: cfg.epochs,
+                steps_per_epoch: cfg.steps_per_epoch,
+                lr: cfg.lr,
+                seed: cfg.seed,
+                nv: profile.target == Target::GpuSim,
+            },
+        };
+        let id = server.qsub(script)?;
+        server.wait(id)?;
+        let rec = server.job(id)?;
+        let JobState::Completed { run, .. } = &rec.state else {
+            return Err(anyhow!(
+                "bench job for {tag} did not complete: {:?}",
+                rec.state
+            ));
+        };
+
+        let report = &run.report;
+        let first = report.epoch_secs[0];
+        // min over post-warmup epochs: this host is a shared VM with
+        // visible CPU-steal spikes; the paper's testbed was exclusive.
+        // min-of-epochs is the standard interference-robust estimator.
+        let steady = report.epoch_secs[1..]
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+            .min(report.epoch_secs[0]);
+        let metric = match cfg.scale_to_epochs {
+            Some(n) => first + steady * (n.saturating_sub(1)) as f64,
+            None => steady,
+        };
+        let out = BenchRun {
+            label: profile.label(),
+            tag: tag.to_string(),
+            metric_secs: metric,
+            first_epoch_secs: first,
+            steady_epoch_secs: steady,
+            final_loss: report.final_loss(),
+            dispatches: run.dispatches,
+            bytes_host: run.bytes_h2d + run.bytes_d2h,
+            compile_secs: run.compile_secs,
+        };
+        if self.verbose {
+            eprintln!(
+                "[bench] {tag}: metric {:.2}s (first {:.2}s steady {:.2}s loss {:.3})",
+                out.metric_secs, first, steady, out.final_loss
+            );
+        }
+        if let Some(model) = self.model.as_deref_mut() {
+            let wl = self.manifest.workload(profile.workload)?;
+            model.observe(Record {
+                image: tag.to_string(),
+                workload: profile.workload.to_string(),
+                features: Features::derive(&profile, wl, &cfg.train_config()),
+                measured_secs: report.total_secs,
+            });
+        }
+        Ok(out)
+    }
+
+    fn run_set(
+        &mut self,
+        report: &mut FigureReport,
+        tags: &[&str],
+        cfg: &FigureConfig,
+    ) -> Result<Vec<BenchRun>> {
+        let mut runs = Vec::new();
+        for tag in tags {
+            let run = self.run_container(tag, cfg)?;
+            report.push(run.label.clone(), run.metric_secs);
+            runs.push(run);
+        }
+        Ok(runs)
+    }
+
+    // ---- Table I -----------------------------------------------------------
+
+    /// Table I: source matrix of AI framework containers.
+    pub fn table1(&mut self) -> FigureReport {
+        let mut rep = FigureReport::new(
+            "table1",
+            "Source of AI framework containers",
+            "availability (1 = packaged)",
+        );
+        for (fw, ver, hub, pip, opt) in self.registry.table1() {
+            rep.push(
+                format!(
+                    "{fw} {ver} [{}{}{}]",
+                    if hub { "Hub " } else { "" },
+                    if pip { "pip " } else { "" },
+                    if opt { "opt-build" } else { "" }
+                ),
+                (hub as u8 + pip as u8 + opt as u8) as f64,
+            );
+        }
+        rep.check(
+            "TensorFlow, PyTorch, MXNet, CNTK all packaged (paper Table I)",
+            ["tensorflow", "pytorch", "mxnet", "cntk"].iter().all(|fw| {
+                self.registry.table1().iter().any(|(f, ..)| f == fw)
+            }),
+        );
+        rep
+    }
+
+    // ---- Fig 3 -------------------------------------------------------------
+
+    /// Fig 3: DockerHub containers, MNIST CNN training on CPU.
+    pub fn fig3(&mut self, cfg: &FigureConfig) -> Result<FigureReport> {
+        let mut rep = FigureReport::new(
+            "fig3",
+            "Performance of DockerHub AI framework containers (MNIST CNN, CPU)",
+            metric_name(cfg),
+        );
+        self.run_set(
+            &mut rep,
+            &[
+                "tensorflow:1.4-cpu-hub",
+                "tensorflow:2.1-cpu-hub",
+                "pytorch:1.14-cpu-hub",
+                "mxnet:2.0-cpu-hub",
+                "cntk:2.7-cpu-hub",
+            ],
+            cfg,
+        )?;
+        let tf14 = rep.get("TF1.4").unwrap();
+        let tf21 = rep.get("TF2.1").unwrap();
+        let pt = rep.get("Pytorch").unwrap();
+        let mx = rep.get("Mxnet").unwrap();
+        let cntk = rep.get("Cntk").unwrap();
+        rep.check(
+            format!(
+                "TF2.1 substantially faster than TF1.4 (paper ~54%; measured {:.0}%)",
+                speedup_pct(tf14, tf21)
+            ),
+            tf21 < 0.85 * tf14,
+        );
+        // The paper finds TF1.4 ~= PyTorch ~= MXNet. Our eager profiles
+        // (PyTorch/MXNet, device-resident) agree tightly; the TF1.4
+        // session profile pays steeper feed-dict host copies than the real
+        // TF1.4 did, so the band is wider (documented in EXPERIMENTS.md).
+        rep.check(
+            "PyTorch and MXNet perform similarly (within 25%)",
+            (pt - mx).abs() < 0.25 * pt.max(mx),
+        );
+        rep.check(
+            "TF1.4 in the same band as the eager frameworks (within 2x), \
+             nowhere near the CNTK outlier",
+            tf14 < 2.0 * pt.max(mx) && tf14 < 0.5 * cntk,
+        );
+        rep.check(
+            format!(
+                "CNTK is a far outlier (paper: lack of CPU optimisations; measured {:.1}x TF2.1)",
+                cntk / tf21
+            ),
+            cntk > 3.0 * tf21,
+        );
+        Ok(rep)
+    }
+
+    // ---- Fig 4 -------------------------------------------------------------
+
+    /// Fig 4 left: custom source builds vs DockerHub, MNIST CNN on CPU.
+    pub fn fig4_left(&mut self, cfg: &FigureConfig) -> Result<FigureReport> {
+        let mut rep = FigureReport::new(
+            "fig4_left",
+            "Custom source builds vs DockerHub (MNIST CNN, CPU)",
+            metric_name(cfg),
+        );
+        self.run_set(
+            &mut rep,
+            &[
+                "tensorflow:2.1-cpu-hub",
+                "tensorflow:2.1-cpu-src",
+                "pytorch:1.14-cpu-hub",
+                "pytorch:1.14-cpu-src",
+            ],
+            cfg,
+        )?;
+        let tf_hub = rep.get("TF2.1").unwrap();
+        let tf_src = rep.get("TF2.1-src").unwrap();
+        let pt_hub = rep.get("Pytorch").unwrap();
+        let pt_src = rep.get("Pytorch-src").unwrap();
+        rep.check(
+            format!(
+                "TF2.1 source build faster than hub (paper 4%; measured {:.0}%)",
+                speedup_pct(tf_hub, tf_src)
+            ),
+            tf_src < tf_hub,
+        );
+        rep.check(
+            format!(
+                "PyTorch source build faster than hub (paper 17%; measured {:.0}%)",
+                speedup_pct(pt_hub, pt_src)
+            ),
+            pt_src < pt_hub,
+        );
+        rep.check(
+            "PyTorch gains at least as much from the source build as TF",
+            speedup_pct(pt_hub, pt_src) >= speedup_pct(tf_hub, tf_src) - 5.0,
+        );
+        Ok(rep)
+    }
+
+    /// Fig 4 right: ResNet50 training on the gpu-sim nodes, hub vs src.
+    pub fn fig4_right(&mut self, cfg: &FigureConfig) -> Result<FigureReport> {
+        let mut rep = FigureReport::new(
+            "fig4_right",
+            "Custom builds vs DockerHub (ResNet50, gpu-sim)",
+            metric_name(cfg),
+        );
+        self.run_set(
+            &mut rep,
+            &[
+                "tensorflow:2.1-gpu-hub",
+                "tensorflow:2.1-gpu-src",
+                "pytorch:1.14-gpu-hub",
+                "pytorch:1.14-gpu-src",
+                "mxnet:2.0-gpu-hub",
+            ],
+            cfg,
+        )?;
+        let tf_hub = rep.get("TF2.1").unwrap();
+        let tf_src = rep.get("TF2.1-src").unwrap();
+        let pt_hub = rep.get("Pytorch").unwrap();
+        let pt_src = rep.get("Pytorch-src").unwrap();
+        let mx = rep.get("Mxnet").unwrap();
+        rep.check(
+            format!(
+                "source builds give only slight gains in the compute-bound regime \
+                 (paper ~2%; measured TF {:.0}%, PT {:.0}%)",
+                speedup_pct(tf_hub, tf_src),
+                speedup_pct(pt_hub, pt_src)
+            ),
+            (speedup_pct(tf_hub, tf_src)).abs() < 25.0 && (speedup_pct(pt_hub, pt_src)).abs() < 25.0,
+        );
+        rep.check(
+            "MXNet performs similarly to the others",
+            (mx - tf_hub).abs() < 0.35 * tf_hub,
+        );
+        Ok(rep)
+    }
+
+    // ---- Fig 5 -------------------------------------------------------------
+
+    /// Fig 5 left: graph compilers on CPU — XLA slows MNIST down, nGraph
+    /// speeds it up.
+    pub fn fig5_left(&mut self, cfg: &FigureConfig) -> Result<FigureReport> {
+        let mut rep = FigureReport::new(
+            "fig5_left",
+            "Graph compilers (MNIST CNN, CPU): XLA vs nGraph",
+            metric_name(cfg),
+        );
+        self.run_set(
+            &mut rep,
+            &[
+                "tensorflow:2.1-cpu-hub",
+                "tensorflow:2.1-cpu-src-xla",
+                "tensorflow:1.4-cpu-hub",
+                "tensorflow:1.4-cpu-src-ngraph",
+            ],
+            cfg,
+        )?;
+        let tf21 = rep.get("TF2.1").unwrap();
+        let xla = rep.get("TF2.1-src-XLA").unwrap();
+        let tf14 = rep.get("TF1.4").unwrap();
+        let ngraph = rep.get("TF1.4-src-NGRAPH").unwrap();
+        rep.check(
+            format!(
+                "XLA *degrades* CPU MNIST training (paper ~30% loss from recompilation; \
+                 measured {:.0}% slower)",
+                -speedup_pct(tf21, xla)
+            ),
+            xla > tf21,
+        );
+        rep.check(
+            format!(
+                "nGraph speeds up TF1.4 (paper 30%; measured {:.0}%)",
+                speedup_pct(tf14, ngraph)
+            ),
+            ngraph < 0.85 * tf14,
+        );
+        Ok(rep)
+    }
+
+    /// Fig 5 right: TF2.1 + XLA on the gpu-sim ResNet50 — the sign flips.
+    pub fn fig5_right(&mut self, cfg: &FigureConfig) -> Result<FigureReport> {
+        let mut rep = FigureReport::new(
+            "fig5_right",
+            "TF2.1 + XLA (ResNet50, gpu-sim): compiler helps here",
+            metric_name(cfg),
+        );
+        self.run_set(
+            &mut rep,
+            &["tensorflow:2.1-gpu-src", "tensorflow:2.1-gpu-src-xla"],
+            cfg,
+        )?;
+        let base = rep.get("TF2.1-src").unwrap();
+        let xla = rep.get("TF2.1-src-XLA").unwrap();
+        rep.check(
+            format!(
+                "XLA *improves* ResNet50 (paper 9%; measured {:.0}%)",
+                speedup_pct(base, xla)
+            ),
+            xla < base,
+        );
+        Ok(rep)
+    }
+}
+
+fn metric_name(cfg: &FigureConfig) -> &'static str {
+    match cfg.scale_to_epochs {
+        Some(12) => "wallclock seconds for 12 epochs (first + 11 x steady)",
+        Some(_) => "extrapolated wallclock seconds",
+        None => "seconds per epoch (steady state)",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_configs_follow_paper_protocol() {
+        let m = FigureConfig::mnist();
+        assert_eq!(m.scale_to_epochs, Some(12));
+        let r = FigureConfig::resnet();
+        assert_eq!(r.epochs, 4);
+        assert!(r.scale_to_epochs.is_none());
+        assert!(FigureConfig::mnist_compilers().steps_per_epoch > m.steps_per_epoch);
+    }
+
+    #[test]
+    fn metric_names() {
+        assert!(metric_name(&FigureConfig::mnist()).contains("12 epochs"));
+        assert!(metric_name(&FigureConfig::resnet()).contains("per epoch"));
+    }
+}

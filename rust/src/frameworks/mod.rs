@@ -1,0 +1,259 @@
+//! Framework container profiles: the paper's benchmark matrix (Table I +
+//! Figs 3-5) as (artifact variant) x (execution policy) bindings.
+//!
+//! Calibration rationale (measured on this testbed, see EXPERIMENTS.md):
+//!
+//! * `staged_*` + HostRoundTrip = TF1.x graph-session (per-op dispatch,
+//!   feed-dict host copies, forward recomputed in backward stages).
+//! * `staged_*` + DeviceResident = PyTorch/MXNet eager (per-op dispatch,
+//!   tensors parked on device).
+//! * `fused_*` = TF2.x whole-step jit; `+ recompile_each_epoch` = XLA JIT
+//!   autoclustering (the paper: XLA-CPU loses on MNIST because repeated
+//!   graph compilation dominates short epochs).
+//! * kernel quality ladder: `naive` (channel-looped conv — CNTK-CPU's
+//!   documented lack of CPU optimisations) < `generic` (per-tap GEMM conv —
+//!   the pre-AVX2-era generic DockerHub binaries) < `ref` (tuned lowering —
+//!   custom source builds). The Pallas (`*_pallas`) artifacts are the
+//!   TPU-target equivalents of `ref`; under CPU interpret they are
+//!   numerics-only (EXPERIMENTS.md §Perf) so CPU figures bind `ref`.
+//! * gpu-sim nodes run the ResNet workload where compute per dispatch is
+//!   large: hub-vs-src collapses to ~0-2% and whole-graph fusion (XLA)
+//!   flips to a win — the paper's Fig 4R/5R regime.
+
+use anyhow::{anyhow, Result};
+
+use crate::executor::ExecPolicy;
+
+/// Compute target of a container image (the paper's cpu / gpu tags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    Cpu,
+    /// Simulated GPU node class (see DESIGN.md §1 substitution table).
+    GpuSim,
+}
+
+impl Target {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Target::Cpu => "cpu",
+            Target::GpuSim => "gpu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Target> {
+        match s {
+            "cpu" => Ok(Target::Cpu),
+            "gpu" | "gpu-sim" | "gpusim" => Ok(Target::GpuSim),
+            other => Err(anyhow!("unknown target {other:?}")),
+        }
+    }
+}
+
+/// Where a container image came from (Table I columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImageSource {
+    /// Official image pulled from DockerHub.
+    Hub,
+    /// Installed via pip into a base container.
+    Pip,
+    /// Custom built from source with target flags (`opt-build`).
+    OptBuild,
+}
+
+impl ImageSource {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ImageSource::Hub => "hub",
+            ImageSource::Pip => "pip",
+            ImageSource::OptBuild => "src",
+        }
+    }
+}
+
+/// A framework container profile: everything MODAK needs to run one of the
+/// paper's benchmark containers on the testbed.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// Framework name as in Table I (tensorflow / pytorch / mxnet / cntk).
+    pub framework: &'static str,
+    /// Framework version as in Table I.
+    pub version: &'static str,
+    pub source: ImageSource,
+    pub target: Target,
+    /// Graph compiler enabled inside the container (xla / ngraph / glow).
+    pub graph_compiler: Option<&'static str>,
+    /// Which workload this container runs in the paper's evaluation.
+    pub workload: &'static str,
+    /// Artifact variant (manifest key) the container ships.
+    pub variant: &'static str,
+    /// Execution policy the framework runtime uses.
+    pub policy: ExecPolicy,
+}
+
+impl Profile {
+    /// Registry image tag, e.g. `tensorflow:2.1-cpu-hub-xla`.
+    pub fn image_tag(&self) -> String {
+        let mut tag = format!(
+            "{}:{}-{}-{}",
+            self.framework,
+            self.version,
+            self.target.tag(),
+            self.source.tag()
+        );
+        if let Some(gc) = self.graph_compiler {
+            tag.push('-');
+            tag.push_str(gc);
+        }
+        tag
+    }
+
+    /// Short display label used in the figure reports.
+    pub fn label(&self) -> String {
+        let base = match self.framework {
+            "tensorflow" => format!("TF{}", self.version),
+            f => {
+                let mut c = f.chars();
+                let first = c.next().unwrap().to_uppercase().to_string();
+                format!("{}{}", first, c.as_str())
+            }
+        };
+        let mut label = base;
+        if self.source == ImageSource::OptBuild {
+            label.push_str("-src");
+        }
+        if let Some(gc) = self.graph_compiler {
+            label.push('-');
+            label.push_str(&gc.to_uppercase());
+        }
+        label
+    }
+}
+
+/// The full container matrix of the paper's evaluation.
+pub fn all_profiles() -> Vec<Profile> {
+    use ImageSource::*;
+    use Target::*;
+    let host = ExecPolicy::host;
+    let dev = ExecPolicy::device;
+    let recomp = ExecPolicy::recompiling;
+    vec![
+        // ---- Fig 3: DockerHub containers, MNIST CNN on CPU ----
+        Profile { framework: "tensorflow", version: "1.4", source: Hub, target: Cpu,
+                  graph_compiler: None, workload: "mnist_cnn",
+                  variant: "staged_generic", policy: host() },
+        Profile { framework: "tensorflow", version: "2.1", source: Hub, target: Cpu,
+                  graph_compiler: None, workload: "mnist_cnn",
+                  variant: "fused_generic", policy: host() },
+        Profile { framework: "pytorch", version: "1.14", source: Hub, target: Cpu,
+                  graph_compiler: None, workload: "mnist_cnn",
+                  variant: "staged_generic", policy: dev() },
+        Profile { framework: "mxnet", version: "2.0", source: Hub, target: Cpu,
+                  graph_compiler: None, workload: "mnist_cnn",
+                  variant: "staged_generic", policy: dev() },
+        Profile { framework: "cntk", version: "2.7", source: Hub, target: Cpu,
+                  graph_compiler: None, workload: "mnist_cnn",
+                  variant: "staged_naive", policy: host() },
+        // ---- Fig 4 left: custom source builds, MNIST CNN on CPU ----
+        Profile { framework: "tensorflow", version: "2.1", source: OptBuild, target: Cpu,
+                  graph_compiler: None, workload: "mnist_cnn",
+                  variant: "fused_ref", policy: host() },
+        Profile { framework: "pytorch", version: "1.14", source: OptBuild, target: Cpu,
+                  graph_compiler: None, workload: "mnist_cnn",
+                  variant: "staged_ref", policy: dev() },
+        // ---- Fig 5 left: graph compilers, MNIST CNN on CPU ----
+        Profile { framework: "tensorflow", version: "2.1", source: OptBuild, target: Cpu,
+                  graph_compiler: Some("xla"), workload: "mnist_cnn",
+                  variant: "fused_generic", policy: recomp() },
+        Profile { framework: "tensorflow", version: "1.4", source: OptBuild, target: Cpu,
+                  graph_compiler: Some("ngraph"), workload: "mnist_cnn",
+                  variant: "fused_ref", policy: host() },
+        // ---- Fig 4 right: ResNet50 on gpu-sim nodes ----
+        Profile { framework: "tensorflow", version: "2.1", source: Hub, target: GpuSim,
+                  graph_compiler: None, workload: "resnet50s",
+                  variant: "threestage_generic", policy: host() },
+        Profile { framework: "tensorflow", version: "2.1", source: OptBuild, target: GpuSim,
+                  graph_compiler: None, workload: "resnet50s",
+                  variant: "threestage_ref", policy: host() },
+        Profile { framework: "pytorch", version: "1.14", source: Hub, target: GpuSim,
+                  graph_compiler: None, workload: "resnet50s",
+                  variant: "threestage_generic", policy: dev() },
+        Profile { framework: "pytorch", version: "1.14", source: OptBuild, target: GpuSim,
+                  graph_compiler: None, workload: "resnet50s",
+                  variant: "threestage_ref", policy: dev() },
+        Profile { framework: "mxnet", version: "2.0", source: Hub, target: GpuSim,
+                  graph_compiler: None, workload: "resnet50s",
+                  variant: "threestage_generic", policy: dev() },
+        // ---- Fig 5 right: TF2.1 + XLA on gpu-sim (one compile, fused) ----
+        Profile { framework: "tensorflow", version: "2.1", source: OptBuild, target: GpuSim,
+                  graph_compiler: Some("xla"), workload: "resnet50s",
+                  variant: "fused_ref", policy: host() },
+    ]
+}
+
+/// Look up a profile by its image tag.
+pub fn by_tag(tag: &str) -> Result<Profile> {
+    all_profiles()
+        .into_iter()
+        .find(|p| p.image_tag() == tag)
+        .ok_or_else(|| anyhow!("no container profile with tag {tag:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_unique() {
+        let profiles = all_profiles();
+        let mut tags: Vec<String> = profiles.iter().map(|p| p.image_tag()).collect();
+        tags.sort();
+        let n = tags.len();
+        tags.dedup();
+        assert_eq!(tags.len(), n, "duplicate image tags");
+    }
+
+    #[test]
+    fn table1_frameworks_present() {
+        let profiles = all_profiles();
+        for fw in ["tensorflow", "pytorch", "mxnet", "cntk"] {
+            assert!(profiles.iter().any(|p| p.framework == fw), "{fw} missing");
+        }
+        // graph compilers from Table I
+        for gc in ["xla", "ngraph"] {
+            assert!(
+                profiles.iter().any(|p| p.graph_compiler == Some(gc)),
+                "{gc} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for p in all_profiles() {
+            let found = by_tag(&p.image_tag()).unwrap();
+            assert_eq!(found.variant, p.variant);
+            assert_eq!(found.workload, p.workload);
+        }
+        assert!(by_tag("tensorflow:9.9-cpu-hub").is_err());
+    }
+
+    #[test]
+    fn labels_match_paper_style() {
+        let p = by_tag("tensorflow:2.1-cpu-src").unwrap();
+        assert_eq!(p.label(), "TF2.1-src");
+        let p = by_tag("tensorflow:1.4-cpu-src-ngraph").unwrap();
+        assert_eq!(p.label(), "TF1.4-src-NGRAPH");
+        let p = by_tag("cntk:2.7-cpu-hub").unwrap();
+        assert_eq!(p.label(), "Cntk");
+    }
+
+    #[test]
+    fn cpu_profiles_run_mnist_gpu_profiles_run_resnet() {
+        for p in all_profiles() {
+            match p.target {
+                Target::Cpu => assert_eq!(p.workload, "mnist_cnn", "{}", p.image_tag()),
+                Target::GpuSim => assert_eq!(p.workload, "resnet50s", "{}", p.image_tag()),
+            }
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! MODAK reproduction: optimising AI training deployments using graph
+//! compilers and containers (Mujkanovic, Sivalingam, Lazzaro, 2020).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * L3 (this crate): MODAK coordinator — DSL, optimiser, perf model,
+//!   registry, Singularity-like containers, Torque-like scheduler over a
+//!   simulated 5-node testbed, PJRT training runtime.
+//! * L2/L1 (build-time Python, never on this path): JAX models + Pallas
+//!   kernels AOT-lowered to `artifacts/*.hlo.txt` by `make artifacts`.
+
+pub mod container;
+pub mod dsl;
+pub mod metrics;
+pub mod optimiser;
+pub mod perfmodel;
+pub mod registry;
+pub mod scheduler;
+pub mod executor;
+pub mod figures;
+pub mod frameworks;
+pub mod runtime;
+pub mod trainer;
+pub mod util;

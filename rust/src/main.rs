@@ -1,0 +1,350 @@
+//! `modak` — the MODAK deployment optimiser CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   optimise  — DSL -> deployment plan (and optionally submit + run)
+//!   build     — build a registry image
+//!   registry  — list the container matrix / Table I
+//!   submit    — qsub a Torque job script and wait for it
+//!   train     — run one container's workload directly
+//!   bench     — regenerate the paper's tables and figures
+//!
+//! Arg parsing is hand-rolled (no clap in the vendored crate set).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use modak::dsl::Optimisation;
+use modak::figures::{FigureConfig, Harness};
+use modak::metrics::FigureReport;
+use modak::optimiser::Optimiser;
+use modak::perfmodel::PerfModel;
+use modak::registry::Registry;
+use modak::runtime::Manifest;
+use modak::scheduler::{JobScript, TorqueServer};
+use modak::trainer::TrainConfig;
+
+const USAGE: &str = "\
+modak — optimising AI training deployments using graph compilers and containers
+
+USAGE:
+  modak optimise --dsl <file> [--epochs N] [--steps N] [--submit]
+  modak build --tag <image:tag>
+  modak registry [--table1]
+  modak submit --script <file>
+  modak train --tag <image:tag> [--epochs N] [--steps N] [--lr F] [--seed N]
+  modak bench <table1|fig3|fig4_left|fig4_right|fig5_left|fig5_right|all>
+              [--out <markdown file>]
+
+COMMON FLAGS:
+  --artifacts <dir>   AOT artifact dir (default: artifacts)
+  --store <dir>       image store (default: images)
+  --history <file>    performance-model history (default: perf_history.json)
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("modak: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed flag map + positional args.
+struct Cli {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    fn parse(args: &[String]) -> Cli {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let is_flag_like = |s: &String| s.starts_with("--") && s.len() > 2;
+                let value = match it.peek() {
+                    Some(v) if !is_flag_like(v) => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Cli { flags, positional }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let cli = Cli::parse(&args[1..]);
+    let artifacts_dir = cli.get("artifacts").unwrap_or("artifacts");
+    let store = cli.get("store").unwrap_or("images");
+    let history = cli.get("history").unwrap_or("perf_history.json");
+
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "optimise" | "optimize" => cmd_optimise(&cli, artifacts_dir, store, history),
+        "build" => cmd_build(&cli, artifacts_dir, store),
+        "registry" => cmd_registry(&cli, store),
+        "submit" => cmd_submit(&cli, artifacts_dir, store),
+        "train" => cmd_train(&cli, artifacts_dir, store),
+        "bench" => cmd_bench(&cli, artifacts_dir, store, history),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_optimise(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Result<()> {
+    let dsl_path = cli
+        .get("dsl")
+        .ok_or_else(|| anyhow!("optimise needs --dsl <file>"))?;
+    let text = std::fs::read_to_string(dsl_path)
+        .with_context(|| format!("reading DSL {dsl_path:?}"))?;
+    let dsl = Optimisation::parse(&text)?;
+    println!("parsed optimisation DSL:");
+    println!("  app_type: {}", dsl.app_type.as_str());
+    println!("  opt_build: {}", dsl.enable_opt_build);
+    for fw in &dsl.frameworks {
+        println!(
+            "  framework: {} {} compilers={:?}",
+            fw.framework,
+            fw.version.as_deref().unwrap_or("-"),
+            fw.compilers
+        );
+    }
+
+    let manifest = Manifest::load(artifacts)?;
+    let mut registry = Registry::open(store);
+    let model = PerfModel::open(history)?;
+    let cfg = TrainConfig {
+        epochs: cli.get_usize("epochs", 3)?,
+        steps_per_epoch: cli.get_usize("steps", 4)?,
+        seed: 0,
+    };
+    let mut optimiser = Optimiser::new(&mut registry, &model, &manifest);
+    let plan = optimiser.plan(&dsl, &cfg)?;
+
+    println!("\ndeployment plan:");
+    println!("  container: {}", plan.profile.image_tag());
+    println!("  bundle:    {:?}", plan.image.dir);
+    println!("  digest:    {}", plan.image.digest);
+    if let Some(p) = plan.predicted_secs {
+        println!("  predicted: {p:.2} s");
+    }
+    for note in &plan.notes {
+        println!("  note: {note}");
+    }
+    println!("\ngenerated job script:\n{}", plan.script.render());
+
+    if cli.get("submit").is_some() {
+        let mut server = TorqueServer::testbed();
+        server.register_image(&plan.profile.image_tag(), plan.image.dir.clone());
+        let id = server.qsub(plan.script.clone())?;
+        println!("submitted as job {id}; waiting...");
+        server.wait(id)?;
+        print_job(server.job(id)?);
+    }
+    Ok(())
+}
+
+fn cmd_build(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
+    let tag = cli
+        .get("tag")
+        .ok_or_else(|| anyhow!("build needs --tag <image:tag>"))?;
+    let manifest = Manifest::load(artifacts)?;
+    let mut registry = Registry::open(store);
+    let image = registry.ensure_built(tag, &manifest)?;
+    println!("built {} -> {:?}", image.reference(), image.dir);
+    println!("digest {}", image.digest);
+    for layer in &image.layers {
+        println!("  layer: {} ({})", layer.command, layer.effect);
+    }
+    Ok(())
+}
+
+fn cmd_registry(cli: &Cli, store: &str) -> Result<()> {
+    let registry = Registry::open(store);
+    if cli.get("table1").is_some() {
+        println!("TABLE I — SOURCE OF AI FRAMEWORK CONTAINERS");
+        println!(
+            "{:<14} {:>8} {:>5} {:>5} {:>10}",
+            "Framework", "version", "Hub", "pip", "opt-build"
+        );
+        for (fw, ver, hub, pip, opt) in registry.table1() {
+            let mark = |b: bool| if b { "X" } else { "" };
+            println!(
+                "{fw:<14} {ver:>8} {:>5} {:>5} {:>10}",
+                mark(hub),
+                mark(pip),
+                mark(opt)
+            );
+        }
+        return Ok(());
+    }
+    println!("{:<38} {:<10} built", "image", "workload");
+    for e in registry.entries() {
+        println!(
+            "{:<38} {:<10} {}",
+            e.profile.image_tag(),
+            e.profile.workload,
+            if e.bundle.is_some() { "yes" } else { "no" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_submit(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
+    let path = cli
+        .get("script")
+        .ok_or_else(|| anyhow!("submit needs --script <file>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let script = JobScript::parse(&text)?;
+    let manifest = Manifest::load(artifacts)?;
+    let mut registry = Registry::open(store);
+    let image = registry.ensure_built(&script.payload.image, &manifest)?;
+    let mut server = TorqueServer::testbed();
+    server.register_image(&script.payload.image, image.dir.clone());
+    let id = server.qsub(script)?;
+    println!("qsub: job {id} queued");
+    server.wait(id)?;
+    print_job(server.job(id)?);
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
+    let tag = cli
+        .get("tag")
+        .ok_or_else(|| anyhow!("train needs --tag <image:tag>"))?;
+    let manifest = Manifest::load(artifacts)?;
+    let mut registry = Registry::open(store);
+    let mut harness = Harness::new(&manifest, &mut registry);
+    let cfg = FigureConfig {
+        epochs: cli.get_usize("epochs", 3)?,
+        steps_per_epoch: cli.get_usize("steps", 4)?,
+        scale_to_epochs: None,
+        lr: cli.get_f32("lr", 0.05)?,
+        seed: cli.get_usize("seed", 0)? as i32,
+    };
+    let run = harness.run_container(tag, &cfg)?;
+    println!("container: {}", run.tag);
+    println!("sec/epoch (steady): {:.3}", run.steady_epoch_secs);
+    println!("first epoch:        {:.3}", run.first_epoch_secs);
+    println!("final loss:         {:.4}", run.final_loss);
+    println!("dispatches:         {}", run.dispatches);
+    println!("host bytes:         {}", run.bytes_host);
+    println!("compile secs:       {:.2}", run.compile_secs);
+    Ok(())
+}
+
+fn cmd_bench(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Result<()> {
+    let which = cli.positional.first().map(String::as_str).unwrap_or("all");
+    let manifest = Manifest::load(artifacts)?;
+    let mut registry = Registry::open(store);
+    let mut model = PerfModel::open(history)?;
+    let mut harness = Harness::new(&manifest, &mut registry);
+    harness.model = Some(&mut model);
+
+    let mut reports: Vec<FigureReport> = Vec::new();
+    let run_one = |h: &mut Harness, id: &str| -> Result<Option<FigureReport>> {
+        Ok(match id {
+            "table1" => Some(h.table1()),
+            "fig3" => Some(h.fig3(&FigureConfig::mnist())?),
+            "fig4_left" => Some(h.fig4_left(&FigureConfig::mnist())?),
+            "fig4_right" => Some(h.fig4_right(&FigureConfig::resnet())?),
+            "fig5_left" => Some(h.fig5_left(&FigureConfig::mnist_compilers())?),
+            "fig5_right" => Some(h.fig5_right(&FigureConfig::resnet())?),
+            _ => None,
+        })
+    };
+    if which == "all" {
+        for id in [
+            "table1",
+            "fig3",
+            "fig4_left",
+            "fig4_right",
+            "fig5_left",
+            "fig5_right",
+        ] {
+            reports.push(run_one(&mut harness, id)?.unwrap());
+        }
+    } else {
+        let rep = run_one(&mut harness, which)?
+            .ok_or_else(|| anyhow!("unknown benchmark {which:?}\n{USAGE}"))?;
+        reports.push(rep);
+    }
+
+    let mut all_ok = true;
+    for rep in &reports {
+        println!("{}", rep.render());
+        all_ok &= rep.all_checks_hold();
+    }
+    if let Some(out) = cli.get("out") {
+        let md: String = reports.iter().map(|r| r.to_markdown()).collect();
+        std::fs::write(out, md)?;
+        println!("wrote markdown to {out}");
+    }
+    model.save()?;
+    if model.is_trained() {
+        println!(
+            "performance model refit on {} runs (r2 = {:.3}) -> {history}",
+            model.history.len(),
+            model.r2
+        );
+    }
+    if !all_ok {
+        bail!("some figure shape checks FAILED (see output)");
+    }
+    Ok(())
+}
+
+fn print_job(rec: &modak::scheduler::JobRecord) {
+    use modak::scheduler::JobState;
+    match &rec.state {
+        JobState::Completed { run, wall_secs } => {
+            println!("job {} completed in {:.2}s", rec.id, wall_secs);
+            println!("  image:      {}", run.image);
+            println!("  workload:   {} ({})", run.workload, run.variant);
+            println!(
+                "  epochs:     {:?}",
+                run.report
+                    .epoch_secs
+                    .iter()
+                    .map(|s| (s * 100.0).round() / 100.0)
+                    .collect::<Vec<_>>()
+            );
+            println!("  final loss: {:.4}", run.report.final_loss());
+        }
+        JobState::Failed { error, .. } => println!("job {} FAILED: {error}", rec.id),
+        other => println!("job {} state {:?}", rec.id, other),
+    }
+}

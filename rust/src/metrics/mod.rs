@@ -1,0 +1,167 @@
+//! Benchmark reporting: figure/table data structures, ASCII rendering, and
+//! the shape assertions that tie measured results back to the paper's
+//! claims (DESIGN.md §3).
+
+use std::fmt::Write as _;
+
+use crate::util::timer::fmt_secs;
+
+/// One bar of a figure: a container label and its measured metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub label: String,
+    pub seconds: f64,
+}
+
+/// A reproduced figure or table.
+#[derive(Debug, Clone)]
+pub struct FigureReport {
+    /// e.g. "fig3".
+    pub id: String,
+    pub title: String,
+    /// Y-axis meaning (the paper: total wallclock for MNIST, sec/epoch for
+    /// ResNet).
+    pub metric: String,
+    pub rows: Vec<Row>,
+    /// Shape-check outcomes (claim, holds).
+    pub checks: Vec<(String, bool)>,
+}
+
+impl FigureReport {
+    pub fn new(id: &str, title: &str, metric: &str) -> FigureReport {
+        FigureReport {
+            id: id.into(),
+            title: title.into(),
+            metric: metric.into(),
+            rows: Vec::new(),
+            checks: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, label: impl Into<String>, seconds: f64) {
+        self.rows.push(Row {
+            label: label.into(),
+            seconds,
+        });
+    }
+
+    pub fn get(&self, label: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)
+            .map(|r| r.seconds)
+    }
+
+    /// Record a shape assertion, e.g. `check("TF2.1 faster than TF1.4",
+    /// tf21 < tf14)`.
+    pub fn check(&mut self, claim: impl Into<String>, holds: bool) {
+        self.checks.push((claim.into(), holds));
+    }
+
+    pub fn all_checks_hold(&self) -> bool {
+        self.checks.iter().all(|(_, ok)| *ok)
+    }
+
+    /// Render as an ASCII bar chart + check list (the bench reports and
+    /// `modak bench` output; EXPERIMENTS.md embeds these).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id, self.title);
+        let _ = writeln!(out, "   ({})", self.metric);
+        let max = self
+            .rows
+            .iter()
+            .map(|r| r.seconds)
+            .fold(f64::MIN, f64::max)
+            .max(1e-12);
+        let width = self.rows.iter().map(|r| r.label.len()).max().unwrap_or(0);
+        for r in &self.rows {
+            let bars = ((r.seconds / max) * 46.0).round() as usize;
+            let _ = writeln!(
+                out,
+                "  {:width$}  {:>10}  {}",
+                r.label,
+                fmt_secs(r.seconds),
+                "#".repeat(bars.max(1)),
+            );
+        }
+        if !self.checks.is_empty() {
+            let _ = writeln!(out, "  shape checks:");
+            for (claim, ok) in &self.checks {
+                let _ = writeln!(out, "    [{}] {}", if *ok { "ok" } else { "FAIL" }, claim);
+            }
+        }
+        out
+    }
+
+    /// Render as a markdown table (EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {} — {}\n", self.id, self.title);
+        let _ = writeln!(out, "| container | {} |", self.metric);
+        let _ = writeln!(out, "|---|---|");
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} | {:.3} |", r.label, r.seconds);
+        }
+        out.push('\n');
+        for (claim, ok) in &self.checks {
+            let _ = writeln!(out, "- {} — **{}**", claim, if *ok { "holds" } else { "FAILS" });
+        }
+        out
+    }
+}
+
+/// Percentage speedup of `new` over `old` (paper style: "17% speedup").
+pub fn speedup_pct(old: f64, new: f64) -> f64 {
+    100.0 * (old - new) / old
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FigureReport {
+        let mut f = FigureReport::new("fig3", "DockerHub containers, MNIST CPU", "secs / 12 epochs");
+        f.push("TF1.4", 10.0);
+        f.push("TF2.1", 6.5);
+        f.push("Cntk", 60.0);
+        f.check("TF2.1 faster than TF1.4", true);
+        f.check("CNTK is the far outlier", true);
+        f
+    }
+
+    #[test]
+    fn get_and_checks() {
+        let f = sample();
+        assert_eq!(f.get("TF2.1"), Some(6.5));
+        assert_eq!(f.get("nope"), None);
+        assert!(f.all_checks_hold());
+    }
+
+    #[test]
+    fn render_contains_rows_and_checks() {
+        let text = sample().render();
+        assert!(text.contains("fig3"));
+        assert!(text.contains("TF1.4"));
+        assert!(text.contains("[ok] CNTK is the far outlier"));
+        // longest bar belongs to the slowest row
+        let cntk_line = text.lines().find(|l| l.contains("Cntk")).unwrap();
+        let tf_line = text.lines().find(|l| l.contains("TF2.1")).unwrap();
+        let hashes = |s: &str| s.chars().filter(|&c| c == '#').count();
+        assert!(hashes(cntk_line) > hashes(tf_line));
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let md = sample().to_markdown();
+        assert!(md.contains("| TF1.4 | 10.000 |"));
+        assert!(md.contains("**holds**"));
+    }
+
+    #[test]
+    fn speedup_matches_paper_arithmetic() {
+        // "a 17% speedup": 10s -> 8.3s
+        assert!((speedup_pct(10.0, 8.3) - 17.0).abs() < 1e-9);
+        assert!(speedup_pct(10.0, 13.0) < 0.0); // slowdown is negative
+    }
+}

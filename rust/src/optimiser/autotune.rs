@@ -1,0 +1,86 @@
+//! Runtime-parameter autotuning (paper §III: "Application runtime parameters
+//! can be further autotuned for improved application performance").
+//!
+//! MODAK's static optimisation picks the container; this pass then probes a
+//! small grid of runtime parameters (here: learning rate — the knob that
+//! changes training outcome per unit time) with short real runs and keeps
+//! the best. Generic over the probe function so the grid machinery is
+//! testable without a PJRT engine.
+
+use anyhow::Result;
+
+/// One autotune measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Probe {
+    pub value: f32,
+    /// Objective: lower is better (e.g. final loss after N probe steps).
+    pub objective: f64,
+}
+
+/// Result of a grid search.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub best: Probe,
+    pub probes: Vec<Probe>,
+}
+
+/// Evaluate `f` over `grid`, keeping the lowest objective. Probe failures
+/// are recorded as +inf (a bad parameter must not abort the search).
+pub fn grid_search(
+    grid: &[f32],
+    mut f: impl FnMut(f32) -> Result<f64>,
+) -> Option<TuneResult> {
+    let mut probes = Vec::with_capacity(grid.len());
+    for &v in grid {
+        let objective = f(v).unwrap_or(f64::INFINITY);
+        probes.push(Probe {
+            value: v,
+            objective,
+        });
+    }
+    let best = probes
+        .iter()
+        .filter(|p| p.objective.is_finite())
+        .min_by(|a, b| a.objective.partial_cmp(&b.objective).unwrap())?
+        .clone();
+    Some(TuneResult { best, probes })
+}
+
+/// The default learning-rate grid MODAK probes for AI training.
+pub const LR_GRID: &[f32] = &[0.2, 0.1, 0.05, 0.02, 0.01];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_minimum_of_convex_objective() {
+        // objective minimised at 0.05
+        let res = grid_search(LR_GRID, |v| {
+            Ok(((v - 0.05) as f64).powi(2))
+        })
+        .unwrap();
+        assert_eq!(res.best.value, 0.05);
+        assert_eq!(res.probes.len(), LR_GRID.len());
+    }
+
+    #[test]
+    fn failures_are_skipped_not_fatal() {
+        let res = grid_search(&[0.1, 0.2, 0.3], |v| {
+            if v < 0.15 {
+                anyhow::bail!("diverged")
+            } else {
+                Ok(v as f64)
+            }
+        })
+        .unwrap();
+        assert_eq!(res.best.value, 0.2);
+        assert!(res.probes[0].objective.is_infinite());
+    }
+
+    #[test]
+    fn all_failures_yield_none() {
+        assert!(grid_search(&[0.1], |_| anyhow::bail!("no")).is_none());
+        assert!(grid_search(&[], |v| Ok(v as f64)).is_none());
+    }
+}

@@ -1,0 +1,326 @@
+//! The MODAK performance model (paper §III): "performance models are
+//! developed by running standard benchmarks across different configurations
+//! ... and then building a linear statistical model. This model informs
+//! MODAK about how the application parameters affect the performance."
+//!
+//! Features are *mechanistic* — derived from what a container variant will
+//! actually do (dispatches per step, bytes across the host per step, kernel
+//! quality, compiles per epoch) — so the linear model generalises across
+//! epoch/step counts instead of memorising (image, time) pairs.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::frameworks::Profile;
+use crate::runtime::{Manifest, VariantBinding, WorkloadSpec};
+use crate::trainer::TrainConfig;
+use crate::util::json::Json;
+use crate::util::stats::{least_squares, r_squared};
+
+/// Mechanistic description of one benchmark run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Features {
+    /// Total optimisation steps (epochs * steps_per_epoch).
+    pub steps: f64,
+    /// PJRT dispatches over the run.
+    pub dispatches: f64,
+    /// Gigabytes crossing the host boundary over the run.
+    pub gbytes: f64,
+    /// XLA compilations during the run (recompile-per-epoch profiles).
+    pub compiles: f64,
+    /// Extra arithmetic from the kernel-quality gap, in step units:
+    /// steps * penalty(kernel). naive conv ~ 9x, generic ~ 1.5x, ref 1x.
+    pub kernel_steps: f64,
+}
+
+impl Features {
+    pub fn vector(&self) -> Vec<f64> {
+        vec![
+            1.0,
+            self.steps,
+            self.dispatches,
+            self.gbytes,
+            self.compiles,
+            self.kernel_steps,
+        ]
+    }
+
+    pub const DIM: usize = 6;
+
+    /// Derive features for running `profile` under `cfg`, statically from
+    /// the manifest (no execution).
+    pub fn derive(profile: &Profile, wl: &WorkloadSpec, cfg: &TrainConfig) -> Features {
+        let steps = (cfg.epochs * cfg.steps_per_epoch) as f64;
+        let binding = wl.variants.get(profile.variant);
+        let (disp_per_step, stage_crossings) = match binding {
+            Some(VariantBinding::Fused { .. }) | None => (1.0, 0.0),
+            Some(VariantBinding::Staged { fwd, bwd }) => {
+                ((fwd.len() + bwd.len() + 1) as f64, (fwd.len() + bwd.len()) as f64)
+            }
+            Some(VariantBinding::ThreeStage { .. }) => (3.0, 2.0),
+        };
+        // bytes: params make a round trip each step; activations cross per
+        // stage boundary; batch goes up once per step
+        let param_bytes = (wl.param_count * 4) as f64;
+        let batch_bytes = (wl.input.size_bytes() + wl.labels.size_bytes()) as f64;
+        let act_bytes = batch_bytes * stage_crossings; // rough, intentional
+        let per_step = 2.0 * param_bytes + batch_bytes + act_bytes;
+        let kernel_penalty = kernel_penalty_of(profile.variant);
+        let compiles = if profile.policy.recompile_each_epoch {
+            cfg.epochs as f64
+        } else {
+            0.0
+        };
+        Features {
+            steps,
+            dispatches: steps * disp_per_step,
+            gbytes: steps * per_step / 1e9,
+            compiles,
+            kernel_steps: steps * (kernel_penalty - 1.0),
+        }
+    }
+}
+
+/// Relative arithmetic cost of a variant's kernel set (vs the tuned ref).
+pub fn kernel_penalty_of(variant: &str) -> f64 {
+    if variant.contains("naive") {
+        9.0
+    } else if variant.contains("generic") {
+        1.5
+    } else if variant.contains("pallas") {
+        // interpret-mode Pallas on CPU: numerics-only, heavily interpreted
+        40.0
+    } else {
+        1.0
+    }
+}
+
+/// One observed benchmark run.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub image: String,
+    pub workload: String,
+    pub features: Features,
+    pub measured_secs: f64,
+}
+
+/// The trained model + its history store.
+pub struct PerfModel {
+    pub history: Vec<Record>,
+    beta: Option<Vec<f64>>,
+    pub r2: f64,
+    path: Option<PathBuf>,
+}
+
+impl PerfModel {
+    pub fn new() -> PerfModel {
+        PerfModel {
+            history: Vec::new(),
+            beta: None,
+            r2: 0.0,
+            path: None,
+        }
+    }
+
+    /// Open (or create) a model backed by a history file.
+    pub fn open(path: impl AsRef<Path>) -> Result<PerfModel> {
+        let path = path.as_ref().to_path_buf();
+        let mut model = PerfModel::new();
+        model.path = Some(path.clone());
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("history: {e}"))?;
+            for r in j.get("records").as_arr().unwrap_or(&[]) {
+                let f = r.get("features");
+                model.history.push(Record {
+                    image: r.get("image").as_str().unwrap_or("").to_string(),
+                    workload: r.get("workload").as_str().unwrap_or("").to_string(),
+                    features: Features {
+                        steps: f.get("steps").as_f64().unwrap_or(0.0),
+                        dispatches: f.get("dispatches").as_f64().unwrap_or(0.0),
+                        gbytes: f.get("gbytes").as_f64().unwrap_or(0.0),
+                        compiles: f.get("compiles").as_f64().unwrap_or(0.0),
+                        kernel_steps: f.get("kernel_steps").as_f64().unwrap_or(0.0),
+                    },
+                    measured_secs: r.get("measured_secs").as_f64().unwrap_or(0.0),
+                });
+            }
+            model.fit();
+        }
+        Ok(model)
+    }
+
+    /// Record a measurement and refit.
+    pub fn observe(&mut self, rec: Record) {
+        self.history.push(rec);
+        self.fit();
+    }
+
+    /// Persist the history (when opened with a path).
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let mut records = Vec::new();
+        for r in &self.history {
+            let mut fj = Json::obj();
+            fj.set("steps", Json::from(r.features.steps))
+                .set("dispatches", Json::from(r.features.dispatches))
+                .set("gbytes", Json::from(r.features.gbytes))
+                .set("compiles", Json::from(r.features.compiles))
+                .set("kernel_steps", Json::from(r.features.kernel_steps));
+            let mut rj = Json::obj();
+            rj.set("image", Json::from(r.image.as_str()))
+                .set("workload", Json::from(r.workload.as_str()))
+                .set("features", fj)
+                .set("measured_secs", Json::from(r.measured_secs));
+            records.push(rj);
+        }
+        let mut j = Json::obj();
+        j.set("records", Json::Arr(records));
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, j.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Refit the linear model; needs more observations than features.
+    pub fn fit(&mut self) {
+        if self.history.len() <= Features::DIM {
+            self.beta = None;
+            return;
+        }
+        let xs: Vec<Vec<f64>> = self.history.iter().map(|r| r.features.vector()).collect();
+        let ys: Vec<f64> = self.history.iter().map(|r| r.measured_secs).collect();
+        if let Some(beta) = least_squares(&xs, &ys) {
+            self.r2 = r_squared(&xs, &ys, &beta);
+            self.beta = Some(beta);
+        }
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.beta.is_some()
+    }
+
+    /// Predict wall-clock seconds for a feature vector.
+    pub fn predict(&self, f: &Features) -> Option<f64> {
+        let beta = self.beta.as_ref()?;
+        Some(
+            f.vector()
+                .iter()
+                .zip(beta)
+                .map(|(a, b)| a * b)
+                .sum::<f64>()
+                .max(0.0),
+        )
+    }
+
+    /// Predict for a profile/config pair straight from the manifest.
+    pub fn predict_profile(
+        &self,
+        profile: &Profile,
+        manifest: &Manifest,
+        cfg: &TrainConfig,
+    ) -> Option<f64> {
+        let wl = manifest.workload(profile.workload).ok()?;
+        self.predict(&Features::derive(profile, wl, cfg))
+    }
+}
+
+impl Default for PerfModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synth_features(rng: &mut Rng) -> Features {
+        let steps = rng.range(4, 200) as f64;
+        let disp = steps * rng.range(1, 9) as f64;
+        Features {
+            steps,
+            dispatches: disp,
+            gbytes: steps * rng.next_f32() as f64 * 0.1,
+            compiles: rng.below(8) as f64,
+            kernel_steps: steps * rng.below(3) as f64,
+        }
+    }
+
+    /// Planted cost model: the linear fit must recover it and predict well.
+    #[test]
+    fn recovers_planted_cost_model() {
+        let mut rng = Rng::new(99);
+        let mut model = PerfModel::new();
+        let cost = |f: &Features| {
+            0.5 + 0.12 * f.steps + 0.004 * f.dispatches + 2.0 * f.gbytes
+                + 1.4 * f.compiles
+                + 0.09 * f.kernel_steps
+        };
+        for i in 0..60 {
+            let f = synth_features(&mut rng);
+            let secs = cost(&f) * (1.0 + 0.01 * rng.normal() as f64);
+            model.observe(Record {
+                image: format!("img{i}"),
+                workload: "w".into(),
+                features: f,
+                measured_secs: secs,
+            });
+        }
+        assert!(model.is_trained());
+        assert!(model.r2 > 0.99, "r2 = {}", model.r2);
+        let probe = synth_features(&mut rng);
+        let pred = model.predict(&probe).unwrap();
+        let want = cost(&probe);
+        assert!(
+            (pred - want).abs() < 0.05 * want.max(1.0),
+            "pred {pred} want {want}"
+        );
+    }
+
+    #[test]
+    fn untrained_model_predicts_none() {
+        let model = PerfModel::new();
+        assert!(!model.is_trained());
+        assert!(model
+            .predict(&Features {
+                steps: 1.0,
+                dispatches: 1.0,
+                gbytes: 0.0,
+                compiles: 0.0,
+                kernel_steps: 0.0
+            })
+            .is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = std::env::temp_dir().join("modak_perfmodel_tests/history.json");
+        let _ = std::fs::remove_file(&path);
+        let mut rng = Rng::new(1);
+        let mut model = PerfModel::open(&path).unwrap();
+        for i in 0..10 {
+            model.observe(Record {
+                image: format!("i{i}"),
+                workload: "w".into(),
+                features: synth_features(&mut rng),
+                measured_secs: i as f64 + 1.0,
+            });
+        }
+        model.save().unwrap();
+        let back = PerfModel::open(&path).unwrap();
+        assert_eq!(back.history.len(), 10);
+        assert_eq!(back.history[3].image, "i3");
+        assert!((back.history[3].measured_secs - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kernel_penalties_are_ordered() {
+        assert!(kernel_penalty_of("staged_naive") > kernel_penalty_of("staged_generic"));
+        assert!(kernel_penalty_of("fused_generic") > kernel_penalty_of("fused_ref"));
+        assert_eq!(kernel_penalty_of("fused_ref"), 1.0);
+    }
+}

@@ -1,0 +1,358 @@
+//! The MODAK image registry (paper §III: "the Optimiser uses the pre-built,
+//! optimised containers from the Image Registry").
+//!
+//! MODAK pre-builds framework containers and tags them by supported
+//! optimisations; the optimiser queries by (framework, version, target,
+//! source, graph compiler) and either selects a prebuilt bundle or asks the
+//! builder for a fresh one.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::container::{BuildOptions, Builder, DefinitionFile, Image};
+use crate::container::definition::Bootstrap;
+use crate::frameworks::{all_profiles, ImageSource, Profile, Target};
+use crate::runtime::Manifest;
+
+/// A registry entry: profile metadata + build state.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub profile: Profile,
+    /// Where the built bundle lives (None until built).
+    pub bundle: Option<PathBuf>,
+    pub digest: Option<String>,
+}
+
+/// Query over registry entries (all fields optional = match-any).
+#[derive(Debug, Clone, Default)]
+pub struct Query {
+    pub framework: Option<String>,
+    pub version: Option<String>,
+    pub target: Option<Target>,
+    pub source: Option<ImageSource>,
+    pub graph_compiler: Option<Option<String>>,
+    pub workload: Option<String>,
+}
+
+impl Query {
+    fn matches(&self, p: &Profile) -> bool {
+        self.framework.as_deref().is_none_or(|f| f == p.framework)
+            && self.version.as_deref().is_none_or(|v| v == p.version)
+            && self.target.is_none_or(|t| t == p.target)
+            && self.source.is_none_or(|s| s == p.source)
+            && self
+                .graph_compiler
+                .as_ref()
+                .is_none_or(|g| g.as_deref() == p.graph_compiler)
+            && self.workload.as_deref().is_none_or(|w| w == p.workload)
+    }
+}
+
+/// The registry: the paper's Table-I container matrix, backed by a store.
+pub struct Registry {
+    entries: BTreeMap<String, Entry>,
+    store: PathBuf,
+}
+
+impl Registry {
+    /// Create the registry seeded with the full profile matrix.
+    pub fn open(store: impl AsRef<Path>) -> Registry {
+        let store = store.as_ref().to_path_buf();
+        let mut entries = BTreeMap::new();
+        for profile in all_profiles() {
+            let tag = profile.image_tag();
+            let (name, tagpart) = split_ref(&tag);
+            let dir = store.join(&name).join(&tagpart);
+            let built = Image::load(&dir).ok();
+            entries.insert(
+                tag,
+                Entry {
+                    profile,
+                    bundle: built.as_ref().map(|i| i.dir.clone()),
+                    digest: built.map(|i| i.digest),
+                },
+            );
+        }
+        Registry { entries, store }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.values()
+    }
+
+    pub fn get(&self, tag: &str) -> Result<&Entry> {
+        self.entries
+            .get(tag)
+            .ok_or_else(|| anyhow!("registry has no image {tag:?}"))
+    }
+
+    /// All entries matching a query.
+    pub fn select(&self, q: &Query) -> Vec<&Entry> {
+        self.entries
+            .values()
+            .filter(|e| q.matches(&e.profile))
+            .collect()
+    }
+
+    /// Ensure the image for `tag` is built; returns the bundle.
+    /// Prebuilt bundles are reused ("MODAK prebuilds ... containers"),
+    /// otherwise the definition is generated and built now.
+    pub fn ensure_built(&mut self, tag: &str, artifacts: &Manifest) -> Result<Image> {
+        let entry = self.get(tag)?;
+        if let Some(dir) = &entry.bundle {
+            if let Ok(img) = Image::load(dir) {
+                return Ok(img);
+            }
+        }
+        let profile = entry.profile.clone();
+        let def = definition_for(&profile);
+        let builder = Builder::new(&self.store, artifacts.clone());
+        let (name, tagpart) = split_ref(tag);
+        let image = builder.build(&name, &tagpart, &def, &BuildOptions::default())?;
+        let e = self.entries.get_mut(tag).unwrap();
+        e.bundle = Some(image.dir.clone());
+        e.digest = Some(image.digest.clone());
+        Ok(image)
+    }
+
+    /// Table I reproduction: one row per (framework, version) with the
+    /// availability of each source column.
+    pub fn table1(&self) -> Vec<(String, String, bool, bool, bool)> {
+        let mut rows: BTreeMap<(String, String), (bool, bool, bool)> = BTreeMap::new();
+        for e in self.entries.values() {
+            let key = (
+                e.profile.framework.to_string(),
+                e.profile.version.to_string(),
+            );
+            let row = rows.entry(key).or_default();
+            match e.profile.source {
+                ImageSource::Hub => row.0 = true,
+                ImageSource::Pip => row.1 = true,
+                ImageSource::OptBuild => row.2 = true,
+            }
+            // opt-build implies we also packaged via pip where the paper did
+            if e.profile.source == ImageSource::OptBuild && e.profile.framework != "cntk" {
+                row.1 = true;
+            }
+        }
+        rows.into_iter()
+            .map(|((f, v), (hub, pip, opt))| (f, v, hub, pip, opt))
+            .collect()
+    }
+}
+
+/// Generate the Singularity definition MODAK would write for a profile
+/// (paper §V-C/D: CPU builds from the Ubuntu base, GPU builds from the
+/// NVIDIA base with the CUDA paths set).
+pub fn definition_for(p: &Profile) -> DefinitionFile {
+    let mut def = match p.target {
+        Target::Cpu => {
+            let mut d = DefinitionFile::new(Bootstrap::Library, "ubuntu:18.04");
+            d.post
+                .push("apt-get install -y llvm-8 clang-8 python3".into());
+            d
+        }
+        Target::GpuSim => {
+            let mut d = DefinitionFile::new(
+                Bootstrap::Docker,
+                "nvidia/cuda:10.1-cudnn7-devel-ubuntu18.04",
+            );
+            d.environment
+                .insert("LD_LIBRARY_PATH".into(), "/usr/local/cuda/lib64".into());
+            d.post.push("apt-get install -y python3".into());
+            d
+        }
+    };
+    match p.source {
+        ImageSource::Hub => def
+            .post
+            .push(format!("singularity-pull docker://{}", p.image_tag())),
+        ImageSource::Pip => def
+            .post
+            .push(format!("pip install {}=={}", p.framework, p.version)),
+        ImageSource::OptBuild => def.post.push(format!(
+            "build-from-source {} {} --copt=-march=native",
+            p.framework, p.version
+        )),
+    }
+    def.post.push(format!(
+        "modak-install framework={} version={} workload={} variant={}",
+        p.framework, p.version, p.workload, p.variant
+    ));
+    let copy = match p.policy.copy {
+        crate::executor::CopyPolicy::HostRoundTrip => "host",
+        crate::executor::CopyPolicy::DeviceResident => "device",
+    };
+    let mut policy_cmd = format!("modak-policy copy={copy}");
+    if p.policy.recompile_each_epoch {
+        policy_cmd.push_str(" recompile=true");
+    }
+    def.post.push(policy_cmd);
+    def.labels
+        .insert("framework".into(), p.framework.to_string());
+    def.labels.insert("version".into(), p.version.to_string());
+    if let Some(gc) = p.graph_compiler {
+        def.labels.insert("graph_compiler".into(), gc.to_string());
+    }
+    def
+}
+
+fn split_ref(tag: &str) -> (String, String) {
+    match tag.split_once(':') {
+        Some((n, t)) => (n.to_string(), t.to_string()),
+        None => (tag.to_string(), "latest".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn store(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modak_registry_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn seeded_with_full_matrix() {
+        let r = Registry::open(store("seed"));
+        assert_eq!(r.len(), all_profiles().len());
+        assert!(r.get("tensorflow:2.1-cpu-hub").is_ok());
+        assert!(r.get("nonexistent:0").is_err());
+    }
+
+    #[test]
+    fn select_by_framework_and_target() {
+        let r = Registry::open(store("select"));
+        let q = Query {
+            framework: Some("tensorflow".into()),
+            target: Some(Target::Cpu),
+            ..Query::default()
+        };
+        let hits = r.select(&q);
+        assert!(!hits.is_empty());
+        assert!(hits
+            .iter()
+            .all(|e| e.profile.framework == "tensorflow" && e.profile.target == Target::Cpu));
+    }
+
+    #[test]
+    fn select_by_compiler() {
+        let r = Registry::open(store("gc"));
+        let q = Query {
+            graph_compiler: Some(Some("xla".into())),
+            ..Query::default()
+        };
+        let hits = r.select(&q);
+        assert!(!hits.is_empty());
+        assert!(hits.iter().all(|e| e.profile.graph_compiler == Some("xla")));
+        // None filter means "no compiler"
+        let q = Query {
+            graph_compiler: Some(None),
+            ..Query::default()
+        };
+        assert!(r
+            .select(&q)
+            .iter()
+            .all(|e| e.profile.graph_compiler.is_none()));
+    }
+
+    #[test]
+    fn table1_has_papers_rows() {
+        let r = Registry::open(store("t1"));
+        let rows = r.table1();
+        let find = |f: &str| rows.iter().find(|(fw, ..)| fw == f).unwrap().clone();
+        let (_, _, hub, _, opt) = find("tensorflow");
+        assert!(hub && opt);
+        let (_, _, hub, _, _) = find("cntk");
+        assert!(hub);
+        let (_, _, hub, _, _) = find("mxnet");
+        assert!(hub);
+    }
+
+    #[test]
+    fn definitions_reflect_profile() {
+        for p in all_profiles() {
+            let def = definition_for(&p);
+            let text = def.render();
+            assert!(
+                text.contains(&format!("variant={}", p.variant)),
+                "{}",
+                p.image_tag()
+            );
+            if p.target == Target::GpuSim {
+                assert!(def.from.contains("nvidia"));
+            }
+            // every generated definition must re-parse
+            DefinitionFile::parse(&text).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_query_results_always_match_query() {
+        let profiles = all_profiles();
+        prop::check(
+            "registry-query-soundness",
+            128,
+            |rng: &mut Rng| {
+                let q = Query {
+                    framework: maybe(rng, &["tensorflow", "pytorch", "mxnet", "cntk"]),
+                    version: maybe(rng, &["1.4", "2.1", "1.14", "2.0", "2.7"]),
+                    target: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(*rng.choice(&[Target::Cpu, Target::GpuSim]))
+                    },
+                    source: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(*rng.choice(&[
+                            ImageSource::Hub,
+                            ImageSource::OptBuild,
+                        ]))
+                    },
+                    graph_compiler: None,
+                    workload: maybe(rng, &["mnist_cnn", "resnet50s"]),
+                };
+                q
+            },
+            |q| {
+                let r = Registry::open(std::env::temp_dir().join("modak_registry_tests/prop"));
+                let hits = r.select(q);
+                // soundness: everything returned matches all set filters
+                for e in &hits {
+                    if !q.matches(&e.profile) {
+                        return Err(format!("hit {:?} violates query", e.profile.image_tag()));
+                    }
+                }
+                // completeness: nothing matching was dropped
+                let total = profiles.iter().filter(|p| q.matches(p)).count();
+                if hits.len() != total {
+                    return Err(format!("returned {} of {} matches", hits.len(), total));
+                }
+                Ok(())
+            },
+        );
+
+        fn maybe(rng: &mut Rng, opts: &[&str]) -> Option<String> {
+            if rng.below(2) == 0 {
+                None
+            } else {
+                Some(rng.choice(opts).to_string())
+            }
+        }
+    }
+}

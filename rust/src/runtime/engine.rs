@@ -1,0 +1,356 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them on the
+//! CPU PJRT client, and executes them with host literals or device-resident
+//! buffers. This is the only module that touches the `xla` crate's FFI
+//! surface; everything above (executor, trainer, scheduler) works in terms
+//! of [`HostTensor`] and [`Executable`].
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` (HLO *text* is the
+//! interchange format; see python/compile/aot.py for why not serialized
+//! protos).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// A tensor on the host: f32 or i32 data plus its shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn s32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::S32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_s32(v: i32) -> HostTensor {
+        HostTensor::S32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Zero-filled tensor matching a spec (used for warmup batches).
+    pub fn zeros(spec: &TensorSpec) -> HostTensor {
+        match spec.dtype {
+            DType::F32 => HostTensor::f32(spec.shape.clone(), vec![0.0; spec.element_count()]),
+            DType::S32 => HostTensor::s32(spec.shape.clone(), vec![0; spec.element_count()]),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::S32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::S32 { .. } => DType::S32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::S32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not s32"),
+        }
+    }
+
+    /// Scalar f32 value (e.g. the loss output).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("tensor is not a scalar (len {})", d.len());
+        }
+        Ok(d[0])
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape() == spec.shape.as_slice() && self.dtype() == spec.dtype
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            HostTensor::S32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::s32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+/// A value living on the device (opaque PJRT buffer + its spec).
+pub struct DeviceTensor {
+    pub(crate) buffer: xla::PjRtBuffer,
+    pub spec: TensorSpec,
+}
+
+/// The PJRT engine: one CPU client, artifact loading, compile caching hooks.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client (the simulated testbed's "node device").
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact. Returns the executable and the compile
+    /// wall time (surfaced because the XLA-variant's per-epoch recompile
+    /// overhead is part of what the paper measures).
+    pub fn load(&self, manifest: &Manifest, id: &str) -> Result<Executable> {
+        let spec = manifest.artifact(id)?.clone();
+        let path = manifest.artifact_path(id)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(wrap)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)
+            .with_context(|| format!("compiling artifact {id}"))?;
+        Ok(Executable {
+            exe,
+            spec,
+            compile_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Upload a host tensor to the device.
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall: data is
+    /// copied during the call) — NOT `buffer_from_host_literal`, whose
+    /// underlying `BufferFromHostLiteral` transfer is asynchronous and
+    /// reads the literal after this function would have dropped it.
+    pub fn upload(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        let buffer = match t {
+            HostTensor::F32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(wrap)?,
+            HostTensor::S32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(wrap)?,
+        };
+        Ok(DeviceTensor {
+            buffer,
+            spec: TensorSpec {
+                shape: t.shape().to_vec(),
+                dtype: t.dtype(),
+            },
+        })
+    }
+
+    /// Download a device tensor back to the host.
+    pub fn download(&self, t: &DeviceTensor) -> Result<HostTensor> {
+        let lit = t.buffer.to_literal_sync().map_err(wrap)?;
+        HostTensor::from_literal(&lit)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+    /// Wall-clock seconds spent in `client.compile` for this executable.
+    pub compile_secs: f64,
+}
+
+impl Executable {
+    /// Execute with host inputs; outputs land back on the host.
+    ///
+    /// This path pays a host->device upload per input and a device->host
+    /// download (plus tuple decompose) per call — the TF1.x feed-dict
+    /// regime.
+    pub fn run_host(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs.iter().map(|t| (t.shape().to_vec(), t.dtype())))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits).map_err(wrap)?;
+        self.collect_host(out)
+    }
+
+    /// Execute with device-resident inputs; outputs stay on the device when
+    /// the artifact is untupled (single output), otherwise they are
+    /// decomposed via the host (XLA tuples cannot be split on-device through
+    /// the PJRT C API).
+    pub fn run_device(&self, inputs: &[&DeviceTensor]) -> Result<RunOut> {
+        self.check_inputs(inputs.iter().map(|t| (t.spec.shape.clone(), t.spec.dtype)))?;
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|t| &t.buffer).collect();
+        let mut out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs).map_err(wrap)?;
+        if !self.spec.tupled {
+            let buffer = take_single(&mut out)?;
+            return Ok(RunOut::Device(DeviceTensor {
+                buffer,
+                spec: self.spec.outputs[0].clone(),
+            }));
+        }
+        let host = self.collect_host(out)?;
+        Ok(RunOut::Host(host))
+    }
+
+    fn collect_host(&self, mut out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let buffer = take_single(&mut out)?;
+        let lit = buffer.to_literal_sync().map_err(wrap)?;
+        if self.spec.tupled {
+            let parts = lit.to_tuple().map_err(wrap)?;
+            let tensors = parts
+                .iter()
+                .map(HostTensor::from_literal)
+                .collect::<Result<Vec<_>>>()?;
+            if tensors.len() != self.spec.outputs.len() {
+                bail!(
+                    "artifact {} returned {} outputs, manifest says {}",
+                    self.spec.id,
+                    tensors.len(),
+                    self.spec.outputs.len()
+                );
+            }
+            Ok(tensors)
+        } else {
+            Ok(vec![HostTensor::from_literal(&lit)?])
+        }
+    }
+
+    fn check_inputs(
+        &self,
+        inputs: impl ExactSizeIterator<Item = (Vec<usize>, DType)>,
+    ) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.spec.id,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, ((shape, dtype), want)) in inputs.zip(&self.spec.inputs).enumerate() {
+            if shape != want.shape || dtype != want.dtype {
+                bail!(
+                    "artifact {} input {i}: got {:?} {:?}, want {:?} {:?}",
+                    self.spec.id,
+                    shape,
+                    dtype,
+                    want.shape,
+                    want.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result of a device-path execution.
+pub enum RunOut {
+    /// Untupled single output, still on the device.
+    Device(DeviceTensor),
+    /// Tupled outputs, decomposed via the host.
+    Host(Vec<HostTensor>),
+}
+
+fn take_single(out: &mut Vec<Vec<xla::PjRtBuffer>>) -> Result<xla::PjRtBuffer> {
+    if out.len() != 1 || out[0].len() != 1 {
+        bail!(
+            "expected a single replica / single buffer result, got {}x{}",
+            out.len(),
+            out.first().map_or(0, |v| v.len())
+        );
+    }
+    Ok(out.remove(0).remove(0))
+}
+
+/// The `xla` crate has its own error type; flatten it into anyhow.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_literal() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+
+        let s = HostTensor::s32(vec![4], vec![1, -2, 3, -4]);
+        let lit = s.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), s);
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        assert!(t.matches(&TensorSpec {
+            shape: vec![],
+            dtype: DType::F32
+        }));
+        assert!(HostTensor::scalar_s32(3).scalar().is_err());
+    }
+
+    #[test]
+    fn zeros_matches_spec() {
+        let spec = TensorSpec {
+            shape: vec![2, 2],
+            dtype: DType::S32,
+        };
+        let z = HostTensor::zeros(&spec);
+        assert!(z.matches(&spec));
+        assert_eq!(z.as_s32().unwrap(), &[0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,446 @@
+//! Typed view of `artifacts/manifest.json` — the contract emitted by
+//! `python/compile/aot.py` (`make artifacts`) that drives the generic
+//! executor. See DESIGN.md §2 for the artifact/variant matrix.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor crossing the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub id: String,
+    /// Path of the `.hlo.txt` file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Whether the root is a tuple (multi-output) or a bare array.
+    pub tupled: bool,
+}
+
+/// How a container variant binds artifacts (DESIGN.md §2 matrix).
+#[derive(Debug, Clone)]
+pub enum VariantBinding {
+    /// One artifact computing fwd+bwd+update.
+    Fused { step: String },
+    /// Per-stage fwd artifacts + per-stage (recomputing) bwd artifacts.
+    Staged { fwd: Vec<String>, bwd: Vec<String> },
+    /// fwd-all / bwd-all pair (GPU "hub" regime).
+    ThreeStage { fwd: String, bwd: String },
+}
+
+/// A trainable parameter tensor.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub spec: TensorSpec,
+}
+
+/// A stage of the network and its slice of the flat param list.
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    pub name: String,
+    pub prange: (usize, usize),
+    pub is_loss: bool,
+}
+
+/// One benchmark workload (mnist_cnn / resnet50s).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub input: TensorSpec,
+    pub labels: TensorSpec,
+    pub batch: usize,
+    pub num_classes: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamInfo>,
+    pub stages: Vec<StageInfo>,
+    pub init: String,
+    pub update: String,
+    pub variants: BTreeMap<String, VariantBinding>,
+}
+
+/// The parsed manifest plus the directory artifacts live in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub workloads: BTreeMap<String, WorkloadSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    fn from_json(dir: PathBuf, j: &Json) -> Result<Manifest> {
+        let mut artifacts = BTreeMap::new();
+        for (id, aj) in j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            artifacts.insert(id.clone(), parse_artifact(id, aj)?);
+        }
+        let mut workloads = BTreeMap::new();
+        for (name, wj) in j
+            .get("workloads")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing workloads"))?
+        {
+            workloads.insert(name.clone(), parse_workload(name, wj)?);
+        }
+        let m = Manifest {
+            dir,
+            workloads,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-checks: every variant binding references a known artifact and
+    /// every referenced artifact file exists on disk.
+    pub fn validate(&self) -> Result<()> {
+        let check = |id: &str| -> Result<()> {
+            let art = self
+                .artifacts
+                .get(id)
+                .ok_or_else(|| anyhow!("variant references unknown artifact {id:?}"))?;
+            let path = self.dir.join(&art.file);
+            if !path.exists() {
+                bail!("artifact file missing: {path:?}");
+            }
+            Ok(())
+        };
+        for wl in self.workloads.values() {
+            check(&wl.init)?;
+            check(&wl.update)?;
+            for vb in wl.variants.values() {
+                match vb {
+                    VariantBinding::Fused { step } => check(step)?,
+                    VariantBinding::Staged { fwd, bwd } => {
+                        if bwd.len() != fwd.len() + 1 {
+                            bail!("staged variant in {} has {} fwd / {} bwd", wl.name, fwd.len(), bwd.len());
+                        }
+                        for id in fwd.iter().chain(bwd) {
+                            check(id)?;
+                        }
+                    }
+                    VariantBinding::ThreeStage { fwd, bwd } => {
+                        check(fwd)?;
+                        check(bwd)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, id: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(id)
+            .ok_or_else(|| anyhow!("unknown artifact {id:?}"))
+    }
+
+    pub fn workload(&self, name: &str) -> Result<&WorkloadSpec> {
+        self.workloads
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown workload {name:?} (have: {:?})",
+                self.workloads.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, id: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(id)?.file))
+    }
+}
+
+fn parse_artifact(id: &str, j: &Json) -> Result<ArtifactSpec> {
+    let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+        j.get(key)
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifact {id} missing {key}"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect()
+    };
+    Ok(ArtifactSpec {
+        id: id.to_string(),
+        file: j
+            .get("file")
+            .as_str()
+            .ok_or_else(|| anyhow!("artifact {id} missing file"))?
+            .to_string(),
+        inputs: specs("inputs")?,
+        outputs: specs("outputs")?,
+        tupled: j.get("tupled").as_bool().unwrap_or(true),
+    })
+}
+
+fn parse_workload(name: &str, j: &Json) -> Result<WorkloadSpec> {
+    let params = j
+        .get("params")
+        .as_arr()
+        .ok_or_else(|| anyhow!("workload {name} missing params"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamInfo {
+                name: p
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string(),
+                spec: TensorSpec::from_json(p)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let stages = j
+        .get("stages")
+        .as_arr()
+        .ok_or_else(|| anyhow!("workload {name} missing stages"))?
+        .iter()
+        .map(|s| {
+            let pr = s
+                .get("prange")
+                .as_arr()
+                .ok_or_else(|| anyhow!("stage missing prange"))?;
+            Ok(StageInfo {
+                name: s
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("stage missing name"))?
+                    .to_string(),
+                prange: (
+                    pr[0].as_usize().ok_or_else(|| anyhow!("bad prange"))?,
+                    pr[1].as_usize().ok_or_else(|| anyhow!("bad prange"))?,
+                ),
+                is_loss: s.get("is_loss").as_bool().unwrap_or(false),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut variants = BTreeMap::new();
+    for (vname, vj) in j
+        .get("variants")
+        .as_obj()
+        .ok_or_else(|| anyhow!("workload {name} missing variants"))?
+    {
+        let kind = vj
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| anyhow!("variant {vname} missing kind"))?;
+        let get_str = |key: &str| -> Result<String> {
+            Ok(vj
+                .get(key)
+                .as_str()
+                .ok_or_else(|| anyhow!("variant {vname} missing {key}"))?
+                .to_string())
+        };
+        let get_list = |key: &str| -> Result<Vec<String>> {
+            vj.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("variant {vname} missing {key}"))?
+                .iter()
+                .map(|s| {
+                    Ok(s.as_str()
+                        .ok_or_else(|| anyhow!("bad id in {vname}.{key}"))?
+                        .to_string())
+                })
+                .collect()
+        };
+        let binding = match kind {
+            "fused" => VariantBinding::Fused {
+                step: get_str("step")?,
+            },
+            "staged" => VariantBinding::Staged {
+                fwd: get_list("fwd")?,
+                bwd: get_list("bwd")?,
+            },
+            "threestage" => VariantBinding::ThreeStage {
+                fwd: get_str("fwd")?,
+                bwd: get_str("bwd")?,
+            },
+            other => bail!("unknown variant kind {other:?}"),
+        };
+        variants.insert(vname.clone(), binding);
+    }
+
+    Ok(WorkloadSpec {
+        name: name.to_string(),
+        input: TensorSpec::from_json(j.get("input"))?,
+        labels: TensorSpec::from_json(j.get("labels"))?,
+        batch: j
+            .get("batch")
+            .as_usize()
+            .ok_or_else(|| anyhow!("workload {name} missing batch"))?,
+        num_classes: j
+            .get("num_classes")
+            .as_usize()
+            .ok_or_else(|| anyhow!("workload {name} missing num_classes"))?,
+        param_count: j
+            .get("param_count")
+            .as_usize()
+            .ok_or_else(|| anyhow!("workload {name} missing param_count"))?,
+        params,
+        stages,
+        init: j
+            .get("init")
+            .as_str()
+            .ok_or_else(|| anyhow!("workload {name} missing init"))?
+            .to_string(),
+        update: j
+            .get("update")
+            .as_str()
+            .ok_or_else(|| anyhow!("workload {name} missing update"))?
+            .to_string(),
+        variants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+ "version": 1,
+ "artifacts": {
+  "w_init": {"file": "w_init.hlo.txt", "inputs": [{"shape": [], "dtype": "s32"}],
+             "outputs": [{"shape": [2,2], "dtype": "f32"}], "tupled": false},
+  "w_update": {"file": "w_update.hlo.txt",
+               "inputs": [{"shape": [2,2], "dtype": "f32"}, {"shape": [2,2], "dtype": "f32"}, {"shape": [], "dtype": "f32"}],
+               "outputs": [{"shape": [2,2], "dtype": "f32"}], "tupled": false},
+  "w_step": {"file": "w_step.hlo.txt",
+             "inputs": [{"shape": [2,2], "dtype": "f32"}, {"shape": [4,2], "dtype": "f32"}, {"shape": [4], "dtype": "s32"}, {"shape": [], "dtype": "f32"}],
+             "outputs": [{"shape": [2,2], "dtype": "f32"}, {"shape": [], "dtype": "f32"}], "tupled": true}
+ },
+ "workloads": {
+  "w": {
+   "input": {"shape": [4,2], "dtype": "f32"},
+   "labels": {"shape": [4], "dtype": "s32"},
+   "batch": 4, "num_classes": 2, "param_count": 4,
+   "params": [{"name": "w", "shape": [2,2], "dtype": "f32"}],
+   "stages": [{"name": "all", "prange": [0,1], "is_loss": true}],
+   "init": "w_init", "update": "w_update",
+   "variants": {"fused_ref": {"kind": "fused", "step": "w_step"}}
+  }
+ }
+}"#
+        .to_string()
+    }
+
+    fn write_tiny(dir: &std::path::Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), tiny_manifest_json()).unwrap();
+        for f in ["w_init.hlo.txt", "w_update.hlo.txt", "w_step.hlo.txt"] {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+    }
+
+    #[test]
+    fn parses_and_validates_tiny_manifest() {
+        let dir = std::env::temp_dir().join("modak_manifest_test1");
+        write_tiny(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let wl = m.workload("w").unwrap();
+        assert_eq!(wl.batch, 4);
+        assert_eq!(wl.params.len(), 1);
+        assert!(matches!(
+            wl.variants.get("fused_ref"),
+            Some(VariantBinding::Fused { .. })
+        ));
+        assert_eq!(m.artifact("w_step").unwrap().inputs.len(), 4);
+        assert!(m.artifact("w_step").unwrap().tupled);
+        assert!(!m.artifact("w_init").unwrap().tupled);
+    }
+
+    #[test]
+    fn missing_file_fails_validation() {
+        let dir = std::env::temp_dir().join("modak_manifest_test2");
+        write_tiny(&dir);
+        std::fs::remove_file(dir.join("w_step.hlo.txt")).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn unknown_workload_is_error() {
+        let dir = std::env::temp_dir().join("modak_manifest_test3");
+        write_tiny(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.workload("nope").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec {
+            shape: vec![4, 28, 28, 1],
+            dtype: DType::F32,
+        };
+        assert_eq!(t.element_count(), 3136);
+        assert_eq!(t.size_bytes(), 12544);
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT client wrapper + AOT artifact manifest.
+//!
+//! `Engine` loads HLO-text artifacts produced by `make artifacts` and runs
+//! them; `Manifest` is the typed contract with `python/compile/aot.py`.
+//! Python never runs on this path.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{DeviceTensor, Engine, Executable, HostTensor, RunOut};
+pub use manifest::{
+    ArtifactSpec, DType, Manifest, ParamInfo, StageInfo, TensorSpec, VariantBinding, WorkloadSpec,
+};

@@ -1,0 +1,257 @@
+//! Torque/PBS job scripts (paper §V-E: "the workloads were submitted to one
+//! node exclusively per job using a Torque submission file").
+//!
+//! MODAK generates these for the data scientist; the server parses them
+//! back. Directive subset: `#PBS -N`, `-q`, `-l nodes=<n>[:gpus=<g>]`,
+//! `-l walltime=HH:MM:SS`, plus the payload command line.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::trainer::TrainConfig;
+
+/// What a job asks the scheduler for.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Resources {
+    pub nodes: usize,
+    /// GPU nodes requested (`:gpus=1` selects the gpu-sim node class).
+    pub gpus: usize,
+    pub walltime: Duration,
+}
+
+impl Default for Resources {
+    fn default() -> Self {
+        Resources {
+            nodes: 1,
+            gpus: 0,
+            walltime: Duration::from_secs(3600),
+        }
+    }
+}
+
+/// The payload: which container to run, on which workload config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Payload {
+    /// Registry image tag, e.g. `tensorflow:2.1-cpu-hub`.
+    pub image: String,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub lr: f32,
+    pub seed: i32,
+    /// Launch with --nv (GPU containers).
+    pub nv: bool,
+}
+
+impl Payload {
+    pub fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            epochs: self.epochs,
+            steps_per_epoch: self.steps_per_epoch,
+            seed: self.seed as u64,
+        }
+    }
+}
+
+/// A parsed/generated submission script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobScript {
+    pub name: String,
+    pub queue: String,
+    pub resources: Resources,
+    pub payload: Payload,
+}
+
+impl JobScript {
+    /// Render as a Torque submission file.
+    pub fn render(&self) -> String {
+        let wt = self.resources.walltime.as_secs();
+        let (h, m, s) = (wt / 3600, (wt % 3600) / 60, wt % 60);
+        let mut nodes = format!("nodes={}", self.resources.nodes);
+        if self.resources.gpus > 0 {
+            nodes.push_str(&format!(":gpus={}", self.resources.gpus));
+        }
+        let mut out = String::from("#!/bin/bash\n");
+        out.push_str(&format!("#PBS -N {}\n", self.name));
+        out.push_str(&format!("#PBS -q {}\n", self.queue));
+        out.push_str(&format!("#PBS -l {nodes}\n"));
+        out.push_str(&format!("#PBS -l walltime={h:02}:{m:02}:{s:02}\n"));
+        let mut cmd = format!(
+            "singularity exec {} modak-train --epochs {} --steps {} --lr {} --seed {}",
+            self.payload.image,
+            self.payload.epochs,
+            self.payload.steps_per_epoch,
+            self.payload.lr,
+            self.payload.seed,
+        );
+        if self.payload.nv {
+            cmd = cmd.replace("singularity exec", "singularity exec --nv");
+        }
+        out.push_str(&cmd);
+        out.push('\n');
+        out
+    }
+
+    /// Parse a submission file back into a JobScript.
+    pub fn parse(text: &str) -> Result<JobScript> {
+        let mut name = None;
+        let mut queue = "batch".to_string();
+        let mut resources = Resources::default();
+        let mut payload = None;
+
+        for raw in text.lines() {
+            let line = raw.trim();
+            if let Some(directive) = line.strip_prefix("#PBS ") {
+                let mut parts = directive.split_whitespace();
+                match (parts.next(), parts.next()) {
+                    (Some("-N"), Some(v)) => name = Some(v.to_string()),
+                    (Some("-q"), Some(v)) => queue = v.to_string(),
+                    (Some("-l"), Some(v)) => parse_resource(v, &mut resources)?,
+                    _ => bail!("bad PBS directive: {line}"),
+                }
+            } else if line.contains("singularity exec") {
+                payload = Some(parse_command(line)?);
+            }
+        }
+        Ok(JobScript {
+            name: name.ok_or_else(|| anyhow!("script missing #PBS -N"))?,
+            queue,
+            resources,
+            payload: payload.ok_or_else(|| anyhow!("script missing singularity command"))?,
+        })
+    }
+}
+
+fn parse_resource(spec: &str, r: &mut Resources) -> Result<()> {
+    for item in spec.split(',') {
+        let (k, v) = item
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad resource spec {item:?}"))?;
+        match k {
+            "nodes" => {
+                // nodes=1:gpus=1
+                let mut parts = v.split(':');
+                r.nodes = parts
+                    .next()
+                    .unwrap()
+                    .parse()
+                    .map_err(|_| anyhow!("bad node count"))?;
+                for extra in parts {
+                    if let Some(g) = extra.strip_prefix("gpus=") {
+                        r.gpus = g.parse().map_err(|_| anyhow!("bad gpu count"))?;
+                    }
+                }
+            }
+            "walltime" => {
+                let fields: Vec<&str> = v.split(':').collect();
+                let [h, m, s] = fields.as_slice() else {
+                    bail!("bad walltime {v:?}")
+                };
+                let secs: u64 = h.parse::<u64>().map_err(|_| anyhow!("bad walltime"))? * 3600
+                    + m.parse::<u64>().map_err(|_| anyhow!("bad walltime"))? * 60
+                    + s.parse::<u64>().map_err(|_| anyhow!("bad walltime"))?;
+                r.walltime = Duration::from_secs(secs);
+            }
+            "gpus" => r.gpus = v.parse().map_err(|_| anyhow!("bad gpu count"))?,
+            _ => {} // tolerate mem=, ppn= etc.
+        }
+    }
+    Ok(())
+}
+
+fn parse_command(line: &str) -> Result<Payload> {
+    let nv = line.contains("--nv");
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    let exec_at = toks
+        .iter()
+        .position(|t| *t == "exec")
+        .ok_or_else(|| anyhow!("no exec in command"))?;
+    let mut idx = exec_at + 1;
+    if toks.get(idx) == Some(&"--nv") {
+        idx += 1;
+    }
+    let image = toks
+        .get(idx)
+        .ok_or_else(|| anyhow!("no image in command"))?
+        .to_string();
+    let flag = |name: &str| -> Option<&str> {
+        toks.iter()
+            .position(|t| *t == name)
+            .and_then(|i| toks.get(i + 1).copied())
+    };
+    Ok(Payload {
+        image,
+        epochs: flag("--epochs").and_then(|v| v.parse().ok()).unwrap_or(12),
+        steps_per_epoch: flag("--steps").and_then(|v| v.parse().ok()).unwrap_or(4),
+        lr: flag("--lr").and_then(|v| v.parse().ok()).unwrap_or(0.05),
+        seed: flag("--seed").and_then(|v| v.parse().ok()).unwrap_or(0),
+        nv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> JobScript {
+        JobScript {
+            name: "mnist-tf21".into(),
+            queue: "batch".into(),
+            resources: Resources {
+                nodes: 1,
+                gpus: 0,
+                walltime: Duration::from_secs(2 * 3600 + 30 * 60),
+            },
+            payload: Payload {
+                image: "tensorflow:2.1-cpu-hub".into(),
+                epochs: 12,
+                steps_per_epoch: 4,
+                lr: 0.05,
+                seed: 7,
+                nv: false,
+            },
+        }
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let js = sample();
+        let text = js.render();
+        assert!(text.contains("#PBS -N mnist-tf21"));
+        assert!(text.contains("#PBS -l walltime=02:30:00"));
+        let back = JobScript::parse(&text).unwrap();
+        assert_eq!(js, back);
+    }
+
+    #[test]
+    fn gpu_job_roundtrip_with_nv() {
+        let mut js = sample();
+        js.resources.gpus = 1;
+        js.payload.nv = true;
+        js.payload.image = "tensorflow:2.1-gpu-src-xla".into();
+        let text = js.render();
+        assert!(text.contains("nodes=1:gpus=1"));
+        assert!(text.contains("--nv"));
+        let back = JobScript::parse(&text).unwrap();
+        assert_eq!(js, back);
+    }
+
+    #[test]
+    fn rejects_incomplete_scripts() {
+        assert!(JobScript::parse("#!/bin/bash\n").is_err());
+        assert!(JobScript::parse("#PBS -N x\n").is_err());
+        assert!(JobScript::parse("#PBS -Z\nsingularity exec i cmd\n").is_err());
+    }
+
+    #[test]
+    fn tolerates_extra_resources() {
+        let text = "#PBS -N j\n#PBS -l nodes=2:gpus=1,walltime=00:10:00,mem=4gb\n\
+                    singularity exec img modak-train --epochs 3\n";
+        let js = JobScript::parse(text).unwrap();
+        assert_eq!(js.resources.nodes, 2);
+        assert_eq!(js.resources.gpus, 1);
+        assert_eq!(js.resources.walltime, Duration::from_secs(600));
+        assert_eq!(js.payload.epochs, 3);
+        assert_eq!(js.payload.steps_per_epoch, 4); // default
+    }
+}

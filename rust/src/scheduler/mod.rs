@@ -1,0 +1,10 @@
+//! Torque-like batch scheduling over the simulated 5-node testbed
+//! (paper §V-B/E). Job scripts, worker nodes, and the qsub/qstat server.
+
+pub mod job;
+pub mod node;
+pub mod server;
+
+pub use job::{JobScript, Payload, Resources};
+pub use node::{NodeHandle, NodeResult, NodeSpec, NodeTask};
+pub use server::{JobId, JobRecord, JobState, TorqueServer};

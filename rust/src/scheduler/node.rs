@@ -1,0 +1,198 @@
+//! Simulated compute nodes (the paper's SODALITE@HLRS testbed: five compute
+//! nodes, each with an Nvidia GTX 1080 Ti + Xeon E5-2630 v4, fronted by
+//! Torque).
+//!
+//! Each node is a worker thread owning its *own* PJRT engine (the node's
+//! device — `xla::PjRtClient` is deliberately not shared across nodes).
+//! Nodes receive container-run tasks over a channel and report results
+//! back to the server.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::container::{ContainerRuntime, Image, RunOptions};
+use crate::frameworks::Target;
+use crate::runtime::Engine;
+use crate::scheduler::job::Payload;
+use crate::util::timer::Stopwatch;
+
+/// Node identity + class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSpec {
+    pub id: usize,
+    pub class: Target,
+}
+
+/// A task sent to a node: run `payload` from the bundle at `bundle_dir`.
+#[derive(Debug)]
+pub struct NodeTask {
+    pub job_id: u64,
+    pub bundle_dir: PathBuf,
+    pub payload: Payload,
+}
+
+/// What a node reports back.
+#[derive(Debug)]
+pub struct NodeResult {
+    pub job_id: u64,
+    pub node_id: usize,
+    pub outcome: Result<crate::container::ContainerRun>,
+    pub wall_secs: f64,
+}
+
+enum ToNode {
+    Run(NodeTask),
+    Shutdown,
+}
+
+/// Handle to a running node thread.
+pub struct NodeHandle {
+    pub spec: NodeSpec,
+    tx: Sender<ToNode>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl NodeHandle {
+    /// Boot a node: spawns the worker thread; the PJRT engine is created
+    /// lazily on the first task (so booting a 5-node testbed stays cheap).
+    pub fn boot(spec: NodeSpec, results: Sender<NodeResult>) -> NodeHandle {
+        let (tx, rx): (Sender<ToNode>, Receiver<ToNode>) = channel();
+        let thread_spec = spec.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("node-{}", spec.id))
+            .spawn(move || node_main(thread_spec, rx, results))
+            .expect("spawning node thread");
+        NodeHandle {
+            spec,
+            tx,
+            thread: Some(thread),
+        }
+    }
+
+    /// Dispatch a task to this node (non-blocking).
+    pub fn dispatch(&self, task: NodeTask) -> Result<()> {
+        self.tx
+            .send(ToNode::Run(task))
+            .map_err(|_| anyhow!("node {} is down", self.spec.id))
+    }
+
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(ToNode::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn node_main(spec: NodeSpec, rx: Receiver<ToNode>, results: Sender<NodeResult>) {
+    let mut engine: Option<Engine> = None;
+    while let Ok(msg) = rx.recv() {
+        let task = match msg {
+            ToNode::Run(t) => t,
+            ToNode::Shutdown => break,
+        };
+        let sw = Stopwatch::start();
+        let outcome = run_task(&spec, &mut engine, &task);
+        let res = NodeResult {
+            job_id: task.job_id,
+            node_id: spec.id,
+            outcome,
+            wall_secs: sw.elapsed_secs(),
+        };
+        if results.send(res).is_err() {
+            break; // server gone
+        }
+    }
+}
+
+fn run_task(
+    spec: &NodeSpec,
+    engine: &mut Option<Engine>,
+    task: &NodeTask,
+) -> Result<crate::container::ContainerRun> {
+    if engine.is_none() {
+        *engine = Some(Engine::cpu()?);
+    }
+    let engine = engine.as_ref().unwrap();
+    let image = Image::load(&task.bundle_dir)?;
+    let runtime = ContainerRuntime::new(engine, spec.class);
+    runtime.run(
+        &image,
+        &RunOptions {
+            nv: task.payload.nv,
+        },
+        &task.payload.train_config(),
+        task.payload.seed,
+        task.payload.lr,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_boots_and_shuts_down() {
+        let (res_tx, _res_rx) = channel();
+        let mut node = NodeHandle::boot(
+            NodeSpec {
+                id: 0,
+                class: Target::Cpu,
+            },
+            res_tx,
+        );
+        node.shutdown();
+        // dispatch after shutdown fails
+        let err = node.dispatch(NodeTask {
+            job_id: 1,
+            bundle_dir: "/nonexistent".into(),
+            payload: Payload {
+                image: "x".into(),
+                epochs: 1,
+                steps_per_epoch: 1,
+                lr: 0.1,
+                seed: 0,
+                nv: false,
+            },
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn bad_bundle_reports_failure_not_crash() {
+        let (res_tx, res_rx) = channel();
+        let node = NodeHandle::boot(
+            NodeSpec {
+                id: 1,
+                class: Target::Cpu,
+            },
+            res_tx,
+        );
+        node.dispatch(NodeTask {
+            job_id: 42,
+            bundle_dir: "/definitely/not/a/bundle".into(),
+            payload: Payload {
+                image: "x".into(),
+                epochs: 1,
+                steps_per_epoch: 1,
+                lr: 0.1,
+                seed: 0,
+                nv: false,
+            },
+        })
+        .unwrap();
+        let res = res_rx.recv().unwrap();
+        assert_eq!(res.job_id, 42);
+        assert_eq!(res.node_id, 1);
+        assert!(res.outcome.is_err());
+    }
+}

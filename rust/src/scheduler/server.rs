@@ -1,0 +1,422 @@
+//! The Torque-like batch server: qsub / qstat / qdel over the simulated
+//! testbed (paper §V-B: front-end node running Torque + five compute
+//! nodes; §V-E: one node exclusively per job, FIFO).
+//!
+//! Scheduling policy: strict FIFO per node class. A job asking for
+//! `gpus >= 1` runs on a gpu-sim node, otherwise on a cpu node; a node runs
+//! at most one job at a time (exclusive). Walltime is enforced post-hoc
+//! (jobs that overran are marked failed, as qstat would show them killed).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::container::ContainerRun;
+use crate::frameworks::Target;
+use crate::scheduler::job::JobScript;
+use crate::scheduler::node::{NodeHandle, NodeResult, NodeSpec, NodeTask};
+
+/// Job identifier (monotonic, Torque-style).
+pub type JobId = u64;
+
+/// Lifecycle of a job (qstat states).
+#[derive(Debug)]
+pub enum JobState {
+    Queued,
+    Running { node: usize },
+    Completed { run: ContainerRun, wall_secs: f64 },
+    Failed { error: String, wall_secs: f64 },
+}
+
+impl JobState {
+    pub fn code(&self) -> char {
+        match self {
+            JobState::Queued => 'Q',
+            JobState::Running { .. } => 'R',
+            JobState::Completed { .. } => 'C',
+            JobState::Failed { .. } => 'F',
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Completed { .. } | JobState::Failed { .. })
+    }
+}
+
+/// A tracked job.
+#[derive(Debug)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub script: JobScript,
+    pub bundle_dir: PathBuf,
+    pub state: JobState,
+}
+
+/// The batch server.
+pub struct TorqueServer {
+    nodes: Vec<NodeHandle>,
+    /// node id -> currently running job (exclusive allocation).
+    busy: BTreeMap<usize, JobId>,
+    queue: VecDeque<JobId>,
+    jobs: BTreeMap<JobId, JobRecord>,
+    next_id: JobId,
+    /// image tag -> built bundle dir (populated by MODAK after builds).
+    images: BTreeMap<String, PathBuf>,
+    results_rx: Receiver<NodeResult>,
+    results_tx: Sender<NodeResult>,
+}
+
+impl TorqueServer {
+    /// Boot the paper's testbed shape: `cpu_nodes` + `gpu_nodes` workers.
+    pub fn boot(cpu_nodes: usize, gpu_nodes: usize) -> TorqueServer {
+        let (results_tx, results_rx) = channel();
+        let mut nodes = Vec::new();
+        for i in 0..cpu_nodes {
+            nodes.push(NodeHandle::boot(
+                NodeSpec {
+                    id: i,
+                    class: Target::Cpu,
+                },
+                results_tx.clone(),
+            ));
+        }
+        for i in 0..gpu_nodes {
+            nodes.push(NodeHandle::boot(
+                NodeSpec {
+                    id: cpu_nodes + i,
+                    class: Target::GpuSim,
+                },
+                results_tx.clone(),
+            ));
+        }
+        TorqueServer {
+            nodes,
+            busy: BTreeMap::new(),
+            queue: VecDeque::new(),
+            jobs: BTreeMap::new(),
+            next_id: 1,
+            images: BTreeMap::new(),
+            results_rx,
+            results_tx,
+        }
+    }
+
+    /// The paper's testbed: five nodes, each carrying a GPU — modelled as
+    /// 5 gpu-sim-capable nodes that also accept cpu jobs? No: the paper
+    /// submits cpu and gpu workloads to the same nodes. We model the node
+    /// classes explicitly; `testbed()` gives 5 of each role by splitting
+    /// (3 cpu + 2 gpu-sim) which preserves "five compute nodes".
+    pub fn testbed() -> TorqueServer {
+        TorqueServer::boot(3, 2)
+    }
+
+    /// Make an image bundle visible to the server.
+    pub fn register_image(&mut self, tag: &str, bundle_dir: PathBuf) {
+        self.images.insert(tag.to_string(), bundle_dir);
+    }
+
+    /// Submit a job script (Torque `qsub`); returns the job id.
+    pub fn qsub(&mut self, script: JobScript) -> Result<JobId> {
+        if script.resources.nodes != 1 {
+            bail!(
+                "testbed jobs are single-node (asked for {}) — §V-E",
+                script.resources.nodes
+            );
+        }
+        let class = if script.resources.gpus > 0 {
+            Target::GpuSim
+        } else {
+            Target::Cpu
+        };
+        if !self.nodes.iter().any(|n| n.spec.class == class) {
+            bail!("no {:?} nodes in this testbed", class);
+        }
+        let bundle_dir = self
+            .images
+            .get(&script.payload.image)
+            .ok_or_else(|| {
+                anyhow!(
+                    "image {:?} not registered with the server (build it first)",
+                    script.payload.image
+                )
+            })?
+            .clone();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.insert(
+            id,
+            JobRecord {
+                id,
+                script,
+                bundle_dir,
+                state: JobState::Queued,
+            },
+        );
+        self.queue.push_back(id);
+        self.schedule()?;
+        Ok(id)
+    }
+
+    /// Torque `qdel`: remove a queued job (running jobs cannot be
+    /// interrupted on this testbed).
+    pub fn qdel(&mut self, id: JobId) -> Result<()> {
+        let rec = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown job {id}"))?;
+        match rec.state {
+            JobState::Queued => {
+                self.queue.retain(|&q| q != id);
+                rec.state = JobState::Failed {
+                    error: "deleted by user".into(),
+                    wall_secs: 0.0,
+                };
+                Ok(())
+            }
+            JobState::Running { .. } => bail!("job {id} is running; cannot delete"),
+            _ => bail!("job {id} already finished"),
+        }
+    }
+
+    /// Torque `qstat`: all job records.
+    pub fn qstat(&self) -> impl Iterator<Item = &JobRecord> {
+        self.jobs.values()
+    }
+
+    pub fn job(&self, id: JobId) -> Result<&JobRecord> {
+        self.jobs.get(&id).ok_or_else(|| anyhow!("unknown job {id}"))
+    }
+
+    /// FIFO scheduling pass: assign queued jobs to free class-matching
+    /// nodes. FIFO order is preserved *per class*: a gpu job never jumps a
+    /// cpu job for a cpu node and vice versa.
+    fn schedule(&mut self) -> Result<()> {
+        let mut remaining = VecDeque::new();
+        while let Some(id) = self.queue.pop_front() {
+            let class = {
+                let rec = &self.jobs[&id];
+                if rec.script.resources.gpus > 0 {
+                    Target::GpuSim
+                } else {
+                    Target::Cpu
+                }
+            };
+            // skip if an earlier job of the same class is still waiting
+            let blocked = remaining.iter().any(|&qid: &JobId| {
+                let r = &self.jobs[&qid];
+                let qclass = if r.script.resources.gpus > 0 {
+                    Target::GpuSim
+                } else {
+                    Target::Cpu
+                };
+                qclass == class
+            });
+            let free_node = if blocked {
+                None
+            } else {
+                self.nodes
+                    .iter()
+                    .find(|n| n.spec.class == class && !self.busy.contains_key(&n.spec.id))
+            };
+            match free_node {
+                Some(node) => {
+                    let node_id = node.spec.id;
+                    let rec = self.jobs.get_mut(&id).unwrap();
+                    let task = NodeTask {
+                        job_id: id,
+                        bundle_dir: rec.bundle_dir.clone(),
+                        payload: rec.script.payload.clone(),
+                    };
+                    node.dispatch(task)?;
+                    rec.state = JobState::Running { node: node_id };
+                    self.busy.insert(node_id, id);
+                }
+                None => remaining.push_back(id),
+            }
+        }
+        self.queue = remaining;
+        Ok(())
+    }
+
+    /// Drain one completion (blocking) and reschedule.
+    fn absorb_one(&mut self) -> Result<()> {
+        let res = self
+            .results_rx
+            .recv()
+            .map_err(|_| anyhow!("all nodes are down"))?;
+        self.absorb(res)
+    }
+
+    fn absorb(&mut self, res: NodeResult) -> Result<()> {
+        self.busy.remove(&res.node_id);
+        let rec = self
+            .jobs
+            .get_mut(&res.job_id)
+            .ok_or_else(|| anyhow!("result for unknown job {}", res.job_id))?;
+        let walltime = rec.script.resources.walltime.as_secs_f64();
+        rec.state = match res.outcome {
+            Ok(_run) if res.wall_secs > walltime => JobState::Failed {
+                error: format!(
+                    "walltime exceeded ({:.1}s > {:.0}s): job killed",
+                    res.wall_secs, walltime
+                ),
+                wall_secs: res.wall_secs,
+            },
+            Ok(run) => JobState::Completed {
+                run,
+                wall_secs: res.wall_secs,
+            },
+            Err(e) => JobState::Failed {
+                error: format!("{e:#}"),
+                wall_secs: res.wall_secs,
+            },
+        };
+        self.schedule()
+    }
+
+    /// Block until `id` reaches a terminal state.
+    pub fn wait(&mut self, id: JobId) -> Result<&JobRecord> {
+        loop {
+            // drain anything already finished
+            while let Ok(res) = self.results_rx.try_recv() {
+                self.absorb(res)?;
+            }
+            if self.jobs.get(&id).map(|r| r.state.is_terminal()) == Some(true) {
+                return self.job(id);
+            }
+            if self.jobs.get(&id).is_none() {
+                bail!("unknown job {id}");
+            }
+            self.absorb_one()?;
+        }
+    }
+
+    /// Block until every submitted job is terminal.
+    pub fn wait_all(&mut self) -> Result<()> {
+        loop {
+            while let Ok(res) = self.results_rx.try_recv() {
+                self.absorb(res)?;
+            }
+            if self.jobs.values().all(|r| r.state.is_terminal()) {
+                return Ok(());
+            }
+            self.absorb_one()?;
+        }
+    }
+
+    /// Free/busy view (for the invariant tests).
+    pub fn busy_nodes(&self) -> Vec<usize> {
+        self.busy.keys().copied().collect()
+    }
+
+    pub fn node_specs(&self) -> Vec<NodeSpec> {
+        self.nodes.iter().map(|n| n.spec.clone()).collect()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// A fresh sender for additional node pools (tests).
+    pub fn results_sender(&self) -> Sender<NodeResult> {
+        self.results_tx.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::job::{Payload, Resources};
+    use std::time::Duration;
+
+    fn script(image: &str, gpus: usize) -> JobScript {
+        JobScript {
+            name: "t".into(),
+            queue: "batch".into(),
+            resources: Resources {
+                nodes: 1,
+                gpus,
+                walltime: Duration::from_secs(600),
+            },
+            payload: Payload {
+                image: image.into(),
+                epochs: 1,
+                steps_per_epoch: 1,
+                lr: 0.05,
+                seed: 0,
+                nv: gpus > 0,
+            },
+        }
+    }
+
+    #[test]
+    fn qsub_requires_registered_image() {
+        let mut server = TorqueServer::boot(1, 0);
+        assert!(server.qsub(script("ghost:1", 0)).is_err());
+    }
+
+    #[test]
+    fn qsub_rejects_multinode_and_missing_class() {
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/tmp/nonexistent".into());
+        let mut s = script("img:1", 0);
+        s.resources.nodes = 2;
+        assert!(server.qsub(s).is_err());
+        // no gpu nodes in this testbed
+        assert!(server.qsub(script("img:1", 1)).is_err());
+    }
+
+    #[test]
+    fn failed_bundle_terminates_job_and_frees_node() {
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let id = server.qsub(script("img:1", 0)).unwrap();
+        server.wait_all().unwrap();
+        let rec = server.job(id).unwrap();
+        assert_eq!(rec.state.code(), 'F');
+        assert!(server.busy_nodes().is_empty());
+    }
+
+    #[test]
+    fn fifo_and_exclusivity_on_single_node() {
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let a = server.qsub(script("img:1", 0)).unwrap();
+        let b = server.qsub(script("img:1", 0)).unwrap();
+        let c = server.qsub(script("img:1", 0)).unwrap();
+        // only one node: at most one running at any time
+        assert!(server.busy_nodes().len() <= 1);
+        server.wait_all().unwrap();
+        // FIFO: ids complete in order (they all fail fast, order preserved
+        // by the single node + FIFO queue)
+        for id in [a, b, c] {
+            assert!(server.job(id).unwrap().state.is_terminal());
+        }
+    }
+
+    #[test]
+    fn qdel_only_dequeues_queued_jobs() {
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let _running = server.qsub(script("img:1", 0)).unwrap();
+        let queued = server.qsub(script("img:1", 0)).unwrap();
+        assert!(server.qdel(queued).is_ok());
+        assert_eq!(server.job(queued).unwrap().state.code(), 'F');
+        server.wait_all().unwrap();
+        assert!(server.qdel(queued).is_err()); // already terminal
+    }
+
+    #[test]
+    fn gpu_jobs_route_to_gpu_nodes() {
+        let mut server = TorqueServer::boot(1, 1);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let g = server.qsub(script("img:1", 1)).unwrap();
+        // the gpu job must be on the gpu node (id 1), never node 0
+        if let JobState::Running { node } = server.job(g).unwrap().state {
+            assert_eq!(node, 1);
+        }
+        server.wait_all().unwrap();
+    }
+}

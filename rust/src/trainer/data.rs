@@ -1,0 +1,158 @@
+//! Synthetic dataset generators (DESIGN.md §1 substitution table).
+//!
+//! The paper trains on MNIST (60k handwritten digits) and ImageNet (14M
+//! images). Neither is available here, so each class gets a fixed random
+//! template and samples are template + Gaussian noise: the classifier has
+//! real signal to learn (loss decreases, the e2e example logs the curve)
+//! while epoch timing behaves like the paper's (stable after the first
+//! epoch). Deterministic per seed.
+
+use crate::runtime::{HostTensor, WorkloadSpec};
+use crate::util::rng::Rng;
+
+/// A synthetic labelled image dataset matching a workload's input specs.
+pub struct Dataset {
+    /// (N, H, W, C) image shape per batch.
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    /// Per-class template images (H*W*C each).
+    templates: Vec<Vec<f32>>,
+    noise: f32,
+    rng: Rng,
+}
+
+impl Dataset {
+    /// Build the generator for a workload.
+    pub fn for_workload(wl: &WorkloadSpec, seed: u64) -> Dataset {
+        Self::new(wl.input.shape.clone(), wl.num_classes, 0.35, seed)
+    }
+
+    pub fn new(input_shape: Vec<usize>, num_classes: usize, noise: f32, seed: u64) -> Dataset {
+        assert_eq!(input_shape.len(), 4, "expected NHWC input");
+        let mut rng = Rng::new(seed);
+        let pixels: usize = input_shape[1..].iter().product();
+        // Smooth-ish class templates: random blobs low-pass filtered by
+        // averaging neighbours so conv nets have spatial structure to find.
+        let templates = (0..num_classes)
+            .map(|_| {
+                let mut t: Vec<f32> = (0..pixels).map(|_| rng.normal()).collect();
+                let (h, w, c) = (input_shape[1], input_shape[2], input_shape[3]);
+                let raw = t.clone();
+                for y in 0..h {
+                    for x in 0..w {
+                        for ch in 0..c {
+                            let mut acc = 0.0;
+                            let mut n = 0.0;
+                            for dy in -1i64..=1 {
+                                for dx in -1i64..=1 {
+                                    let yy = y as i64 + dy;
+                                    let xx = x as i64 + dx;
+                                    if yy >= 0 && yy < h as i64 && xx >= 0 && xx < w as i64 {
+                                        acc += raw[((yy as usize * w) + xx as usize) * c + ch];
+                                        n += 1.0;
+                                    }
+                                }
+                            }
+                            t[(y * w + x) * c + ch] = acc / n;
+                        }
+                    }
+                }
+                t
+            })
+            .collect();
+        Dataset {
+            input_shape,
+            num_classes,
+            templates,
+            noise,
+            rng,
+        }
+    }
+
+    /// Produce one batch: images (template+noise) and int labels.
+    pub fn next_batch(&mut self) -> (HostTensor, HostTensor) {
+        let n = self.input_shape[0];
+        let pixels: usize = self.input_shape[1..].iter().product();
+        let mut xs = Vec::with_capacity(n * pixels);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = self.rng.below(self.num_classes);
+            ys.push(label as i32);
+            let t = &self.templates[label];
+            for p in 0..pixels {
+                xs.push(t[p] + self.noise * self.rng.normal());
+            }
+        }
+        (
+            HostTensor::f32(self.input_shape.clone(), xs),
+            HostTensor::s32(vec![n], ys),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(vec![8, 6, 6, 1], 4, 0.1, 7)
+    }
+
+    #[test]
+    fn batch_shapes_and_labels_in_range() {
+        let mut d = tiny();
+        let (x, y) = d.next_batch();
+        assert_eq!(x.shape(), &[8, 6, 6, 1]);
+        assert_eq!(y.shape(), &[8]);
+        assert!(y.as_s32().unwrap().iter().all(|&l| (0..4).contains(&l)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (x1, y1) = tiny().next_batch();
+        let (x2, y2) = tiny().next_batch();
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // same-class samples must be closer to their template than to others
+        let mut d = tiny();
+        let mut correct = 0;
+        let mut total = 0;
+        for _ in 0..10 {
+            let (x, y) = d.next_batch();
+            let xs = x.as_f32().unwrap();
+            let ys = y.as_s32().unwrap();
+            let pixels = 36;
+            for (i, &label) in ys.iter().enumerate() {
+                let img = &xs[i * pixels..(i + 1) * pixels];
+                let nearest = (0..4)
+                    .min_by(|&a, &b| {
+                        let da = dist(img, &d.templates[a]);
+                        let db = dist(img, &d.templates[b]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                if nearest == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        assert!(correct as f64 > 0.95 * total as f64, "{correct}/{total}");
+    }
+
+    fn dist(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn batches_differ_over_time() {
+        let mut d = tiny();
+        let (x1, _) = d.next_batch();
+        let (x2, _) = d.next_batch();
+        assert_ne!(x1, x2);
+    }
+}

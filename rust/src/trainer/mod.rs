@@ -1,0 +1,120 @@
+//! Training loop: drives a [`TrainSession`] over epochs, timing each epoch
+//! the way the paper does (Y axis of Figs 3-5: wallclock for all MNIST
+//! epochs; average sec/epoch for ResNet).
+
+pub mod data;
+
+use anyhow::Result;
+
+use crate::executor::TrainSession;
+use crate::util::timer::Stopwatch;
+use data::Dataset;
+
+/// Epoch-level training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 12,
+            steps_per_epoch: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a full training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Wall-clock seconds per epoch (includes per-epoch recompiles for the
+    /// XLA profile — that is the point).
+    pub epoch_secs: Vec<f64>,
+    /// Mean loss per epoch.
+    pub epoch_loss: Vec<f64>,
+    /// Loss after every step (for the e2e loss curve).
+    pub step_loss: Vec<f32>,
+    pub total_secs: f64,
+}
+
+impl TrainReport {
+    pub fn total_wallclock(&self) -> f64 {
+        self.total_secs
+    }
+
+    /// Average epoch time, excluding the first (warmup) epoch when there is
+    /// more than one — mirroring the paper's observation that "the main
+    /// overhead occurred during the first epoch, while timing results for
+    /// all remaining epochs remained stable".
+    pub fn steady_epoch_secs(&self) -> f64 {
+        if self.epoch_secs.len() > 1 {
+            let rest = &self.epoch_secs[1..];
+            rest.iter().sum::<f64>() / rest.len() as f64
+        } else {
+            self.epoch_secs[0]
+        }
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        *self.epoch_loss.last().unwrap_or(&f64::NAN)
+    }
+}
+
+/// Run `cfg.epochs` training epochs of `cfg.steps_per_epoch` batches.
+pub fn train(session: &mut TrainSession, cfg: &TrainConfig) -> Result<TrainReport> {
+    let mut dataset = Dataset::for_workload(&session.workload, cfg.seed);
+    let total = Stopwatch::start();
+    let mut report = TrainReport {
+        epoch_secs: Vec::with_capacity(cfg.epochs),
+        epoch_loss: Vec::with_capacity(cfg.epochs),
+        step_loss: Vec::with_capacity(cfg.epochs * cfg.steps_per_epoch),
+        total_secs: 0.0,
+    };
+    for _epoch in 0..cfg.epochs {
+        let sw = Stopwatch::start();
+        session.begin_epoch()?;
+        let mut loss_sum = 0.0;
+        for _ in 0..cfg.steps_per_epoch {
+            let (x, y) = dataset.next_batch();
+            let loss = session.step(&x, &y)?;
+            report.step_loss.push(loss);
+            loss_sum += loss as f64;
+        }
+        report.epoch_secs.push(sw.elapsed_secs());
+        report.epoch_loss.push(loss_sum / cfg.steps_per_epoch as f64);
+    }
+    report.total_secs = total.elapsed_secs();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_steady_epoch_excludes_warmup() {
+        let r = TrainReport {
+            epoch_secs: vec![10.0, 2.0, 2.0, 2.0],
+            epoch_loss: vec![2.0, 1.0, 0.6, 0.5],
+            step_loss: vec![],
+            total_secs: 16.0,
+        };
+        assert!((r.steady_epoch_secs() - 2.0).abs() < 1e-12);
+        assert_eq!(r.final_loss(), 0.5);
+    }
+
+    #[test]
+    fn single_epoch_steady_is_itself() {
+        let r = TrainReport {
+            epoch_secs: vec![3.0],
+            epoch_loss: vec![1.0],
+            step_loss: vec![],
+            total_secs: 3.0,
+        };
+        assert_eq!(r.steady_epoch_secs(), 3.0);
+    }
+}

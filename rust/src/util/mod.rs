@@ -1,0 +1,10 @@
+//! Dependency-light substrates: JSON, PRNG, property-testing, timing.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so these stand in for serde_json / rand / proptest / criterion.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

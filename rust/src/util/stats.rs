@@ -1,0 +1,170 @@
+//! Small statistics toolkit: summary stats for bench reporting and the
+//! ordinary-least-squares solver behind the MODAK performance model.
+
+/// Summary statistics over a sample of seconds (or any f64 metric).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+        }
+    }
+}
+
+/// Solve least squares `X beta ≈ y` via normal equations with Gaussian
+/// elimination + partial pivoting. X is row-major `n x k`, n >= k.
+/// Returns beta of length k. Small k (a handful of model features), so
+/// the O(k^3) solve is irrelevant next to everything else.
+pub fn least_squares(x: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let n = x.len();
+    if n == 0 || n != y.len() {
+        return None;
+    }
+    let k = x[0].len();
+    if k == 0 || n < k || x.iter().any(|r| r.len() != k) {
+        return None;
+    }
+    // A = X^T X (k x k), b = X^T y
+    let mut a = vec![vec![0.0; k]; k];
+    let mut b = vec![0.0; k];
+    for row in 0..n {
+        for i in 0..k {
+            b[i] += x[row][i] * y[row];
+            for j in 0..k {
+                a[i][j] += x[row][i] * x[row][j];
+            }
+        }
+    }
+    solve(&mut a, &mut b).then_some(b)
+}
+
+/// In-place solve of `a * sol = b`; returns false if singular.
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> bool {
+    let k = b.len();
+    for col in 0..k {
+        // partial pivot
+        let pivot = (col..k).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        });
+        let Some(p) = pivot else { return false };
+        if a[p][col].abs() < 1e-12 {
+            return false;
+        }
+        a.swap(col, p);
+        b.swap(col, p);
+        let d = a[col][col];
+        for j in col..k {
+            a[col][j] /= d;
+        }
+        b[col] /= d;
+        for i in 0..k {
+            if i != col {
+                let f = a[i][col];
+                if f != 0.0 {
+                    for j in col..k {
+                        a[i][j] -= f * a[col][j];
+                    }
+                    b[i] -= f * b[col];
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Coefficient of determination for a fitted model.
+pub fn r_squared(x: &[Vec<f64>], y: &[f64], beta: &[f64]) -> f64 {
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    let ss_tot: f64 = y.iter().map(|v| (v - mean) * (v - mean)).sum();
+    let ss_res: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(row, v)| {
+            let pred: f64 = row.iter().zip(beta).map(|(a, b)| a * b).sum();
+            (v - pred) * (v - pred)
+        })
+        .sum();
+    if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_recovers_planted_coefficients() {
+        // y = 3 + 2*x1 - 0.5*x2 with mild noise
+        let mut rng = Rng::new(1234);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..200 {
+            let x1 = rng.next_f32() as f64 * 10.0;
+            let x2 = rng.next_f32() as f64 * 4.0;
+            xs.push(vec![1.0, x1, x2]);
+            ys.push(3.0 + 2.0 * x1 - 0.5 * x2 + 0.01 * rng.normal() as f64);
+        }
+        let beta = least_squares(&xs, &ys).unwrap();
+        assert!((beta[0] - 3.0).abs() < 0.05, "{beta:?}");
+        assert!((beta[1] - 2.0).abs() < 0.02, "{beta:?}");
+        assert!((beta[2] + 0.5).abs() < 0.02, "{beta:?}");
+        assert!(r_squared(&xs, &ys, &beta) > 0.999);
+    }
+
+    #[test]
+    fn least_squares_rejects_degenerate() {
+        assert!(least_squares(&[], &[]).is_none());
+        assert!(least_squares(&[vec![1.0]], &[1.0, 2.0]).is_none());
+        // singular: duplicated column
+        let xs = vec![vec![1.0, 1.0], vec![2.0, 2.0], vec![3.0, 3.0]];
+        assert!(least_squares(&xs, &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn exact_fit_when_noiseless() {
+        let xs = vec![vec![1.0, 0.0], vec![1.0, 1.0], vec![1.0, 2.0]];
+        let ys = vec![5.0, 7.0, 9.0];
+        let beta = least_squares(&xs, &ys).unwrap();
+        assert!((beta[0] - 5.0).abs() < 1e-9);
+        assert!((beta[1] - 2.0).abs() < 1e-9);
+    }
+}

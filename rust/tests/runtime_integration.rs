@@ -1,0 +1,207 @@
+//! Integration: real artifacts through the PJRT runtime + executor.
+//!
+//! Requires `make artifacts`. Skips (with a note) when artifacts/ is absent
+//! so `cargo test` stays green on a fresh clone.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use modak::executor::{ExecPolicy, TrainSession};
+use modak::runtime::{Engine, HostTensor, Manifest};
+use modak::trainer::data::Dataset;
+
+/// XLA CPU compilation of the larger artifacts is memory-hungry; running
+/// integration tests concurrently can OOM-crash the process. Serialize.
+fn serial() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping integration test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn batch(m: &Manifest, wl: &str, seed: u64) -> (HostTensor, HostTensor) {
+    Dataset::for_workload(m.workload(wl).unwrap(), seed).next_batch()
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let _guard = serial();
+    let Some(m) = manifest() else { return };
+    assert!(m.workloads.contains_key("mnist_cnn"));
+    assert!(m.workloads.contains_key("resnet50s"));
+    assert_eq!(m.workload("mnist_cnn").unwrap().param_count, 1_199_882);
+}
+
+#[test]
+fn init_artifact_is_deterministic() {
+    let _guard = serial();
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let s1 = TrainSession::new(&engine, &m, "mnist_cnn", "fused_ref", ExecPolicy::host(), 7, 0.05)
+        .unwrap();
+    let s2 = TrainSession::new(&engine, &m, "mnist_cnn", "fused_ref", ExecPolicy::host(), 7, 0.05)
+        .unwrap();
+    for (a, b) in s1.params().iter().zip(s2.params()) {
+        assert_eq!(a, b);
+    }
+}
+
+/// The central honesty invariant: every variant x policy computes the same
+/// training trajectory (same losses, same params) from the same seed, so
+/// benchmarked differences are pure mechanics.
+#[test]
+fn all_mnist_variants_agree_numerically() {
+    let _guard = serial();
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let combos: &[(&str, ExecPolicy)] = &[
+        ("fused_ref", ExecPolicy::host()),
+        ("fused_generic", ExecPolicy::host()),
+        ("fused_pallas", ExecPolicy::host()),
+        ("fused_ref", ExecPolicy::recompiling()),
+        ("staged_ref", ExecPolicy::host()),
+        ("staged_ref", ExecPolicy::device()),
+        ("staged_generic", ExecPolicy::device()),
+        ("staged_naive", ExecPolicy::host()),
+    ];
+    let mut traces: Vec<(String, Vec<f32>)> = Vec::new();
+    for (variant, policy) in combos {
+        let mut sess =
+            TrainSession::new(&engine, &m, "mnist_cnn", variant, *policy, 3, 0.05).unwrap();
+        let mut data = Dataset::for_workload(&sess.workload, 11);
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            let (x, y) = data.next_batch();
+            losses.push(sess.step(&x, &y).unwrap());
+        }
+        traces.push((format!("{variant}/{policy:?}"), losses));
+    }
+    let (ref name0, ref base) = traces[0];
+    for (name, losses) in &traces[1..] {
+        for (i, (a, b)) in base.iter().zip(losses).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-2 * a.abs().max(1.0),
+                "step {i}: {name0}={a} vs {name}={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mnist_loss_decreases_over_training() {
+    let _guard = serial();
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut sess =
+        TrainSession::new(&engine, &m, "mnist_cnn", "fused_ref", ExecPolicy::host(), 0, 0.05)
+            .unwrap();
+    let mut data = Dataset::for_workload(&sess.workload, 5);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..15 {
+        let (x, y) = data.next_batch();
+        let loss = sess.step(&x, &y).unwrap();
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < 0.6 * first,
+        "loss did not decrease: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn resnet_threestage_matches_fused() {
+    let _guard = serial();
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut fused =
+        TrainSession::new(&engine, &m, "resnet50s", "fused_ref", ExecPolicy::host(), 1, 0.01)
+            .unwrap();
+    let mut three = TrainSession::new(
+        &engine,
+        &m,
+        "resnet50s",
+        "threestage_ref",
+        ExecPolicy::host(),
+        1,
+        0.01,
+    )
+    .unwrap();
+    let (x, y) = batch(&m, "resnet50s", 2);
+    let lf = fused.step(&x, &y).unwrap();
+    let lt = three.step(&x, &y).unwrap();
+    assert!((lf - lt).abs() < 1e-3 * lf.abs().max(1.0), "{lf} vs {lt}");
+    for (a, b) in fused.params().iter().zip(three.params()) {
+        let av = a.as_f32().unwrap();
+        let bv = b.as_f32().unwrap();
+        for (x1, x2) in av.iter().zip(bv) {
+            assert!((x1 - x2).abs() < 5e-3, "param drift {x1} vs {x2}");
+        }
+    }
+}
+
+#[test]
+fn exec_stats_count_mechanics() {
+    let _guard = serial();
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+
+    // fused: 1 dispatch per step
+    let mut fused =
+        TrainSession::new(&engine, &m, "mnist_cnn", "fused_ref", ExecPolicy::host(), 0, 0.05)
+            .unwrap();
+    let d0 = fused.stats.dispatches;
+    let (x, y) = batch(&m, "mnist_cnn", 1);
+    fused.step(&x, &y).unwrap();
+    assert_eq!(fused.stats.dispatches - d0, 1);
+
+    // staged mnist: 3 fwd + 4 bwd + 1 update = 8 dispatches per step
+    let mut staged =
+        TrainSession::new(&engine, &m, "mnist_cnn", "staged_ref", ExecPolicy::host(), 0, 0.05)
+            .unwrap();
+    let d0 = staged.stats.dispatches;
+    staged.step(&x, &y).unwrap();
+    assert_eq!(staged.stats.dispatches - d0, 8);
+
+    // staged moves more bytes across the host than fused
+    assert!(staged.stats.bytes_h2d > fused.stats.bytes_h2d);
+
+    // recompiling policy compiles at every epoch boundary
+    let mut xla =
+        TrainSession::new(&engine, &m, "mnist_cnn", "fused_ref", ExecPolicy::recompiling(), 0, 0.05)
+            .unwrap();
+    let c0 = xla.stats.compiles;
+    xla.begin_epoch().unwrap();
+    xla.begin_epoch().unwrap();
+    assert_eq!(xla.stats.compiles - c0, 2);
+    assert!(xla.stats.compile_secs > 0.0);
+}
+
+#[test]
+fn bad_variant_and_bad_batch_are_errors() {
+    let _guard = serial();
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    assert!(
+        TrainSession::new(&engine, &m, "mnist_cnn", "nope", ExecPolicy::host(), 0, 0.05).is_err()
+    );
+    let mut sess =
+        TrainSession::new(&engine, &m, "mnist_cnn", "fused_ref", ExecPolicy::host(), 0, 0.05)
+            .unwrap();
+    let x = HostTensor::f32(vec![1, 2, 2, 1], vec![0.0; 4]);
+    let y = HostTensor::s32(vec![1], vec![0]);
+    assert!(sess.step(&x, &y).is_err());
+}
