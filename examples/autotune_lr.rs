@@ -10,15 +10,15 @@
 use anyhow::Result;
 use modak::executor::TrainSession;
 use modak::optimiser::autotune::{grid_search, LR_GRID};
-use modak::registry::Registry;
+use modak::registry::RegistryHandle;
 use modak::runtime::{Engine, Manifest};
 use modak::trainer::data::Dataset;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load("artifacts")?;
-    let mut registry = Registry::open("images");
+    let registry = RegistryHandle::open("images", &manifest, 2);
     let tag = "tensorflow:2.1-cpu-src";
-    let image = registry.ensure_built(tag, &manifest)?;
+    let image = registry.ensure_built(tag)?;
     println!("== autotune: learning rate inside {tag} ==");
 
     let engine = Engine::cpu()?;

@@ -13,7 +13,7 @@ use anyhow::Result;
 use modak::dsl::Optimisation;
 use modak::optimiser::Optimiser;
 use modak::perfmodel::PerfModel;
-use modak::registry::Registry;
+use modak::registry::RegistryHandle;
 use modak::runtime::Manifest;
 use modak::scheduler::{JobState, TorqueServer};
 use modak::trainer::TrainConfig;
@@ -40,14 +40,14 @@ fn main() -> Result<()> {
         }"#,
     )?;
     let manifest = Manifest::load("artifacts")?;
-    let mut registry = Registry::open("images");
+    let registry = RegistryHandle::open("images", &manifest, 2);
     let model = PerfModel::open("perf_history.json")?;
     let cfg = TrainConfig {
         epochs,
         steps_per_epoch,
         seed: 0,
     };
-    let mut optimiser = Optimiser::new(&mut registry, &model, &manifest);
+    let optimiser = Optimiser::new(&registry, &model, &manifest);
     let mut plan = optimiser.plan(&dsl, &cfg)?;
     plan.script.payload.lr = 0.08;
     println!("container: {}", plan.profile.image_tag());

@@ -14,13 +14,13 @@
 
 use anyhow::Result;
 use modak::figures::{FigureConfig, Harness};
-use modak::registry::Registry;
+use modak::registry::RegistryHandle;
 use modak::runtime::Manifest;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load("artifacts")?;
-    let mut registry = Registry::open("images");
-    let mut harness = Harness::new(&manifest, &mut registry);
+    let registry = RegistryHandle::open("images", &manifest, 2);
+    let mut harness = Harness::new(&manifest, &registry);
 
     println!("== graph compilers on CPU (MNIST CNN) ==\n");
     let fig5l = harness.fig5_left(&FigureConfig::mnist_compilers())?;

@@ -15,7 +15,7 @@ use anyhow::Result;
 use modak::dsl::Optimisation;
 use modak::optimiser::Optimiser;
 use modak::perfmodel::PerfModel;
-use modak::registry::Registry;
+use modak::registry::RegistryHandle;
 use modak::runtime::Manifest;
 use modak::scheduler::{JobState, TorqueServer};
 use modak::trainer::TrainConfig;
@@ -43,14 +43,14 @@ fn main() -> Result<()> {
 
     // -- 2/3. optimise: select + build the container -----------------------
     let manifest = Manifest::load("artifacts")?;
-    let mut registry = Registry::open("images");
+    let registry = RegistryHandle::open("images", &manifest, 2);
     let model = PerfModel::open("perf_history.json")?;
     let cfg = TrainConfig {
         epochs: 3,
         steps_per_epoch: 4,
         seed: 0,
     };
-    let mut optimiser = Optimiser::new(&mut registry, &model, &manifest);
+    let optimiser = Optimiser::new(&registry, &model, &manifest);
     let plan = optimiser.plan(&dsl, &cfg)?;
     println!("\nselected container: {}", plan.profile.image_tag());
     for note in &plan.notes {

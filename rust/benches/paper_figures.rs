@@ -8,7 +8,7 @@
 
 use modak::figures::{FigureConfig, Harness};
 use modak::perfmodel::PerfModel;
-use modak::registry::Registry;
+use modak::registry::RegistryHandle;
 use modak::runtime::Manifest;
 use modak::util::timer::Stopwatch;
 
@@ -39,9 +39,9 @@ fn main() {
             return;
         }
     };
-    let mut registry = Registry::open("images");
+    let registry = RegistryHandle::open("images", &manifest, 1);
     let mut model = PerfModel::open("perf_history.json").expect("perf history");
-    let mut harness = Harness::new(&manifest, &mut registry);
+    let mut harness = Harness::new(&manifest, &registry);
     harness.model = Some(&mut model);
 
     let mut failed = Vec::new();

@@ -15,8 +15,9 @@
 //!
 //! Builds are reproducible: digest = hash(base, layers, payload bytes).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::{Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -245,6 +246,154 @@ impl Builder {
     }
 }
 
+/// Counters kept by the [`BuildPool`] (surfaced in the serve-batch summary
+/// and asserted by the concurrency tests).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BuildStats {
+    /// Successful builds executed by the pool (failed build attempts cache
+    /// their error but produce no bundle and are not counted here).
+    pub builds: usize,
+    /// Requests satisfied without a build: an identical in-flight or
+    /// completed build (digest-keyed), or a prebuilt bundle on disk.
+    pub cache_hits: usize,
+}
+
+/// State of one digest-keyed build slot.
+enum BuildSlot {
+    /// A worker is building this definition right now; wait on the condvar.
+    InFlight,
+    /// Built earlier in this process; reuse the bundle.
+    Done(Image),
+    /// The build failed. Builds are deterministic (digest = content hash),
+    /// so the failure is cached rather than retried.
+    Failed(String),
+}
+
+struct PoolState {
+    slots: HashMap<String, BuildSlot>,
+    /// Builds currently executing (capped at `max_workers`).
+    active: usize,
+    stats: BuildStats,
+}
+
+/// A concurrent front to the [`Builder`]: callers from many threads request
+/// builds; identical definitions are built exactly once and concurrent
+/// requests for the same image block on the in-flight build instead of
+/// duplicating it. At most `max_workers` builds run at a time — extra
+/// requests wait for a free worker slot.
+///
+/// The cache key is a content digest over (name, tag, rendered definition),
+/// so any change to the definition invalidates the entry while identical
+/// profiles coalesce.
+pub struct BuildPool {
+    builder: Builder,
+    max_workers: usize,
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+impl BuildPool {
+    pub fn new(store: impl AsRef<Path>, artifacts: Manifest, max_workers: usize) -> BuildPool {
+        BuildPool {
+            builder: Builder::new(store, artifacts),
+            max_workers: max_workers.max(1),
+            state: Mutex::new(PoolState {
+                slots: HashMap::new(),
+                active: 0,
+                stats: BuildStats::default(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn store(&self) -> &Path {
+        self.builder.store()
+    }
+
+    /// The digest key a (name, tag, definition) triple caches under.
+    pub fn cache_key(name: &str, tag: &str, def: &DefinitionFile) -> String {
+        let mut d = Digest::new();
+        d.update(name.as_bytes())
+            .update(tag.as_bytes())
+            .update(def.render().as_bytes());
+        d.finish()
+    }
+
+    /// Build `def` into `<store>/<name>/<tag>/`, deduplicating against
+    /// identical in-flight and completed builds.
+    pub fn build_cached(&self, name: &str, tag: &str, def: &DefinitionFile) -> Result<Image> {
+        enum Found {
+            Done(Image),
+            Failed(String),
+            InFlight,
+            Missing,
+        }
+        let key = Self::cache_key(name, tag, def);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let found = match st.slots.get(&key) {
+                Some(BuildSlot::Done(img)) => Found::Done(img.clone()),
+                Some(BuildSlot::Failed(e)) => Found::Failed(e.clone()),
+                Some(BuildSlot::InFlight) => Found::InFlight,
+                None => Found::Missing,
+            };
+            match found {
+                Found::Done(img) => {
+                    st.stats.cache_hits += 1;
+                    return Ok(img);
+                }
+                Found::Failed(e) => {
+                    st.stats.cache_hits += 1;
+                    return Err(anyhow!("cached build failure for {name}:{tag}: {e}"));
+                }
+                Found::InFlight => {
+                    st = self.cv.wait(st).unwrap();
+                    continue;
+                }
+                Found::Missing => {}
+            }
+            if st.active >= self.max_workers {
+                // all worker slots busy; wait, then re-check the cache first
+                st = self.cv.wait(st).unwrap();
+                continue;
+            }
+            st.slots.insert(key.clone(), BuildSlot::InFlight);
+            st.active += 1;
+            break;
+        }
+        drop(st);
+
+        let result = self
+            .builder
+            .build(name, tag, def, &BuildOptions::default());
+
+        let mut st = self.state.lock().unwrap();
+        st.active -= 1;
+        match &result {
+            Ok(img) => {
+                st.stats.builds += 1;
+                st.slots.insert(key, BuildSlot::Done(img.clone()));
+            }
+            Err(e) => {
+                st.slots.insert(key, BuildSlot::Failed(format!("{e:#}")));
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+        result
+    }
+
+    /// Record a cache hit that bypassed the pool entirely (a prebuilt
+    /// bundle found on disk by the registry).
+    pub fn note_prebuilt_hit(&self) {
+        self.state.lock().unwrap().stats.cache_hits += 1;
+    }
+
+    pub fn stats(&self) -> BuildStats {
+        self.state.lock().unwrap().stats.clone()
+    }
+}
+
 fn parse_kv(cmd: &str) -> BTreeMap<String, String> {
     cmd.split_whitespace()
         .filter_map(|tok| tok.split_once('='))
@@ -342,6 +491,76 @@ mod tests {
             .build("pytorch", "c", &def, &BuildOptions::default())
             .unwrap();
         assert_ne!(a.digest, c.digest);
+    }
+
+    /// An empty manifest: enough to build definitions that stage no
+    /// artifacts (pure base-OS images), so the pool's concurrency behaviour
+    /// is testable without `make artifacts`.
+    fn empty_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("artifacts-not-needed"),
+            workloads: Default::default(),
+            artifacts: Default::default(),
+        }
+    }
+
+    fn base_def() -> DefinitionFile {
+        let mut def = DefinitionFile::new(Bootstrap::Library, "ubuntu:18.04");
+        def.post.push("apt-get install -y python3".into());
+        def
+    }
+
+    #[test]
+    fn pool_coalesces_identical_concurrent_builds() {
+        use std::sync::Arc;
+        let pool = Arc::new(BuildPool::new(store("pool_dedup"), empty_manifest(), 2));
+        let def = base_def();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let def = def.clone();
+                std::thread::spawn(move || pool.build_cached("base", "os", &def))
+            })
+            .collect();
+        let images: Vec<Image> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().unwrap())
+            .collect();
+        // same bundle for everyone: one build, three digest-keyed hits
+        for img in &images[1..] {
+            assert_eq!(img.digest, images[0].digest);
+            assert_eq!(img.dir, images[0].dir);
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.builds, 1, "{stats:?}");
+        assert_eq!(stats.cache_hits, 3, "{stats:?}");
+    }
+
+    #[test]
+    fn pool_distinguishes_definitions_by_digest() {
+        let pool = BuildPool::new(store("pool_keys"), empty_manifest(), 1);
+        let a = pool.build_cached("base", "a", &base_def()).unwrap();
+        let mut other = base_def();
+        other.post.push("pip install extras".into());
+        let b = pool.build_cached("base", "b", &other).unwrap();
+        assert_ne!(a.digest, b.digest);
+        let stats = pool.stats();
+        assert_eq!(stats.builds, 2);
+        assert_eq!(stats.cache_hits, 0);
+    }
+
+    #[test]
+    fn pool_caches_failures_deterministically() {
+        let pool = BuildPool::new(store("pool_fail"), empty_manifest(), 2);
+        let mut def = base_def();
+        // references a workload the empty manifest does not have
+        def.post
+            .push("modak-install workload=mnist_cnn variant=fused_ref".into());
+        assert!(pool.build_cached("x", "y", &def).is_err());
+        assert!(pool.build_cached("x", "y", &def).is_err());
+        let stats = pool.stats();
+        assert_eq!(stats.builds, 0);
+        assert_eq!(stats.cache_hits, 1); // second call hit the cached failure
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod definition;
 pub mod image;
 pub mod runtime;
 
-pub use builder::{BuildOptions, Builder};
+pub use builder::{BuildOptions, BuildPool, BuildStats, Builder};
 pub use definition::{Bootstrap, DefinitionFile};
 pub use image::{Digest, Image, Layer};
 pub use runtime::{ContainerRun, ContainerRuntime, RunOptions};

@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 use crate::frameworks::Target;
 use crate::metrics::{speedup_pct, FigureReport};
 use crate::perfmodel::{Features, PerfModel, Record};
-use crate::registry::Registry;
+use crate::registry::RegistryHandle;
 use crate::runtime::Manifest;
 use crate::scheduler::{JobScript, JobState, Payload, Resources, TorqueServer};
 use crate::trainer::TrainConfig;
@@ -98,7 +98,8 @@ pub struct BenchRun {
 /// Shared context for running figures.
 pub struct Harness<'a> {
     pub manifest: &'a Manifest,
-    pub registry: &'a mut Registry,
+    /// Shared registry + build pool (a cheap clone of the caller's handle).
+    pub registry: RegistryHandle,
     /// When set, every run is recorded into the performance model.
     pub model: Option<&'a mut PerfModel>,
     /// Print progress lines.
@@ -106,10 +107,10 @@ pub struct Harness<'a> {
 }
 
 impl<'a> Harness<'a> {
-    pub fn new(manifest: &'a Manifest, registry: &'a mut Registry) -> Harness<'a> {
+    pub fn new(manifest: &'a Manifest, registry: &RegistryHandle) -> Harness<'a> {
         Harness {
             manifest,
-            registry,
+            registry: registry.clone(),
             model: None,
             verbose: true,
         }
@@ -117,8 +118,8 @@ impl<'a> Harness<'a> {
 
     /// Run one container benchmark through the full scheduler stack.
     pub fn run_container(&mut self, tag: &str, cfg: &FigureConfig) -> Result<BenchRun> {
-        let profile = self.registry.get(tag)?.profile.clone();
-        let image = self.registry.ensure_built(tag, self.manifest)?;
+        let profile = self.registry.profile(tag)?;
+        let image = self.registry.ensure_built(tag)?;
         if self.verbose {
             eprintln!("[bench] {tag}: image {} ({})", image.reference(), image.digest);
         }
@@ -135,6 +136,7 @@ impl<'a> Harness<'a> {
             resources: Resources {
                 nodes: 1,
                 gpus: if profile.target == Target::GpuSim { 1 } else { 0 },
+                slots: 1,
                 walltime: Duration::from_secs(4 * 3600),
             },
             payload: Payload {

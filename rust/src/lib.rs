@@ -3,8 +3,10 @@
 //!
 //! Three-layer architecture (DESIGN.md):
 //! * L3 (this crate): MODAK coordinator — DSL, optimiser, perf model,
-//!   registry, Singularity-like containers, Torque-like scheduler over a
-//!   simulated 5-node testbed, PJRT training runtime.
+//!   shared registry + build pool, Singularity-like containers, slot-based
+//!   Torque-like scheduler over a simulated 5-node testbed, PJRT training
+//!   runtime, and a concurrent deployment service tying them together
+//!   (request queue → planner → build pool → slot scheduler; see README).
 //! * L2/L1 (build-time Python, never on this path): JAX models + Pallas
 //!   kernels AOT-lowered to `artifacts/*.hlo.txt` by `make artifacts`.
 
@@ -15,6 +17,7 @@ pub mod optimiser;
 pub mod perfmodel;
 pub mod registry;
 pub mod scheduler;
+pub mod service;
 pub mod executor;
 pub mod figures;
 pub mod frameworks;

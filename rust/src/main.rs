@@ -1,12 +1,20 @@
 //! `modak` — the MODAK deployment optimiser CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   optimise  — DSL -> deployment plan (and optionally submit + run)
-//!   build     — build a registry image
-//!   registry  — list the container matrix / Table I
-//!   submit    — qsub a Torque job script and wait for it
-//!   train     — run one container's workload directly
-//!   bench     — regenerate the paper's tables and figures
+//!   optimise    — DSL -> deployment plan (and optionally submit + run)
+//!   serve-batch — drive the concurrent deployment service over a
+//!                 directory of DSL files; prints live qstat + a
+//!                 makespan/throughput summary
+//!   build       — build a registry image
+//!   registry    — list the container matrix / Table I
+//!   submit      — qsub a Torque job script and wait for it
+//!   train       — run one container's workload directly
+//!   probe       — run one (variant, policy) combo outside the scheduler,
+//!                 optionally on N concurrent engines
+//!   bench       — regenerate the paper's tables and figures
+//!
+//! Both `optimise --submit` and `serve-batch` run through the same
+//! [`DeploymentService`], so a single request is just a batch of one.
 //!
 //! Arg parsing is hand-rolled (no clap in the vendored crate set).
 
@@ -17,11 +25,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use modak::dsl::Optimisation;
 use modak::figures::{FigureConfig, Harness};
 use modak::metrics::FigureReport;
-use modak::optimiser::Optimiser;
 use modak::perfmodel::PerfModel;
-use modak::registry::Registry;
+use modak::registry::{Registry, RegistryHandle};
 use modak::runtime::Manifest;
 use modak::scheduler::{JobScript, TorqueServer};
+use modak::service::{BatchRequest, DeploymentService, ServiceConfig};
 use modak::trainer::TrainConfig;
 
 const USAGE: &str = "\
@@ -29,10 +37,15 @@ modak — optimising AI training deployments using graph compilers and container
 
 USAGE:
   modak optimise --dsl <file> [--epochs N] [--steps N] [--submit]
+  modak serve-batch --dsl-dir <dir> [--epochs N] [--steps N]
+              [--max-build-workers N] [--slots-per-node N]
+              [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
   modak build --tag <image:tag>
   modak registry [--table1]
   modak submit --script <file>
   modak train --tag <image:tag> [--epochs N] [--steps N] [--lr F] [--seed N]
+  modak probe [--variant V] [--policy host|device|recompiling]
+              [--workload W] [--steps N] [--threads N]
   modak bench <table1|fig3|fig4_left|fig4_right|fig5_left|fig5_right|all>
               [--out <markdown file>]
 
@@ -115,13 +128,27 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "optimise" | "optimize" => cmd_optimise(&cli, artifacts_dir, store, history),
+        "serve-batch" => cmd_serve_batch(&cli, artifacts_dir, store, history),
         "build" => cmd_build(&cli, artifacts_dir, store),
         "registry" => cmd_registry(&cli, store),
         "submit" => cmd_submit(&cli, artifacts_dir, store),
         "train" => cmd_train(&cli, artifacts_dir, store),
+        "probe" => cmd_probe(&cli, artifacts_dir),
         "bench" => cmd_bench(&cli, artifacts_dir, store, history),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Service shape from the common serve flags.
+fn service_config(cli: &Cli) -> Result<ServiceConfig> {
+    let defaults = ServiceConfig::default();
+    Ok(ServiceConfig {
+        cpu_nodes: cli.get_usize("cpu-nodes", defaults.cpu_nodes)?,
+        gpu_nodes: cli.get_usize("gpu-nodes", defaults.gpu_nodes)?,
+        slots_per_node: cli.get_usize("slots-per-node", defaults.slots_per_node)?,
+        max_build_workers: cli.get_usize("max-build-workers", defaults.max_build_workers)?,
+        planner_workers: cli.get_usize("planner-workers", defaults.planner_workers)?,
+    })
 }
 
 fn cmd_optimise(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Result<()> {
@@ -144,15 +171,30 @@ fn cmd_optimise(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Resul
     }
 
     let manifest = Manifest::load(artifacts)?;
-    let mut registry = Registry::open(store);
     let model = PerfModel::open(history)?;
     let cfg = TrainConfig {
         epochs: cli.get_usize("epochs", 3)?,
         steps_per_epoch: cli.get_usize("steps", 4)?,
         seed: 0,
     };
-    let mut optimiser = Optimiser::new(&mut registry, &model, &manifest);
-    let plan = optimiser.plan(&dsl, &cfg)?;
+    let submit = cli.get("submit").is_some();
+
+    // one code path: a single request is a batch of one through the service
+    let service =
+        DeploymentService::new(store, manifest, model, &service_config(cli)?);
+    let mut handles = service.submit_many(
+        vec![BatchRequest {
+            label: dsl_path.to_string(),
+            dsl,
+        }],
+        &cfg,
+        submit,
+    );
+    let outcome = handles[0].wait();
+    let plan = match &outcome.plan {
+        Ok(p) => p,
+        Err(e) => bail!("planning {dsl_path}: {e:#}"),
+    };
 
     println!("\ndeployment plan:");
     println!("  container: {}", plan.profile.image_tag());
@@ -166,15 +208,105 @@ fn cmd_optimise(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Resul
     }
     println!("\ngenerated job script:\n{}", plan.script.render());
 
-    if cli.get("submit").is_some() {
-        let mut server = TorqueServer::testbed();
-        server.register_image(&plan.profile.image_tag(), plan.image.dir.clone());
-        let id = server.qsub(plan.script.clone())?;
+    if let Some(id) = outcome.job_id {
         println!("submitted as job {id}; waiting...");
-        server.wait(id)?;
-        print_job(server.job(id)?);
+        let report = service.await_batch(&mut handles, |_| {});
+        service.with_server(|srv| -> Result<()> {
+            print_job(srv.job(id)?);
+            Ok(())
+        })?;
+        if let Some(j) = report.jobs.first() {
+            if let (Some(w), Some(r)) = (j.queue_wait_secs, j.run_secs) {
+                println!("  queue wait: {w:.2}s, run: {r:.2}s");
+            }
+        }
     }
     Ok(())
+}
+
+fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Result<()> {
+    let dir = cli
+        .get("dsl-dir")
+        .ok_or_else(|| anyhow!("serve-batch needs --dsl-dir <dir>"))?;
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading DSL dir {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            matches!(
+                p.extension().and_then(|e| e.to_str()),
+                Some("json") | Some("dsl")
+            )
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        bail!("no .json/.dsl files under {dir:?}");
+    }
+
+    let mut reqs = Vec::new();
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading DSL {p:?}"))?;
+        let dsl = Optimisation::parse(&text).with_context(|| format!("parsing {p:?}"))?;
+        let label = p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("request")
+            .to_string();
+        reqs.push(BatchRequest { label, dsl });
+    }
+
+    let manifest = Manifest::load(artifacts)?;
+    let model = PerfModel::open(history)?;
+    let svc_cfg = service_config(cli)?;
+    let cfg = TrainConfig {
+        epochs: cli.get_usize("epochs", 3)?,
+        steps_per_epoch: cli.get_usize("steps", 4)?,
+        seed: 0,
+    };
+
+    println!(
+        "serve-batch: {} requests | {} cpu + {} gpu nodes x {} slots | \
+         {} build workers, {} planners",
+        reqs.len(),
+        svc_cfg.cpu_nodes,
+        svc_cfg.gpu_nodes,
+        svc_cfg.slots_per_node,
+        svc_cfg.max_build_workers,
+        svc_cfg.planner_workers,
+    );
+
+    let service = DeploymentService::new(store, manifest, model, &svc_cfg);
+    let mut last_snapshot = String::new();
+    let report = service.run_batch(reqs, &cfg, |srv| {
+        let snapshot = qstat_line(srv);
+        if snapshot != last_snapshot {
+            println!("qstat: {snapshot}");
+            last_snapshot = snapshot;
+        }
+    });
+
+    println!("\n{}", report.render());
+    Ok(())
+}
+
+/// One-line qstat snapshot: `1:R(n0) 2:Q ...  [running 2, queued 1]`.
+fn qstat_line(srv: &TorqueServer) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    for rec in srv.qstat() {
+        let code = rec.state.code();
+        match rec.node {
+            Some(n) if code == 'R' => parts.push(format!("{}:R(n{})", rec.id, n)),
+            _ => parts.push(format!("{}:{}", rec.id, code)),
+        }
+    }
+    format!(
+        "{}  [running {}, queued {}]",
+        parts.join(" "),
+        srv.running_count(),
+        srv.queued()
+    )
 }
 
 fn cmd_build(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
@@ -182,8 +314,8 @@ fn cmd_build(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
         .get("tag")
         .ok_or_else(|| anyhow!("build needs --tag <image:tag>"))?;
     let manifest = Manifest::load(artifacts)?;
-    let mut registry = Registry::open(store);
-    let image = registry.ensure_built(tag, &manifest)?;
+    let registry = RegistryHandle::open(store, &manifest, 1);
+    let image = registry.ensure_built(tag)?;
     println!("built {} -> {:?}", image.reference(), image.dir);
     println!("digest {}", image.digest);
     for layer in &image.layers {
@@ -230,8 +362,8 @@ fn cmd_submit(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)?;
     let script = JobScript::parse(&text)?;
     let manifest = Manifest::load(artifacts)?;
-    let mut registry = Registry::open(store);
-    let image = registry.ensure_built(&script.payload.image, &manifest)?;
+    let registry = RegistryHandle::open(store, &manifest, 1);
+    let image = registry.ensure_built(&script.payload.image)?;
     let mut server = TorqueServer::testbed();
     server.register_image(&script.payload.image, image.dir.clone());
     let id = server.qsub(script)?;
@@ -246,8 +378,8 @@ fn cmd_train(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
         .get("tag")
         .ok_or_else(|| anyhow!("train needs --tag <image:tag>"))?;
     let manifest = Manifest::load(artifacts)?;
-    let mut registry = Registry::open(store);
-    let mut harness = Harness::new(&manifest, &mut registry);
+    let registry = RegistryHandle::open(store, &manifest, 1);
+    let mut harness = Harness::new(&manifest, &registry);
     let cfg = FigureConfig {
         epochs: cli.get_usize("epochs", 3)?,
         steps_per_epoch: cli.get_usize("steps", 4)?,
@@ -266,12 +398,84 @@ fn cmd_train(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {
     Ok(())
 }
 
+/// Debug probe (absorbs the old `probe`/`probe2` dev binaries): run one
+/// (variant, policy) combo for a few steps outside the container/scheduler
+/// stack — with `--threads N`, run N concurrent sessions each on its own
+/// engine, the sanity check behind the per-job engines in the node runner.
+fn cmd_probe(cli: &Cli, artifacts: &str) -> Result<()> {
+    use modak::executor::{ExecPolicy, TrainSession};
+    use modak::runtime::Engine;
+    use modak::trainer::data::Dataset;
+
+    let variant = cli.get("variant").unwrap_or("fused_ref").to_string();
+    let policy = match cli.get("policy").unwrap_or("host") {
+        "host" => ExecPolicy::host(),
+        "device" => ExecPolicy::device(),
+        "recompiling" => ExecPolicy::recompiling(),
+        other => bail!("unknown policy {other:?} (host|device|recompiling)"),
+    };
+    let workload = cli.get("workload").unwrap_or("mnist_cnn").to_string();
+    let steps = cli.get_usize("steps", 2)?;
+    let threads = cli.get_usize("threads", 1)?;
+    let artifacts = artifacts.to_string();
+
+    if threads <= 1 {
+        let m = Manifest::load(&artifacts)?;
+        let engine = Engine::cpu()?;
+        let mut sess = TrainSession::new(&engine, &m, &workload, &variant, policy, 3, 0.05)?;
+        let mut data = Dataset::for_workload(&sess.workload, 11);
+        // warmup step excluded from timing
+        let (x, y) = data.next_batch();
+        let loss = sess.step(&x, &y)?;
+        println!("warmup: loss {loss}");
+        let t0 = std::time::Instant::now();
+        for i in 0..steps {
+            let (x, y) = data.next_batch();
+            let loss = sess.step(&x, &y)?;
+            println!(
+                "step {i}: loss {loss:.4} ({:.1} ms/step avg)",
+                t0.elapsed().as_secs_f64() * 1e3 / (i + 1) as f64
+            );
+        }
+        println!("stats: {:?}", sess.stats);
+        return Ok(());
+    }
+
+    // concurrency probe: N threads, each with its own engine
+    let handles: Vec<_> = (0..threads)
+        .map(|i| {
+            let artifacts = artifacts.clone();
+            let workload = workload.clone();
+            let variant = variant.clone();
+            std::thread::spawn(move || -> Result<f32> {
+                let m = Manifest::load(&artifacts)?;
+                let engine = Engine::cpu()?;
+                let mut sess =
+                    TrainSession::new(&engine, &m, &workload, &variant, policy, i as i32, 0.05)?;
+                let mut data = Dataset::for_workload(&sess.workload, i as u64);
+                let mut loss = 0.0;
+                for _ in 0..steps {
+                    let (x, y) = data.next_batch();
+                    loss = sess.step(&x, &y)?;
+                }
+                Ok(loss)
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let loss = h.join().map_err(|_| anyhow!("probe thread {i} panicked"))??;
+        println!("thread {i}: loss {loss:?}");
+    }
+    println!("concurrency OK");
+    Ok(())
+}
+
 fn cmd_bench(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Result<()> {
     let which = cli.positional.first().map(String::as_str).unwrap_or("all");
     let manifest = Manifest::load(artifacts)?;
-    let mut registry = Registry::open(store);
+    let registry = RegistryHandle::open(store, &manifest, 1);
     let mut model = PerfModel::open(history)?;
-    let mut harness = Harness::new(&manifest, &mut registry);
+    let mut harness = Harness::new(&manifest, &registry);
     harness.model = Some(&mut model);
 
     let mut reports: Vec<FigureReport> = Vec::new();

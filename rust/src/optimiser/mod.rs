@@ -2,13 +2,16 @@
 //! maps a data scientist's optimisation DSL to an optimised container and a
 //! job script for the target infrastructure.
 //!
-//! Selection procedure:
+//! Selection procedure ([`plan_deployment`], the single planning code path
+//! used by both the CLI's one-shot `optimise` command and the concurrent
+//! [`crate::service::DeploymentService`]):
 //! 1. resolve the DSL's (framework, version, graph compilers, target) to
 //!    candidate container profiles in the image registry,
 //! 2. rank them — by performance-model prediction when a trained model is
 //!    available, otherwise by static preference (opt-build > hub, matching
 //!    compiler flags required),
-//! 3. ensure the chosen container is built (pre-built images are reused),
+//! 3. ensure the chosen container is built (pre-built and in-flight
+//!    identical builds are reused via the shared registry's build pool),
 //! 4. emit the Torque job script for the deployment.
 
 pub mod autotune;
@@ -21,13 +24,13 @@ use crate::container::Image;
 use crate::dsl::Optimisation;
 use crate::frameworks::{ImageSource, Profile, Target};
 use crate::perfmodel::{Features, PerfModel};
-use crate::registry::{Query, Registry};
+use crate::registry::{Query, RegistryHandle};
 use crate::runtime::Manifest;
 use crate::scheduler::{JobScript, Payload, Resources};
 use crate::trainer::TrainConfig;
 
 /// What MODAK hands back for a deployment request.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DeploymentPlan {
     pub profile: Profile,
     pub image: Image,
@@ -38,16 +41,163 @@ pub struct DeploymentPlan {
     pub notes: Vec<String>,
 }
 
-/// The optimiser itself.
+/// Map a DSL request + run config to a deployment plan.
+///
+/// This free function is THE planning path: every entry point (CLI
+/// `optimise`, CLI `serve-batch`, service workers, examples) goes through
+/// it, so a given DSL input yields an identical plan no matter how it was
+/// submitted. It only needs shared (`&`) access to the registry handle, so
+/// many planners can run concurrently.
+pub fn plan_deployment(
+    registry: &RegistryHandle,
+    model: &PerfModel,
+    manifest: &Manifest,
+    dsl: &Optimisation,
+    cfg: &TrainConfig,
+) -> Result<DeploymentPlan> {
+    let mut notes = Vec::new();
+    let target = if dsl.wants_gpu() {
+        Target::GpuSim
+    } else {
+        Target::Cpu
+    };
+    let fw = dsl
+        .frameworks
+        .first()
+        .ok_or_else(|| anyhow!("DSL names no framework under {}", dsl.app_type.as_str()))?;
+
+    // 1. candidates by framework + target (+ compiler)
+    let wanted_compiler = fw.compilers.first().cloned();
+    let mut q = Query {
+        framework: Some(fw.framework.clone()),
+        target: Some(target),
+        graph_compiler: Some(wanted_compiler.clone()),
+        ..Query::default()
+    };
+    if let Some(w) = &dsl.workload {
+        q.workload = Some(w.clone());
+    }
+    let mut candidates: Vec<Profile> = registry.select_profiles(&q);
+    if candidates.is_empty() && wanted_compiler.is_some() {
+        notes.push(format!(
+            "no {:?} image with compiler {:?} on {:?}; falling back to plain images",
+            fw.framework, wanted_compiler, target
+        ));
+        q.graph_compiler = Some(None);
+        candidates = registry.select_profiles(&q);
+    }
+    if candidates.is_empty() {
+        return Err(anyhow!(
+            "registry has no {:?} containers for target {:?}",
+            fw.framework,
+            target
+        ));
+    }
+
+    // version resolution: exact match preferred, else latest available
+    if let Some(v) = &fw.version {
+        if candidates.iter().any(|p| p.version == v) {
+            candidates.retain(|p| p.version == v);
+        } else {
+            let latest = candidates
+                .iter()
+                .map(|p| p.version)
+                .max_by(|a, b| cmp_version(a, b))
+                .unwrap()
+                .to_string();
+            notes.push(format!(
+                "requested {} {} not packaged; selected supported version {}",
+                fw.framework, v, latest
+            ));
+            candidates.retain(|p| p.version == latest);
+        }
+    }
+
+    // opt-build preference (DSL enable_opt_build)
+    if dsl.enable_opt_build
+        && candidates
+            .iter()
+            .any(|p| p.source == ImageSource::OptBuild)
+    {
+        candidates.retain(|p| p.source == ImageSource::OptBuild);
+        notes.push("enable_opt_build: preferring custom source builds".into());
+    }
+
+    // 2. rank by the performance model when trained
+    let chosen = if model.is_trained() {
+        let mut best: Option<(f64, Profile)> = None;
+        for p in &candidates {
+            if let Some(pred) = model.predict_profile(p, manifest, cfg) {
+                notes.push(format!("model: {} -> {:.2}s", p.image_tag(), pred));
+                if best.as_ref().is_none_or(|(b, _)| pred < *b) {
+                    best = Some((pred, p.clone()));
+                }
+            }
+        }
+        match best {
+            Some((pred, p)) => {
+                notes.push(format!(
+                    "selected {} (predicted {:.2}s, model r2={:.3})",
+                    p.image_tag(),
+                    pred,
+                    model.r2
+                ));
+                p
+            }
+            None => candidates[0].clone(),
+        }
+    } else {
+        notes.push("performance model untrained; using static preference".into());
+        candidates[0].clone()
+    };
+
+    // 3. build (or reuse) the container through the shared build pool
+    let image = registry.ensure_built(&chosen.image_tag())?;
+
+    // 4. job script
+    let wl = manifest.workload(chosen.workload)?;
+    let script = JobScript {
+        name: format!("{}-{}", wl.name.replace('_', "-"), chosen.label().to_lowercase()),
+        queue: "batch".into(),
+        resources: Resources {
+            nodes: 1,
+            gpus: if target == Target::GpuSim { 1 } else { 0 },
+            slots: 1,
+            walltime: Duration::from_secs(3600),
+        },
+        payload: Payload {
+            image: chosen.image_tag(),
+            epochs: cfg.epochs,
+            steps_per_epoch: cfg.steps_per_epoch,
+            lr: 0.05,
+            seed: cfg.seed as i32,
+            nv: target == Target::GpuSim,
+        },
+    };
+
+    let predicted_secs = model.predict(&Features::derive(&chosen, wl, cfg));
+
+    Ok(DeploymentPlan {
+        profile: chosen,
+        image,
+        script,
+        predicted_secs,
+        notes,
+    })
+}
+
+/// Convenience façade bundling the three planning inputs. Holds only
+/// shared references — the registry handle is internally synchronised, so
+/// an `Optimiser` no longer needs `&mut` access to anything.
 pub struct Optimiser<'a> {
-    pub registry: &'a mut Registry,
+    pub registry: &'a RegistryHandle,
     pub model: &'a PerfModel,
     pub manifest: &'a Manifest,
 }
 
 impl<'a> Optimiser<'a> {
     pub fn new(
-        registry: &'a mut Registry,
+        registry: &'a RegistryHandle,
         model: &'a PerfModel,
         manifest: &'a Manifest,
     ) -> Optimiser<'a> {
@@ -58,150 +208,10 @@ impl<'a> Optimiser<'a> {
         }
     }
 
-    /// Map a DSL request + run config to a deployment plan.
-    pub fn plan(&mut self, dsl: &Optimisation, cfg: &TrainConfig) -> Result<DeploymentPlan> {
-        let mut notes = Vec::new();
-        let target = if dsl.wants_gpu() {
-            Target::GpuSim
-        } else {
-            Target::Cpu
-        };
-        let fw = dsl
-            .frameworks
-            .first()
-            .ok_or_else(|| anyhow!("DSL names no framework under {}", dsl.app_type.as_str()))?;
-
-        // 1. candidates by framework + target (+ compiler)
-        let wanted_compiler = fw.compilers.first().cloned();
-        let mut q = Query {
-            framework: Some(fw.framework.clone()),
-            target: Some(target),
-            graph_compiler: Some(wanted_compiler.clone()),
-            ..Query::default()
-        };
-        if let Some(w) = &dsl.workload {
-            q.workload = Some(w.clone());
-        }
-        let mut candidates: Vec<Profile> = self
-            .registry
-            .select(&q)
-            .into_iter()
-            .map(|e| e.profile.clone())
-            .collect();
-        if candidates.is_empty() && wanted_compiler.is_some() {
-            notes.push(format!(
-                "no {:?} image with compiler {:?} on {:?}; falling back to plain images",
-                fw.framework, wanted_compiler, target
-            ));
-            q.graph_compiler = Some(None);
-            candidates = self
-                .registry
-                .select(&q)
-                .into_iter()
-                .map(|e| e.profile.clone())
-                .collect();
-        }
-        if candidates.is_empty() {
-            return Err(anyhow!(
-                "registry has no {:?} containers for target {:?}",
-                fw.framework,
-                target
-            ));
-        }
-
-        // version resolution: exact match preferred, else latest available
-        if let Some(v) = &fw.version {
-            if candidates.iter().any(|p| p.version == v) {
-                candidates.retain(|p| p.version == v);
-            } else {
-                let latest = candidates
-                    .iter()
-                    .map(|p| p.version)
-                    .max_by(|a, b| cmp_version(a, b))
-                    .unwrap()
-                    .to_string();
-                notes.push(format!(
-                    "requested {} {} not packaged; selected supported version {}",
-                    fw.framework, v, latest
-                ));
-                candidates.retain(|p| p.version == latest);
-            }
-        }
-
-        // opt-build preference (DSL enable_opt_build)
-        if dsl.enable_opt_build
-            && candidates
-                .iter()
-                .any(|p| p.source == ImageSource::OptBuild)
-        {
-            candidates.retain(|p| p.source == ImageSource::OptBuild);
-            notes.push("enable_opt_build: preferring custom source builds".into());
-        }
-
-        // 2. rank by the performance model when trained
-        let chosen = if self.model.is_trained() {
-            let mut best: Option<(f64, Profile)> = None;
-            for p in &candidates {
-                if let Some(pred) = self.model.predict_profile(p, self.manifest, cfg) {
-                    notes.push(format!("model: {} -> {:.2}s", p.image_tag(), pred));
-                    if best.as_ref().is_none_or(|(b, _)| pred < *b) {
-                        best = Some((pred, p.clone()));
-                    }
-                }
-            }
-            match best {
-                Some((pred, p)) => {
-                    notes.push(format!(
-                        "selected {} (predicted {:.2}s, model r2={:.3})",
-                        p.image_tag(),
-                        pred,
-                        self.model.r2
-                    ));
-                    p
-                }
-                None => candidates[0].clone(),
-            }
-        } else {
-            notes.push("performance model untrained; using static preference".into());
-            candidates[0].clone()
-        };
-
-        // 3. build (or reuse) the container
-        let image = self
-            .registry
-            .ensure_built(&chosen.image_tag(), self.manifest)?;
-
-        // 4. job script
-        let wl = self.manifest.workload(chosen.workload)?;
-        let script = JobScript {
-            name: format!("{}-{}", wl.name.replace('_', "-"), chosen.label().to_lowercase()),
-            queue: "batch".into(),
-            resources: Resources {
-                nodes: 1,
-                gpus: if target == Target::GpuSim { 1 } else { 0 },
-                walltime: Duration::from_secs(3600),
-            },
-            payload: Payload {
-                image: chosen.image_tag(),
-                epochs: cfg.epochs,
-                steps_per_epoch: cfg.steps_per_epoch,
-                lr: 0.05,
-                seed: cfg.seed as i32,
-                nv: target == Target::GpuSim,
-            },
-        };
-
-        let predicted_secs = self
-            .model
-            .predict(&Features::derive(&chosen, wl, cfg));
-
-        Ok(DeploymentPlan {
-            profile: chosen,
-            image,
-            script,
-            predicted_secs,
-            notes,
-        })
+    /// Map a DSL request + run config to a deployment plan (delegates to
+    /// [`plan_deployment`], the shared code path).
+    pub fn plan(&self, dsl: &Optimisation, cfg: &TrainConfig) -> Result<DeploymentPlan> {
+        plan_deployment(self.registry, self.model, self.manifest, dsl, cfg)
     }
 }
 
@@ -227,6 +237,6 @@ mod tests {
         assert_eq!(cmp_version("2.0", "2.0"), Equal);
     }
 
-    // plan() needs a registry store + artifacts; exercised in
+    // plan_deployment() needs a registry store + artifacts; exercised in
     // rust/tests/modak_integration.rs and the examples.
 }

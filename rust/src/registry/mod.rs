@@ -8,10 +8,11 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::container::{BuildOptions, Builder, DefinitionFile, Image};
+use crate::container::{BuildPool, BuildStats, DefinitionFile, Image};
 use crate::container::definition::Bootstrap;
 use crate::frameworks::{all_profiles, ImageSource, Profile, Target};
 use crate::runtime::Manifest;
@@ -104,25 +105,18 @@ impl Registry {
             .collect()
     }
 
-    /// Ensure the image for `tag` is built; returns the bundle.
-    /// Prebuilt bundles are reused ("MODAK prebuilds ... containers"),
-    /// otherwise the definition is generated and built now.
-    pub fn ensure_built(&mut self, tag: &str, artifacts: &Manifest) -> Result<Image> {
-        let entry = self.get(tag)?;
-        if let Some(dir) = &entry.bundle {
-            if let Ok(img) = Image::load(dir) {
-                return Ok(img);
-            }
+    /// The bundle store this registry is backed by.
+    pub fn store(&self) -> &Path {
+        &self.store
+    }
+
+    /// Record that `tag` now has a built bundle (called by the shared
+    /// handle after a pool build commits).
+    pub fn mark_built(&mut self, tag: &str, image: &Image) {
+        if let Some(e) = self.entries.get_mut(tag) {
+            e.bundle = Some(image.dir.clone());
+            e.digest = Some(image.digest.clone());
         }
-        let profile = entry.profile.clone();
-        let def = definition_for(&profile);
-        let builder = Builder::new(&self.store, artifacts.clone());
-        let (name, tagpart) = split_ref(tag);
-        let image = builder.build(&name, &tagpart, &def, &BuildOptions::default())?;
-        let e = self.entries.get_mut(tag).unwrap();
-        e.bundle = Some(image.dir.clone());
-        e.digest = Some(image.digest.clone());
-        Ok(image)
     }
 
     /// Table I reproduction: one row per (framework, version) with the
@@ -148,6 +142,92 @@ impl Registry {
         rows.into_iter()
             .map(|((f, v), (hub, pip, opt))| (f, v, hub, pip, opt))
             .collect()
+    }
+}
+
+/// A shared, thread-safe view of the registry plus the build pool.
+///
+/// This replaces the seed's `&mut Registry` borrow threading: the
+/// optimiser, figure harness, and deployment service all hold cheap clones
+/// of one handle, so many requests can be planned and built concurrently.
+/// Reads take the registry lock briefly; builds run *outside* the lock on
+/// the [`BuildPool`], which deduplicates identical in-flight builds by
+/// definition digest.
+#[derive(Clone)]
+pub struct RegistryHandle {
+    inner: Arc<Mutex<Registry>>,
+    pool: Arc<BuildPool>,
+}
+
+impl RegistryHandle {
+    /// Open a shared registry over `store`, building (when asked) from
+    /// `artifacts` with at most `max_build_workers` concurrent builds.
+    pub fn open(
+        store: impl AsRef<Path>,
+        artifacts: &Manifest,
+        max_build_workers: usize,
+    ) -> RegistryHandle {
+        let store = store.as_ref().to_path_buf();
+        RegistryHandle {
+            inner: Arc::new(Mutex::new(Registry::open(&store))),
+            pool: Arc::new(BuildPool::new(&store, artifacts.clone(), max_build_workers)),
+        }
+    }
+
+    /// Run `f` with the registry locked (read helper).
+    pub fn with<R>(&self, f: impl FnOnce(&Registry) -> R) -> R {
+        f(&self.inner.lock().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.with(|r| r.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.with(|r| r.is_empty())
+    }
+
+    /// Profile metadata for `tag`.
+    pub fn profile(&self, tag: &str) -> Result<Profile> {
+        self.with(|r| r.get(tag).map(|e| e.profile.clone()))
+    }
+
+    /// Profiles matching a query (cloned out from under the lock).
+    pub fn select_profiles(&self, q: &Query) -> Vec<Profile> {
+        self.with(|r| r.select(q).into_iter().map(|e| e.profile.clone()).collect())
+    }
+
+    pub fn table1(&self) -> Vec<(String, String, bool, bool, bool)> {
+        self.with(|r| r.table1())
+    }
+
+    /// Ensure the image for `tag` is built and return the bundle.
+    ///
+    /// Prebuilt bundles on disk are reused without taking a build worker;
+    /// otherwise the definition is generated and handed to the build pool,
+    /// which coalesces concurrent requests for the same image. The build
+    /// itself runs with the registry lock *released*.
+    pub fn ensure_built(&self, tag: &str) -> Result<Image> {
+        let (profile, prebuilt) = {
+            let reg = self.inner.lock().unwrap();
+            let entry = reg.get(tag)?;
+            let prebuilt = entry.bundle.as_ref().and_then(|d| Image::load(d).ok());
+            (entry.profile.clone(), prebuilt)
+        };
+        if let Some(img) = prebuilt {
+            self.pool.note_prebuilt_hit();
+            return Ok(img);
+        }
+        let def = definition_for(&profile);
+        let (name, tagpart) = split_ref(tag);
+        let image = self.pool.build_cached(&name, &tagpart, &def)?;
+        self.inner.lock().unwrap().mark_built(tag, &image);
+        Ok(image)
+    }
+
+    /// Build-pool counters (builds executed / cache hits).
+    pub fn build_stats(&self) -> BuildStats {
+        self.pool.stats()
     }
 }
 
@@ -299,6 +379,52 @@ mod tests {
             // every generated definition must re-parse
             DefinitionFile::parse(&text).unwrap();
         }
+    }
+
+    fn empty_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("artifacts-not-needed"),
+            workloads: Default::default(),
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn handle_clones_share_one_registry() {
+        let m = empty_manifest();
+        let handle = RegistryHandle::open(store("handle"), &m, 2);
+        let clone = handle.clone();
+        assert_eq!(handle.len(), all_profiles().len());
+        assert_eq!(clone.len(), handle.len());
+        let p = handle.profile("tensorflow:2.1-cpu-hub").unwrap();
+        assert_eq!(p.framework, "tensorflow");
+        // queries work through the handle without &mut access
+        let q = Query {
+            framework: Some("pytorch".into()),
+            ..Query::default()
+        };
+        assert!(!clone.select_profiles(&q).is_empty());
+        assert_eq!(handle.build_stats(), crate::container::BuildStats::default());
+    }
+
+    #[test]
+    fn handle_reads_do_not_require_mut_from_many_threads() {
+        let m = empty_manifest();
+        let handle = RegistryHandle::open(store("handle_threads"), &m, 2);
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let q = Query {
+                        target: Some(Target::Cpu),
+                        ..Query::default()
+                    };
+                    h.select_profiles(&q).len()
+                })
+            })
+            .collect();
+        let counts: Vec<usize> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        assert!(counts.iter().all(|&c| c == counts[0] && c > 0));
     }
 
     #[test]

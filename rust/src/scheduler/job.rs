@@ -17,7 +17,18 @@ pub struct Resources {
     pub nodes: usize,
     /// GPU nodes requested (`:gpus=1` selects the gpu-sim node class).
     pub gpus: usize,
+    /// Slots consumed on the node (`:ppn=N`). Nodes advertise a slot count;
+    /// a 1-slot job can co-reside with others instead of taking the whole
+    /// node exclusively.
+    pub slots: usize,
     pub walltime: Duration,
+}
+
+impl Resources {
+    /// Slots this job occupies while running (never zero).
+    pub fn slot_demand(&self) -> usize {
+        self.slots.max(1)
+    }
 }
 
 impl Default for Resources {
@@ -25,6 +36,7 @@ impl Default for Resources {
         Resources {
             nodes: 1,
             gpus: 0,
+            slots: 1,
             walltime: Duration::from_secs(3600),
         }
     }
@@ -68,6 +80,9 @@ impl JobScript {
         let wt = self.resources.walltime.as_secs();
         let (h, m, s) = (wt / 3600, (wt % 3600) / 60, wt % 60);
         let mut nodes = format!("nodes={}", self.resources.nodes);
+        if self.resources.slots > 1 {
+            nodes.push_str(&format!(":ppn={}", self.resources.slots));
+        }
         if self.resources.gpus > 0 {
             nodes.push_str(&format!(":gpus={}", self.resources.gpus));
         }
@@ -139,6 +154,8 @@ fn parse_resource(spec: &str, r: &mut Resources) -> Result<()> {
                 for extra in parts {
                     if let Some(g) = extra.strip_prefix("gpus=") {
                         r.gpus = g.parse().map_err(|_| anyhow!("bad gpu count"))?;
+                    } else if let Some(p) = extra.strip_prefix("ppn=") {
+                        r.slots = p.parse().map_err(|_| anyhow!("bad ppn count"))?;
                     }
                 }
             }
@@ -153,7 +170,8 @@ fn parse_resource(spec: &str, r: &mut Resources) -> Result<()> {
                 r.walltime = Duration::from_secs(secs);
             }
             "gpus" => r.gpus = v.parse().map_err(|_| anyhow!("bad gpu count"))?,
-            _ => {} // tolerate mem=, ppn= etc.
+            "ppn" => r.slots = v.parse().map_err(|_| anyhow!("bad ppn count"))?,
+            _ => {} // tolerate mem= etc.
         }
     }
     Ok(())
@@ -200,6 +218,7 @@ mod tests {
             resources: Resources {
                 nodes: 1,
                 gpus: 0,
+                slots: 1,
                 walltime: Duration::from_secs(2 * 3600 + 30 * 60),
             },
             payload: Payload {
@@ -250,8 +269,35 @@ mod tests {
         let js = JobScript::parse(text).unwrap();
         assert_eq!(js.resources.nodes, 2);
         assert_eq!(js.resources.gpus, 1);
+        assert_eq!(js.resources.slots, 1); // default
         assert_eq!(js.resources.walltime, Duration::from_secs(600));
         assert_eq!(js.payload.epochs, 3);
         assert_eq!(js.payload.steps_per_epoch, 4); // default
+    }
+
+    #[test]
+    fn slot_requests_roundtrip_as_ppn() {
+        let mut js = sample();
+        js.resources.slots = 2;
+        let text = js.render();
+        assert!(text.contains("nodes=1:ppn=2"), "{text}");
+        let back = JobScript::parse(&text).unwrap();
+        assert_eq!(js, back);
+        assert_eq!(back.resources.slot_demand(), 2);
+
+        // ppn may also arrive as a standalone resource item
+        let text = "#PBS -N j\n#PBS -l nodes=1,ppn=4,walltime=00:10:00\n\
+                    singularity exec img modak-train --epochs 1\n";
+        let js = JobScript::parse(text).unwrap();
+        assert_eq!(js.resources.slots, 4);
+        // slots=0 still occupies one slot
+        assert_eq!(
+            Resources {
+                slots: 0,
+                ..Resources::default()
+            }
+            .slot_demand(),
+            1
+        );
     }
 }

@@ -1,5 +1,11 @@
 //! Torque-like batch scheduling over the simulated 5-node testbed
 //! (paper §V-B/E). Job scripts, worker nodes, and the qsub/qstat server.
+//!
+//! Allocation is slot-based: nodes advertise `NodeSpec::slots`, jobs
+//! consume `Resources::slot_demand()` of them, and the queue is FIFO with
+//! backfill. One slot per node reproduces the paper's exclusive
+//! allocation; more slots let small jobs co-reside (what the deployment
+//! service uses for batch traffic).
 
 pub mod job;
 pub mod node;

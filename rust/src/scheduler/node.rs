@@ -2,14 +2,18 @@
 //! nodes, each with an Nvidia GTX 1080 Ti + Xeon E5-2630 v4, fronted by
 //! Torque).
 //!
-//! Each node is a worker thread owning its *own* PJRT engine (the node's
-//! device — `xla::PjRtClient` is deliberately not shared across nodes).
-//! Nodes receive container-run tasks over a channel and report results
-//! back to the server.
+//! Each node is a worker thread that *dispatches* container-run tasks onto
+//! per-job runner threads, so a node with `slots > 1` executes several jobs
+//! concurrently (the server does the slot accounting). Every runner owns
+//! its own PJRT engine — `xla::PjRtClient` is deliberately not shared
+//! across concurrent jobs. A watchdog enforces the job's walltime at the
+//! boundary: when it fires, the node reports the job killed and releases
+//! its slot instead of letting a runaway payload hold the slot forever.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -19,19 +23,24 @@ use crate::runtime::Engine;
 use crate::scheduler::job::Payload;
 use crate::util::timer::Stopwatch;
 
-/// Node identity + class.
+/// Node identity + class + capacity.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NodeSpec {
     pub id: usize,
     pub class: Target,
+    /// How many jobs this node runs concurrently (1 = the paper's
+    /// exclusive one-job-per-node allocation).
+    pub slots: usize,
 }
 
-/// A task sent to a node: run `payload` from the bundle at `bundle_dir`.
+/// A task sent to a node: run `payload` from the bundle at `bundle_dir`,
+/// killing it at the `walltime` boundary.
 #[derive(Debug)]
 pub struct NodeTask {
     pub job_id: u64,
     pub bundle_dir: PathBuf,
     pub payload: Payload,
+    pub walltime: Duration,
 }
 
 /// What a node reports back.
@@ -56,8 +65,8 @@ pub struct NodeHandle {
 }
 
 impl NodeHandle {
-    /// Boot a node: spawns the worker thread; the PJRT engine is created
-    /// lazily on the first task (so booting a 5-node testbed stays cheap).
+    /// Boot a node: spawns the dispatcher thread; PJRT engines are created
+    /// per job (so booting a 5-node testbed stays cheap).
     pub fn boot(spec: NodeSpec, results: Sender<NodeResult>) -> NodeHandle {
         let (tx, rx): (Sender<ToNode>, Receiver<ToNode>) = channel();
         let thread_spec = spec.clone();
@@ -94,37 +103,83 @@ impl Drop for NodeHandle {
 }
 
 fn node_main(spec: NodeSpec, rx: Receiver<ToNode>, results: Sender<NodeResult>) {
-    let mut engine: Option<Engine> = None;
     while let Ok(msg) = rx.recv() {
         let task = match msg {
             ToNode::Run(t) => t,
             ToNode::Shutdown => break,
         };
-        let sw = Stopwatch::start();
-        let outcome = run_task(&spec, &mut engine, &task);
-        let res = NodeResult {
-            job_id: task.job_id,
-            node_id: spec.id,
-            outcome,
-            wall_secs: sw.elapsed_secs(),
-        };
-        if results.send(res).is_err() {
-            break; // server gone
+        // each job runs on its own thread so co-resident slot holders
+        // progress concurrently and the dispatcher stays responsive
+        let supervisor_results = results.clone();
+        let spec = spec.clone();
+        let (job_id, node_id, walltime) = (task.job_id, spec.id, task.walltime);
+        let spawned = std::thread::Builder::new()
+            .name(format!("node-{node_id}-job-{job_id}"))
+            .spawn(move || {
+                run_supervised(job_id, node_id, walltime, supervisor_results, move || {
+                    run_task(&spec, &task)
+                })
+            });
+        if let Err(e) = spawned {
+            // the job was already dispatched: report it failed so the
+            // server frees its slots instead of waiting forever
+            let _ = results.send(NodeResult {
+                job_id,
+                node_id,
+                outcome: Err(anyhow!("spawning job supervisor: {e}")),
+                wall_secs: 0.0,
+            });
         }
     }
 }
 
-fn run_task(
-    spec: &NodeSpec,
-    engine: &mut Option<Engine>,
-    task: &NodeTask,
-) -> Result<crate::container::ContainerRun> {
-    if engine.is_none() {
-        *engine = Some(Engine::cpu()?);
-    }
-    let engine = engine.as_ref().unwrap();
+/// Run `work` on a runner thread, reporting its result — or a walltime
+/// kill, whichever comes first — to the server.
+///
+/// Threads cannot be forcibly killed, so a timed-out runner is detached:
+/// the *slot* is released immediately (the server sees a terminal result at
+/// the walltime boundary) even if the payload is still burning CPU, which
+/// is what keeps a runaway job from wedging a shared node.
+pub(crate) fn run_supervised<F>(
+    job_id: u64,
+    node_id: usize,
+    walltime: Duration,
+    results: Sender<NodeResult>,
+    work: F,
+) where
+    F: FnOnce() -> Result<crate::container::ContainerRun> + Send + 'static,
+{
+    let sw = Stopwatch::start();
+    let (done_tx, done_rx) = channel();
+    let spawned = std::thread::Builder::new()
+        .name(format!("job-{job_id}-runner"))
+        .spawn(move || {
+            let _ = done_tx.send(work());
+        });
+    let outcome = match spawned {
+        Err(e) => Err(anyhow!("spawning job runner: {e}")),
+        Ok(_runner) => match done_rx.recv_timeout(walltime) {
+            Ok(outcome) => outcome,
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+                "walltime exceeded ({:.1}s): job killed by node runner",
+                walltime.as_secs_f64()
+            )),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("job runner died")),
+        },
+    };
+    let _ = results.send(NodeResult {
+        job_id,
+        node_id,
+        outcome,
+        wall_secs: sw.elapsed_secs(),
+    });
+}
+
+fn run_task(spec: &NodeSpec, task: &NodeTask) -> Result<crate::container::ContainerRun> {
+    // engine per job: PJRT clients are not shared across concurrent jobs
+    let engine = Engine::cpu()?;
     let image = Image::load(&task.bundle_dir)?;
-    let runtime = ContainerRuntime::new(engine, spec.class);
+    let runtime = ContainerRuntime::new(&engine, spec.class);
     runtime.run(
         &image,
         &RunOptions {
@@ -140,6 +195,26 @@ fn run_task(
 mod tests {
     use super::*;
 
+    fn payload() -> Payload {
+        Payload {
+            image: "x".into(),
+            epochs: 1,
+            steps_per_epoch: 1,
+            lr: 0.1,
+            seed: 0,
+            nv: false,
+        }
+    }
+
+    fn task(job_id: u64) -> NodeTask {
+        NodeTask {
+            job_id,
+            bundle_dir: "/definitely/not/a/bundle".into(),
+            payload: payload(),
+            walltime: Duration::from_secs(600),
+        }
+    }
+
     #[test]
     fn node_boots_and_shuts_down() {
         let (res_tx, _res_rx) = channel();
@@ -147,24 +222,13 @@ mod tests {
             NodeSpec {
                 id: 0,
                 class: Target::Cpu,
+                slots: 1,
             },
             res_tx,
         );
         node.shutdown();
         // dispatch after shutdown fails
-        let err = node.dispatch(NodeTask {
-            job_id: 1,
-            bundle_dir: "/nonexistent".into(),
-            payload: Payload {
-                image: "x".into(),
-                epochs: 1,
-                steps_per_epoch: 1,
-                lr: 0.1,
-                seed: 0,
-                nv: false,
-            },
-        });
-        assert!(err.is_err());
+        assert!(node.dispatch(task(1)).is_err());
     }
 
     #[test]
@@ -174,25 +238,44 @@ mod tests {
             NodeSpec {
                 id: 1,
                 class: Target::Cpu,
+                slots: 1,
             },
             res_tx,
         );
-        node.dispatch(NodeTask {
-            job_id: 42,
-            bundle_dir: "/definitely/not/a/bundle".into(),
-            payload: Payload {
-                image: "x".into(),
-                epochs: 1,
-                steps_per_epoch: 1,
-                lr: 0.1,
-                seed: 0,
-                nv: false,
-            },
-        })
-        .unwrap();
+        node.dispatch(task(42)).unwrap();
         let res = res_rx.recv().unwrap();
         assert_eq!(res.job_id, 42);
         assert_eq!(res.node_id, 1);
         assert!(res.outcome.is_err());
+    }
+
+    #[test]
+    fn watchdog_kills_job_at_walltime_boundary() {
+        let (res_tx, res_rx) = channel();
+        let sw = Stopwatch::start();
+        run_supervised(7, 3, Duration::from_millis(50), res_tx, || {
+            // a runaway payload that would hold the slot for 30s
+            std::thread::sleep(Duration::from_secs(30));
+            Err(anyhow!("unreachable"))
+        });
+        let res = res_rx.recv().unwrap();
+        assert_eq!(res.job_id, 7);
+        assert_eq!(res.node_id, 3);
+        let err = res.outcome.unwrap_err().to_string();
+        assert!(err.contains("walltime"), "{err}");
+        // the kill fired at the boundary, not after the payload finished
+        assert!(sw.elapsed_secs() < 5.0, "took {:.1}s", sw.elapsed_secs());
+        assert!(res.wall_secs < 5.0);
+    }
+
+    #[test]
+    fn completed_work_beats_the_watchdog() {
+        let (res_tx, res_rx) = channel();
+        run_supervised(8, 0, Duration::from_secs(600), res_tx, || {
+            Err(anyhow!("fast deterministic failure"))
+        });
+        let res = res_rx.recv().unwrap();
+        let err = res.outcome.unwrap_err().to_string();
+        assert!(err.contains("fast deterministic failure"), "{err}");
     }
 }

@@ -1,15 +1,23 @@
 //! The Torque-like batch server: qsub / qstat / qdel over the simulated
 //! testbed (paper §V-B: front-end node running Torque + five compute
-//! nodes; §V-E: one node exclusively per job, FIFO).
+//! nodes).
 //!
-//! Scheduling policy: strict FIFO per node class. A job asking for
-//! `gpus >= 1` runs on a gpu-sim node, otherwise on a cpu node; a node runs
-//! at most one job at a time (exclusive). Walltime is enforced post-hoc
-//! (jobs that overran are marked failed, as qstat would show them killed).
+//! Scheduling policy: slot-based FIFO with backfill. Nodes advertise
+//! `slots` (from [`NodeSpec`]); a job consumes `Resources::slot_demand()`
+//! slots on one class-matching node, so small jobs co-reside with large
+//! ones. The queue is walked in submission order and a job is dispatched
+//! as soon as a node has enough free slots; a job that does not fit is
+//! skipped without blocking later jobs (backfill). With 1-slot nodes this
+//! degenerates to the paper's §V-E exclusive one-job-per-node FIFO.
+//!
+//! Walltime is enforced by the node runner at the boundary (the watchdog
+//! kills the job and frees its slot); the server keeps a post-hoc check as
+//! a backstop for runs that complete just past their limit.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -43,6 +51,16 @@ impl JobState {
     pub fn is_terminal(&self) -> bool {
         matches!(self, JobState::Completed { .. } | JobState::Failed { .. })
     }
+
+    /// Wall seconds for terminal states (None while queued/running).
+    pub fn wall_secs(&self) -> Option<f64> {
+        match self {
+            JobState::Completed { wall_secs, .. } | JobState::Failed { wall_secs, .. } => {
+                Some(*wall_secs)
+            }
+            _ => None,
+        }
+    }
 }
 
 /// A tracked job.
@@ -52,13 +70,21 @@ pub struct JobRecord {
     pub script: JobScript,
     pub bundle_dir: PathBuf,
     pub state: JobState,
+    /// When the job was qsub'd.
+    pub submitted_at: Instant,
+    /// Seconds spent in the queue before dispatch (None while queued).
+    pub queue_wait_secs: Option<f64>,
+    /// Node the job was (last) dispatched to.
+    pub node: Option<usize>,
 }
 
 /// The batch server.
 pub struct TorqueServer {
     nodes: Vec<NodeHandle>,
-    /// node id -> currently running job (exclusive allocation).
-    busy: BTreeMap<usize, JobId>,
+    /// node id -> slots currently in use.
+    used: BTreeMap<usize, usize>,
+    /// running job -> (node id, slots held).
+    running: BTreeMap<JobId, (usize, usize)>,
     queue: VecDeque<JobId>,
     jobs: BTreeMap<JobId, JobRecord>,
     next_id: JobId,
@@ -66,11 +92,21 @@ pub struct TorqueServer {
     images: BTreeMap<String, PathBuf>,
     results_rx: Receiver<NodeResult>,
     results_tx: Sender<NodeResult>,
+    /// Terminal transitions in the order the server absorbed them.
+    finish_order: Vec<JobId>,
+    /// Most jobs ever observed Running simultaneously.
+    peak_running: usize,
 }
 
 impl TorqueServer {
-    /// Boot the paper's testbed shape: `cpu_nodes` + `gpu_nodes` workers.
-    pub fn boot(cpu_nodes: usize, gpu_nodes: usize) -> TorqueServer {
+    /// Boot `cpu_nodes` + `gpu_nodes` workers with `slots_per_node` job
+    /// slots each.
+    pub fn boot_slotted(
+        cpu_nodes: usize,
+        gpu_nodes: usize,
+        slots_per_node: usize,
+    ) -> TorqueServer {
+        let slots = slots_per_node.max(1);
         let (results_tx, results_rx) = channel();
         let mut nodes = Vec::new();
         for i in 0..cpu_nodes {
@@ -78,6 +114,7 @@ impl TorqueServer {
                 NodeSpec {
                     id: i,
                     class: Target::Cpu,
+                    slots,
                 },
                 results_tx.clone(),
             ));
@@ -87,34 +124,53 @@ impl TorqueServer {
                 NodeSpec {
                     id: cpu_nodes + i,
                     class: Target::GpuSim,
+                    slots,
                 },
                 results_tx.clone(),
             ));
         }
         TorqueServer {
             nodes,
-            busy: BTreeMap::new(),
+            used: BTreeMap::new(),
+            running: BTreeMap::new(),
             queue: VecDeque::new(),
             jobs: BTreeMap::new(),
             next_id: 1,
             images: BTreeMap::new(),
             results_rx,
             results_tx,
+            finish_order: Vec::new(),
+            peak_running: 0,
         }
     }
 
-    /// The paper's testbed: five nodes, each carrying a GPU — modelled as
-    /// 5 gpu-sim-capable nodes that also accept cpu jobs? No: the paper
-    /// submits cpu and gpu workloads to the same nodes. We model the node
-    /// classes explicitly; `testbed()` gives 5 of each role by splitting
-    /// (3 cpu + 2 gpu-sim) which preserves "five compute nodes".
+    /// Boot with the paper's exclusive allocation (one slot per node).
+    pub fn boot(cpu_nodes: usize, gpu_nodes: usize) -> TorqueServer {
+        TorqueServer::boot_slotted(cpu_nodes, gpu_nodes, 1)
+    }
+
+    /// The paper's testbed: five compute nodes (3 cpu + 2 gpu-sim),
+    /// exclusive allocation as in §V-E.
     pub fn testbed() -> TorqueServer {
         TorqueServer::boot(3, 2)
+    }
+
+    /// The testbed shape with shared nodes (`slots_per_node` jobs each).
+    pub fn testbed_slotted(slots_per_node: usize) -> TorqueServer {
+        TorqueServer::boot_slotted(3, 2, slots_per_node)
     }
 
     /// Make an image bundle visible to the server.
     pub fn register_image(&mut self, tag: &str, bundle_dir: PathBuf) {
         self.images.insert(tag.to_string(), bundle_dir);
+    }
+
+    fn class_of(script: &JobScript) -> Target {
+        if script.resources.gpus > 0 {
+            Target::GpuSim
+        } else {
+            Target::Cpu
+        }
     }
 
     /// Submit a job script (Torque `qsub`); returns the job id.
@@ -125,13 +181,21 @@ impl TorqueServer {
                 script.resources.nodes
             );
         }
-        let class = if script.resources.gpus > 0 {
-            Target::GpuSim
-        } else {
-            Target::Cpu
-        };
-        if !self.nodes.iter().any(|n| n.spec.class == class) {
+        let class = Self::class_of(&script);
+        let max_slots = self
+            .nodes
+            .iter()
+            .filter(|n| n.spec.class == class)
+            .map(|n| n.spec.slots)
+            .max();
+        let Some(max_slots) = max_slots else {
             bail!("no {:?} nodes in this testbed", class);
+        };
+        let demand = script.resources.slot_demand();
+        if demand > max_slots {
+            bail!(
+                "job asks for {demand} slots but the largest {class:?} node has {max_slots}"
+            );
         }
         let bundle_dir = self
             .images
@@ -152,6 +216,9 @@ impl TorqueServer {
                 script,
                 bundle_dir,
                 state: JobState::Queued,
+                submitted_at: Instant::now(),
+                queue_wait_secs: None,
+                node: None,
             },
         );
         self.queue.push_back(id);
@@ -173,6 +240,7 @@ impl TorqueServer {
                     error: "deleted by user".into(),
                     wall_secs: 0.0,
                 };
+                self.finish_order.push(id);
                 Ok(())
             }
             JobState::Running { .. } => bail!("job {id} is running; cannot delete"),
@@ -189,54 +257,55 @@ impl TorqueServer {
         self.jobs.get(&id).ok_or_else(|| anyhow!("unknown job {id}"))
     }
 
-    /// FIFO scheduling pass: assign queued jobs to free class-matching
-    /// nodes. FIFO order is preserved *per class*: a gpu job never jumps a
-    /// cpu job for a cpu node and vice versa.
+    /// Slot-based FIFO pass with backfill: walk the queue in submission
+    /// order, dispatching every job some class-matching node has free
+    /// slots for; jobs that do not fit are skipped, not head-of-line
+    /// blockers.
     fn schedule(&mut self) -> Result<()> {
-        let mut remaining = VecDeque::new();
-        while let Some(id) = self.queue.pop_front() {
-            let class = {
+        let ids: Vec<JobId> = self.queue.iter().copied().collect();
+        for id in ids {
+            let (class, demand, bundle_dir, payload, walltime) = {
                 let rec = &self.jobs[&id];
-                if rec.script.resources.gpus > 0 {
-                    Target::GpuSim
-                } else {
-                    Target::Cpu
-                }
+                (
+                    Self::class_of(&rec.script),
+                    rec.script.resources.slot_demand(),
+                    rec.bundle_dir.clone(),
+                    rec.script.payload.clone(),
+                    rec.script.resources.walltime,
+                )
             };
-            // skip if an earlier job of the same class is still waiting
-            let blocked = remaining.iter().any(|&qid: &JobId| {
-                let r = &self.jobs[&qid];
-                let qclass = if r.script.resources.gpus > 0 {
-                    Target::GpuSim
-                } else {
-                    Target::Cpu
-                };
-                qclass == class
-            });
-            let free_node = if blocked {
-                None
-            } else {
-                self.nodes
-                    .iter()
-                    .find(|n| n.spec.class == class && !self.busy.contains_key(&n.spec.id))
-            };
-            match free_node {
-                Some(node) => {
-                    let node_id = node.spec.id;
-                    let rec = self.jobs.get_mut(&id).unwrap();
-                    let task = NodeTask {
-                        job_id: id,
-                        bundle_dir: rec.bundle_dir.clone(),
-                        payload: rec.script.payload.clone(),
-                    };
-                    node.dispatch(task)?;
-                    rec.state = JobState::Running { node: node_id };
-                    self.busy.insert(node_id, id);
-                }
-                None => remaining.push_back(id),
-            }
+            let node_id = self
+                .nodes
+                .iter()
+                .find(|n| {
+                    n.spec.class == class
+                        && n.spec
+                            .slots
+                            .saturating_sub(self.used.get(&n.spec.id).copied().unwrap_or(0))
+                            >= demand
+                })
+                .map(|n| n.spec.id);
+            let Some(node_id) = node_id else { continue };
+            let node = self
+                .nodes
+                .iter()
+                .find(|n| n.spec.id == node_id)
+                .expect("node exists");
+            node.dispatch(NodeTask {
+                job_id: id,
+                bundle_dir,
+                payload,
+                walltime,
+            })?;
+            let rec = self.jobs.get_mut(&id).expect("job exists");
+            rec.state = JobState::Running { node: node_id };
+            rec.queue_wait_secs = Some(rec.submitted_at.elapsed().as_secs_f64());
+            rec.node = Some(node_id);
+            *self.used.entry(node_id).or_insert(0) += demand;
+            self.running.insert(id, (node_id, demand));
+            self.queue.retain(|&q| q != id);
+            self.peak_running = self.peak_running.max(self.running.len());
         }
-        self.queue = remaining;
         Ok(())
     }
 
@@ -250,7 +319,11 @@ impl TorqueServer {
     }
 
     fn absorb(&mut self, res: NodeResult) -> Result<()> {
-        self.busy.remove(&res.node_id);
+        if let Some((node_id, slots)) = self.running.remove(&res.job_id) {
+            if let Some(u) = self.used.get_mut(&node_id) {
+                *u = u.saturating_sub(slots);
+            }
+        }
         let rec = self
             .jobs
             .get_mut(&res.job_id)
@@ -273,16 +346,24 @@ impl TorqueServer {
                 wall_secs: res.wall_secs,
             },
         };
+        self.finish_order.push(res.job_id);
         self.schedule()
+    }
+
+    /// Non-blocking pump: absorb every completion already reported and
+    /// reschedule. The deployment service calls this from its poll loop so
+    /// qstat snapshots stay fresh without blocking on a lock.
+    pub fn poll(&mut self) -> Result<()> {
+        while let Ok(res) = self.results_rx.try_recv() {
+            self.absorb(res)?;
+        }
+        Ok(())
     }
 
     /// Block until `id` reaches a terminal state.
     pub fn wait(&mut self, id: JobId) -> Result<&JobRecord> {
         loop {
-            // drain anything already finished
-            while let Ok(res) = self.results_rx.try_recv() {
-                self.absorb(res)?;
-            }
+            self.poll()?;
             if self.jobs.get(&id).map(|r| r.state.is_terminal()) == Some(true) {
                 return self.job(id);
             }
@@ -296,9 +377,7 @@ impl TorqueServer {
     /// Block until every submitted job is terminal.
     pub fn wait_all(&mut self) -> Result<()> {
         loop {
-            while let Ok(res) = self.results_rx.try_recv() {
-                self.absorb(res)?;
-            }
+            self.poll()?;
             if self.jobs.values().all(|r| r.state.is_terminal()) {
                 return Ok(());
             }
@@ -306,9 +385,13 @@ impl TorqueServer {
         }
     }
 
-    /// Free/busy view (for the invariant tests).
+    /// Nodes currently holding at least one job (for the invariant tests).
     pub fn busy_nodes(&self) -> Vec<usize> {
-        self.busy.keys().copied().collect()
+        self.used
+            .iter()
+            .filter(|(_, &u)| u > 0)
+            .map(|(&n, _)| n)
+            .collect()
     }
 
     pub fn node_specs(&self) -> Vec<NodeSpec> {
@@ -317,6 +400,21 @@ impl TorqueServer {
 
     pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Jobs currently in the Running state.
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Most jobs ever Running at once on this server.
+    pub fn peak_running(&self) -> usize {
+        self.peak_running
+    }
+
+    /// Terminal transitions in absorption order (FIFO assertions).
+    pub fn finish_order(&self) -> &[JobId] {
+        &self.finish_order
     }
 
     /// A fresh sender for additional node pools (tests).
@@ -331,13 +429,14 @@ mod tests {
     use crate::scheduler::job::{Payload, Resources};
     use std::time::Duration;
 
-    fn script(image: &str, gpus: usize) -> JobScript {
+    fn script_slots(image: &str, gpus: usize, slots: usize) -> JobScript {
         JobScript {
             name: "t".into(),
             queue: "batch".into(),
             resources: Resources {
                 nodes: 1,
                 gpus,
+                slots,
                 walltime: Duration::from_secs(600),
             },
             payload: Payload {
@@ -351,6 +450,10 @@ mod tests {
         }
     }
 
+    fn script(image: &str, gpus: usize) -> JobScript {
+        script_slots(image, gpus, 1)
+    }
+
     #[test]
     fn qsub_requires_registered_image() {
         let mut server = TorqueServer::boot(1, 0);
@@ -358,7 +461,7 @@ mod tests {
     }
 
     #[test]
-    fn qsub_rejects_multinode_and_missing_class() {
+    fn qsub_rejects_multinode_missing_class_and_oversized_demand() {
         let mut server = TorqueServer::boot(1, 0);
         server.register_image("img:1", "/tmp/nonexistent".into());
         let mut s = script("img:1", 0);
@@ -366,6 +469,8 @@ mod tests {
         assert!(server.qsub(s).is_err());
         // no gpu nodes in this testbed
         assert!(server.qsub(script("img:1", 1)).is_err());
+        // demand larger than any node's slot count
+        assert!(server.qsub(script_slots("img:1", 0, 2)).is_err());
     }
 
     #[test]
@@ -377,20 +482,60 @@ mod tests {
         let rec = server.job(id).unwrap();
         assert_eq!(rec.state.code(), 'F');
         assert!(server.busy_nodes().is_empty());
+        assert!(rec.queue_wait_secs.is_some());
+        assert_eq!(rec.node, Some(0));
     }
 
     #[test]
-    fn fifo_and_exclusivity_on_single_node() {
+    fn fifo_and_exclusivity_on_single_slot_node() {
         let mut server = TorqueServer::boot(1, 0);
         server.register_image("img:1", "/not/a/bundle".into());
         let a = server.qsub(script("img:1", 0)).unwrap();
         let b = server.qsub(script("img:1", 0)).unwrap();
         let c = server.qsub(script("img:1", 0)).unwrap();
-        // only one node: at most one running at any time
+        // one slot: only the head job dispatched, the rest queued in order
+        assert_eq!(server.job(a).unwrap().state.code(), 'R');
+        assert_eq!(server.job(b).unwrap().state.code(), 'Q');
+        assert_eq!(server.job(c).unwrap().state.code(), 'Q');
         assert!(server.busy_nodes().len() <= 1);
         server.wait_all().unwrap();
-        // FIFO: ids complete in order (they all fail fast, order preserved
-        // by the single node + FIFO queue)
+        // FIFO: equal-demand jobs finish in submission order
+        assert_eq!(server.finish_order(), &[a, b, c]);
+    }
+
+    #[test]
+    fn two_small_jobs_coreside_on_a_two_slot_node() {
+        let mut server = TorqueServer::boot_slotted(1, 0, 2);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let a = server.qsub(script("img:1", 0)).unwrap();
+        let b = server.qsub(script("img:1", 0)).unwrap();
+        let c = server.qsub(script("img:1", 0)).unwrap();
+        // slot accounting: two 1-slot jobs run together, the third queues
+        assert_eq!(server.job(a).unwrap().state.code(), 'R');
+        assert_eq!(server.job(b).unwrap().state.code(), 'R');
+        assert_eq!(server.job(c).unwrap().state.code(), 'Q');
+        assert_eq!(server.busy_nodes(), vec![0]);
+        assert_eq!(server.running_count(), 2);
+        server.wait_all().unwrap();
+        assert!(server.peak_running() >= 2);
+        assert!(server.busy_nodes().is_empty());
+    }
+
+    #[test]
+    fn small_job_backfills_past_blocked_large_job() {
+        let mut server = TorqueServer::boot_slotted(1, 0, 2);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let a = server.qsub(script("img:1", 0)).unwrap(); // 1 slot -> runs
+        let b = server.qsub(script_slots("img:1", 0, 2)).unwrap(); // needs 2, only 1 free
+        let c = server.qsub(script("img:1", 0)).unwrap(); // 1 slot -> backfills
+        assert_eq!(server.job(a).unwrap().state.code(), 'R');
+        assert_eq!(server.job(b).unwrap().state.code(), 'Q', "large job must wait");
+        assert_eq!(
+            server.job(c).unwrap().state.code(),
+            'R',
+            "small job should backfill into the free slot"
+        );
+        server.wait_all().unwrap();
         for id in [a, b, c] {
             assert!(server.job(id).unwrap().state.is_terminal());
         }
@@ -418,5 +563,21 @@ mod tests {
             assert_eq!(node, 1);
         }
         server.wait_all().unwrap();
+    }
+
+    #[test]
+    fn walltime_kill_frees_the_slot_for_queued_work() {
+        // the node watchdog (node.rs) reports the kill; here we check the
+        // server frees the slot and schedules the next job afterwards
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let mut s = script("img:1", 0);
+        s.resources.walltime = Duration::from_millis(1);
+        let a = server.qsub(s).unwrap();
+        let b = server.qsub(script("img:1", 0)).unwrap();
+        server.wait_all().unwrap();
+        assert_eq!(server.job(a).unwrap().state.code(), 'F');
+        assert!(server.job(b).unwrap().state.is_terminal());
+        assert!(server.busy_nodes().is_empty());
     }
 }

@@ -1,0 +1,558 @@
+//! The MODAK deployment service: the concurrent front door to the whole
+//! stack (ROADMAP: serve heavy traffic, not one blocking call at a time).
+//!
+//! Request pipeline, four layers deep:
+//!
+//! ```text
+//!   submit_many(Vec<Optimisation>)          (this module: work queue)
+//!        │  planner worker threads
+//!        ▼
+//!   plan_deployment()                       (optimiser: select profile)
+//!        │  shared RegistryHandle
+//!        ▼
+//!   BuildPool::build_cached()               (builder: digest-keyed dedup)
+//!        │  register_image + qsub
+//!        ▼
+//!   TorqueServer slot scheduler             (scheduler: backfill + slots)
+//! ```
+//!
+//! `submit_many` returns immediately with one [`PlanHandle`] per request;
+//! planning, container builds, and dispatch proceed on worker threads. The
+//! legacy one-shot `modak optimise` path runs through the same service (a
+//! batch of one), so both paths produce identical plans by construction.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::container::BuildStats;
+use crate::dsl::Optimisation;
+use crate::optimiser::{plan_deployment, DeploymentPlan};
+use crate::perfmodel::PerfModel;
+use crate::registry::RegistryHandle;
+use crate::runtime::Manifest;
+use crate::scheduler::{JobId, TorqueServer};
+use crate::trainer::TrainConfig;
+use crate::util::timer::Stopwatch;
+
+/// Shape of the service's testbed + worker pools.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub cpu_nodes: usize,
+    pub gpu_nodes: usize,
+    /// Job slots per node (1 = the paper's exclusive allocation).
+    pub slots_per_node: usize,
+    /// Concurrent container builds (the build pool's worker cap).
+    pub max_build_workers: usize,
+    /// Planner worker threads draining the request queue.
+    pub planner_workers: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            cpu_nodes: 3,
+            gpu_nodes: 2,
+            slots_per_node: 2,
+            max_build_workers: 2,
+            planner_workers: 4,
+        }
+    }
+}
+
+/// One request in a batch: a label (e.g. the DSL file name) + parsed DSL.
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub label: String,
+    pub dsl: Optimisation,
+}
+
+/// What a planner worker produced for one request.
+#[derive(Debug)]
+pub struct PlanOutcome {
+    pub plan: Result<DeploymentPlan>,
+    /// Set when the plan was dispatched to the scheduler.
+    pub job_id: Option<JobId>,
+}
+
+/// Async-style handle to one submitted request. `wait()` blocks until the
+/// planner worker has planned (and, when dispatching, qsub'd) the request.
+pub struct PlanHandle {
+    pub index: usize,
+    pub label: String,
+    rx: Receiver<PlanOutcome>,
+    outcome: Option<PlanOutcome>,
+}
+
+impl PlanHandle {
+    /// Block until the request is planned; repeated calls are cheap.
+    pub fn wait(&mut self) -> &PlanOutcome {
+        if self.outcome.is_none() {
+            let out = self.rx.recv().unwrap_or_else(|_| PlanOutcome {
+                plan: Err(anyhow!("planner worker died before reporting")),
+                job_id: None,
+            });
+            self.outcome = Some(out);
+        }
+        self.outcome.as_ref().expect("outcome just set")
+    }
+}
+
+struct Work {
+    req: BatchRequest,
+    done: Sender<PlanOutcome>,
+}
+
+/// Per-job line of a [`BatchReport`].
+#[derive(Debug, Clone)]
+pub struct JobSummary {
+    pub label: String,
+    pub image: Option<String>,
+    pub job_id: Option<JobId>,
+    /// qstat code ('C'/'F'/...), 'P' = planned but not dispatched,
+    /// 'E' = planning/build failed.
+    pub state: char,
+    pub queue_wait_secs: Option<f64>,
+    pub run_secs: Option<f64>,
+    pub node: Option<usize>,
+    pub predicted_secs: Option<f64>,
+    pub error: Option<String>,
+}
+
+/// Outcome of a whole batch: per-job lines + concurrency evidence.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub jobs: Vec<JobSummary>,
+    /// Wall time from submission of the batch to the last terminal job.
+    pub makespan_secs: f64,
+    /// Sum of per-job run wall times (what serial FIFO would cost at best).
+    pub serial_sum_secs: f64,
+    /// Most jobs observed Running simultaneously.
+    pub peak_running: usize,
+    pub build_stats: BuildStats,
+}
+
+impl BatchReport {
+    pub fn completed(&self) -> usize {
+        self.jobs.iter().filter(|j| j.state == 'C').count()
+    }
+
+    pub fn throughput_jobs_per_sec(&self) -> f64 {
+        if self.makespan_secs > 0.0 {
+            self.completed() as f64 / self.makespan_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Human-readable summary (the serve-batch CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<22} {:<34} {:>4} {:>2} {:>9} {:>9} {:>5}\n",
+            "request", "image", "job", "st", "wait(s)", "run(s)", "node"
+        ));
+        for j in &self.jobs {
+            let fmt_opt = |v: Option<f64>| match v {
+                Some(v) => format!("{v:.2}"),
+                None => "-".into(),
+            };
+            out.push_str(&format!(
+                "{:<22} {:<34} {:>4} {:>2} {:>9} {:>9} {:>5}\n",
+                truncate(&j.label, 22),
+                truncate(j.image.as_deref().unwrap_or("-"), 34),
+                j.job_id.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+                j.state,
+                fmt_opt(j.queue_wait_secs),
+                fmt_opt(j.run_secs),
+                j.node.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
+            ));
+            if let Some(e) = &j.error {
+                out.push_str(&format!("{:<22}   error: {}\n", "", truncate(e, 100)));
+            }
+        }
+        let speedup = if self.makespan_secs > 0.0 {
+            self.serial_sum_secs / self.makespan_secs
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "\nmakespan {:.2}s | serial sum {:.2}s ({speedup:.2}x) | \
+             throughput {:.2} jobs/s\n",
+            self.makespan_secs,
+            self.serial_sum_secs,
+            self.throughput_jobs_per_sec()
+        ));
+        out.push_str(&format!(
+            "peak concurrent running {} | builds {} | build-cache hits {}\n",
+            self.peak_running, self.build_stats.builds, self.build_stats.cache_hits
+        ));
+        out
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(n.saturating_sub(1)).collect();
+        format!("{cut}…")
+    }
+}
+
+/// The deployment service: owns registry handle, performance model,
+/// manifest, and the batch server, and drives requests through a work
+/// queue of planner threads.
+pub struct DeploymentService {
+    registry: RegistryHandle,
+    model: Arc<PerfModel>,
+    manifest: Manifest,
+    server: Arc<Mutex<TorqueServer>>,
+    planner_workers: usize,
+}
+
+impl DeploymentService {
+    /// Build a service over a fresh registry at `store`.
+    pub fn new(
+        store: impl AsRef<std::path::Path>,
+        manifest: Manifest,
+        model: PerfModel,
+        cfg: &ServiceConfig,
+    ) -> DeploymentService {
+        let registry = RegistryHandle::open(store, &manifest, cfg.max_build_workers);
+        Self::with_registry(registry, manifest, model, cfg)
+    }
+
+    /// Build a service over an existing (possibly shared) registry handle.
+    pub fn with_registry(
+        registry: RegistryHandle,
+        manifest: Manifest,
+        model: PerfModel,
+        cfg: &ServiceConfig,
+    ) -> DeploymentService {
+        let server = TorqueServer::boot_slotted(cfg.cpu_nodes, cfg.gpu_nodes, cfg.slots_per_node);
+        DeploymentService {
+            registry,
+            model: Arc::new(model),
+            manifest,
+            server: Arc::new(Mutex::new(server)),
+            planner_workers: cfg.planner_workers.max(1),
+        }
+    }
+
+    pub fn registry(&self) -> &RegistryHandle {
+        &self.registry
+    }
+
+    /// Run `f` with the batch server locked (qstat snapshots, tests).
+    pub fn with_server<R>(&self, f: impl FnOnce(&mut TorqueServer) -> R) -> R {
+        f(&mut self.server.lock().unwrap())
+    }
+
+    /// Submit a batch of requests. Returns one handle per request, in
+    /// input order, immediately; planner workers drain the queue in the
+    /// background, building containers through the shared pool and (when
+    /// `dispatch`) qsub'ing each plan as soon as it is ready.
+    pub fn submit_many(
+        &self,
+        reqs: Vec<BatchRequest>,
+        cfg: &TrainConfig,
+        dispatch: bool,
+    ) -> Vec<PlanHandle> {
+        let (work_tx, work_rx) = channel::<Work>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut handles = Vec::with_capacity(reqs.len());
+        for (index, req) in reqs.into_iter().enumerate() {
+            let (done_tx, done_rx) = channel();
+            handles.push(PlanHandle {
+                index,
+                label: req.label.clone(),
+                rx: done_rx,
+                outcome: None,
+            });
+            work_tx
+                .send(Work { req, done: done_tx })
+                .expect("work queue open");
+        }
+        drop(work_tx); // workers exit when the queue drains
+
+        let workers = self.planner_workers.min(handles.len().max(1));
+        for w in 0..workers {
+            let work_rx = Arc::clone(&work_rx);
+            let registry = self.registry.clone();
+            let model = Arc::clone(&self.model);
+            let manifest = self.manifest.clone();
+            let server = Arc::clone(&self.server);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("planner-{w}"))
+                .spawn(move || loop {
+                    // the lock is only held for the dequeue: all work was
+                    // enqueued before the workers started, so recv never
+                    // blocks other workers out
+                    let work = work_rx.lock().unwrap().recv();
+                    let Ok(Work { req, done }) = work else { break };
+                    let outcome = plan_and_dispatch(
+                        &registry, &model, &manifest, &server, &req, &cfg, dispatch,
+                    );
+                    let _ = done.send(outcome);
+                })
+                .expect("spawning planner worker");
+        }
+        handles
+    }
+
+    /// Wait for every handle's plan and every dispatched job to reach a
+    /// terminal state, invoking `on_poll` with the locked server at each
+    /// poll tick (for live qstat output). Returns the batch report with
+    /// `makespan_secs` left at 0 (callers that timed the batch fill it in;
+    /// [`Self::run_batch`] does this automatically).
+    pub fn await_batch(
+        &self,
+        handles: &mut [PlanHandle],
+        mut on_poll: impl FnMut(&TorqueServer),
+    ) -> BatchReport {
+        for h in handles.iter_mut() {
+            h.wait();
+        }
+        let job_ids: Vec<JobId> = handles
+            .iter()
+            .filter_map(|h| h.outcome.as_ref().and_then(|o| o.job_id))
+            .collect();
+        loop {
+            let pending = {
+                let mut srv = self.server.lock().unwrap();
+                let _ = srv.poll();
+                on_poll(&srv);
+                job_ids
+                    .iter()
+                    .filter(|id| {
+                        srv.job(**id)
+                            .map(|r| !r.state.is_terminal())
+                            .unwrap_or(false)
+                    })
+                    .count()
+            };
+            if pending == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        self.report(handles, 0.0)
+    }
+
+    /// Submit + await + time a batch: the serve-batch entry point.
+    pub fn run_batch(
+        &self,
+        reqs: Vec<BatchRequest>,
+        cfg: &TrainConfig,
+        on_poll: impl FnMut(&TorqueServer),
+    ) -> BatchReport {
+        let sw = Stopwatch::start();
+        let mut handles = self.submit_many(reqs, cfg, true);
+        let mut report = self.await_batch(&mut handles, on_poll);
+        report.makespan_secs = sw.elapsed_secs();
+        report
+    }
+
+    fn report(&self, handles: &mut [PlanHandle], makespan_secs: f64) -> BatchReport {
+        let srv = self.server.lock().unwrap();
+        let mut jobs = Vec::with_capacity(handles.len());
+        let mut serial_sum = 0.0;
+        for h in handles.iter_mut() {
+            let label = h.label.clone();
+            let out = h.wait();
+            let summary = match &out.plan {
+                Err(e) => JobSummary {
+                    label,
+                    image: None,
+                    job_id: None,
+                    state: 'E',
+                    queue_wait_secs: None,
+                    run_secs: None,
+                    node: None,
+                    predicted_secs: None,
+                    error: Some(format!("{e:#}")),
+                },
+                Ok(plan) => {
+                    let image = Some(plan.profile.image_tag());
+                    match out.job_id.and_then(|id| srv.job(id).ok()) {
+                        None => JobSummary {
+                            label,
+                            image,
+                            job_id: None,
+                            state: 'P',
+                            queue_wait_secs: None,
+                            run_secs: None,
+                            node: None,
+                            predicted_secs: plan.predicted_secs,
+                            error: None,
+                        },
+                        Some(rec) => {
+                            let run_secs = rec.state.wall_secs();
+                            if let Some(s) = run_secs {
+                                serial_sum += s;
+                            }
+                            let error = match &rec.state {
+                                crate::scheduler::JobState::Failed { error, .. } => {
+                                    Some(error.clone())
+                                }
+                                _ => None,
+                            };
+                            JobSummary {
+                                label,
+                                image,
+                                job_id: Some(rec.id),
+                                state: rec.state.code(),
+                                queue_wait_secs: rec.queue_wait_secs,
+                                run_secs,
+                                node: rec.node,
+                                predicted_secs: plan.predicted_secs,
+                                error,
+                            }
+                        }
+                    }
+                }
+            };
+            jobs.push(summary);
+        }
+        BatchReport {
+            jobs,
+            makespan_secs,
+            serial_sum_secs: serial_sum,
+            peak_running: srv.peak_running(),
+            build_stats: self.registry.build_stats(),
+        }
+    }
+}
+
+fn plan_and_dispatch(
+    registry: &RegistryHandle,
+    model: &PerfModel,
+    manifest: &Manifest,
+    server: &Arc<Mutex<TorqueServer>>,
+    req: &BatchRequest,
+    cfg: &TrainConfig,
+    dispatch: bool,
+) -> PlanOutcome {
+    let plan = match plan_deployment(registry, model, manifest, &req.dsl, cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            return PlanOutcome {
+                plan: Err(e),
+                job_id: None,
+            }
+        }
+    };
+    let job_id = if dispatch {
+        let mut srv = server.lock().unwrap();
+        srv.register_image(&plan.profile.image_tag(), plan.image.dir.clone());
+        match srv.qsub(plan.script.clone()) {
+            Ok(id) => Some(id),
+            Err(e) => {
+                return PlanOutcome {
+                    plan: Err(e.context(format!("dispatching plan for {}", req.label))),
+                    job_id: None,
+                }
+            }
+        }
+    } else {
+        None
+    };
+    PlanOutcome {
+        plan: Ok(plan),
+        job_id,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn store(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modak_service_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// A manifest with no workloads: planning succeeds up to the build,
+    /// then fails deterministically — enough to exercise the queue
+    /// plumbing and the digest-keyed failure cache without artifacts.
+    fn empty_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("artifacts-not-needed"),
+            workloads: Default::default(),
+            artifacts: Default::default(),
+        }
+    }
+
+    fn dsl(framework: &str, version: &str) -> Optimisation {
+        Optimisation::parse(&format!(
+            r#"{{"app_type": "ai_training",
+                "ai_training": {{"{framework}": {{"version": "{version}"}}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_many_preserves_order_and_reports_errors() {
+        let service = DeploymentService::new(
+            store("order"),
+            empty_manifest(),
+            PerfModel::new(),
+            &ServiceConfig::default(),
+        );
+        let reqs = vec![
+            BatchRequest { label: "a".into(), dsl: dsl("pytorch", "1.14") },
+            BatchRequest { label: "b".into(), dsl: dsl("tensorflow", "2.1") },
+            BatchRequest { label: "c".into(), dsl: dsl("pytorch", "1.14") },
+        ];
+        let cfg = TrainConfig { epochs: 1, steps_per_epoch: 1, seed: 0 };
+        let mut handles = service.submit_many(reqs, &cfg, true);
+        assert_eq!(handles.len(), 3);
+        for (i, h) in handles.iter_mut().enumerate() {
+            assert_eq!(h.index, i);
+            let label = h.label.clone();
+            // without artifacts every build fails; the outcome must be a
+            // clean error, never a hang or a dispatched job
+            let out = h.wait();
+            assert!(out.plan.is_err(), "{label}: {:?}", out.plan);
+            assert!(out.job_id.is_none());
+        }
+        assert_eq!(handles[0].label, "a");
+        assert_eq!(handles[2].label, "c");
+        // identical requests a and c share one (failed) build slot:
+        // the digest-keyed cache deduplicated the second attempt
+        let stats = service.registry().build_stats();
+        assert_eq!(stats.builds, 0);
+        assert!(stats.cache_hits >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn await_batch_returns_report_for_undispatched_batch() {
+        let service = DeploymentService::new(
+            store("report"),
+            empty_manifest(),
+            PerfModel::new(),
+            &ServiceConfig { planner_workers: 2, ..ServiceConfig::default() },
+        );
+        let cfg = TrainConfig { epochs: 1, steps_per_epoch: 1, seed: 0 };
+        let mut handles = service.submit_many(
+            vec![BatchRequest { label: "only".into(), dsl: dsl("mxnet", "2.0") }],
+            &cfg,
+            false,
+        );
+        let mut polls = 0;
+        let report = service.await_batch(&mut handles, |_srv| polls += 1);
+        assert_eq!(report.jobs.len(), 1);
+        assert_eq!(report.jobs[0].state, 'E'); // build failed without artifacts
+        assert!(report.jobs[0].error.is_some());
+        assert!(polls >= 1);
+        assert_eq!(report.completed(), 0);
+        // render() must not panic on degenerate reports
+        assert!(report.render().contains("makespan"));
+    }
+}

@@ -1,18 +1,21 @@
 //! MODAK coordinator integration: DSL -> optimiser -> registry/builder ->
 //! scheduler -> containerised training, over real artifacts.
 //!
-//! Skips when `artifacts/` is absent. Serialized (XLA compiles are
+//! Skips when `artifacts/` is absent (each test returns early with a
+//! note instead of erroring, so `cargo test -q` stays green on a fresh
+//! clone without AOT artifacts). Serialized (XLA compiles are
 //! memory-hungry on this host).
 
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
 
 use modak::dsl::Optimisation;
-use modak::optimiser::Optimiser;
+use modak::optimiser::{plan_deployment, Optimiser};
 use modak::perfmodel::{Features, PerfModel, Record};
-use modak::registry::Registry;
+use modak::registry::RegistryHandle;
 use modak::runtime::Manifest;
 use modak::scheduler::{JobScript, JobState, Payload, Resources, TorqueServer};
+use modak::service::{BatchRequest, DeploymentService, ServiceConfig};
 use modak::trainer::TrainConfig;
 
 fn serial() -> MutexGuard<'static, ()> {
@@ -44,14 +47,14 @@ fn listing1_dsl_plans_and_runs_on_testbed() {
     let _g = serial();
     let Some(m) = manifest() else { return };
     let dsl = Optimisation::parse(modak::dsl::LISTING_1).unwrap();
-    let mut registry = Registry::open(store("listing1"));
+    let registry = RegistryHandle::open(store("listing1"), &m, 2);
     let model = PerfModel::new();
     let cfg = TrainConfig {
         epochs: 2,
         steps_per_epoch: 2,
         seed: 0,
     };
-    let mut optimiser = Optimiser::new(&mut registry, &model, &m);
+    let optimiser = Optimiser::new(&registry, &model, &m);
     let plan = optimiser.plan(&dsl, &cfg).unwrap();
 
     // Listing 1 asks for tensorflow + xla on an Nvidia target:
@@ -74,6 +77,7 @@ fn listing1_dsl_plans_and_runs_on_testbed() {
     };
     assert_eq!(run.workload, "resnet50s");
     assert!(run.report.final_loss().is_finite());
+    assert!(rec.queue_wait_secs.is_some());
 }
 
 #[test]
@@ -91,8 +95,7 @@ fn optimiser_uses_trained_model_to_rank() {
     // normal equations go singular — exactly why real calibration sweeps
     // diverse containers.
     let mut model = PerfModel::new();
-    let mut registry = Registry::open(store("rank"));
-    let profiles: Vec<_> = registry.entries().map(|e| e.profile.clone()).collect();
+    let profiles = modak::frameworks::all_profiles();
     // observations across several run configs (vary epochs/steps so the
     // feature matrix is well-conditioned, like real benchmark history)
     for p in &profiles {
@@ -131,7 +134,8 @@ fn optimiser_uses_trained_model_to_rank() {
             "ai_training": {"tensorflow": {"version": "2.1"}}}"#,
     )
     .unwrap();
-    let mut optimiser = Optimiser::new(&mut registry, &model, &m);
+    let registry = RegistryHandle::open(store("rank"), &m, 2);
+    let optimiser = Optimiser::new(&registry, &model, &m);
     let plan = optimiser.plan(&dsl, &cfg).unwrap();
     assert!(plan.predicted_secs.is_some());
     // model must have picked the lowest-predicted candidate: fused_ref (src)
@@ -142,9 +146,9 @@ fn optimiser_uses_trained_model_to_rank() {
 fn scheduler_runs_two_containers_back_to_back() {
     let _g = serial();
     let Some(m) = manifest() else { return };
-    let mut registry = Registry::open(store("two"));
+    let registry = RegistryHandle::open(store("two"), &m, 1);
     let tag = "tensorflow:2.1-cpu-src";
-    let image = registry.ensure_built(tag, &m).unwrap();
+    let image = registry.ensure_built(tag).unwrap();
 
     let mut server = TorqueServer::boot(1, 0);
     server.register_image(tag, image.dir.clone());
@@ -154,6 +158,7 @@ fn scheduler_runs_two_containers_back_to_back() {
         resources: Resources {
             nodes: 1,
             gpus: 0,
+            slots: 1,
             walltime: Duration::from_secs(600),
         },
         payload: Payload {
@@ -167,21 +172,22 @@ fn scheduler_runs_two_containers_back_to_back() {
     };
     let a = server.qsub(script(1)).unwrap();
     let b = server.qsub(script(2)).unwrap();
-    // single cpu node: never more than one running
+    // single 1-slot cpu node: never more than one running
     assert!(server.busy_nodes().len() <= 1);
     server.wait_all().unwrap();
     for id in [a, b] {
         assert_eq!(server.job(id).unwrap().state.code(), 'C');
     }
+    assert_eq!(server.finish_order(), &[a, b]);
 }
 
 #[test]
 fn walltime_violation_kills_job() {
     let _g = serial();
     let Some(m) = manifest() else { return };
-    let mut registry = Registry::open(store("walltime"));
+    let registry = RegistryHandle::open(store("walltime"), &m, 1);
     let tag = "tensorflow:2.1-cpu-src";
-    let image = registry.ensure_built(tag, &m).unwrap();
+    let image = registry.ensure_built(tag).unwrap();
     let mut server = TorqueServer::boot(1, 0);
     server.register_image(tag, image.dir.clone());
     let script = JobScript {
@@ -190,6 +196,7 @@ fn walltime_violation_kills_job() {
         resources: Resources {
             nodes: 1,
             gpus: 0,
+            slots: 1,
             walltime: Duration::from_millis(1),
         },
         payload: Payload {
@@ -208,15 +215,17 @@ fn walltime_violation_kills_job() {
         panic!("expected walltime kill, got {:?}", rec.state)
     };
     assert!(error.contains("walltime"), "{error}");
+    // the node watchdog killed it at the boundary: the slot is free again
+    assert!(server.busy_nodes().is_empty());
 }
 
 #[test]
 fn gpu_image_without_nv_fails_inside_scheduler() {
     let _g = serial();
     let Some(m) = manifest() else { return };
-    let mut registry = Registry::open(store("nv"));
+    let registry = RegistryHandle::open(store("nv"), &m, 1);
     let tag = "tensorflow:2.1-gpu-src";
-    let image = registry.ensure_built(tag, &m).unwrap();
+    let image = registry.ensure_built(tag).unwrap();
     assert!(image.gpu);
     let mut server = TorqueServer::boot(0, 1);
     server.register_image(tag, image.dir.clone());
@@ -226,6 +235,7 @@ fn gpu_image_without_nv_fails_inside_scheduler() {
         resources: Resources {
             nodes: 1,
             gpus: 1,
+            slots: 1,
             walltime: Duration::from_secs(600),
         },
         payload: Payload {
@@ -250,12 +260,131 @@ fn prebuilt_images_are_reused_not_rebuilt() {
     let _g = serial();
     let Some(m) = manifest() else { return };
     let dir = store("reuse");
-    let mut registry = Registry::open(&dir);
+    let registry = RegistryHandle::open(&dir, &m, 1);
     let tag = "pytorch:1.14-cpu-hub";
-    let first = registry.ensure_built(tag, &m).unwrap();
-    // a fresh registry over the same store finds the prebuilt bundle
-    let mut registry2 = Registry::open(&dir);
-    assert!(registry2.get(tag).unwrap().bundle.is_some());
-    let second = registry2.ensure_built(tag, &m).unwrap();
+    let first = registry.ensure_built(tag).unwrap();
+    // a fresh registry handle over the same store finds the prebuilt bundle
+    let registry2 = RegistryHandle::open(&dir, &m, 2);
+    assert!(registry2.with(|r| r.get(tag).unwrap().bundle.is_some()));
+    let second = registry2.ensure_built(tag).unwrap();
     assert_eq!(first.digest, second.digest);
+    // the prebuilt bundle counted as a cache hit, not a build
+    let stats = registry2.build_stats();
+    assert_eq!(stats.builds, 0);
+    assert_eq!(stats.cache_hits, 1);
+}
+
+#[test]
+fn concurrent_ensure_built_same_profile_builds_once() {
+    let _g = serial();
+    let Some(m) = manifest() else { return };
+    let registry = RegistryHandle::open(store("concurrent_build"), &m, 4);
+    let tag = "pytorch:1.14-cpu-hub";
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let r = registry.clone();
+            let tag = tag.to_string();
+            std::thread::spawn(move || r.ensure_built(&tag).unwrap())
+        })
+        .collect();
+    let images: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    for img in &images[1..] {
+        assert_eq!(img.digest, images[0].digest);
+        assert_eq!(img.dir, images[0].dir);
+    }
+    let stats = registry.build_stats();
+    assert_eq!(stats.builds, 1, "{stats:?}");
+    assert_eq!(stats.cache_hits, 3, "{stats:?}");
+}
+
+/// Acceptance: the legacy one-shot path and the batch service produce
+/// identical plans for the same DSL input (one shared code path).
+#[test]
+fn legacy_and_batch_paths_produce_identical_plans() {
+    let _g = serial();
+    let Some(m) = manifest() else { return };
+    let registry = RegistryHandle::open(store("one_path"), &m, 2);
+    let model = PerfModel::new();
+    let cfg = TrainConfig {
+        epochs: 2,
+        steps_per_epoch: 3,
+        seed: 7,
+    };
+    let dsl_text = r#"{"app_type": "ai_training", "enable_opt_build": true,
+        "workload": "mnist_cnn",
+        "ai_training": {"pytorch": {"version": "1.14"}}}"#;
+    let dsl = Optimisation::parse(dsl_text).unwrap();
+
+    // legacy path: direct plan_deployment (what `modak optimise` resolves to)
+    let legacy = plan_deployment(&registry, &model, &m, &dsl, &cfg).unwrap();
+
+    // batch path: through the service work queue, same registry handle
+    let service = DeploymentService::with_registry(
+        registry.clone(),
+        m.clone(),
+        PerfModel::new(),
+        &ServiceConfig::default(),
+    );
+    let mut handles = service.submit_many(
+        vec![BatchRequest {
+            label: "same-dsl".into(),
+            dsl,
+        }],
+        &cfg,
+        false,
+    );
+    let outcome = handles[0].wait();
+    let batch = outcome.plan.as_ref().unwrap();
+
+    assert_eq!(batch.profile.image_tag(), legacy.profile.image_tag());
+    assert_eq!(batch.image.digest, legacy.image.digest);
+    assert_eq!(batch.script, legacy.script);
+    assert_eq!(batch.predicted_secs, legacy.predicted_secs);
+}
+
+/// Acceptance: a heterogeneous batch overlaps jobs on the slotted testbed
+/// and duplicate profiles hit the build cache.
+#[test]
+fn batch_submission_overlaps_jobs_and_hits_build_cache() {
+    let _g = serial();
+    let Some(m) = manifest() else { return };
+    let service = DeploymentService::new(
+        store("batch"),
+        m.clone(),
+        PerfModel::new(),
+        &ServiceConfig {
+            cpu_nodes: 2,
+            gpu_nodes: 0,
+            slots_per_node: 2,
+            max_build_workers: 2,
+            planner_workers: 4,
+        },
+    );
+    let cfg = TrainConfig {
+        epochs: 1,
+        steps_per_epoch: 2,
+        seed: 0,
+    };
+    let dsl = |fw: &str, ver: &str| {
+        Optimisation::parse(&format!(
+            r#"{{"app_type": "ai_training", "workload": "mnist_cnn",
+                "ai_training": {{"{fw}": {{"version": "{ver}"}}}}}}"#
+        ))
+        .unwrap()
+    };
+    let reqs = vec![
+        BatchRequest { label: "tf-a".into(), dsl: dsl("tensorflow", "2.1") },
+        BatchRequest { label: "tf-b".into(), dsl: dsl("tensorflow", "2.1") }, // same profile
+        BatchRequest { label: "pt".into(), dsl: dsl("pytorch", "1.14") },
+        BatchRequest { label: "mx".into(), dsl: dsl("mxnet", "2.0") },
+    ];
+    let report = service.run_batch(reqs, &cfg, |_| {});
+    eprintln!("{}", report.render());
+    assert_eq!(report.completed(), 4, "{report:?}");
+    // two identical tf requests -> at least one digest-keyed cache hit
+    assert!(report.build_stats.cache_hits > 0, "{:?}", report.build_stats);
+    // 2 nodes x 2 slots: the batch must actually have overlapped
+    assert!(report.peak_running >= 2, "{report:?}");
+    assert!(report.makespan_secs > 0.0);
+    assert!(report.serial_sum_secs > 0.0);
 }
