@@ -147,6 +147,7 @@ impl<'a> Harness<'a> {
                 seed: cfg.seed,
                 nv: profile.target == Target::GpuSim,
             },
+            predicted_secs: None,
         };
         let id = server.qsub(script)?;
         server.wait(id)?;

@@ -28,7 +28,7 @@ use modak::metrics::FigureReport;
 use modak::perfmodel::PerfModel;
 use modak::registry::{Registry, RegistryHandle};
 use modak::runtime::Manifest;
-use modak::scheduler::{JobScript, TorqueServer};
+use modak::scheduler::{JobScript, SchedulePolicy, TorqueServer};
 use modak::service::{BatchRequest, DeploymentService, ServiceConfig};
 use modak::trainer::TrainConfig;
 
@@ -38,6 +38,7 @@ modak — optimising AI training deployments using graph compilers and container
 USAGE:
   modak optimise --dsl <file> [--epochs N] [--steps N] [--submit]
   modak serve-batch --dsl-dir <dir> [--epochs N] [--steps N]
+              [--policy fifo|sjf|reservation]
               [--max-build-workers N] [--slots-per-node N]
               [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
   modak build --tag <image:tag>
@@ -50,9 +51,15 @@ USAGE:
               [--out <markdown file>]
 
 COMMON FLAGS:
-  --artifacts <dir>   AOT artifact dir (default: artifacts)
-  --store <dir>       image store (default: images)
-  --history <file>    performance-model history (default: perf_history.json)
+  --artifacts <dir>       AOT artifact dir (default: artifacts)
+  --store <dir>           image store (default: images)
+  --model-history <file>  performance-model history (default:
+                          perf_history.json; --history is an alias).
+                          serve-batch feeds measured wall times back into
+                          the model and persists the refit here.
+  --policy <p>            scheduler dispatch rule: fifo (default) | sjf
+                          (pack by predicted runtime) | reservation
+                          (EASY backfill, starvation-free)
 ";
 
 fn main() {
@@ -120,7 +127,10 @@ fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(&args[1..]);
     let artifacts_dir = cli.get("artifacts").unwrap_or("artifacts");
     let store = cli.get("store").unwrap_or("images");
-    let history = cli.get("history").unwrap_or("perf_history.json");
+    let history = cli
+        .get("model-history")
+        .or_else(|| cli.get("history"))
+        .unwrap_or("perf_history.json");
 
     match cmd {
         "help" | "--help" | "-h" => {
@@ -148,6 +158,10 @@ fn service_config(cli: &Cli) -> Result<ServiceConfig> {
         slots_per_node: cli.get_usize("slots-per-node", defaults.slots_per_node)?,
         max_build_workers: cli.get_usize("max-build-workers", defaults.max_build_workers)?,
         planner_workers: cli.get_usize("planner-workers", defaults.planner_workers)?,
+        policy: match cli.get("policy") {
+            None => defaults.policy,
+            Some(p) => SchedulePolicy::parse(p)?,
+        },
     })
 }
 
@@ -268,13 +282,14 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
 
     println!(
         "serve-batch: {} requests | {} cpu + {} gpu nodes x {} slots | \
-         {} build workers, {} planners",
+         {} build workers, {} planners | policy {}",
         reqs.len(),
         svc_cfg.cpu_nodes,
         svc_cfg.gpu_nodes,
         svc_cfg.slots_per_node,
         svc_cfg.max_build_workers,
         svc_cfg.planner_workers,
+        svc_cfg.policy,
     );
 
     let service = DeploymentService::new(store, manifest, model, &svc_cfg);

@@ -154,8 +154,10 @@ pub fn plan_deployment(
     // 3. build (or reuse) the container through the shared build pool
     let image = registry.ensure_built(&chosen.image_tag())?;
 
-    // 4. job script
+    // 4. job script, carrying the model prediction so the scheduler can
+    // pack by expected runtime (sjf) and size reservation shadows
     let wl = manifest.workload(chosen.workload)?;
+    let predicted_secs = model.predict(&Features::derive(&chosen, wl, cfg));
     let script = JobScript {
         name: format!("{}-{}", wl.name.replace('_', "-"), chosen.label().to_lowercase()),
         queue: "batch".into(),
@@ -173,9 +175,8 @@ pub fn plan_deployment(
             seed: cfg.seed as i32,
             nv: target == Target::GpuSim,
         },
+        predicted_secs,
     };
-
-    let predicted_secs = model.predict(&Features::derive(&chosen, wl, cfg));
 
     Ok(DeploymentPlan {
         profile: chosen,

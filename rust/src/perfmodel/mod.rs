@@ -83,14 +83,18 @@ impl Features {
 }
 
 /// Relative arithmetic cost of a variant's kernel set (vs the tuned ref).
+///
+/// Pallas is matched first: an interpret-mode Pallas variant dominates any
+/// other marker in its name (`staged_pallas_naive` is 40x interpreted, not
+/// a 9x naive kernel), so the check order is cost-descending.
 pub fn kernel_penalty_of(variant: &str) -> f64 {
-    if variant.contains("naive") {
+    if variant.contains("pallas") {
+        // interpret-mode Pallas on CPU: numerics-only, heavily interpreted
+        40.0
+    } else if variant.contains("naive") {
         9.0
     } else if variant.contains("generic") {
         1.5
-    } else if variant.contains("pallas") {
-        // interpret-mode Pallas on CPU: numerics-only, heavily interpreted
-        40.0
     } else {
         1.0
     }
@@ -106,6 +110,7 @@ pub struct Record {
 }
 
 /// The trained model + its history store.
+#[derive(Clone)]
 pub struct PerfModel {
     pub history: Vec<Record>,
     beta: Option<Vec<f64>>,
@@ -192,9 +197,19 @@ impl PerfModel {
         }
         let xs: Vec<Vec<f64>> = self.history.iter().map(|r| r.features.vector()).collect();
         let ys: Vec<f64> = self.history.iter().map(|r| r.measured_secs).collect();
-        if let Some(beta) = least_squares(&xs, &ys) {
-            self.r2 = r_squared(&xs, &ys, &beta);
-            self.beta = Some(beta);
+        match least_squares(&xs, &ys) {
+            Some(beta) => {
+                self.r2 = r_squared(&xs, &ys, &beta);
+                self.beta = Some(beta);
+            }
+            None => {
+                // a singular system (e.g. duplicate feature rows) must not
+                // leave a stale fit behind: is_trained() would lie and
+                // predictions would come from coefficients the current
+                // history no longer supports
+                self.beta = None;
+                self.r2 = 0.0;
+            }
         }
     }
 
@@ -322,5 +337,124 @@ mod tests {
         assert!(kernel_penalty_of("staged_naive") > kernel_penalty_of("staged_generic"));
         assert!(kernel_penalty_of("fused_generic") > kernel_penalty_of("fused_ref"));
         assert_eq!(kernel_penalty_of("fused_ref"), 1.0);
+        // pallas dominates every other marker in a variant name: the
+        // interpret-mode penalty, not the naive-kernel one
+        assert!(kernel_penalty_of("fused_pallas") > kernel_penalty_of("staged_naive"));
+        assert_eq!(
+            kernel_penalty_of("staged_pallas_naive"),
+            kernel_penalty_of("fused_pallas")
+        );
+        assert_eq!(
+            kernel_penalty_of("pallas_generic"),
+            kernel_penalty_of("fused_pallas")
+        );
+    }
+
+    /// Satellite bugfix: a fit failure (singular normal equations from
+    /// duplicate feature rows) must clear the previous fit, not keep
+    /// serving stale coefficients while is_trained() claims health.
+    #[test]
+    fn failed_refit_resets_the_model_instead_of_lying() {
+        let mut rng = Rng::new(3);
+        let mut model = PerfModel::new();
+        for i in 0..20 {
+            model.observe(Record {
+                image: format!("img{i}"),
+                workload: "w".into(),
+                features: synth_features(&mut rng),
+                measured_secs: 1.0 + i as f64,
+            });
+        }
+        assert!(model.is_trained());
+        assert!(model.r2 != 0.0);
+        // replace the history with degenerate rows: dispatches is an exact
+        // multiple of steps and three columns are constant zero, so the
+        // normal equations are singular and least_squares returns None
+        model.history.clear();
+        for i in 1..=(Features::DIM + 4) {
+            model.history.push(Record {
+                image: format!("dup{i}"),
+                workload: "w".into(),
+                features: Features {
+                    steps: i as f64,
+                    dispatches: 2.0 * i as f64,
+                    gbytes: 0.0,
+                    compiles: 0.0,
+                    kernel_steps: 0.0,
+                },
+                measured_secs: 5.0,
+            });
+        }
+        model.fit();
+        // the fit failed: the stale beta must be gone, not half-kept
+        assert!(!model.is_trained(), "singular refit must untrain the model");
+        assert_eq!(model.r2, 0.0);
+        assert!(model
+            .predict(&Features {
+                steps: 1.0,
+                dispatches: 2.0,
+                gbytes: 0.0,
+                compiles: 0.0,
+                kernel_steps: 0.0,
+            })
+            .is_none());
+    }
+
+    /// Tentpole: online feedback. A model bootstrapped from a biased,
+    /// noisy calibration sweep mispredicts; observing accurate measured
+    /// batch results (what `DeploymentService` feeds back after each run)
+    /// shrinks the prediction error.
+    #[test]
+    fn online_feedback_shrinks_prediction_error() {
+        let mut rng = Rng::new(7);
+        let cost = |f: &Features| {
+            2.0 + 0.3 * f.steps
+                + 0.01 * f.dispatches
+                + 3.0 * f.gbytes
+                + 0.8 * f.compiles
+                + 0.05 * f.kernel_steps
+        };
+        let mut model = PerfModel::new();
+        // bootstrap: barely enough rows, systematically 30% pessimistic
+        for i in 0..(Features::DIM + 4) {
+            let f = synth_features(&mut rng);
+            let secs = cost(&f) * 1.3 * (1.0 + 0.05 * rng.normal() as f64);
+            model.observe(Record {
+                image: format!("boot{i}"),
+                workload: "w".into(),
+                features: f,
+                measured_secs: secs,
+            });
+        }
+        assert!(model.is_trained());
+        let probes: Vec<Features> = (0..32).map(|_| synth_features(&mut rng)).collect();
+        let mean_abs_rel_err = |m: &PerfModel| {
+            probes
+                .iter()
+                .map(|f| {
+                    let pred = m.predict(f).expect("trained");
+                    ((pred - cost(f)) / cost(f)).abs()
+                })
+                .sum::<f64>()
+                / probes.len() as f64
+        };
+        let before = mean_abs_rel_err(&model);
+        // online feedback: accurate measured wall times from completed jobs
+        for i in 0..60 {
+            let f = synth_features(&mut rng);
+            let secs = cost(&f) * (1.0 + 0.005 * rng.normal() as f64);
+            model.observe(Record {
+                image: format!("fb{i}"),
+                workload: "w".into(),
+                features: f,
+                measured_secs: secs,
+            });
+        }
+        let after = mean_abs_rel_err(&model);
+        assert!(
+            after < before,
+            "feedback must shrink error: before {before:.4}, after {after:.4}"
+        );
+        assert!(after < 0.10, "error after feedback still {after:.4}");
     }
 }

@@ -72,9 +72,21 @@ pub struct JobScript {
     pub queue: String,
     pub resources: Resources,
     pub payload: Payload,
+    /// Performance-model prediction for the run, threaded from the
+    /// [`crate::optimiser::DeploymentPlan`] so the scheduler can pack by
+    /// expected runtime. Rendered as a `# modak` comment (not a PBS
+    /// directive): a real Torque server would ignore it.
+    pub predicted_secs: Option<f64>,
 }
 
 impl JobScript {
+    /// Expected run seconds for scheduling decisions: the model prediction
+    /// when one was made, the requested walltime otherwise (conservative).
+    pub fn expected_secs(&self) -> f64 {
+        self.predicted_secs
+            .unwrap_or_else(|| self.resources.walltime.as_secs_f64())
+    }
+
     /// Render as a Torque submission file.
     pub fn render(&self) -> String {
         let wt = self.resources.walltime.as_secs();
@@ -91,6 +103,9 @@ impl JobScript {
         out.push_str(&format!("#PBS -q {}\n", self.queue));
         out.push_str(&format!("#PBS -l {nodes}\n"));
         out.push_str(&format!("#PBS -l walltime={h:02}:{m:02}:{s:02}\n"));
+        if let Some(p) = self.predicted_secs {
+            out.push_str(&format!("# modak predicted_secs={p}\n"));
+        }
         let mut cmd = format!(
             "singularity exec {} modak-train --epochs {} --steps {} --lr {} --seed {}",
             self.payload.image,
@@ -113,6 +128,7 @@ impl JobScript {
         let mut queue = "batch".to_string();
         let mut resources = Resources::default();
         let mut payload = None;
+        let mut predicted_secs = None;
 
         for raw in text.lines() {
             let line = raw.trim();
@@ -124,6 +140,9 @@ impl JobScript {
                     (Some("-l"), Some(v)) => parse_resource(v, &mut resources)?,
                     _ => bail!("bad PBS directive: {line}"),
                 }
+            } else if let Some(v) = line.strip_prefix("# modak predicted_secs=") {
+                predicted_secs =
+                    Some(v.trim().parse().map_err(|_| anyhow!("bad predicted_secs {v:?}"))?);
             } else if line.contains("singularity exec") {
                 payload = Some(parse_command(line)?);
             }
@@ -133,6 +152,7 @@ impl JobScript {
             queue,
             resources,
             payload: payload.ok_or_else(|| anyhow!("script missing singularity command"))?,
+            predicted_secs,
         })
     }
 }
@@ -229,7 +249,22 @@ mod tests {
                 seed: 7,
                 nv: false,
             },
+            predicted_secs: None,
         }
+    }
+
+    #[test]
+    fn predicted_secs_roundtrips_and_drives_expected_secs() {
+        let mut js = sample();
+        assert_eq!(js.expected_secs(), js.resources.walltime.as_secs_f64());
+        js.predicted_secs = Some(12.34);
+        let text = js.render();
+        assert!(text.contains("# modak predicted_secs=12.34"), "{text}");
+        let back = JobScript::parse(&text).unwrap();
+        assert_eq!(js, back);
+        assert_eq!(back.expected_secs(), 12.34);
+        // a real Torque server ignores comments: the line is not a directive
+        assert!(!text.contains("#PBS predicted"));
     }
 
     #[test]

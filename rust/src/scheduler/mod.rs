@@ -1,16 +1,22 @@
 //! Torque-like batch scheduling over the simulated 5-node testbed
-//! (paper §V-B/E). Job scripts, worker nodes, and the qsub/qstat server.
+//! (paper §V-B/E). Job scripts, worker nodes, the pluggable scheduling
+//! policy engine, and the qsub/qstat server.
 //!
 //! Allocation is slot-based: nodes advertise `NodeSpec::slots`, jobs
-//! consume `Resources::slot_demand()` of them, and the queue is FIFO with
-//! backfill. One slot per node reproduces the paper's exclusive
-//! allocation; more slots let small jobs co-reside (what the deployment
-//! service uses for batch traffic).
+//! consume `Resources::slot_demand()` of them, and each scheduling pass is
+//! decided by a [`SchedulePolicy`] — FIFO+backfill (the default),
+//! shortest-job-first by performance-model prediction, or
+//! reservation-based backfill that cannot starve large jobs. One slot per
+//! node under `fifo` reproduces the paper's exclusive allocation; more
+//! slots let small jobs co-reside (what the deployment service uses for
+//! batch traffic).
 
 pub mod job;
 pub mod node;
+pub mod policy;
 pub mod server;
 
 pub use job::{JobScript, Payload, Resources};
 pub use node::{NodeHandle, NodeResult, NodeSpec, NodeTask};
+pub use policy::SchedulePolicy;
 pub use server::{JobId, JobRecord, JobState, TorqueServer};

@@ -20,7 +20,14 @@
 //! planning, container builds, and dispatch proceed on worker threads. The
 //! legacy one-shot `modak optimise` path runs through the same service (a
 //! batch of one), so both paths produce identical plans by construction.
+//!
+//! The performance model is closed-loop: predictions ride into the
+//! scheduler on each job script (driving `sjf` packing and `reservation`
+//! shadow windows), and every completed job's measured wall time is fed
+//! back through [`PerfModel::observe`] — an online refit persisted via
+//! `save()`, so the next batch plans on fresher coefficients.
 
+use std::collections::HashSet;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -30,10 +37,10 @@ use anyhow::{anyhow, Result};
 use crate::container::BuildStats;
 use crate::dsl::Optimisation;
 use crate::optimiser::{plan_deployment, DeploymentPlan};
-use crate::perfmodel::PerfModel;
+use crate::perfmodel::{Features, PerfModel, Record};
 use crate::registry::RegistryHandle;
 use crate::runtime::Manifest;
-use crate::scheduler::{JobId, TorqueServer};
+use crate::scheduler::{JobId, JobState, SchedulePolicy, TorqueServer};
 use crate::trainer::TrainConfig;
 use crate::util::timer::Stopwatch;
 
@@ -48,6 +55,8 @@ pub struct ServiceConfig {
     pub max_build_workers: usize,
     /// Planner worker threads draining the request queue.
     pub planner_workers: usize,
+    /// Dispatch rule for the batch server (`--policy`).
+    pub policy: SchedulePolicy,
 }
 
 impl Default for ServiceConfig {
@@ -58,6 +67,7 @@ impl Default for ServiceConfig {
             slots_per_node: 2,
             max_build_workers: 2,
             planner_workers: 4,
+            policy: SchedulePolicy::Fifo,
         }
     }
 }
@@ -98,6 +108,23 @@ impl PlanHandle {
         }
         self.outcome.as_ref().expect("outcome just set")
     }
+
+    /// Non-blocking probe: the outcome if the planner has reported yet.
+    pub fn try_wait(&mut self) -> Option<&PlanOutcome> {
+        if self.outcome.is_none() {
+            match self.rx.try_recv() {
+                Ok(out) => self.outcome = Some(out),
+                Err(std::sync::mpsc::TryRecvError::Empty) => return None,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    self.outcome = Some(PlanOutcome {
+                        plan: Err(anyhow!("planner worker died before reporting")),
+                        job_id: None,
+                    });
+                }
+            }
+        }
+        self.outcome.as_ref()
+    }
 }
 
 struct Work {
@@ -121,20 +148,60 @@ pub struct JobSummary {
     pub error: Option<String>,
 }
 
+impl JobSummary {
+    /// Signed predicted-vs-measured error in percent, for completed jobs
+    /// with a prediction (positive = the model under-predicted).
+    pub fn pct_error(&self) -> Option<f64> {
+        match (self.state, self.predicted_secs, self.run_secs) {
+            ('C', Some(pred), Some(run)) if pred > 0.0 => Some((run - pred) / pred * 100.0),
+            _ => None,
+        }
+    }
+}
+
 /// Outcome of a whole batch: per-job lines + concurrency evidence.
 #[derive(Debug, Clone)]
 pub struct BatchReport {
     pub jobs: Vec<JobSummary>,
     /// Wall time from submission of the batch to the last terminal job.
     pub makespan_secs: f64,
-    /// Sum of per-job run wall times (what serial FIFO would cost at best).
+    /// Sum of *completed* jobs' run wall times (what serial FIFO would
+    /// cost at best for the work that actually finished). Failed jobs are
+    /// excluded on both sides of the speedup ratio.
     pub serial_sum_secs: f64,
     /// Most jobs observed Running simultaneously.
     pub peak_running: usize,
     pub build_stats: BuildStats,
+    /// Performance-model r² after feedback (None while untrained).
+    pub model_r2: Option<f64>,
 }
 
 impl BatchReport {
+    /// Assemble a report from per-job summaries; `serial_sum_secs` counts
+    /// completed jobs only, so `completed()` / `throughput_jobs_per_sec`
+    /// and the serial-vs-makespan speedup agree on what "the work" was.
+    pub fn from_jobs(
+        jobs: Vec<JobSummary>,
+        makespan_secs: f64,
+        peak_running: usize,
+        build_stats: BuildStats,
+        model_r2: Option<f64>,
+    ) -> BatchReport {
+        let serial_sum_secs = jobs
+            .iter()
+            .filter(|j| j.state == 'C')
+            .filter_map(|j| j.run_secs)
+            .sum();
+        BatchReport {
+            jobs,
+            makespan_secs,
+            serial_sum_secs,
+            peak_running,
+            build_stats,
+            model_r2,
+        }
+    }
+
     pub fn completed(&self) -> usize {
         self.jobs.iter().filter(|j| j.state == 'C').count()
     }
@@ -147,26 +214,43 @@ impl BatchReport {
         }
     }
 
+    /// Mean |predicted-vs-measured| error in percent over completed jobs
+    /// that carried a prediction.
+    pub fn mean_abs_pct_error(&self) -> Option<f64> {
+        let errs: Vec<f64> = self.jobs.iter().filter_map(|j| j.pct_error()).collect();
+        if errs.is_empty() {
+            None
+        } else {
+            Some(errs.iter().map(|e| e.abs()).sum::<f64>() / errs.len() as f64)
+        }
+    }
+
     /// Human-readable summary (the serve-batch CLI output).
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<22} {:<34} {:>4} {:>2} {:>9} {:>9} {:>5}\n",
-            "request", "image", "job", "st", "wait(s)", "run(s)", "node"
+            "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>5}\n",
+            "request", "image", "job", "st", "wait(s)", "run(s)", "pred(s)", "err%", "node"
         ));
         for j in &self.jobs {
             let fmt_opt = |v: Option<f64>| match v {
                 Some(v) => format!("{v:.2}"),
                 None => "-".into(),
             };
+            let err_pct = match j.pct_error() {
+                Some(e) => format!("{e:+.1}"),
+                None => "-".into(),
+            };
             out.push_str(&format!(
-                "{:<22} {:<34} {:>4} {:>2} {:>9} {:>9} {:>5}\n",
+                "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>5}\n",
                 truncate(&j.label, 22),
-                truncate(j.image.as_deref().unwrap_or("-"), 34),
+                truncate(j.image.as_deref().unwrap_or("-"), 30),
                 j.job_id.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
                 j.state,
                 fmt_opt(j.queue_wait_secs),
                 fmt_opt(j.run_secs),
+                fmt_opt(j.predicted_secs),
+                err_pct,
                 j.node.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
             ));
             if let Some(e) = &j.error {
@@ -189,6 +273,15 @@ impl BatchReport {
             "peak concurrent running {} | builds {} | build-cache hits {}\n",
             self.peak_running, self.build_stats.builds, self.build_stats.cache_hits
         ));
+        match (self.mean_abs_pct_error(), self.model_r2) {
+            (Some(err), Some(r2)) => out.push_str(&format!(
+                "prediction mean abs err {err:.1}% | model r2 {r2:.3} (after feedback)\n"
+            )),
+            (None, Some(r2)) => {
+                out.push_str(&format!("model r2 {r2:.3} (after feedback)\n"))
+            }
+            _ => {}
+        }
         out
     }
 }
@@ -207,10 +300,14 @@ fn truncate(s: &str, n: usize) -> String {
 /// queue of planner threads.
 pub struct DeploymentService {
     registry: RegistryHandle,
-    model: Arc<PerfModel>,
+    /// Shared mutable model: planners snapshot it per request; completed
+    /// jobs feed measured wall times back into it (online refit).
+    model: Arc<Mutex<PerfModel>>,
     manifest: Manifest,
     server: Arc<Mutex<TorqueServer>>,
     planner_workers: usize,
+    /// Jobs whose measured results were already fed back to the model.
+    fed_back: Mutex<HashSet<JobId>>,
 }
 
 impl DeploymentService {
@@ -232,13 +329,16 @@ impl DeploymentService {
         model: PerfModel,
         cfg: &ServiceConfig,
     ) -> DeploymentService {
-        let server = TorqueServer::boot_slotted(cfg.cpu_nodes, cfg.gpu_nodes, cfg.slots_per_node);
+        let mut server =
+            TorqueServer::boot_slotted(cfg.cpu_nodes, cfg.gpu_nodes, cfg.slots_per_node);
+        server.set_policy(cfg.policy);
         DeploymentService {
             registry,
-            model: Arc::new(model),
+            model: Arc::new(Mutex::new(model)),
             manifest,
             server: Arc::new(Mutex::new(server)),
             planner_workers: cfg.planner_workers.max(1),
+            fed_back: Mutex::new(HashSet::new()),
         }
     }
 
@@ -249,6 +349,12 @@ impl DeploymentService {
     /// Run `f` with the batch server locked (qstat snapshots, tests).
     pub fn with_server<R>(&self, f: impl FnOnce(&mut TorqueServer) -> R) -> R {
         f(&mut self.server.lock().unwrap())
+    }
+
+    /// Run `f` with the performance model locked (feedback inspection,
+    /// persisting, tests).
+    pub fn with_model<R>(&self, f: impl FnOnce(&PerfModel) -> R) -> R {
+        f(&self.model.lock().unwrap())
     }
 
     /// Submit a batch of requests. Returns one handle per request, in
@@ -314,15 +420,23 @@ impl DeploymentService {
         handles: &mut [PlanHandle],
         mut on_poll: impl FnMut(&TorqueServer),
     ) -> BatchReport {
-        for h in handles.iter_mut() {
-            h.wait();
-        }
-        let job_ids: Vec<JobId> = handles
-            .iter()
-            .filter_map(|h| h.outcome.as_ref().and_then(|o| o.job_id))
-            .collect();
         loop {
-            let pending = {
+            let mut all_planned = true;
+            for h in handles.iter_mut() {
+                if h.try_wait().is_none() {
+                    all_planned = false;
+                }
+            }
+            // live feedback: measured wall times land in the model as each
+            // job completes, so planner workers still working through this
+            // batch's queue (and every later request) snapshot refreshed
+            // coefficients
+            self.feed_back_measurements(handles);
+            let job_ids: Vec<JobId> = handles
+                .iter()
+                .filter_map(|h| h.outcome.as_ref().and_then(|o| o.job_id))
+                .collect();
+            let pending_jobs = {
                 let mut srv = self.server.lock().unwrap();
                 let _ = srv.poll();
                 on_poll(&srv);
@@ -335,12 +449,70 @@ impl DeploymentService {
                     })
                     .count()
             };
-            if pending == 0 {
+            if all_planned && pending_jobs == 0 {
                 break;
             }
             std::thread::sleep(Duration::from_millis(15));
         }
+        // final sweep: completions absorbed by the last poll above
+        self.feed_back_measurements(handles);
         self.report(handles, 0.0)
+    }
+
+    /// Close the performance-model loop: for every newly-completed job in
+    /// the batch, derive the features its plan was predicted from and
+    /// record the *measured* wall time. All new records of a sweep share
+    /// one refit (equivalent to per-record [`PerfModel::observe`] — only
+    /// the final coefficients are ever read — at a fraction of the
+    /// least-squares work). The refreshed model is persisted when it is
+    /// file-backed. Reads outcomes non-blockingly, so it is safe to call
+    /// while planner workers are still reporting.
+    ///
+    /// Locking: new measurements are collected under the server lock, then
+    /// the refit + disk write run under the model lock alone — scheduling
+    /// passes never stall behind least squares or the history file. No
+    /// code path in this service holds both locks at once.
+    fn feed_back_measurements(&self, handles: &[PlanHandle]) {
+        let fresh: Vec<Record> = {
+            let srv = self.server.lock().unwrap();
+            let mut fed = self.fed_back.lock().unwrap();
+            let mut fresh = Vec::new();
+            for h in handles.iter() {
+                let Some(out) = h.outcome.as_ref() else { continue };
+                let (Ok(plan), Some(id)) = (&out.plan, out.job_id) else {
+                    continue;
+                };
+                if fed.contains(&id) {
+                    continue;
+                }
+                let Ok(rec) = srv.job(id) else { continue };
+                let JobState::Completed { wall_secs, .. } = &rec.state else {
+                    continue;
+                };
+                let measured_secs = *wall_secs;
+                let Ok(wl) = self.manifest.workload(plan.profile.workload) else {
+                    continue;
+                };
+                let cfg = rec.script.payload.train_config();
+                fresh.push(Record {
+                    image: plan.profile.image_tag(),
+                    workload: plan.profile.workload.to_string(),
+                    features: Features::derive(&plan.profile, wl, &cfg),
+                    measured_secs,
+                });
+                fed.insert(id);
+            }
+            fresh
+        };
+        if fresh.is_empty() {
+            return;
+        }
+        let mut model = self.model.lock().unwrap();
+        model.history.extend(fresh);
+        model.fit();
+        if let Err(e) = model.save() {
+            eprintln!("service: persisting model history failed: {e:#}");
+        }
     }
 
     /// Submit + await + time a batch: the serve-batch entry point.
@@ -358,9 +530,14 @@ impl DeploymentService {
     }
 
     fn report(&self, handles: &mut [PlanHandle], makespan_secs: f64) -> BatchReport {
+        // model guard dropped before the server lock: no code path in this
+        // service holds both locks at once (see feed_back_measurements)
+        let model_r2 = {
+            let model = self.model.lock().unwrap();
+            model.is_trained().then_some(model.r2)
+        };
         let srv = self.server.lock().unwrap();
         let mut jobs = Vec::with_capacity(handles.len());
-        let mut serial_sum = 0.0;
         for h in handles.iter_mut() {
             let label = h.label.clone();
             let out = h.wait();
@@ -392,9 +569,6 @@ impl DeploymentService {
                         },
                         Some(rec) => {
                             let run_secs = rec.state.wall_secs();
-                            if let Some(s) = run_secs {
-                                serial_sum += s;
-                            }
                             let error = match &rec.state {
                                 crate::scheduler::JobState::Failed { error, .. } => {
                                     Some(error.clone())
@@ -418,26 +592,30 @@ impl DeploymentService {
             };
             jobs.push(summary);
         }
-        BatchReport {
+        BatchReport::from_jobs(
             jobs,
             makespan_secs,
-            serial_sum_secs: serial_sum,
-            peak_running: srv.peak_running(),
-            build_stats: self.registry.build_stats(),
-        }
+            srv.peak_running(),
+            self.registry.build_stats(),
+            model_r2,
+        )
     }
 }
 
 fn plan_and_dispatch(
     registry: &RegistryHandle,
-    model: &PerfModel,
+    model: &Mutex<PerfModel>,
     manifest: &Manifest,
     server: &Arc<Mutex<TorqueServer>>,
     req: &BatchRequest,
     cfg: &TrainConfig,
     dispatch: bool,
 ) -> PlanOutcome {
-    let plan = match plan_deployment(registry, model, manifest, &req.dsl, cfg) {
+    // snapshot the model per request: planning (which may block on a
+    // container build) runs lock-free, and later requests in a batch see
+    // coefficients refreshed by earlier completions' feedback
+    let model = model.lock().unwrap().clone();
+    let plan = match plan_deployment(registry, &model, manifest, &req.dsl, cfg) {
         Ok(p) => p,
         Err(e) => {
             return PlanOutcome {
@@ -495,6 +673,51 @@ mod tests {
                 "ai_training": {{"{framework}": {{"version": "{version}"}}}}}}"#
         ))
         .unwrap()
+    }
+
+    /// Satellite bugfix: failed jobs' wall time used to inflate
+    /// `serial_sum_secs` while `completed()` counted only 'C' jobs,
+    /// overstating the reported speedup. Both must agree on the job set.
+    #[test]
+    fn serial_sum_counts_completed_jobs_only() {
+        let j = |state: char, run: Option<f64>, pred: Option<f64>| JobSummary {
+            label: "j".into(),
+            image: None,
+            job_id: Some(1),
+            state,
+            queue_wait_secs: None,
+            run_secs: run,
+            node: None,
+            predicted_secs: pred,
+            error: None,
+        };
+        let report = BatchReport::from_jobs(
+            vec![
+                j('C', Some(2.0), Some(1.6)),
+                j('F', Some(50.0), Some(1.0)), // walltime-killed: excluded
+                j('C', Some(3.0), None),
+                j('E', None, None),
+            ],
+            2.5,
+            2,
+            crate::container::BuildStats::default(),
+            Some(0.9),
+        );
+        assert_eq!(report.completed(), 2);
+        assert!(
+            (report.serial_sum_secs - 5.0).abs() < 1e-9,
+            "failed jobs must not inflate the serial sum: {}",
+            report.serial_sum_secs
+        );
+        assert!((report.throughput_jobs_per_sec() - 0.8).abs() < 1e-9);
+        // predicted-vs-measured error: completed jobs with predictions only
+        assert_eq!(report.jobs[0].pct_error().map(f64::round), Some(25.0));
+        assert_eq!(report.jobs[1].pct_error(), None, "failed job has no error row");
+        assert_eq!(report.jobs[2].pct_error(), None, "no prediction, no error row");
+        assert!((report.mean_abs_pct_error().unwrap() - 25.0).abs() < 1e-9);
+        let rendered = report.render();
+        assert!(rendered.contains("prediction mean abs err"), "{rendered}");
+        assert!(rendered.contains("pred(s)"), "{rendered}");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use modak::optimiser::{plan_deployment, Optimiser};
 use modak::perfmodel::{Features, PerfModel, Record};
 use modak::registry::RegistryHandle;
 use modak::runtime::Manifest;
-use modak::scheduler::{JobScript, JobState, Payload, Resources, TorqueServer};
+use modak::scheduler::{JobScript, JobState, Payload, Resources, SchedulePolicy, TorqueServer};
 use modak::service::{BatchRequest, DeploymentService, ServiceConfig};
 use modak::trainer::TrainConfig;
 
@@ -80,20 +80,12 @@ fn listing1_dsl_plans_and_runs_on_testbed() {
     assert!(rec.queue_wait_secs.is_some());
 }
 
-#[test]
-fn optimiser_uses_trained_model_to_rank() {
-    let _g = serial();
-    let Some(m) = manifest() else { return };
-    let cfg = TrainConfig {
-        epochs: 2,
-        steps_per_epoch: 2,
-        seed: 0,
-    };
-    // train a model that makes tuned-kernel builds look much cheaper.
-    // History spans BOTH workloads: with mnist-only rows the dispatches
-    // and gbytes features are perfectly correlated across profiles and the
-    // normal equations go singular — exactly why real calibration sweeps
-    // diverse containers.
+/// A model trained on a synthetic calibration sweep that makes
+/// tuned-kernel builds look much cheaper. History spans BOTH workloads:
+/// with mnist-only rows the dispatches and gbytes features are perfectly
+/// correlated across profiles and the normal equations go singular —
+/// exactly why real calibration sweeps diverse containers.
+fn calibrated_model(m: &Manifest) -> PerfModel {
     let mut model = PerfModel::new();
     let profiles = modak::frameworks::all_profiles();
     // observations across several run configs (vary epochs/steps so the
@@ -126,6 +118,19 @@ fn optimiser_uses_trained_model_to_rank() {
             });
         }
     }
+    model
+}
+
+#[test]
+fn optimiser_uses_trained_model_to_rank() {
+    let _g = serial();
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig {
+        epochs: 2,
+        steps_per_epoch: 2,
+        seed: 0,
+    };
+    let model = calibrated_model(&m);
     assert!(model.is_trained());
 
     let dsl = Optimisation::parse(
@@ -169,6 +174,7 @@ fn scheduler_runs_two_containers_back_to_back() {
             seed,
             nv: false,
         },
+        predicted_secs: None,
     };
     let a = server.qsub(script(1)).unwrap();
     let b = server.qsub(script(2)).unwrap();
@@ -207,6 +213,7 @@ fn walltime_violation_kills_job() {
             seed: 0,
             nv: false,
         },
+        predicted_secs: None,
     };
     let id = server.qsub(script).unwrap();
     server.wait(id).unwrap();
@@ -246,6 +253,7 @@ fn gpu_image_without_nv_fails_inside_scheduler() {
             seed: 0,
             nv: false, // forgot --nv
         },
+        predicted_secs: None,
     };
     let id = server.qsub(script).unwrap();
     server.wait(id).unwrap();
@@ -358,6 +366,7 @@ fn batch_submission_overlaps_jobs_and_hits_build_cache() {
             slots_per_node: 2,
             max_build_workers: 2,
             planner_workers: 4,
+            ..ServiceConfig::default()
         },
     );
     let cfg = TrainConfig {
@@ -387,4 +396,63 @@ fn batch_submission_overlaps_jobs_and_hits_build_cache() {
     assert!(report.peak_running >= 2, "{report:?}");
     assert!(report.makespan_secs > 0.0);
     assert!(report.serial_sum_secs > 0.0);
+}
+
+/// Acceptance: perf-model-driven co-scheduling closes the loop. A trained
+/// model's predictions ride into the scheduler (sjf packing), the report
+/// carries per-job predicted-vs-measured error, and every completed job's
+/// measured wall time is fed back into the model (online refit).
+#[test]
+fn sjf_batch_reports_prediction_error_and_feeds_model_back() {
+    let _g = serial();
+    let Some(m) = manifest() else { return };
+    let model = calibrated_model(&m);
+    assert!(model.is_trained());
+    let history_before = model.history.len();
+    let service = DeploymentService::new(
+        store("sjf_feedback"),
+        m.clone(),
+        model,
+        &ServiceConfig {
+            cpu_nodes: 2,
+            gpu_nodes: 0,
+            slots_per_node: 1,
+            policy: SchedulePolicy::Sjf,
+            ..ServiceConfig::default()
+        },
+    );
+    assert_eq!(service.with_server(|srv| srv.policy()), SchedulePolicy::Sjf);
+    let cfg = TrainConfig {
+        epochs: 1,
+        steps_per_epoch: 2,
+        seed: 0,
+    };
+    let dsl = |fw: &str, ver: &str| {
+        Optimisation::parse(&format!(
+            r#"{{"app_type": "ai_training", "workload": "mnist_cnn",
+                "ai_training": {{"{fw}": {{"version": "{ver}"}}}}}}"#
+        ))
+        .unwrap()
+    };
+    let reqs = vec![
+        BatchRequest { label: "tf".into(), dsl: dsl("tensorflow", "2.1") },
+        BatchRequest { label: "pt".into(), dsl: dsl("pytorch", "1.14") },
+        BatchRequest { label: "mx".into(), dsl: dsl("mxnet", "2.0") },
+    ];
+    let report = service.run_batch(reqs, &cfg, |_| {});
+    eprintln!("{}", report.render());
+    assert_eq!(report.completed(), 3, "{report:?}");
+    // a trained model predicted every plan, and the report shows the
+    // predicted-vs-measured split per job
+    for j in &report.jobs {
+        assert!(j.predicted_secs.is_some(), "{j:?}");
+        assert!(j.pct_error().is_some(), "{j:?}");
+    }
+    assert!(report.mean_abs_pct_error().is_some());
+    assert!(report.model_r2.is_some());
+    // online feedback: one new observation per completed job, refit live
+    service.with_model(|pm| {
+        assert_eq!(pm.history.len(), history_before + 3);
+        assert!(pm.is_trained());
+    });
 }
