@@ -1,0 +1,716 @@
+//! Multi-shard cluster scheduling: many [`TorqueServer`] shards behind one
+//! front door.
+//!
+//! The paper positions MODAK as mapping optimised deployments onto
+//! *software-defined infrastructures* — plural, heterogeneous targets.
+//! This module is that plural: a [`ClusterScheduler`] owns N scheduler
+//! shards (each its own node set — different node counts, slots, and
+//! CPU/GPU mixes), routes every submitted job to a shard through a
+//! pluggable [`ShardRouter`], stages container bundles into shard-local
+//! stores through the [`ImageDistributor`], and periodically *rebalances*:
+//! still-queued jobs on backlogged shards are withdrawn into a global
+//! overflow queue and drained onto idle shards, so one hot shard cannot
+//! hold work hostage while another sits empty.
+//!
+//! Jobs carry cluster-global ids; the mapping to (shard, local id) is
+//! updated on migration, so callers never see a job change identity.
+//! A shared completion [`Signal`] is pinged by every shard's nodes, which
+//! is what lets the deployment service sleep on a condvar instead of
+//! polling.
+
+pub mod distributor;
+pub mod router;
+pub mod sim;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+pub use distributor::{ImageDistributor, StagingStats};
+pub use router::{route, ShardLoad, ShardRouter};
+pub use sim::{simulate_cluster, ClusterSimJob, ClusterSimOutcome};
+
+use crate::frameworks::Target;
+use crate::scheduler::{JobId, JobRecord, JobScript, NodeSpec, SchedulePolicy, TorqueServer};
+use crate::util::sync::Signal;
+
+/// Cluster-global job identifier (stable across shard migrations).
+pub type ClusterJobId = u64;
+
+/// Shape of one scheduler shard's testbed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub cpu_nodes: usize,
+    pub gpu_nodes: usize,
+    pub slots_per_node: usize,
+}
+
+impl ShardSpec {
+    /// The node set this shard boots (cpu nodes first, then gpu).
+    pub fn node_specs(&self) -> Vec<NodeSpec> {
+        let slots = self.slots_per_node.max(1);
+        let mut specs = Vec::new();
+        for i in 0..self.cpu_nodes {
+            specs.push(NodeSpec {
+                id: i,
+                class: Target::Cpu,
+                slots,
+            });
+        }
+        for i in 0..self.gpu_nodes {
+            specs.push(NodeSpec {
+                id: self.cpu_nodes + i,
+                class: Target::GpuSim,
+                slots,
+            });
+        }
+        specs
+    }
+
+    /// Total job slots across this shard's nodes.
+    pub fn slot_capacity(&self) -> usize {
+        (self.cpu_nodes + self.gpu_nodes) * self.slots_per_node.max(1)
+    }
+
+    /// A deterministic heterogeneous cluster shape: `n` shards varying
+    /// around `base`. Shards cycle fat (an extra cpu node), wide (an extra
+    /// slot per node), and lean (one cpu node fewer); gpu nodes land on
+    /// even shards only — so routers are exercised against genuinely
+    /// unequal capacity, and gpu jobs have a subset of eligible shards.
+    /// With `n <= 1` the single shard is exactly `base` (the embedded
+    /// single-server service shape, unchanged).
+    pub fn heterogeneous(n: usize, base: &ShardSpec) -> Vec<ShardSpec> {
+        if n <= 1 {
+            return vec![base.clone()];
+        }
+        (0..n)
+            .map(|i| {
+                let mut s = base.clone();
+                match i % 3 {
+                    0 => s.cpu_nodes = base.cpu_nodes + 1,
+                    1 => s.slots_per_node = base.slots_per_node + 1,
+                    _ => s.cpu_nodes = base.cpu_nodes.saturating_sub(1),
+                }
+                s.gpu_nodes = if i % 2 == 0 { base.gpu_nodes } else { 0 };
+                s.cpu_nodes = s.cpu_nodes.max(1);
+                s.slots_per_node = s.slots_per_node.max(1);
+                s
+            })
+            .collect()
+    }
+}
+
+/// Cluster shape + routing/dispatch rules.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub shards: Vec<ShardSpec>,
+    pub router: ShardRouter,
+    /// Per-shard dispatch policy (every shard runs the same one).
+    pub policy: SchedulePolicy,
+}
+
+struct Shard {
+    server: Mutex<TorqueServer>,
+    spec: ShardSpec,
+}
+
+/// Global-id bookkeeping + migration counters.
+#[derive(Default)]
+struct MapState {
+    next_id: ClusterJobId,
+    /// global -> (shard, local id).
+    fwd: BTreeMap<ClusterJobId, (usize, JobId)>,
+    /// (shard, local id) -> global.
+    rev: BTreeMap<(usize, JobId), ClusterJobId>,
+    rr_cursor: usize,
+    migrations: u64,
+    migrations_in: Vec<u64>,
+}
+
+/// Point-in-time stats for one shard (batch reporting).
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    pub running: usize,
+    pub queued: usize,
+    pub peak_running: usize,
+    pub slot_capacity: usize,
+    pub migrations_in: u64,
+    pub staging: StagingStats,
+}
+
+/// N scheduler shards behind one submit/poll surface.
+pub struct ClusterScheduler {
+    shards: Vec<Shard>,
+    router: ShardRouter,
+    distributor: Mutex<ImageDistributor>,
+    map: Mutex<MapState>,
+    signal: Arc<Signal>,
+}
+
+impl ClusterScheduler {
+    /// Boot every shard (nodes wired to the shared completion `signal`)
+    /// with shard-local image stores under `store_root`.
+    pub fn new(
+        store_root: impl AsRef<Path>,
+        cfg: &ClusterConfig,
+        signal: Arc<Signal>,
+    ) -> ClusterScheduler {
+        let shards: Vec<Shard> = cfg
+            .shards
+            .iter()
+            .map(|spec| {
+                let mut server =
+                    TorqueServer::boot_nodes(spec.node_specs(), Some(Arc::clone(&signal)));
+                server.set_policy(cfg.policy);
+                Shard {
+                    server: Mutex::new(server),
+                    spec: spec.clone(),
+                }
+            })
+            .collect();
+        let n = shards.len();
+        ClusterScheduler {
+            shards,
+            router: cfg.router,
+            distributor: Mutex::new(ImageDistributor::new(
+                store_root.as_ref().join("shard-cache"),
+                n,
+            )),
+            map: Mutex::new(MapState {
+                next_id: 1,
+                migrations_in: vec![0; n],
+                ..MapState::default()
+            }),
+            signal,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router(&self) -> ShardRouter {
+        self.router
+    }
+
+    /// The completion signal every shard's nodes ping (service sleeps on
+    /// it; planner workers ping it too).
+    pub fn signal(&self) -> Arc<Signal> {
+        Arc::clone(&self.signal)
+    }
+
+    /// Run `f` with shard `i`'s server locked.
+    pub fn with_shard<R>(&self, i: usize, f: impl FnOnce(&mut TorqueServer) -> R) -> R {
+        f(&mut self.shards[i].server.lock().unwrap())
+    }
+
+    /// Route + stage + qsub one job; returns its cluster-global id.
+    ///
+    /// `digest`/`bundle_dir` identify the built bundle in the shared
+    /// registry; the distributor stages it into the chosen shard's local
+    /// store (a miss charges the simulated transfer, a hit is free — and
+    /// the `perf-aware` router saw those costs when choosing).
+    pub fn submit(
+        &self,
+        script: JobScript,
+        tag: &str,
+        digest: &str,
+        bundle_dir: &Path,
+    ) -> Result<ClusterJobId> {
+        let class = TorqueServer::class_of(&script);
+        let demand = script.resources.slot_demand();
+        let loads = self.loads(class, demand, digest, bundle_dir);
+        let shard = {
+            let mut map = self.map.lock().unwrap();
+            route(self.router, &loads, &mut map.rr_cursor)
+        }
+        .ok_or_else(|| {
+            anyhow!(
+                "no shard can run a {class:?} job of demand {demand} \
+                 (cluster of {})",
+                self.shards.len()
+            )
+        })?;
+        let local_dir = self
+            .distributor
+            .lock()
+            .unwrap()
+            .stage(shard, tag, digest, bundle_dir)?;
+        let local = {
+            let mut srv = self.shards[shard].server.lock().unwrap();
+            srv.register_image(tag, local_dir);
+            srv.qsub(script)?
+        };
+        let mut map = self.map.lock().unwrap();
+        let gid = map.next_id;
+        map.next_id += 1;
+        map.fwd.insert(gid, (shard, local));
+        map.rev.insert((shard, local), gid);
+        Ok(gid)
+    }
+
+    /// Per-shard load snapshot for the router.
+    fn loads(
+        &self,
+        class: Target,
+        demand: usize,
+        digest: &str,
+        bundle_dir: &Path,
+    ) -> Vec<ShardLoad> {
+        let mut dist = self.distributor.lock().unwrap();
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let srv = shard.server.lock().unwrap();
+                ShardLoad {
+                    shard: i,
+                    eligible: srv.max_node_slots(class).is_some_and(|m| m >= demand),
+                    free_slots: srv.free_slots(class),
+                    total_slots: srv.total_slots(class),
+                    queued: srv.queued(),
+                    backlog_secs: srv.backlog_secs(),
+                    staging_secs: dist.estimate_secs(i, digest, bundle_dir),
+                }
+            })
+            .collect()
+    }
+
+    /// Absorb completions on every shard, then rebalance queued work.
+    pub fn poll(&self) -> Result<()> {
+        for shard in &self.shards {
+            shard.server.lock().unwrap().poll()?;
+        }
+        self.rebalance()
+    }
+
+    /// Cross-shard queue rebalancing: withdraw still-queued jobs from
+    /// backlogged shards into a (transient) global overflow queue and
+    /// drain it onto idle shards — a shard with a free class-matching
+    /// slot and an empty queue. Jobs that find no idle target go straight
+    /// back to their origin shard. Public so the policy can be driven
+    /// (and tested) independently of `poll`.
+    pub fn rebalance(&self) -> Result<()> {
+        // phase 1: plan moves from per-shard snapshots (no two shard locks
+        // held at once; free capacity tracked locally as moves are planned)
+        let mut free: Vec<BTreeMap<Target, usize>> = Vec::new();
+        let mut idle: Vec<bool> = Vec::new();
+        let mut queued: Vec<Vec<JobId>> = Vec::new();
+        for shard in &self.shards {
+            let srv = shard.server.lock().unwrap();
+            let mut f = BTreeMap::new();
+            for class in [Target::Cpu, Target::GpuSim] {
+                f.insert(class, srv.free_slots(class));
+            }
+            free.push(f);
+            idle.push(srv.queued() == 0);
+            queued.push(srv.queued_ids());
+        }
+        let mut moves: Vec<(usize, JobId, usize)> = Vec::new(); // (from, local, to)
+        for (from, ids) in queued.iter().enumerate() {
+            for &local in ids {
+                let (class, demand) = {
+                    let srv = self.shards[from].server.lock().unwrap();
+                    let Ok(rec) = srv.job(local) else { continue };
+                    (
+                        TorqueServer::class_of(&rec.script),
+                        rec.script.resources.slot_demand(),
+                    )
+                };
+                let target = (0..self.shards.len()).find(|&t| {
+                    t != from
+                        && idle[t]
+                        && free[t].get(&class).copied().unwrap_or(0) >= demand
+                        && self.shards[t]
+                            .spec
+                            .node_specs()
+                            .iter()
+                            .any(|n| n.class == class && n.slots >= demand)
+                });
+                if let Some(t) = target {
+                    *free[t].get_mut(&class).unwrap() -= demand;
+                    moves.push((from, local, t));
+                }
+            }
+        }
+        // phase 2: execute — withdraw into the overflow buffer, drain to
+        // the planned target, fall back to the origin if anything moved
+        // underneath us (the job dispatched, the target filled up)
+        for (from, local, to) in moves {
+            // only migrate jobs this cluster owns: a queued job with no
+            // global-id mapping is either mid-submit (qsub done, mapping
+            // not inserted yet — moving it now would orphan its id) or
+            // was qsub'd directly into the shard; leave both in place
+            if !self
+                .map
+                .lock()
+                .unwrap()
+                .rev
+                .contains_key(&(from, local))
+            {
+                continue;
+            }
+            let (script, submitted_at) =
+                match self.shards[from].server.lock().unwrap().withdraw(local) {
+                    Ok(s) => s,
+                    Err(_) => continue, // dispatched since the snapshot
+                };
+            let tag = script.payload.image.clone();
+            // bound to a let so the distributor guard is released before
+            // any shard lock is taken on the fallback path
+            let source_info = self.distributor.lock().unwrap().source_of(&tag);
+            let Some((digest, source)) = source_info else {
+                // image never staged through this cluster: put the job
+                // back where it was (clock preserved) and move on
+                let back = self.requeue(from, script, submitted_at)?;
+                self.remap(from, local, from, back);
+                continue;
+            };
+            let staged = self
+                .distributor
+                .lock()
+                .unwrap()
+                .stage(to, &tag, &digest, &source)?;
+            let new_local = {
+                let mut srv = self.shards[to].server.lock().unwrap();
+                srv.register_image(&tag, staged);
+                srv.qsub_at(script.clone(), submitted_at)
+            };
+            match new_local {
+                Ok(nl) => {
+                    self.remap(from, local, to, nl);
+                    let mut map = self.map.lock().unwrap();
+                    map.migrations += 1;
+                    map.migrations_in[to] += 1;
+                }
+                Err(_) => {
+                    // drain failed: return the job to its origin shard
+                    let back = self.requeue(from, script, submitted_at)?;
+                    self.remap(from, local, from, back);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-qsub a withdrawn script on `shard` with its original submission
+    /// instant (its image is registered there already — the job ran its
+    /// submit path on that shard).
+    fn requeue(
+        &self,
+        shard: usize,
+        script: JobScript,
+        submitted_at: std::time::Instant,
+    ) -> Result<JobId> {
+        self.shards[shard]
+            .server
+            .lock()
+            .unwrap()
+            .qsub_at(script, submitted_at)
+    }
+
+    /// Point the global id that mapped to (`from`, `old_local`) at
+    /// (`to`, `new_local`).
+    fn remap(&self, from: usize, old_local: JobId, to: usize, new_local: JobId) {
+        let mut map = self.map.lock().unwrap();
+        if let Some(gid) = map.rev.remove(&(from, old_local)) {
+            map.fwd.insert(gid, (to, new_local));
+            map.rev.insert((to, new_local), gid);
+        }
+    }
+
+    /// Which shard currently owns the job.
+    pub fn shard_of(&self, id: ClusterJobId) -> Option<usize> {
+        self.map.lock().unwrap().fwd.get(&id).map(|&(s, _)| s)
+    }
+
+    /// Run `f` on the job's current record (wherever it lives).
+    pub fn with_job<R>(
+        &self,
+        id: ClusterJobId,
+        f: impl FnOnce(&JobRecord) -> R,
+    ) -> Result<R> {
+        let (shard, local) = *self
+            .map
+            .lock()
+            .unwrap()
+            .fwd
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown cluster job {id}"))?;
+        let srv = self.shards[shard].server.lock().unwrap();
+        Ok(f(srv.job(local)?))
+    }
+
+    /// Is the job in a terminal state? (None = unknown id.)
+    pub fn job_terminal(&self, id: ClusterJobId) -> Option<bool> {
+        self.with_job(id, |rec| rec.state.is_terminal()).ok()
+    }
+
+    /// Total migrations executed by the rebalancer.
+    pub fn migrations(&self) -> u64 {
+        self.map.lock().unwrap().migrations
+    }
+
+    /// Per-shard point-in-time stats for batch reporting.
+    pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
+        let map = self.map.lock().unwrap();
+        let dist = self.distributor.lock().unwrap();
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let srv = shard.server.lock().unwrap();
+                ShardSnapshot {
+                    shard: i,
+                    running: srv.running_count(),
+                    queued: srv.queued(),
+                    peak_running: srv.peak_running(),
+                    slot_capacity: shard.spec.slot_capacity(),
+                    migrations_in: map.migrations_in[i],
+                    staging: dist.stats(i),
+                }
+            })
+            .collect()
+    }
+
+    /// Cluster-wide staging counters.
+    pub fn staging_totals(&self) -> StagingStats {
+        self.distributor.lock().unwrap().totals()
+    }
+
+    /// Sum of per-shard running peaks: an upper bound on the most jobs
+    /// ever running simultaneously cluster-wide (exact for one shard).
+    pub fn peak_running_sum(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.server.lock().unwrap().peak_running())
+            .sum()
+    }
+
+    /// One-line qstat across shards:
+    /// `s0: 1:R(n0) 2:Q [r1 q1] | s1: - [r0 q0]`.
+    pub fn qstat_line(&self) -> String {
+        let map = self.map.lock().unwrap();
+        let mut shards_out = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let srv = shard.server.lock().unwrap();
+            let mut parts: Vec<String> = Vec::new();
+            for rec in srv.qstat() {
+                let gid = map
+                    .rev
+                    .get(&(i, rec.id))
+                    .map(|g| g.to_string())
+                    .unwrap_or_else(|| format!("?{}", rec.id));
+                let code = rec.state.code();
+                match rec.node {
+                    Some(n) if code == 'R' => parts.push(format!("{gid}:R(n{n})")),
+                    _ => parts.push(format!("{gid}:{code}")),
+                }
+            }
+            let body = if parts.is_empty() {
+                "-".to_string()
+            } else {
+                parts.join(" ")
+            };
+            shards_out.push(format!(
+                "s{i}: {body} [r{} q{}]",
+                srv.running_count(),
+                srv.queued()
+            ));
+        }
+        shards_out.join(" | ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{Payload, Resources};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn store(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("modak_cluster_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn script(image: &str, slots: usize, predicted: Option<f64>) -> JobScript {
+        JobScript {
+            name: "t".into(),
+            queue: "batch".into(),
+            resources: Resources {
+                nodes: 1,
+                gpus: 0,
+                slots,
+                walltime: Duration::from_secs(600),
+            },
+            payload: Payload {
+                image: image.into(),
+                epochs: 1,
+                steps_per_epoch: 1,
+                lr: 0.05,
+                seed: 0,
+                nv: false,
+            },
+            predicted_secs: predicted,
+        }
+    }
+
+    fn cluster(name: &str, shards: Vec<ShardSpec>, router: ShardRouter) -> ClusterScheduler {
+        ClusterScheduler::new(
+            store(name),
+            &ClusterConfig {
+                shards,
+                router,
+                policy: SchedulePolicy::Fifo,
+            },
+            Arc::new(Signal::new()),
+        )
+    }
+
+    fn one_node_shard() -> ShardSpec {
+        ShardSpec {
+            cpu_nodes: 1,
+            gpu_nodes: 0,
+            slots_per_node: 1,
+        }
+    }
+
+    /// Drive the cluster until every submitted job is terminal.
+    fn drain(c: &ClusterScheduler, ids: &[ClusterJobId]) {
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            c.poll().unwrap();
+            if ids
+                .iter()
+                .all(|id| c.job_terminal(*id).unwrap_or(false))
+            {
+                return;
+            }
+            assert!(std::time::Instant::now() < deadline, "cluster never drained");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn heterogeneous_shapes_vary_but_stay_runnable() {
+        let base = ShardSpec {
+            cpu_nodes: 3,
+            gpu_nodes: 2,
+            slots_per_node: 2,
+        };
+        let one = ShardSpec::heterogeneous(1, &base);
+        assert_eq!(one, vec![base.clone()], "single shard is exactly the base");
+        let four = ShardSpec::heterogeneous(4, &base);
+        assert_eq!(four.len(), 4);
+        for s in &four {
+            assert!(s.cpu_nodes >= 1);
+            assert!(s.slots_per_node >= 1);
+        }
+        // genuinely heterogeneous: not all shards equal
+        assert!(four.iter().any(|s| s != &four[0]));
+        // gpu capacity only on even shards
+        assert!(four[0].gpu_nodes > 0 && four[2].gpu_nodes > 0);
+        assert_eq!(four[1].gpu_nodes, 0);
+        assert_eq!(four[3].gpu_nodes, 0);
+    }
+
+    #[test]
+    fn submit_routes_and_jobs_reach_terminal_states() {
+        let c = cluster(
+            "submit",
+            vec![one_node_shard(), one_node_shard()],
+            ShardRouter::RoundRobin,
+        );
+        let ghost = PathBuf::from("/not/a/bundle");
+        let ids: Vec<ClusterJobId> = (0..4)
+            .map(|_| {
+                c.submit(script("img:1", 1, None), "img:1", "fnv1a:x", &ghost)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3, 4], "global ids are monotonic");
+        drain(&c, &ids);
+        for id in &ids {
+            let state = c.with_job(*id, |r| r.state.code()).unwrap();
+            assert_eq!(state, 'F', "bad bundle fails cleanly");
+        }
+        // round-robin spread the 4 jobs over both shards
+        let snaps = c.shard_snapshots();
+        assert_eq!(snaps.len(), 2);
+        for s in &snaps {
+            assert!(s.peak_running >= 1, "{snaps:?}");
+        }
+        // image staged once per shard, then digest-keyed hits (a drain-time
+        // migration may add extra hits, never extra misses)
+        let t = c.staging_totals();
+        assert_eq!(t.misses, 2, "{t:?}");
+        assert!(t.hits >= 2, "{t:?}");
+        assert!(t.simulated_secs > 0.0);
+    }
+
+    #[test]
+    fn submit_fails_when_no_shard_is_eligible() {
+        let c = cluster("inelig", vec![one_node_shard()], ShardRouter::LeastLoaded);
+        let ghost = PathBuf::from("/not/a/bundle");
+        // demand 2 on a cluster whose largest node has 1 slot
+        let err = c
+            .submit(script("img:1", 2, None), "img:1", "fnv1a:x", &ghost)
+            .unwrap_err();
+        assert!(err.to_string().contains("no shard"), "{err}");
+        // gpu job on a cpu-only cluster
+        let mut gpu = script("img:1", 1, None);
+        gpu.resources.gpus = 1;
+        gpu.payload.nv = true;
+        assert!(c.submit(gpu, "img:1", "fnv1a:x", &ghost).is_err());
+    }
+
+    /// Tentpole: the rebalancer migrates a still-queued job from a
+    /// backlogged shard to an idle one, preserving its cluster-global id,
+    /// and the move shows up in the migration counters.
+    #[test]
+    fn rebalance_migrates_queued_job_to_idle_shard() {
+        let c = cluster(
+            "rebalance",
+            vec![one_node_shard(), one_node_shard()],
+            ShardRouter::RoundRobin,
+        );
+        let ghost = PathBuf::from("/not/a/bundle");
+        // round-robin: j1 -> shard 0 (runs), j2 -> shard 1 (runs),
+        // j3 -> shard 0 (queues behind j1 while its completion is
+        // unabsorbed — poll is never called here, so the snapshot is
+        // deterministic)
+        let j1 = c
+            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost)
+            .unwrap();
+        let j2 = c
+            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost)
+            .unwrap();
+        let j3 = c
+            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost)
+            .unwrap();
+        assert_eq!(c.shard_of(j3), Some(0));
+        assert_eq!(c.with_job(j3, |r| r.state.code()).unwrap(), 'Q');
+        // absorb ONLY shard 1: j2 terminal, shard 1 now idle; shard 0
+        // still shows j1 Running (its result is sitting unabsorbed)
+        c.with_shard(1, |srv| srv.wait_all()).unwrap();
+        assert_eq!(c.with_job(j1, |r| r.state.code()).unwrap(), 'R');
+        c.rebalance().unwrap();
+        assert_eq!(c.migrations(), 1);
+        assert_eq!(c.shard_of(j3), Some(1), "j3 migrated to the idle shard");
+        let snaps = c.shard_snapshots();
+        assert_eq!(snaps[1].migrations_in, 1);
+        assert_eq!(snaps[0].migrations_in, 0);
+        drain(&c, &[j1, j2, j3]);
+        for id in [j1, j2, j3] {
+            assert!(c.job_terminal(id).unwrap());
+        }
+        // the qstat line renders global ids grouped by shard
+        let line = c.qstat_line();
+        assert!(line.contains("s0:") && line.contains("| s1:"), "{line}");
+    }
+}

@@ -1,0 +1,208 @@
+//! Pluggable shard routing for the multi-shard cluster scheduler.
+//!
+//! Mirrors the per-shard [`crate::scheduler::policy`] split: routing is a
+//! pure decision over load snapshots, so every router property is testable
+//! without threads or clocks. Three routers:
+//!
+//! * **round-robin** — cycle through eligible shards; the baseline.
+//! * **least-loaded** — smallest backlog (expected seconds of queued +
+//!   running work) normalised by the shard's slot capacity, so a fat shard
+//!   absorbs more work than a lean one before looking "loaded".
+//! * **perf-aware** — minimises the *expected completion time* of this
+//!   job. The job's own run time is shard-invariant (identical hardware),
+//!   so the shard-differentiating terms are the expected wait — the
+//!   normalised backlog, itself the sum of the resident jobs' per-job
+//!   performance-model predictions — plus the simulated image-staging
+//!   cost on shards that do not yet hold the bundle (the
+//!   [`crate::cluster::ImageDistributor`] supplies that term), so routing
+//!   prefers shards where the image is already staged. With uniform
+//!   staging state it coincides with least-loaded; its edge is image
+//!   locality.
+
+use anyhow::{bail, Result};
+
+/// Which routing rule the cluster applies to each submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardRouter {
+    /// Cycle through eligible shards in order.
+    #[default]
+    RoundRobin,
+    /// Smallest capacity-normalised backlog.
+    LeastLoaded,
+    /// Smallest expected completion time (backlog + image-staging cost).
+    PerfAware,
+}
+
+impl ShardRouter {
+    pub fn parse(s: &str) -> Result<ShardRouter> {
+        match s {
+            "round-robin" => Ok(ShardRouter::RoundRobin),
+            "least-loaded" => Ok(ShardRouter::LeastLoaded),
+            "perf-aware" => Ok(ShardRouter::PerfAware),
+            other => bail!(
+                "unknown shard router {other:?} (round-robin|least-loaded|perf-aware)"
+            ),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardRouter::RoundRobin => "round-robin",
+            ShardRouter::LeastLoaded => "least-loaded",
+            ShardRouter::PerfAware => "perf-aware",
+        }
+    }
+}
+
+impl std::fmt::Display for ShardRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One shard's load as the router sees it at submit time.
+#[derive(Debug, Clone)]
+pub struct ShardLoad {
+    pub shard: usize,
+    /// The shard can run this job at all (node class present, largest node
+    /// holds the demand). Ineligible shards are never picked.
+    pub eligible: bool,
+    /// Free class-matching slots right now.
+    pub free_slots: usize,
+    /// Total class-matching slots.
+    pub total_slots: usize,
+    /// Jobs queued (all classes — a deep queue delays everyone).
+    pub queued: usize,
+    /// Expected seconds of queued + running work ahead of a new arrival.
+    pub backlog_secs: f64,
+    /// Simulated transfer seconds to stage this job's image here
+    /// (0.0 when the shard already holds the digest).
+    pub staging_secs: f64,
+}
+
+impl ShardLoad {
+    /// Backlog normalised by capacity: seconds of work per slot.
+    fn pressure(&self) -> f64 {
+        self.backlog_secs / self.total_slots.max(1) as f64
+    }
+}
+
+/// Pick a shard for a job. `rr_cursor` is the round-robin state (advanced
+/// only by the round-robin rule). Returns None when no shard is eligible.
+///
+/// The job's own expected run seconds are deliberately NOT part of any
+/// cost: on identical hardware they shift every shard's completion time
+/// equally and cannot change the argmin. Predictions drive routing
+/// through the *backlog* term instead — each shard's `backlog_secs` is
+/// the sum of its resident jobs' per-job model predictions.
+pub fn route(router: ShardRouter, loads: &[ShardLoad], rr_cursor: &mut usize) -> Option<usize> {
+    let eligible: Vec<&ShardLoad> = loads.iter().filter(|l| l.eligible).collect();
+    if eligible.is_empty() {
+        return None;
+    }
+    match router {
+        ShardRouter::RoundRobin => {
+            let pick = eligible[*rr_cursor % eligible.len()].shard;
+            *rr_cursor = rr_cursor.wrapping_add(1);
+            Some(pick)
+        }
+        ShardRouter::LeastLoaded => eligible
+            .iter()
+            .min_by(|a, b| {
+                a.pressure()
+                    .total_cmp(&b.pressure())
+                    .then(b.free_slots.cmp(&a.free_slots))
+                    .then(a.shard.cmp(&b.shard))
+            })
+            .map(|l| l.shard),
+        ShardRouter::PerfAware => eligible
+            .iter()
+            .min_by(|a, b| {
+                let cost = |l: &ShardLoad| l.pressure() + l.staging_secs;
+                cost(a)
+                    .total_cmp(&cost(b))
+                    .then(b.free_slots.cmp(&a.free_slots))
+                    .then(a.shard.cmp(&b.shard))
+            })
+            .map(|l| l.shard),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(shard: usize, backlog: f64, staging: f64) -> ShardLoad {
+        ShardLoad {
+            shard,
+            eligible: true,
+            free_slots: 2,
+            total_slots: 4,
+            queued: 0,
+            backlog_secs: backlog,
+            staging_secs: staging,
+        }
+    }
+
+    #[test]
+    fn router_parse_roundtrip() {
+        for r in [
+            ShardRouter::RoundRobin,
+            ShardRouter::LeastLoaded,
+            ShardRouter::PerfAware,
+        ] {
+            assert_eq!(ShardRouter::parse(r.as_str()).unwrap(), r);
+        }
+        assert!(ShardRouter::parse("random").is_err());
+        assert_eq!(ShardRouter::default(), ShardRouter::RoundRobin);
+    }
+
+    #[test]
+    fn round_robin_cycles_eligible_shards_only() {
+        let mut loads = vec![load(0, 0.0, 0.0), load(1, 0.0, 0.0), load(2, 0.0, 0.0)];
+        loads[1].eligible = false; // e.g. no gpu nodes on shard 1
+        let mut cursor = 0;
+        let picks: Vec<usize> = (0..4)
+            .map(|_| route(ShardRouter::RoundRobin, &loads, &mut cursor).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        // nothing eligible -> no route
+        loads[0].eligible = false;
+        loads[2].eligible = false;
+        assert_eq!(route(ShardRouter::RoundRobin, &loads, &mut cursor), None);
+    }
+
+    #[test]
+    fn least_loaded_normalises_backlog_by_capacity() {
+        // shard 0: 100s over 4 slots (25 s/slot); shard 1: 40s over 1 slot
+        // (40 s/slot) — raw backlog would pick shard 1, pressure picks 0
+        let mut a = load(0, 100.0, 0.0);
+        a.total_slots = 4;
+        let mut b = load(1, 40.0, 0.0);
+        b.total_slots = 1;
+        let mut cursor = 0;
+        assert_eq!(
+            route(ShardRouter::LeastLoaded, &[a, b], &mut cursor),
+            Some(0)
+        );
+        assert_eq!(cursor, 0, "only round-robin advances the cursor");
+    }
+
+    #[test]
+    fn perf_aware_prefers_shard_already_holding_the_image() {
+        // equal backlog; shard 1 must stage the image (simulated 3s)
+        let a = load(0, 10.0, 0.0);
+        let b = load(1, 10.0, 3.0);
+        let mut cursor = 0;
+        assert_eq!(
+            route(ShardRouter::PerfAware, &[b.clone(), a.clone()], &mut cursor),
+            Some(0)
+        );
+        // ...but a big enough backlog gap outweighs the staging cost
+        let busy = load(0, 100.0, 0.0);
+        assert_eq!(
+            route(ShardRouter::PerfAware, &[busy, b], &mut cursor),
+            Some(1)
+        );
+    }
+}

@@ -293,12 +293,18 @@ pub struct BuildPool {
 }
 
 impl BuildPool {
+    /// Open a pool over `store`. The digest cache index persisted by prior
+    /// processes (`<store>/build_index.json`) is loaded on boot: entries
+    /// whose bundles still verify on disk come back as completed slots, so
+    /// a restarted service reuses prior builds instead of redoing them
+    /// (ROADMAP: registry persistence).
     pub fn new(store: impl AsRef<Path>, artifacts: Manifest, max_workers: usize) -> BuildPool {
+        let slots = load_index(store.as_ref());
         BuildPool {
             builder: Builder::new(store, artifacts),
             max_workers: max_workers.max(1),
             state: Mutex::new(PoolState {
-                slots: HashMap::new(),
+                slots,
                 active: 0,
                 stats: BuildStats::default(),
             }),
@@ -369,17 +375,33 @@ impl BuildPool {
 
         let mut st = self.state.lock().unwrap();
         st.active -= 1;
-        match &result {
+        let index_snapshot = match &result {
             Ok(img) => {
                 st.stats.builds += 1;
                 st.slots.insert(key, BuildSlot::Done(img.clone()));
+                // append-on-build: serialize the index under the lock...
+                Some(render_index(&st))
             }
             Err(e) => {
                 st.slots.insert(key, BuildSlot::Failed(format!("{e:#}")));
+                None
             }
-        }
+        };
         drop(st);
         self.cv.notify_all();
+        // ...but hit the disk outside it, so concurrent builders never
+        // queue behind file I/O. Concurrent writers last-write-wins on a
+        // whole-file write; a momentarily stale index only costs a rebuild
+        // after a restart, never correctness.
+        if let Some(text) = index_snapshot {
+            let path = index_path(self.builder.store());
+            if let Some(dir) = path.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(&path, text) {
+                eprintln!("build pool: persisting digest index failed: {e}");
+            }
+        }
         result
     }
 
@@ -392,6 +414,50 @@ impl BuildPool {
     pub fn stats(&self) -> BuildStats {
         self.state.lock().unwrap().stats.clone()
     }
+}
+
+fn index_path(store: &Path) -> PathBuf {
+    store.join("build_index.json")
+}
+
+/// Serialize the digest -> bundle index (successful builds only: failures
+/// are deterministic for a given definition but may be environmental —
+/// missing artifacts — so a fresh process retries them).
+fn render_index(st: &PoolState) -> String {
+    let mut entries = Vec::new();
+    for (key, slot) in &st.slots {
+        if let BuildSlot::Done(img) = slot {
+            let mut e = Json::obj();
+            e.set("key", Json::from(key.as_str()))
+                .set("name", Json::from(img.name.as_str()))
+                .set("tag", Json::from(img.tag.as_str()))
+                .set("dir", Json::from(img.dir.to_string_lossy().as_ref()));
+            entries.push(e);
+        }
+    }
+    let mut j = Json::obj();
+    j.set("entries", Json::Arr(entries));
+    j.to_string_pretty()
+}
+
+/// Load the persisted digest index: only entries whose bundle still loads
+/// (and verifies) from disk are trusted; the rest are silently dropped and
+/// will rebuild on demand.
+fn load_index(store: &Path) -> HashMap<String, BuildSlot> {
+    let mut slots = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(index_path(store)) else {
+        return slots;
+    };
+    let Ok(j) = Json::parse(&text) else { return slots };
+    for e in j.get("entries").as_arr().unwrap_or(&[]) {
+        let (Some(key), Some(dir)) = (e.get("key").as_str(), e.get("dir").as_str()) else {
+            continue;
+        };
+        if let Ok(img) = Image::load(Path::new(dir)) {
+            slots.insert(key.to_string(), BuildSlot::Done(img));
+        }
+    }
+    slots
 }
 
 fn parse_kv(cmd: &str) -> BTreeMap<String, String> {
@@ -547,6 +613,32 @@ mod tests {
         let stats = pool.stats();
         assert_eq!(stats.builds, 2);
         assert_eq!(stats.cache_hits, 0);
+    }
+
+    /// Satellite: the digest cache index persists under the store — a
+    /// fresh pool (a "restarted process") reuses the prior build, and a
+    /// stale entry whose bundle vanished is dropped, not trusted.
+    #[test]
+    fn digest_index_round_trips_across_pool_restarts() {
+        let dir = store("pool_persist");
+        let first = BuildPool::new(&dir, empty_manifest(), 2);
+        let img = first.build_cached("base", "os", &base_def()).unwrap();
+        assert_eq!(first.stats().builds, 1);
+        assert!(dir.join("build_index.json").exists(), "index written on build");
+        drop(first);
+        let second = BuildPool::new(&dir, empty_manifest(), 2);
+        let again = second.build_cached("base", "os", &base_def()).unwrap();
+        assert_eq!(again.digest, img.digest);
+        assert_eq!(again.dir, img.dir);
+        let stats = second.stats();
+        assert_eq!(stats.builds, 0, "{stats:?}");
+        assert_eq!(stats.cache_hits, 1, "{stats:?}");
+        // stale entry: bundle deleted out from under the index
+        std::fs::remove_dir_all(&img.dir).unwrap();
+        let third = BuildPool::new(&dir, empty_manifest(), 2);
+        let rebuilt = third.build_cached("base", "os", &base_def()).unwrap();
+        assert_eq!(third.stats().builds, 1, "stale entry must rebuild");
+        assert_eq!(rebuilt.digest, img.digest);
     }
 
     #[test]

@@ -11,7 +11,8 @@ use anyhow::{bail, Result};
 use crate::executor::TrainSession;
 use crate::frameworks::Target;
 use crate::runtime::{Engine, Manifest};
-use crate::trainer::{train, TrainConfig, TrainReport};
+use crate::trainer::{train_cancellable, TrainConfig, TrainReport};
+use crate::util::sync::CancelToken;
 
 use super::image::Image;
 
@@ -70,6 +71,21 @@ impl<'e> ContainerRuntime<'e> {
         seed: i32,
         lr: f32,
     ) -> Result<ContainerRun> {
+        self.run_cancellable(image, opts, cfg, seed, lr, &CancelToken::new())
+    }
+
+    /// [`Self::run`], preemptible: `kill` reaches the training step loop,
+    /// so the node watchdog's walltime kill stops the payload within one
+    /// step instead of leaving it burning CPU detached.
+    pub fn run_cancellable(
+        &self,
+        image: &Image,
+        opts: &RunOptions,
+        cfg: &TrainConfig,
+        seed: i32,
+        lr: f32,
+        kill: &CancelToken,
+    ) -> Result<ContainerRun> {
         self.check_launch(image, opts)?;
         let Some(workload) = image.workload.clone() else {
             bail!("image {} has no workload binding", image.reference())
@@ -88,7 +104,7 @@ impl<'e> ContainerRuntime<'e> {
             seed,
             lr,
         )?;
-        let report = train(&mut session, cfg)?;
+        let report = train_cancellable(&mut session, cfg, kill)?;
         Ok(ContainerRun {
             image: image.reference(),
             workload,

@@ -75,6 +75,10 @@ pub struct Optimisation {
     /// Optional autotune toggle (paper §III: "runtime parameters can be
     /// further autotuned").
     pub autotune: bool,
+    /// Optional walltime request in seconds. When omitted, MODAK derives
+    /// the job's walltime from the performance-model prediction
+    /// (`k x predicted`, clamped) instead of a fixed constant.
+    pub walltime_secs: Option<u64>,
 }
 
 const KNOWN_COMPILERS: &[&str] = &["xla", "ngraph", "glow"];
@@ -136,6 +140,14 @@ impl Optimisation {
             frameworks,
             workload: o.get("workload").as_str().map(str::to_string),
             autotune: o.get("autotune").as_bool().unwrap_or(false),
+            // non-positive walltimes are nonsense requests: treat them as
+            // omitted so the optimiser derives a sane default instead of
+            // arming a hair-trigger watchdog
+            walltime_secs: o
+                .get("walltime_secs")
+                .as_f64()
+                .filter(|v| *v >= 1.0)
+                .map(|v| v as u64),
         })
     }
 
@@ -170,6 +182,9 @@ impl Optimisation {
         }
         if self.autotune {
             inner.set("autotune", Json::from(true));
+        }
+        if let Some(w) = self.walltime_secs {
+            inner.set("walltime_secs", Json::from(w as f64));
         }
         let mut root = Json::obj();
         root.set("optimisation", inner);
@@ -249,6 +264,34 @@ mod tests {
         )
         .is_err());
         assert!(Optimisation::parse("not json").is_err());
+    }
+
+    #[test]
+    fn walltime_secs_parses_and_roundtrips() {
+        let opt = Optimisation::parse(
+            r#"{"app_type": "ai_training", "walltime_secs": 900,
+                "ai_training": {"pytorch": {"version": "1.14"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(opt.walltime_secs, Some(900));
+        let back = Optimisation::parse(&opt.to_json().to_string_pretty()).unwrap();
+        assert_eq!(opt, back);
+        // omitted -> None (the optimiser derives it from the prediction)
+        let opt = Optimisation::parse(
+            r#"{"app_type": "ai_training", "ai_training": {"pytorch": {}}}"#,
+        )
+        .unwrap();
+        assert_eq!(opt.walltime_secs, None);
+        // zero/negative are nonsense: treated as omitted, not as a
+        // hair-trigger 1s watchdog
+        for bad in ["0", "-30"] {
+            let opt = Optimisation::parse(&format!(
+                r#"{{"app_type": "ai_training", "walltime_secs": {bad},
+                    "ai_training": {{"pytorch": {{}}}}}}"#
+            ))
+            .unwrap();
+            assert_eq!(opt.walltime_secs, None, "walltime_secs {bad}");
+        }
     }
 
     #[test]

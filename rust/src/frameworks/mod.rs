@@ -25,7 +25,9 @@ use anyhow::{anyhow, Result};
 use crate::executor::ExecPolicy;
 
 /// Compute target of a container image (the paper's cpu / gpu tags).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Ord/Hash: the cluster rebalancer keys per-class capacity maps by node
+/// class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Target {
     Cpu,
     /// Simulated GPU node class (see DESIGN.md §1 substitution table).

@@ -22,6 +22,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use modak::cluster::ShardRouter;
 use modak::dsl::Optimisation;
 use modak::figures::{FigureConfig, Harness};
 use modak::metrics::FigureReport;
@@ -39,6 +40,7 @@ USAGE:
   modak optimise --dsl <file> [--epochs N] [--steps N] [--submit]
   modak serve-batch --dsl-dir <dir> [--epochs N] [--steps N]
               [--policy fifo|sjf|reservation]
+              [--shards N] [--router round-robin|least-loaded|perf-aware]
               [--max-build-workers N] [--slots-per-node N]
               [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
   modak build --tag <image:tag>
@@ -60,6 +62,12 @@ COMMON FLAGS:
   --policy <p>            scheduler dispatch rule: fifo (default) | sjf
                           (pack by predicted runtime) | reservation
                           (EASY backfill, starvation-free)
+  --shards <n>            scheduler shards (default 1 = single embedded
+                          server; more boots a heterogeneous cluster with
+                          per-shard image staging + queue rebalancing)
+  --router <r>            shard routing rule: round-robin (default) |
+                          least-loaded | perf-aware (model-predicted
+                          queue backlog + image-staging cost)
 ";
 
 fn main() {
@@ -162,6 +170,11 @@ fn service_config(cli: &Cli) -> Result<ServiceConfig> {
             None => defaults.policy,
             Some(p) => SchedulePolicy::parse(p)?,
         },
+        shards: cli.get_usize("shards", defaults.shards)?,
+        router: match cli.get("router") {
+            None => defaults.router,
+            Some(r) => ShardRouter::parse(r)?,
+        },
     })
 }
 
@@ -225,10 +238,7 @@ fn cmd_optimise(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Resul
     if let Some(id) = outcome.job_id {
         println!("submitted as job {id}; waiting...");
         let report = service.await_batch(&mut handles, |_| {});
-        service.with_server(|srv| -> Result<()> {
-            print_job(srv.job(id)?);
-            Ok(())
-        })?;
+        service.with_job(id, print_job)?;
         if let Some(j) = report.jobs.first() {
             if let (Some(w), Some(r)) = (j.queue_wait_secs, j.run_secs) {
                 println!("  queue wait: {w:.2}s, run: {r:.2}s");
@@ -281,9 +291,12 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
     };
 
     println!(
-        "serve-batch: {} requests | {} cpu + {} gpu nodes x {} slots | \
-         {} build workers, {} planners | policy {}",
+        "serve-batch: {} requests | {} shard(s), router {} | base shard \
+         {} cpu + {} gpu nodes x {} slots | {} build workers, {} planners \
+         | policy {}",
         reqs.len(),
+        svc_cfg.shards.max(1),
+        svc_cfg.router,
         svc_cfg.cpu_nodes,
         svc_cfg.gpu_nodes,
         svc_cfg.slots_per_node,
@@ -294,8 +307,8 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
 
     let service = DeploymentService::new(store, manifest, model, &svc_cfg);
     let mut last_snapshot = String::new();
-    let report = service.run_batch(reqs, &cfg, |srv| {
-        let snapshot = qstat_line(srv);
+    let report = service.run_batch(reqs, &cfg, |cluster| {
+        let snapshot = cluster.qstat_line();
         if snapshot != last_snapshot {
             println!("qstat: {snapshot}");
             last_snapshot = snapshot;
@@ -304,24 +317,6 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
 
     println!("\n{}", report.render());
     Ok(())
-}
-
-/// One-line qstat snapshot: `1:R(n0) 2:Q ...  [running 2, queued 1]`.
-fn qstat_line(srv: &TorqueServer) -> String {
-    let mut parts: Vec<String> = Vec::new();
-    for rec in srv.qstat() {
-        let code = rec.state.code();
-        match rec.node {
-            Some(n) if code == 'R' => parts.push(format!("{}:R(n{})", rec.id, n)),
-            _ => parts.push(format!("{}:{}", rec.id, code)),
-        }
-    }
-    format!(
-        "{}  [running {}, queued {}]",
-        parts.join(" "),
-        srv.running_count(),
-        srv.queued()
-    )
 }
 
 fn cmd_build(cli: &Cli, artifacts: &str, store: &str) -> Result<()> {

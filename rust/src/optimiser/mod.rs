@@ -158,6 +158,13 @@ pub fn plan_deployment(
     // pack by expected runtime (sjf) and size reservation shadows
     let wl = manifest.workload(chosen.workload)?;
     let predicted_secs = model.predict(&Features::derive(&chosen, wl, cfg));
+    let walltime = derive_walltime(dsl.walltime_secs, predicted_secs);
+    if let (None, Some(p)) = (dsl.walltime_secs, predicted_secs) {
+        notes.push(format!(
+            "walltime {}s derived from prediction ({p:.2}s x {WALLTIME_HEADROOM_FACTOR}, clamped)",
+            walltime.as_secs()
+        ));
+    }
     let script = JobScript {
         name: format!("{}-{}", wl.name.replace('_', "-"), chosen.label().to_lowercase()),
         queue: "batch".into(),
@@ -165,7 +172,7 @@ pub fn plan_deployment(
             nodes: 1,
             gpus: if target == Target::GpuSim { 1 } else { 0 },
             slots: 1,
-            walltime: Duration::from_secs(3600),
+            walltime,
         },
         payload: Payload {
             image: chosen.image_tag(),
@@ -216,6 +223,31 @@ impl<'a> Optimiser<'a> {
     }
 }
 
+/// Walltime headroom over the model prediction (watchdog + reservation
+/// shadow windows track the model instead of a blanket constant).
+pub const WALLTIME_HEADROOM_FACTOR: f64 = 4.0;
+/// Never request less than this (prediction noise on tiny jobs must not
+/// produce hair-trigger watchdogs).
+pub const WALLTIME_MIN_SECS: u64 = 120;
+/// The legacy fixed default; also the cap and the untrained fallback.
+pub const WALLTIME_MAX_SECS: u64 = 3600;
+
+/// Prediction-aware walltime: an explicit DSL request wins; otherwise
+/// `k x predicted` clamped to `[WALLTIME_MIN_SECS, WALLTIME_MAX_SECS]`,
+/// falling back to the fixed maximum while the model is untrained.
+pub fn derive_walltime(dsl_walltime_secs: Option<u64>, predicted_secs: Option<f64>) -> Duration {
+    if let Some(s) = dsl_walltime_secs {
+        return Duration::from_secs(s.max(1));
+    }
+    match predicted_secs {
+        Some(p) if p > 0.0 => {
+            let secs = (p * WALLTIME_HEADROOM_FACTOR).ceil() as u64;
+            Duration::from_secs(secs.clamp(WALLTIME_MIN_SECS, WALLTIME_MAX_SECS))
+        }
+        _ => Duration::from_secs(WALLTIME_MAX_SECS),
+    }
+}
+
 /// Compare dotted version strings numerically ("2.1" > "1.14").
 fn cmp_version(a: &str, b: &str) -> std::cmp::Ordering {
     let parse = |s: &str| -> Vec<u64> {
@@ -236,6 +268,25 @@ mod tests {
         assert_eq!(cmp_version("2.1", "1.14"), Greater);
         assert_eq!(cmp_version("1.4", "1.14"), Less);
         assert_eq!(cmp_version("2.0", "2.0"), Equal);
+    }
+
+    /// Satellite: prediction-aware walltime defaults, clamped.
+    #[test]
+    fn walltime_derivation_clamps_and_respects_dsl() {
+        let secs = |d: Duration| d.as_secs();
+        // untrained model / no request: the legacy fixed default
+        assert_eq!(secs(derive_walltime(None, None)), WALLTIME_MAX_SECS);
+        // k x predicted in the linear range: 100s x 4 = 400s
+        assert_eq!(secs(derive_walltime(None, Some(100.0))), 400);
+        // tiny prediction clamps up to the floor
+        assert_eq!(secs(derive_walltime(None, Some(0.5))), WALLTIME_MIN_SECS);
+        // huge prediction clamps down to the cap
+        assert_eq!(secs(derive_walltime(None, Some(50_000.0))), WALLTIME_MAX_SECS);
+        // non-positive predictions are not trusted
+        assert_eq!(secs(derive_walltime(None, Some(0.0))), WALLTIME_MAX_SECS);
+        // an explicit DSL walltime always wins, unclamped
+        assert_eq!(secs(derive_walltime(Some(7200), Some(1.0))), 7200);
+        assert_eq!(secs(derive_walltime(Some(30), None)), 30);
     }
 
     // plan_deployment() needs a registry store + artifacts; exercised in

@@ -17,6 +17,6 @@ pub mod policy;
 pub mod server;
 
 pub use job::{JobScript, Payload, Resources};
-pub use node::{NodeHandle, NodeResult, NodeSpec, NodeTask};
+pub use node::{NodeHandle, NodeResult, NodeSpec, NodeTask, ResultSink};
 pub use policy::SchedulePolicy;
 pub use server::{JobId, JobRecord, JobState, TorqueServer};

@@ -7,11 +7,18 @@
 //! concurrently (the server does the slot accounting). Every runner owns
 //! its own PJRT engine — `xla::PjRtClient` is deliberately not shared
 //! across concurrent jobs. A watchdog enforces the job's walltime at the
-//! boundary: when it fires, the node reports the job killed and releases
-//! its slot instead of letting a runaway payload hold the slot forever.
+//! boundary: when it fires, the node reports the job killed, releases its
+//! slot, AND trips the job's [`CancelToken`] — the trainer's step loop
+//! checks the token between steps, so the payload thread itself exits
+//! within one step instead of burning CPU detached (true preemption).
+//!
+//! Results flow through a [`ResultSink`]: the raw mpsc sender plus an
+//! optional [`Signal`] pinged after every send, so the deployment service
+//! can sleep on a condvar instead of polling at a fixed interval.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -21,6 +28,7 @@ use crate::container::{ContainerRuntime, Image, RunOptions};
 use crate::frameworks::Target;
 use crate::runtime::Engine;
 use crate::scheduler::job::Payload;
+use crate::util::sync::{CancelToken, Signal};
 use crate::util::timer::Stopwatch;
 
 /// Node identity + class + capacity.
@@ -52,6 +60,39 @@ pub struct NodeResult {
     pub wall_secs: f64,
 }
 
+/// Where nodes report results: the server's mpsc sender, plus an optional
+/// completion [`Signal`] notified after every send so sleepers (the
+/// service's `await_batch`) wake on the event rather than a poll tick.
+#[derive(Clone)]
+pub struct ResultSink {
+    tx: Sender<NodeResult>,
+    signal: Option<Arc<Signal>>,
+}
+
+impl ResultSink {
+    /// A plain sink with no wakeup signal (unit tests, standalone servers).
+    pub fn new(tx: Sender<NodeResult>) -> ResultSink {
+        ResultSink { tx, signal: None }
+    }
+
+    /// A sink that pings `signal` after every result lands.
+    pub fn with_signal(tx: Sender<NodeResult>, signal: Arc<Signal>) -> ResultSink {
+        ResultSink {
+            tx,
+            signal: Some(signal),
+        }
+    }
+
+    /// Deliver a result (best-effort: a dropped receiver means the server
+    /// is gone and there is nobody left to care) and wake sleepers.
+    pub fn send(&self, res: NodeResult) {
+        let _ = self.tx.send(res);
+        if let Some(s) = &self.signal {
+            s.notify();
+        }
+    }
+}
+
 enum ToNode {
     Run(NodeTask),
     Shutdown,
@@ -67,7 +108,7 @@ pub struct NodeHandle {
 impl NodeHandle {
     /// Boot a node: spawns the dispatcher thread; PJRT engines are created
     /// per job (so booting a 5-node testbed stays cheap).
-    pub fn boot(spec: NodeSpec, results: Sender<NodeResult>) -> NodeHandle {
+    pub fn boot(spec: NodeSpec, results: ResultSink) -> NodeHandle {
         let (tx, rx): (Sender<ToNode>, Receiver<ToNode>) = channel();
         let thread_spec = spec.clone();
         let thread = std::thread::Builder::new()
@@ -102,7 +143,7 @@ impl Drop for NodeHandle {
     }
 }
 
-fn node_main(spec: NodeSpec, rx: Receiver<ToNode>, results: Sender<NodeResult>) {
+fn node_main(spec: NodeSpec, rx: Receiver<ToNode>, results: ResultSink) {
     while let Ok(msg) = rx.recv() {
         let task = match msg {
             ToNode::Run(t) => t,
@@ -116,14 +157,14 @@ fn node_main(spec: NodeSpec, rx: Receiver<ToNode>, results: Sender<NodeResult>) 
         let spawned = std::thread::Builder::new()
             .name(format!("node-{node_id}-job-{job_id}"))
             .spawn(move || {
-                run_supervised(job_id, node_id, walltime, supervisor_results, move || {
-                    run_task(&spec, &task)
+                run_supervised(job_id, node_id, walltime, supervisor_results, move |kill| {
+                    run_task(&spec, &task, kill)
                 })
             });
         if let Err(e) = spawned {
             // the job was already dispatched: report it failed so the
             // server frees its slots instead of waiting forever
-            let _ = results.send(NodeResult {
+            results.send(NodeResult {
                 job_id,
                 node_id,
                 outcome: Err(anyhow!("spawning job supervisor: {e}")),
@@ -136,38 +177,47 @@ fn node_main(spec: NodeSpec, rx: Receiver<ToNode>, results: Sender<NodeResult>) 
 /// Run `work` on a runner thread, reporting its result — or a walltime
 /// kill, whichever comes first — to the server.
 ///
-/// Threads cannot be forcibly killed, so a timed-out runner is detached:
-/// the *slot* is released immediately (the server sees a terminal result at
-/// the walltime boundary) even if the payload is still burning CPU, which
-/// is what keeps a runaway job from wedging a shared node.
+/// Threads cannot be forcibly killed, so the *slot* is released
+/// immediately at the walltime boundary (the server sees a terminal
+/// result); the runner is handed a [`CancelToken`] that the watchdog trips
+/// at that same boundary, and the training step loop checks it between
+/// steps — so the payload exits within one step instead of running
+/// detached to completion (ROADMAP: true preemption).
 pub(crate) fn run_supervised<F>(
     job_id: u64,
     node_id: usize,
     walltime: Duration,
-    results: Sender<NodeResult>,
+    results: ResultSink,
     work: F,
 ) where
-    F: FnOnce() -> Result<crate::container::ContainerRun> + Send + 'static,
+    F: FnOnce(CancelToken) -> Result<crate::container::ContainerRun> + Send + 'static,
 {
     let sw = Stopwatch::start();
     let (done_tx, done_rx) = channel();
+    let kill = CancelToken::new();
+    let runner_kill = kill.clone();
     let spawned = std::thread::Builder::new()
         .name(format!("job-{job_id}-runner"))
         .spawn(move || {
-            let _ = done_tx.send(work());
+            let _ = done_tx.send(work(runner_kill));
         });
     let outcome = match spawned {
         Err(e) => Err(anyhow!("spawning job runner: {e}")),
         Ok(_runner) => match done_rx.recv_timeout(walltime) {
             Ok(outcome) => outcome,
-            Err(RecvTimeoutError::Timeout) => Err(anyhow!(
-                "walltime exceeded ({:.1}s): job killed by node runner",
-                walltime.as_secs_f64()
-            )),
+            Err(RecvTimeoutError::Timeout) => {
+                // preempt the payload: the step loop observes the token and
+                // aborts within one step, instead of burning CPU detached
+                kill.cancel();
+                Err(anyhow!(
+                    "walltime exceeded ({:.1}s): job killed by node runner",
+                    walltime.as_secs_f64()
+                ))
+            }
             Err(RecvTimeoutError::Disconnected) => Err(anyhow!("job runner died")),
         },
     };
-    let _ = results.send(NodeResult {
+    results.send(NodeResult {
         job_id,
         node_id,
         outcome,
@@ -175,12 +225,16 @@ pub(crate) fn run_supervised<F>(
     });
 }
 
-fn run_task(spec: &NodeSpec, task: &NodeTask) -> Result<crate::container::ContainerRun> {
+fn run_task(
+    spec: &NodeSpec,
+    task: &NodeTask,
+    kill: CancelToken,
+) -> Result<crate::container::ContainerRun> {
     // engine per job: PJRT clients are not shared across concurrent jobs
     let engine = Engine::cpu()?;
     let image = Image::load(&task.bundle_dir)?;
     let runtime = ContainerRuntime::new(&engine, spec.class);
-    runtime.run(
+    runtime.run_cancellable(
         &image,
         &RunOptions {
             nv: task.payload.nv,
@@ -188,6 +242,7 @@ fn run_task(spec: &NodeSpec, task: &NodeTask) -> Result<crate::container::Contai
         &task.payload.train_config(),
         task.payload.seed,
         task.payload.lr,
+        &kill,
     )
 }
 
@@ -224,7 +279,7 @@ mod tests {
                 class: Target::Cpu,
                 slots: 1,
             },
-            res_tx,
+            ResultSink::new(res_tx),
         );
         node.shutdown();
         // dispatch after shutdown fails
@@ -240,7 +295,7 @@ mod tests {
                 class: Target::Cpu,
                 slots: 1,
             },
-            res_tx,
+            ResultSink::new(res_tx),
         );
         node.dispatch(task(42)).unwrap();
         let res = res_rx.recv().unwrap();
@@ -253,7 +308,7 @@ mod tests {
     fn watchdog_kills_job_at_walltime_boundary() {
         let (res_tx, res_rx) = channel();
         let sw = Stopwatch::start();
-        run_supervised(7, 3, Duration::from_millis(50), res_tx, || {
+        run_supervised(7, 3, Duration::from_millis(50), ResultSink::new(res_tx), |_kill| {
             // a runaway payload that would hold the slot for 30s
             std::thread::sleep(Duration::from_secs(30));
             Err(anyhow!("unreachable"))
@@ -271,11 +326,44 @@ mod tests {
     #[test]
     fn completed_work_beats_the_watchdog() {
         let (res_tx, res_rx) = channel();
-        run_supervised(8, 0, Duration::from_secs(600), res_tx, || {
+        run_supervised(8, 0, Duration::from_secs(600), ResultSink::new(res_tx), |_kill| {
             Err(anyhow!("fast deterministic failure"))
         });
         let res = res_rx.recv().unwrap();
         let err = res.outcome.unwrap_err().to_string();
         assert!(err.contains("fast deterministic failure"), "{err}");
+    }
+
+    /// Satellite (true preemption): the watchdog kill is no longer just a
+    /// slot release — the runner's CancelToken trips at the boundary and a
+    /// step-loop-shaped payload observes it and EXITS within one step,
+    /// instead of burning CPU detached for its full duration.
+    #[test]
+    fn killed_runner_exits_within_one_step() {
+        let (res_tx, res_rx) = channel();
+        let (exit_tx, exit_rx) = channel::<&'static str>();
+        let step = Duration::from_millis(10);
+        run_supervised(9, 0, Duration::from_millis(40), ResultSink::new(res_tx), move |kill| {
+            // a payload shaped like trainer::train_cancellable: thousands
+            // of steps, token checked at each step boundary
+            for _ in 0..3000 {
+                if kill.is_cancelled() {
+                    let _ = exit_tx.send("cancelled");
+                    return Err(anyhow!("cancelled by node watchdog"));
+                }
+                std::thread::sleep(step);
+            }
+            let _ = exit_tx.send("ran to completion");
+            Err(anyhow!("unreachable"))
+        });
+        // the slot-level kill arrives at the walltime boundary, as before
+        let res = res_rx.recv().unwrap();
+        assert!(res.outcome.unwrap_err().to_string().contains("walltime"));
+        // ...and the payload thread itself exits within ~one step of it,
+        // not after the remaining ~30s of steps
+        let how = exit_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("runner never exited after the kill");
+        assert_eq!(how, "cancelled");
     }
 }

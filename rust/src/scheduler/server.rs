@@ -19,7 +19,8 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -27,8 +28,9 @@ use anyhow::{anyhow, bail, Result};
 use crate::container::ContainerRun;
 use crate::frameworks::Target;
 use crate::scheduler::job::JobScript;
-use crate::scheduler::node::{NodeHandle, NodeResult, NodeSpec, NodeTask};
+use crate::scheduler::node::{NodeHandle, NodeResult, NodeSpec, NodeTask, ResultSink};
 use crate::scheduler::policy::{plan_dispatch, NodeState, QueuedJob, RunningJob, SchedulePolicy};
+use crate::util::sync::Signal;
 
 /// Completed work is not discarded for overshooting its walltime by mere
 /// absorption/channel latency: the node watchdog already kills genuinely
@@ -105,7 +107,7 @@ pub struct TorqueServer {
     /// image tag -> built bundle dir (populated by MODAK after builds).
     images: BTreeMap<String, PathBuf>,
     results_rx: Receiver<NodeResult>,
-    results_tx: Sender<NodeResult>,
+    results_sink: ResultSink,
     /// Terminal transitions in the order the server absorbed them.
     finish_order: Vec<JobId>,
     /// Most jobs ever observed Running simultaneously.
@@ -123,28 +125,38 @@ impl TorqueServer {
         slots_per_node: usize,
     ) -> TorqueServer {
         let slots = slots_per_node.max(1);
-        let (results_tx, results_rx) = channel();
-        let mut nodes = Vec::new();
+        let mut specs = Vec::new();
         for i in 0..cpu_nodes {
-            nodes.push(NodeHandle::boot(
-                NodeSpec {
-                    id: i,
-                    class: Target::Cpu,
-                    slots,
-                },
-                results_tx.clone(),
-            ));
+            specs.push(NodeSpec {
+                id: i,
+                class: Target::Cpu,
+                slots,
+            });
         }
         for i in 0..gpu_nodes {
-            nodes.push(NodeHandle::boot(
-                NodeSpec {
-                    id: cpu_nodes + i,
-                    class: Target::GpuSim,
-                    slots,
-                },
-                results_tx.clone(),
-            ));
+            specs.push(NodeSpec {
+                id: cpu_nodes + i,
+                class: Target::GpuSim,
+                slots,
+            });
         }
+        TorqueServer::boot_nodes(specs, None)
+    }
+
+    /// Boot an arbitrary (possibly heterogeneous) node set, optionally
+    /// wiring a completion [`Signal`] that nodes ping after every result —
+    /// what the cluster scheduler and the deployment service's
+    /// condvar-based `await_batch` build on.
+    pub fn boot_nodes(specs: Vec<NodeSpec>, signal: Option<Arc<Signal>>) -> TorqueServer {
+        let (results_tx, results_rx) = channel();
+        let results_sink = match signal {
+            Some(s) => ResultSink::with_signal(results_tx, s),
+            None => ResultSink::new(results_tx),
+        };
+        let nodes = specs
+            .into_iter()
+            .map(|spec| NodeHandle::boot(spec, results_sink.clone()))
+            .collect();
         TorqueServer {
             nodes,
             used: BTreeMap::new(),
@@ -154,7 +166,7 @@ impl TorqueServer {
             next_id: 1,
             images: BTreeMap::new(),
             results_rx,
-            results_tx,
+            results_sink,
             finish_order: Vec::new(),
             peak_running: 0,
             policy: SchedulePolicy::Fifo,
@@ -192,7 +204,9 @@ impl TorqueServer {
         self.images.insert(tag.to_string(), bundle_dir);
     }
 
-    fn class_of(script: &JobScript) -> Target {
+    /// Node class a script's resource request routes to (public: the
+    /// cluster router classifies jobs the same way shards do).
+    pub fn class_of(script: &JobScript) -> Target {
         if script.resources.gpus > 0 {
             Target::GpuSim
         } else {
@@ -202,6 +216,14 @@ impl TorqueServer {
 
     /// Submit a job script (Torque `qsub`); returns the job id.
     pub fn qsub(&mut self, script: JobScript) -> Result<JobId> {
+        self.qsub_at(script, Instant::now())
+    }
+
+    /// [`Self::qsub`] with an explicit submission instant: the cluster's
+    /// migration path re-queues withdrawn jobs with their original
+    /// `submitted_at`, so queue-wait spans the whole wait, not just the
+    /// slice on the final shard.
+    pub fn qsub_at(&mut self, script: JobScript, submitted_at: Instant) -> Result<JobId> {
         if script.resources.nodes != 1 {
             bail!(
                 "testbed jobs are single-node (asked for {}) — §V-E",
@@ -243,7 +265,7 @@ impl TorqueServer {
                 script,
                 bundle_dir,
                 state: JobState::Queued,
-                submitted_at: Instant::now(),
+                submitted_at,
                 started_at: None,
                 queue_wait_secs: None,
                 node: None,
@@ -274,6 +296,25 @@ impl TorqueServer {
             JobState::Running { .. } => bail!("job {id} is running; cannot delete"),
             _ => bail!("job {id} already finished"),
         }
+    }
+
+    /// Remove a still-queued job entirely and hand back its script plus
+    /// its original submission instant: the cluster layer's migration
+    /// primitive. Unlike [`Self::qdel`] no Failed record is left behind —
+    /// the job is re-submitted elsewhere under the same cluster-global
+    /// identity, and re-queueing with [`Self::qsub_at`] preserves the
+    /// queue-wait clock across the move.
+    pub fn withdraw(&mut self, id: JobId) -> Result<(JobScript, Instant)> {
+        let is_queued = matches!(
+            self.jobs.get(&id).map(|r| &r.state),
+            Some(JobState::Queued)
+        );
+        if !is_queued {
+            bail!("job {id} is not queued; cannot withdraw");
+        }
+        self.queue.retain(|&q| q != id);
+        let rec = self.jobs.remove(&id).expect("checked above");
+        Ok((rec.script, rec.submitted_at))
     }
 
     /// Torque `qstat`: all job records.
@@ -472,9 +513,72 @@ impl TorqueServer {
         self.queue.len()
     }
 
+    /// Queued job ids in queue order (migration candidates).
+    pub fn queued_ids(&self) -> Vec<JobId> {
+        self.queue.iter().copied().collect()
+    }
+
     /// Jobs currently in the Running state.
     pub fn running_count(&self) -> usize {
         self.running.len()
+    }
+
+    /// Free slots across nodes of `class` right now.
+    pub fn free_slots(&self, class: Target) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.spec.class == class)
+            .map(|n| {
+                n.spec
+                    .slots
+                    .saturating_sub(self.used.get(&n.spec.id).copied().unwrap_or(0))
+            })
+            .sum()
+    }
+
+    /// Total slots across nodes of `class`.
+    pub fn total_slots(&self, class: Target) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.spec.class == class)
+            .map(|n| n.spec.slots)
+            .sum()
+    }
+
+    /// Largest single node of `class` (None = the class is absent, so jobs
+    /// of that class can never run here).
+    pub fn max_node_slots(&self, class: Target) -> Option<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| n.spec.class == class)
+            .map(|n| n.spec.slots)
+            .max()
+    }
+
+    /// Expected seconds of work still ahead of a new arrival: the queued
+    /// jobs' expected run times plus the running jobs' expected remaining
+    /// times. The cluster's least-loaded / perf-aware routers rank shards
+    /// by this (normalised by capacity).
+    pub fn backlog_secs(&self) -> f64 {
+        let queued: f64 = self
+            .queue
+            .iter()
+            .filter_map(|id| self.jobs.get(id))
+            .map(|r| r.script.expected_secs())
+            .sum();
+        let running: f64 = self
+            .running
+            .keys()
+            .filter_map(|id| self.jobs.get(id))
+            .map(|r| {
+                let elapsed = r
+                    .started_at
+                    .map(|t| t.elapsed().as_secs_f64())
+                    .unwrap_or(0.0);
+                (r.script.expected_secs() - elapsed).max(0.0)
+            })
+            .sum();
+        queued + running
     }
 
     /// Most jobs ever Running at once on this server.
@@ -487,9 +591,9 @@ impl TorqueServer {
         &self.finish_order
     }
 
-    /// A fresh sender for additional node pools (tests).
-    pub fn results_sender(&self) -> Sender<NodeResult> {
-        self.results_tx.clone()
+    /// A fresh result sink for additional node pools (tests).
+    pub fn results_sender(&self) -> ResultSink {
+        self.results_sink.clone()
     }
 }
 
@@ -741,6 +845,43 @@ mod tests {
         // once the head job freed its slot the large job ran before the
         // long backfill candidate
         assert_eq!(server.finish_order(), &[head, big, long]);
+    }
+
+    /// Tentpole support: `withdraw` is the cluster's migration primitive —
+    /// it must remove exactly the queued record (no Failed tombstone) and
+    /// refuse running/terminal jobs, and the capacity/backlog snapshots
+    /// the shard router reads must reflect reality.
+    #[test]
+    fn withdraw_removes_queued_job_for_migration() {
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let running = server.qsub(script("img:1", 0)).unwrap();
+        let queued = server.qsub(script_pred("img:1", 7.5)).unwrap();
+        assert!(server.withdraw(running).is_err(), "running jobs stay put");
+        assert_eq!(server.queued_ids(), vec![queued]);
+        assert!(server.backlog_secs() >= 7.5, "{}", server.backlog_secs());
+        let (script, submitted_at) = server.withdraw(queued).unwrap();
+        assert_eq!(script.predicted_secs, Some(7.5));
+        assert!(server.job(queued).is_err(), "record fully removed");
+        assert_eq!(server.queued(), 0);
+        // migration preserves the queue-wait clock: after 50ms "in
+        // transit", re-queueing with the original instant must count that
+        // time (a reset clock would report a near-zero wait, since the
+        // running job's failure is already absorbable and the slot frees
+        // immediately once polled)
+        std::thread::sleep(Duration::from_millis(50));
+        let back = server.qsub_at(script, submitted_at).unwrap();
+        server.wait_all().unwrap();
+        let wait = server.job(back).unwrap().queue_wait_secs.unwrap();
+        assert!(
+            wait >= 0.05,
+            "queue wait {wait} must span the pre-migration time"
+        );
+        assert_eq!(server.finish_order(), &[running, back]);
+        // capacity snapshots the router routes by
+        assert_eq!(server.total_slots(Target::Cpu), 1);
+        assert_eq!(server.free_slots(Target::Cpu), 1);
+        assert_eq!(server.max_node_slots(Target::GpuSim), None);
     }
 
     #[test]

@@ -21,6 +21,15 @@
 //! legacy one-shot `modak optimise` path runs through the same service (a
 //! batch of one), so both paths produce identical plans by construction.
 //!
+//! The scheduling substrate is a [`ClusterScheduler`]: one shard by
+//! default (the embedded single-server shape, unchanged semantics), or —
+//! with `shards > 1` — a heterogeneous multi-shard cluster where every
+//! dispatch is routed by the pluggable [`ShardRouter`], bundles are staged
+//! into shard-local stores by the image distributor, and still-queued work
+//! is rebalanced off backlogged shards. Batch completion is signalled by a
+//! condvar ([`Signal`]) pinged by every node result and planner report, so
+//! `await_batch` wakes on the event instead of a poll tick.
+//!
 //! The performance model is closed-loop: predictions ride into the
 //! scheduler on each job script (driving `sjf` packing and `reservation`
 //! shadow windows), and every completed job's measured wall time is fed
@@ -34,14 +43,18 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::cluster::{
+    ClusterConfig, ClusterJobId, ClusterScheduler, ShardRouter, ShardSpec, StagingStats,
+};
 use crate::container::BuildStats;
 use crate::dsl::Optimisation;
 use crate::optimiser::{plan_deployment, DeploymentPlan};
 use crate::perfmodel::{Features, PerfModel, Record};
 use crate::registry::RegistryHandle;
 use crate::runtime::Manifest;
-use crate::scheduler::{JobId, JobState, SchedulePolicy, TorqueServer};
+use crate::scheduler::{JobState, SchedulePolicy, TorqueServer};
 use crate::trainer::TrainConfig;
+use crate::util::sync::Signal;
 use crate::util::timer::Stopwatch;
 
 /// Shape of the service's testbed + worker pools.
@@ -55,8 +68,14 @@ pub struct ServiceConfig {
     pub max_build_workers: usize,
     /// Planner worker threads draining the request queue.
     pub planner_workers: usize,
-    /// Dispatch rule for the batch server (`--policy`).
+    /// Dispatch rule for every batch-server shard (`--policy`).
     pub policy: SchedulePolicy,
+    /// Scheduler shards (`--shards`). 1 = the embedded single server;
+    /// more boots a heterogeneous cluster varied around the node counts
+    /// above (see [`ShardSpec::heterogeneous`]).
+    pub shards: usize,
+    /// Shard routing rule (`--router`), used when `shards > 1`.
+    pub router: ShardRouter,
 }
 
 impl Default for ServiceConfig {
@@ -68,6 +87,8 @@ impl Default for ServiceConfig {
             max_build_workers: 2,
             planner_workers: 4,
             policy: SchedulePolicy::Fifo,
+            shards: 1,
+            router: ShardRouter::RoundRobin,
         }
     }
 }
@@ -83,8 +104,9 @@ pub struct BatchRequest {
 #[derive(Debug)]
 pub struct PlanOutcome {
     pub plan: Result<DeploymentPlan>,
-    /// Set when the plan was dispatched to the scheduler.
-    pub job_id: Option<JobId>,
+    /// Set when the plan was dispatched to the scheduler (a cluster-global
+    /// id, stable across shard migrations).
+    pub job_id: Option<ClusterJobId>,
 }
 
 /// Async-style handle to one submitted request. `wait()` blocks until the
@@ -137,12 +159,15 @@ struct Work {
 pub struct JobSummary {
     pub label: String,
     pub image: Option<String>,
-    pub job_id: Option<JobId>,
+    pub job_id: Option<ClusterJobId>,
     /// qstat code ('C'/'F'/...), 'P' = planned but not dispatched,
     /// 'E' = planning/build failed.
     pub state: char,
     pub queue_wait_secs: Option<f64>,
     pub run_secs: Option<f64>,
+    /// Shard the job (last) ran on.
+    pub shard: Option<usize>,
+    /// Node within that shard.
     pub node: Option<usize>,
     pub predicted_secs: Option<f64>,
     pub error: Option<String>,
@@ -159,6 +184,36 @@ impl JobSummary {
     }
 }
 
+/// One shard's slice of a batch (tentpole: shard-aware reporting).
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// Jobs of this batch that finished on this shard.
+    pub jobs: usize,
+    pub completed: usize,
+    /// Longest submission-to-finish span among this shard's jobs.
+    pub makespan_secs: f64,
+    /// Sum of completed run wall times on this shard.
+    pub busy_secs: f64,
+    /// busy / (makespan x slot capacity): how much of the shard's
+    /// capacity the batch actually used while it had work.
+    pub utilisation: f64,
+    pub peak_running: usize,
+    /// Jobs the rebalancer migrated onto this shard.
+    pub migrations_in: u64,
+    pub staging: StagingStats,
+}
+
+/// Cluster-level slice of a [`BatchReport`].
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub router: String,
+    pub shards: Vec<ShardReport>,
+    /// Total cross-shard migrations the rebalancer executed.
+    pub migrations: u64,
+    pub staging_totals: StagingStats,
+}
+
 /// Outcome of a whole batch: per-job lines + concurrency evidence.
 #[derive(Debug, Clone)]
 pub struct BatchReport {
@@ -169,11 +224,15 @@ pub struct BatchReport {
     /// cost at best for the work that actually finished). Failed jobs are
     /// excluded on both sides of the speedup ratio.
     pub serial_sum_secs: f64,
-    /// Most jobs observed Running simultaneously.
+    /// Most jobs observed Running simultaneously (summed across shards:
+    /// exact for one shard, an upper bound for many).
     pub peak_running: usize,
     pub build_stats: BuildStats,
     /// Performance-model r² after feedback (None while untrained).
     pub model_r2: Option<f64>,
+    /// Per-shard breakdown (always present when the batch ran through the
+    /// service; rendered when the cluster has more than one shard).
+    pub cluster: Option<ClusterReport>,
 }
 
 impl BatchReport {
@@ -199,6 +258,7 @@ impl BatchReport {
             peak_running,
             build_stats,
             model_r2,
+            cluster: None,
         }
     }
 
@@ -229,8 +289,8 @@ impl BatchReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>5}\n",
-            "request", "image", "job", "st", "wait(s)", "run(s)", "pred(s)", "err%", "node"
+            "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>8}\n",
+            "request", "image", "job", "st", "wait(s)", "run(s)", "pred(s)", "err%", "sh/node"
         ));
         for j in &self.jobs {
             let fmt_opt = |v: Option<f64>| match v {
@@ -241,8 +301,13 @@ impl BatchReport {
                 Some(e) => format!("{e:+.1}"),
                 None => "-".into(),
             };
+            let place = match (j.shard, j.node) {
+                (Some(s), Some(n)) => format!("s{s}/n{n}"),
+                (None, Some(n)) => format!("n{n}"),
+                _ => "-".into(),
+            };
             out.push_str(&format!(
-                "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>5}\n",
+                "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>8}\n",
                 truncate(&j.label, 22),
                 truncate(j.image.as_deref().unwrap_or("-"), 30),
                 j.job_id.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
@@ -251,7 +316,7 @@ impl BatchReport {
                 fmt_opt(j.run_secs),
                 fmt_opt(j.predicted_secs),
                 err_pct,
-                j.node.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
+                place,
             ));
             if let Some(e) = &j.error {
                 out.push_str(&format!("{:<22}   error: {}\n", "", truncate(e, 100)));
@@ -282,6 +347,34 @@ impl BatchReport {
             }
             _ => {}
         }
+        // per-shard section only when there is more than one shard to show
+        if let Some(c) = self.cluster.as_ref().filter(|c| c.shards.len() > 1) {
+            out.push_str(&format!(
+                "cluster: {} shards | router {} | migrations {} | \
+                 staging {} miss / {} hit ({:.2}s simulated transfer)\n",
+                c.shards.len(),
+                c.router,
+                c.migrations,
+                c.staging_totals.misses,
+                c.staging_totals.hits,
+                c.staging_totals.simulated_secs,
+            ));
+            for s in &c.shards {
+                out.push_str(&format!(
+                    "  shard {}: {} jobs ({} C) | makespan {:>7.2}s | \
+                     util {:>3.0}% | peak {} | staged {}m/{}h | +{} migrated in\n",
+                    s.shard,
+                    s.jobs,
+                    s.completed,
+                    s.makespan_secs,
+                    s.utilisation * 100.0,
+                    s.peak_running,
+                    s.staging.misses,
+                    s.staging.hits,
+                    s.migrations_in,
+                ));
+            }
+        }
         out
     }
 }
@@ -296,18 +389,23 @@ fn truncate(s: &str, n: usize) -> String {
 }
 
 /// The deployment service: owns registry handle, performance model,
-/// manifest, and the batch server, and drives requests through a work
-/// queue of planner threads.
+/// manifest, and the scheduler cluster, and drives requests through a
+/// work queue of planner threads.
 pub struct DeploymentService {
     registry: RegistryHandle,
     /// Shared mutable model: planners snapshot it per request; completed
     /// jobs feed measured wall times back into it (online refit).
     model: Arc<Mutex<PerfModel>>,
     manifest: Manifest,
-    server: Arc<Mutex<TorqueServer>>,
+    /// The scheduling substrate: one shard = the embedded single server,
+    /// more = the routed multi-shard cluster.
+    cluster: Arc<ClusterScheduler>,
+    /// Completion signal: pinged by every node result (via the cluster's
+    /// shards) and every planner report; `await_batch` sleeps on it.
+    signal: Arc<Signal>,
     planner_workers: usize,
     /// Jobs whose measured results were already fed back to the model.
-    fed_back: Mutex<HashSet<JobId>>,
+    fed_back: Mutex<HashSet<ClusterJobId>>,
 }
 
 impl DeploymentService {
@@ -329,14 +427,29 @@ impl DeploymentService {
         model: PerfModel,
         cfg: &ServiceConfig,
     ) -> DeploymentService {
-        let mut server =
-            TorqueServer::boot_slotted(cfg.cpu_nodes, cfg.gpu_nodes, cfg.slots_per_node);
-        server.set_policy(cfg.policy);
+        let signal = Arc::new(Signal::new());
+        let base = ShardSpec {
+            cpu_nodes: cfg.cpu_nodes,
+            gpu_nodes: cfg.gpu_nodes,
+            slots_per_node: cfg.slots_per_node,
+        };
+        let cluster_cfg = ClusterConfig {
+            shards: ShardSpec::heterogeneous(cfg.shards.max(1), &base),
+            router: cfg.router,
+            policy: cfg.policy,
+        };
+        let store_root = registry.with(|r| r.store().to_path_buf());
+        let cluster = Arc::new(ClusterScheduler::new(
+            store_root,
+            &cluster_cfg,
+            Arc::clone(&signal),
+        ));
         DeploymentService {
             registry,
             model: Arc::new(Mutex::new(model)),
             manifest,
-            server: Arc::new(Mutex::new(server)),
+            cluster,
+            signal,
             planner_workers: cfg.planner_workers.max(1),
             fed_back: Mutex::new(HashSet::new()),
         }
@@ -346,9 +459,24 @@ impl DeploymentService {
         &self.registry
     }
 
-    /// Run `f` with the batch server locked (qstat snapshots, tests).
+    /// The scheduler cluster behind this service.
+    pub fn cluster(&self) -> &Arc<ClusterScheduler> {
+        &self.cluster
+    }
+
+    /// Run `f` with shard 0's batch server locked (qstat snapshots,
+    /// tests; with the default single shard this IS the batch server).
     pub fn with_server<R>(&self, f: impl FnOnce(&mut TorqueServer) -> R) -> R {
-        f(&mut self.server.lock().unwrap())
+        self.cluster.with_shard(0, f)
+    }
+
+    /// Run `f` on a dispatched job's record, wherever it lives.
+    pub fn with_job<R>(
+        &self,
+        id: ClusterJobId,
+        f: impl FnOnce(&crate::scheduler::JobRecord) -> R,
+    ) -> Result<R> {
+        self.cluster.with_job(id, f)
     }
 
     /// Run `f` with the performance model locked (feedback inspection,
@@ -390,7 +518,8 @@ impl DeploymentService {
             let registry = self.registry.clone();
             let model = Arc::clone(&self.model);
             let manifest = self.manifest.clone();
-            let server = Arc::clone(&self.server);
+            let cluster = Arc::clone(&self.cluster);
+            let signal = Arc::clone(&self.signal);
             let cfg = cfg.clone();
             std::thread::Builder::new()
                 .name(format!("planner-{w}"))
@@ -401,9 +530,11 @@ impl DeploymentService {
                     let work = work_rx.lock().unwrap().recv();
                     let Ok(Work { req, done }) = work else { break };
                     let outcome = plan_and_dispatch(
-                        &registry, &model, &manifest, &server, &req, &cfg, dispatch,
+                        &registry, &model, &manifest, &cluster, &req, &cfg, dispatch,
                     );
                     let _ = done.send(outcome);
+                    // wake await_batch: a handle just became resolvable
+                    signal.notify();
                 })
                 .expect("spawning planner worker");
         }
@@ -411,16 +542,24 @@ impl DeploymentService {
     }
 
     /// Wait for every handle's plan and every dispatched job to reach a
-    /// terminal state, invoking `on_poll` with the locked server at each
-    /// poll tick (for live qstat output). Returns the batch report with
+    /// terminal state, invoking `on_poll` with the cluster at each sweep
+    /// (for live qstat output). Returns the batch report with
     /// `makespan_secs` left at 0 (callers that timed the batch fill it in;
     /// [`Self::run_batch`] does this automatically).
+    ///
+    /// Completion latency is event-driven, not poll-quantised: every node
+    /// result and planner report pings the shared [`Signal`], and this
+    /// loop sleeps on it between sweeps. The epoch is read *before* each
+    /// sweep, so an event landing mid-sweep makes the wait return
+    /// immediately — no lost wakeups. The wait's timeout is only a
+    /// rebalancing tick + robustness backstop.
     pub fn await_batch(
         &self,
         handles: &mut [PlanHandle],
-        mut on_poll: impl FnMut(&TorqueServer),
+        mut on_poll: impl FnMut(&ClusterScheduler),
     ) -> BatchReport {
         loop {
+            let seen = self.signal.epoch();
             let mut all_planned = true;
             for h in handles.iter_mut() {
                 if h.try_wait().is_none() {
@@ -432,27 +571,18 @@ impl DeploymentService {
             // batch's queue (and every later request) snapshot refreshed
             // coefficients
             self.feed_back_measurements(handles);
-            let job_ids: Vec<JobId> = handles
+            // absorb completions on every shard + rebalance queued work
+            let _ = self.cluster.poll();
+            on_poll(&self.cluster);
+            let pending_jobs = handles
                 .iter()
                 .filter_map(|h| h.outcome.as_ref().and_then(|o| o.job_id))
-                .collect();
-            let pending_jobs = {
-                let mut srv = self.server.lock().unwrap();
-                let _ = srv.poll();
-                on_poll(&srv);
-                job_ids
-                    .iter()
-                    .filter(|id| {
-                        srv.job(**id)
-                            .map(|r| !r.state.is_terminal())
-                            .unwrap_or(false)
-                    })
-                    .count()
-            };
+                .filter(|id| !self.cluster.job_terminal(*id).unwrap_or(true))
+                .count();
             if all_planned && pending_jobs == 0 {
                 break;
             }
-            std::thread::sleep(Duration::from_millis(15));
+            self.signal.wait_past(seen, Duration::from_millis(200));
         }
         // final sweep: completions absorbed by the last poll above
         self.feed_back_measurements(handles);
@@ -468,13 +598,14 @@ impl DeploymentService {
     /// file-backed. Reads outcomes non-blockingly, so it is safe to call
     /// while planner workers are still reporting.
     ///
-    /// Locking: new measurements are collected under the server lock, then
-    /// the refit + disk write run under the model lock alone — scheduling
+    /// Locking: new measurements are collected under the per-shard server
+    /// locks (taken one at a time via the cluster's job map), then the
+    /// refit + disk write run under the model lock alone — scheduling
     /// passes never stall behind least squares or the history file. No
-    /// code path in this service holds both locks at once.
+    /// code path in this service holds a shard lock and the model lock at
+    /// once.
     fn feed_back_measurements(&self, handles: &[PlanHandle]) {
         let fresh: Vec<Record> = {
-            let srv = self.server.lock().unwrap();
             let mut fed = self.fed_back.lock().unwrap();
             let mut fresh = Vec::new();
             for h in handles.iter() {
@@ -485,15 +616,20 @@ impl DeploymentService {
                 if fed.contains(&id) {
                     continue;
                 }
-                let Ok(rec) = srv.job(id) else { continue };
-                let JobState::Completed { wall_secs, .. } = &rec.state else {
+                let Ok(measured) = self.cluster.with_job(id, |rec| {
+                    match &rec.state {
+                        JobState::Completed { wall_secs, .. } => {
+                            Some((*wall_secs, rec.script.payload.train_config()))
+                        }
+                        _ => None,
+                    }
+                }) else {
                     continue;
                 };
-                let measured_secs = *wall_secs;
+                let Some((measured_secs, cfg)) = measured else { continue };
                 let Ok(wl) = self.manifest.workload(plan.profile.workload) else {
                     continue;
                 };
-                let cfg = rec.script.payload.train_config();
                 fresh.push(Record {
                     image: plan.profile.image_tag(),
                     workload: plan.profile.workload.to_string(),
@@ -520,7 +656,7 @@ impl DeploymentService {
         &self,
         reqs: Vec<BatchRequest>,
         cfg: &TrainConfig,
-        on_poll: impl FnMut(&TorqueServer),
+        on_poll: impl FnMut(&ClusterScheduler),
     ) -> BatchReport {
         let sw = Stopwatch::start();
         let mut handles = self.submit_many(reqs, cfg, true);
@@ -530,13 +666,12 @@ impl DeploymentService {
     }
 
     fn report(&self, handles: &mut [PlanHandle], makespan_secs: f64) -> BatchReport {
-        // model guard dropped before the server lock: no code path in this
-        // service holds both locks at once (see feed_back_measurements)
+        // model guard dropped before any shard lock: no code path in this
+        // service holds both at once (see feed_back_measurements)
         let model_r2 = {
             let model = self.model.lock().unwrap();
             model.is_trained().then_some(model.r2)
         };
-        let srv = self.server.lock().unwrap();
         let mut jobs = Vec::with_capacity(handles.len());
         for h in handles.iter_mut() {
             let label = h.label.clone();
@@ -549,13 +684,33 @@ impl DeploymentService {
                     state: 'E',
                     queue_wait_secs: None,
                     run_secs: None,
+                    shard: None,
                     node: None,
                     predicted_secs: None,
                     error: Some(format!("{e:#}")),
                 },
                 Ok(plan) => {
                     let image = Some(plan.profile.image_tag());
-                    match out.job_id.and_then(|id| srv.job(id).ok()) {
+                    let looked_up = out.job_id.and_then(|id| {
+                        let shard = self.cluster.shard_of(id);
+                        self.cluster
+                            .with_job(id, |rec| {
+                                let error = match &rec.state {
+                                    JobState::Failed { error, .. } => Some(error.clone()),
+                                    _ => None,
+                                };
+                                (
+                                    rec.state.code(),
+                                    rec.queue_wait_secs,
+                                    rec.state.wall_secs(),
+                                    rec.node,
+                                    error,
+                                )
+                            })
+                            .ok()
+                            .map(|info| (id, shard, info))
+                    });
+                    match looked_up {
                         None => JobSummary {
                             label,
                             image,
@@ -563,26 +718,21 @@ impl DeploymentService {
                             state: 'P',
                             queue_wait_secs: None,
                             run_secs: None,
+                            shard: None,
                             node: None,
                             predicted_secs: plan.predicted_secs,
                             error: None,
                         },
-                        Some(rec) => {
-                            let run_secs = rec.state.wall_secs();
-                            let error = match &rec.state {
-                                crate::scheduler::JobState::Failed { error, .. } => {
-                                    Some(error.clone())
-                                }
-                                _ => None,
-                            };
+                        Some((id, shard, (state, queue_wait_secs, run_secs, node, error))) => {
                             JobSummary {
                                 label,
                                 image,
-                                job_id: Some(rec.id),
-                                state: rec.state.code(),
-                                queue_wait_secs: rec.queue_wait_secs,
+                                job_id: Some(id),
+                                state,
+                                queue_wait_secs,
                                 run_secs,
-                                node: rec.node,
+                                shard,
+                                node,
                                 predicted_secs: plan.predicted_secs,
                                 error,
                             }
@@ -592,13 +742,67 @@ impl DeploymentService {
             };
             jobs.push(summary);
         }
-        BatchReport::from_jobs(
+        let cluster_report = self.cluster_report(&jobs);
+        let mut report = BatchReport::from_jobs(
             jobs,
             makespan_secs,
-            srv.peak_running(),
+            self.cluster.peak_running_sum(),
             self.registry.build_stats(),
             model_r2,
-        )
+        );
+        report.cluster = Some(cluster_report);
+        report
+    }
+
+    /// Per-shard breakdown of a batch (tentpole: shard-aware reporting).
+    fn cluster_report(&self, jobs: &[JobSummary]) -> ClusterReport {
+        let snaps = self.cluster.shard_snapshots();
+        let shards = snaps
+            .iter()
+            .map(|snap| {
+                let mine: Vec<&JobSummary> = jobs
+                    .iter()
+                    .filter(|j| j.shard == Some(snap.shard))
+                    .collect();
+                let completed = mine.iter().filter(|j| j.state == 'C').count();
+                // span from each job's submission to its finish; batch
+                // submissions land ~together, so the max approximates the
+                // shard's slice of the batch makespan
+                let makespan_secs = mine
+                    .iter()
+                    .map(|j| {
+                        j.queue_wait_secs.unwrap_or(0.0) + j.run_secs.unwrap_or(0.0)
+                    })
+                    .fold(0.0, f64::max);
+                let busy_secs: f64 = mine
+                    .iter()
+                    .filter(|j| j.state == 'C')
+                    .filter_map(|j| j.run_secs)
+                    .sum();
+                let capacity_secs = makespan_secs * snap.slot_capacity as f64;
+                ShardReport {
+                    shard: snap.shard,
+                    jobs: mine.len(),
+                    completed,
+                    makespan_secs,
+                    busy_secs,
+                    utilisation: if capacity_secs > 0.0 {
+                        (busy_secs / capacity_secs).min(1.0)
+                    } else {
+                        0.0
+                    },
+                    peak_running: snap.peak_running,
+                    migrations_in: snap.migrations_in,
+                    staging: snap.staging.clone(),
+                }
+            })
+            .collect();
+        ClusterReport {
+            router: self.cluster.router().to_string(),
+            shards,
+            migrations: self.cluster.migrations(),
+            staging_totals: self.cluster.staging_totals(),
+        }
     }
 }
 
@@ -606,7 +810,7 @@ fn plan_and_dispatch(
     registry: &RegistryHandle,
     model: &Mutex<PerfModel>,
     manifest: &Manifest,
-    server: &Arc<Mutex<TorqueServer>>,
+    cluster: &Arc<ClusterScheduler>,
     req: &BatchRequest,
     cfg: &TrainConfig,
     dispatch: bool,
@@ -625,9 +829,13 @@ fn plan_and_dispatch(
         }
     };
     let job_id = if dispatch {
-        let mut srv = server.lock().unwrap();
-        srv.register_image(&plan.profile.image_tag(), plan.image.dir.clone());
-        match srv.qsub(plan.script.clone()) {
+        // route to a shard, stage the bundle into its local store, qsub
+        match cluster.submit(
+            plan.script.clone(),
+            &plan.profile.image_tag(),
+            &plan.image.digest,
+            &plan.image.dir,
+        ) {
             Ok(id) => Some(id),
             Err(e) => {
                 return PlanOutcome {
@@ -687,6 +895,7 @@ mod tests {
             state,
             queue_wait_secs: None,
             run_secs: run,
+            shard: Some(0),
             node: None,
             predicted_secs: pred,
             error: None,
@@ -769,7 +978,7 @@ mod tests {
             false,
         );
         let mut polls = 0;
-        let report = service.await_batch(&mut handles, |_srv| polls += 1);
+        let report = service.await_batch(&mut handles, |_cluster| polls += 1);
         assert_eq!(report.jobs.len(), 1);
         assert_eq!(report.jobs[0].state, 'E'); // build failed without artifacts
         assert!(report.jobs[0].error.is_some());
@@ -777,5 +986,42 @@ mod tests {
         assert_eq!(report.completed(), 0);
         // render() must not panic on degenerate reports
         assert!(report.render().contains("makespan"));
+    }
+
+    /// Tentpole smoke test (no artifacts needed): a multi-shard service
+    /// boots a heterogeneous cluster, routes through the configured
+    /// router, and reports per-shard stats even for a batch that failed at
+    /// planning.
+    #[test]
+    fn multi_shard_service_reports_cluster_shape() {
+        let service = DeploymentService::new(
+            store("shards"),
+            empty_manifest(),
+            PerfModel::new(),
+            &ServiceConfig {
+                shards: 3,
+                router: ShardRouter::PerfAware,
+                ..ServiceConfig::default()
+            },
+        );
+        assert_eq!(service.cluster().shard_count(), 3);
+        assert_eq!(service.cluster().router(), ShardRouter::PerfAware);
+        let cfg = TrainConfig { epochs: 1, steps_per_epoch: 1, seed: 0 };
+        let mut handles = service.submit_many(
+            vec![BatchRequest { label: "x".into(), dsl: dsl("pytorch", "1.14") }],
+            &cfg,
+            true,
+        );
+        let report = service.await_batch(&mut handles, |_| {});
+        let cluster = report.cluster.as_ref().expect("cluster section present");
+        assert_eq!(cluster.shards.len(), 3);
+        assert_eq!(cluster.router, "perf-aware");
+        assert_eq!(cluster.migrations, 0);
+        // per-shard job counts sum to the batch's dispatched jobs (zero
+        // here: planning failed without artifacts)
+        assert_eq!(cluster.shards.iter().map(|s| s.jobs).sum::<usize>(), 0);
+        let rendered = report.render();
+        assert!(rendered.contains("cluster: 3 shards"), "{rendered}");
+        assert!(rendered.contains("router perf-aware"), "{rendered}");
     }
 }

@@ -4,9 +4,10 @@
 
 pub mod data;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::executor::TrainSession;
+use crate::util::sync::CancelToken;
 use crate::util::timer::Stopwatch;
 use data::Dataset;
 
@@ -66,6 +67,19 @@ impl TrainReport {
 
 /// Run `cfg.epochs` training epochs of `cfg.steps_per_epoch` batches.
 pub fn train(session: &mut TrainSession, cfg: &TrainConfig) -> Result<TrainReport> {
+    train_cancellable(session, cfg, &CancelToken::new())
+}
+
+/// [`train`], preemptible: `kill` is checked at every step boundary, so a
+/// walltime-killed job's payload thread exits within one step of the node
+/// watchdog firing instead of running detached to completion (ROADMAP:
+/// true preemption — the watchdog threads its token in via the node
+/// runner).
+pub fn train_cancellable(
+    session: &mut TrainSession,
+    cfg: &TrainConfig,
+    kill: &CancelToken,
+) -> Result<TrainReport> {
     let mut dataset = Dataset::for_workload(&session.workload, cfg.seed);
     let total = Stopwatch::start();
     let mut report = TrainReport {
@@ -79,6 +93,9 @@ pub fn train(session: &mut TrainSession, cfg: &TrainConfig) -> Result<TrainRepor
         session.begin_epoch()?;
         let mut loss_sum = 0.0;
         for _ in 0..cfg.steps_per_epoch {
+            if kill.is_cancelled() {
+                bail!("training cancelled at a step boundary (walltime kill)");
+            }
             let (x, y) = dataset.next_batch();
             let loss = session.step(&x, &y)?;
             report.step_loss.push(loss);

@@ -1,0 +1,134 @@
+//! Small synchronisation substrates shared by the scheduler stack.
+//!
+//! * [`Signal`] — an epoch-counting condition variable: producers `notify()`
+//!   after publishing work (a node result, a planner outcome), consumers
+//!   `wait_past(seen)` to sleep until something happened since they last
+//!   looked. This is what replaced the deployment service's fixed-interval
+//!   poll loop: batch-completion latency now tracks the event, not the
+//!   poll quantum.
+//! * [`CancelToken`] — a shared kill flag threaded from the node watchdog
+//!   into the training step loop, so a walltime-killed payload actually
+//!   stops instead of burning CPU detached.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Epoch-counting condvar. Every `notify()` bumps the epoch and wakes all
+/// waiters; `wait_past(seen, timeout)` returns as soon as the epoch exceeds
+/// `seen` (immediately if it already does — no lost-wakeup window as long
+/// as the caller reads the epoch *before* inspecting the state it guards).
+#[derive(Default)]
+pub struct Signal {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Signal {
+    pub fn new() -> Signal {
+        Signal::default()
+    }
+
+    /// Current epoch. Read this BEFORE checking shared state, then pass it
+    /// to [`Self::wait_past`]: an event landing between the check and the
+    /// wait bumps the epoch past `seen`, so the wait returns immediately.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Publish an event: bump the epoch, wake every waiter.
+    pub fn notify(&self) {
+        let mut e = self.epoch.lock().unwrap();
+        *e += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until the epoch exceeds `seen` or `timeout` elapses (the
+    /// timeout is a robustness backstop, not the latency mechanism).
+    /// Returns the epoch observed on wakeup.
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> u64 {
+        let mut e = self.epoch.lock().unwrap();
+        if *e > seen {
+            return *e;
+        }
+        let (guard, _res) = self
+            .cv
+            .wait_timeout_while(e, timeout, |cur| *cur <= seen)
+            .unwrap();
+        e = guard;
+        *e
+    }
+}
+
+/// A cooperative kill flag. Cloning shares the flag; `cancel()` is sticky.
+///
+/// The node watchdog cancels the token at the walltime boundary; the
+/// trainer's step loop checks it between steps and aborts, so the payload
+/// thread exits within one step instead of running detached to completion
+/// (ROADMAP: true preemption).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the flag (idempotent, visible to all clones).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn cancel_token_clones_share_the_flag() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!c.is_cancelled());
+        t.cancel();
+        assert!(c.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn signal_wait_past_sees_prior_notify_immediately() {
+        let s = Signal::new();
+        let seen = s.epoch();
+        s.notify();
+        // event landed after we read the epoch: no sleep, no lost wakeup
+        let woke = s.wait_past(seen, Duration::from_secs(30));
+        assert!(woke > seen);
+    }
+
+    #[test]
+    fn signal_wakes_cross_thread() {
+        let s = Arc::new(Signal::new());
+        let seen = s.epoch();
+        let s2 = Arc::clone(&s);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.notify();
+        });
+        let woke = s.wait_past(seen, Duration::from_secs(30));
+        assert!(woke > seen);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn signal_times_out_without_events() {
+        let s = Signal::new();
+        let seen = s.epoch();
+        let woke = s.wait_past(seen, Duration::from_millis(10));
+        assert_eq!(woke, seen);
+    }
+}

@@ -9,6 +9,7 @@
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
 
+use modak::cluster::ShardRouter;
 use modak::dsl::Optimisation;
 use modak::optimiser::{plan_deployment, Optimiser};
 use modak::perfmodel::{Features, PerfModel, Record};
@@ -396,6 +397,89 @@ fn batch_submission_overlaps_jobs_and_hits_build_cache() {
     assert!(report.peak_running >= 2, "{report:?}");
     assert!(report.makespan_secs > 0.0);
     assert!(report.serial_sum_secs > 0.0);
+}
+
+/// Tentpole acceptance: a heterogeneous 4-shard cluster behind the same
+/// serve-batch code path completes a mixed cpu/gpu batch routed
+/// `perf-aware`, and the report's per-shard stats sum to the batch totals.
+#[test]
+fn multi_shard_batch_completes_with_per_shard_stats() {
+    let _g = serial();
+    let Some(m) = manifest() else { return };
+    let service = DeploymentService::new(
+        store("cluster4"),
+        m.clone(),
+        PerfModel::new(),
+        &ServiceConfig {
+            cpu_nodes: 1,
+            gpu_nodes: 1,
+            slots_per_node: 2,
+            shards: 4,
+            router: ShardRouter::PerfAware,
+            ..ServiceConfig::default()
+        },
+    );
+    assert_eq!(service.cluster().shard_count(), 4);
+    assert_eq!(service.cluster().router(), ShardRouter::PerfAware);
+    let cfg = TrainConfig {
+        epochs: 1,
+        steps_per_epoch: 2,
+        seed: 0,
+    };
+    let cpu_dsl = |fw: &str, ver: &str| {
+        Optimisation::parse(&format!(
+            r#"{{"app_type": "ai_training", "workload": "mnist_cnn",
+                "ai_training": {{"{fw}": {{"version": "{ver}"}}}}}}"#
+        ))
+        .unwrap()
+    };
+    let gpu_dsl = Optimisation::parse(
+        r#"{"app_type": "ai_training",
+            "opt_build": {"cpu_type": "x86", "acc_type": "nvidia"},
+            "ai_training": {"tensorflow": {"version": "2.1"}}}"#,
+    )
+    .unwrap();
+    let reqs = vec![
+        BatchRequest { label: "tf-a".into(), dsl: cpu_dsl("tensorflow", "2.1") },
+        BatchRequest { label: "tf-b".into(), dsl: cpu_dsl("tensorflow", "2.1") },
+        BatchRequest { label: "pt".into(), dsl: cpu_dsl("pytorch", "1.14") },
+        BatchRequest { label: "mx".into(), dsl: cpu_dsl("mxnet", "2.0") },
+        BatchRequest { label: "tf-gpu".into(), dsl: gpu_dsl },
+    ];
+    let n = reqs.len();
+    let report = service.run_batch(reqs, &cfg, |_| {});
+    eprintln!("{}", report.render());
+    assert_eq!(report.completed(), n, "{report:?}");
+    let cluster = report.cluster.as_ref().expect("cluster section");
+    assert_eq!(cluster.shards.len(), 4);
+    assert_eq!(cluster.router, "perf-aware");
+    // per-shard stats sum to the batch totals
+    assert_eq!(cluster.shards.iter().map(|s| s.jobs).sum::<usize>(), n);
+    assert_eq!(
+        cluster.shards.iter().map(|s| s.completed).sum::<usize>(),
+        report.completed()
+    );
+    let busy: f64 = cluster.shards.iter().map(|s| s.busy_secs).sum();
+    assert!(
+        (busy - report.serial_sum_secs).abs() < 1e-6,
+        "shard busy sum {busy} != serial sum {}",
+        report.serial_sum_secs
+    );
+    // every dispatched job knows which shard ran it
+    for j in &report.jobs {
+        assert!(j.shard.is_some(), "{j:?}");
+        assert_eq!(j.state, 'C', "{j:?}");
+    }
+    // the gpu request landed on a gpu-capable shard (even shards only)
+    let gpu_shard = report.jobs.last().unwrap().shard.unwrap();
+    assert!(gpu_shard % 2 == 0, "gpu job on shard {gpu_shard}");
+    // image distribution: bundles were staged into shard-local stores
+    // (at least one miss; duplicate profiles on one shard become hits)
+    assert!(cluster.staging_totals.misses >= 1, "{:?}", cluster.staging_totals);
+    assert!(cluster.staging_totals.simulated_secs > 0.0);
+    let rendered = report.render();
+    assert!(rendered.contains("cluster: 4 shards"), "{rendered}");
+    assert!(rendered.contains("shard 0:"), "{rendered}");
 }
 
 /// Acceptance: perf-model-driven co-scheduling closes the loop. A trained
