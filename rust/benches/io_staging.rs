@@ -1,0 +1,110 @@
+//! Dataset-staging router comparison on the deterministic data-cluster
+//! simulation (`modak::data::sim`) — the engine behind the
+//! locality-beats-round-robin and warm-rerun regression tests, over a
+//! bigger heterogeneous cluster and a larger dataset working set.
+//!
+//! Needs no AOT artifacts: everything is pure routing + staging + policy
+//! decision logic, so the numbers are exactly reproducible on any host.
+//! Reported per router, cold then warm (same caches, second pass):
+//!
+//! * makespan — finish time of the last job (staging extends the first
+//!   job that pulls a dataset onto a cold shard),
+//! * GB moved — shared-store bytes staged into shard caches,
+//! * miss/hit — shard-tier staging events.
+//!
+//! Run: `cargo bench --bench io_staging`
+
+use modak::cluster::ShardRouter;
+use modak::data::sim::{cold_caches, simulate_data_cluster, DataSimJob, ShardCaches};
+use modak::frameworks::Target;
+use modak::scheduler::policy::{NodeState, SchedulePolicy};
+
+/// A heterogeneous 3-shard cluster: fat (2 nodes x 2 slots), medium
+/// (1 node x 2 slots), lean (1 node x 1 slot).
+fn shards() -> Vec<Vec<NodeState>> {
+    let node = |id: usize, slots: usize| NodeState {
+        id,
+        class: Target::Cpu,
+        free_slots: slots,
+        total_slots: slots,
+    };
+    vec![
+        vec![node(0, 2), node(1, 2)],
+        vec![node(0, 2)],
+        vec![node(0, 1)],
+    ]
+}
+
+/// Data-heavy mix: 4 datasets (8-40 GB), ~6 jobs per dataset arriving
+/// interleaved, compute small next to cold staging — the regime where the
+/// router's data-locality term pays or costs the most.
+fn job_mix() -> Vec<DataSimJob> {
+    let gb = 1_000_000_000u64;
+    let sets: [(&str, u64); 4] = [
+        ("imagenet-a", 40 * gb),
+        ("imagenet-b", 24 * gb),
+        ("speech-c", 16 * gb),
+        ("logs-d", 8 * gb),
+    ];
+    (0..24)
+        .map(|i| {
+            let (name, bytes) = sets[i % sets.len()];
+            DataSimJob {
+                id: i as u64,
+                demand: 1,
+                dur: 6.0 + (i % 5) as f64,
+                arrive: (i / 8) as f64 * 3.0,
+                dataset: Some((format!("data:{name}"), bytes)),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let shards = shards();
+    let jobs = job_mix();
+    println!(
+        "io_staging: {} jobs over {} heterogeneous shards, 4 datasets \
+         (policy fifo)\n",
+        jobs.len(),
+        shards.len()
+    );
+    println!(
+        "{:<14} {:>5} {:>10} {:>9} {:>10} {:>8}",
+        "router", "pass", "makespan", "GB moved", "miss/hit", "undone"
+    );
+    for router in [
+        ShardRouter::RoundRobin,
+        ShardRouter::LeastLoaded,
+        ShardRouter::PerfAware,
+    ] {
+        let mut caches: ShardCaches = cold_caches(shards.len());
+        for pass in ["cold", "warm"] {
+            let out = simulate_data_cluster(
+                router,
+                SchedulePolicy::Fifo,
+                &jobs,
+                &shards,
+                &mut caches,
+                1_000_000.0,
+            );
+            println!(
+                "{:<14} {:>5} {:>9.1}s {:>9.1} {:>6}/{:<3} {:>8}",
+                router.as_str(),
+                pass,
+                out.makespan,
+                out.bytes_moved as f64 / 1e9,
+                out.stage_misses,
+                out.stage_hits,
+                out.unfinished
+            );
+        }
+    }
+    println!(
+        "\nround-robin replicates datasets across shards it deals jobs to; \
+         perf-aware's data-locality term keeps jobs with their data, so it \
+         moves fewer bytes cold and nothing warm. The warm pass reruns the \
+         same mix against the caches the cold pass filled — the gap is the \
+         tiered cache paying off."
+    );
+}

@@ -16,6 +16,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
+use crate::util::lru::Lru;
+
 /// Simulated per-transfer latency (control plane + layer negotiation).
 pub const STAGE_LATENCY_SECS: f64 = 0.05;
 /// Simulated shard interconnect bandwidth (bytes/second).
@@ -32,6 +34,8 @@ pub struct StagingStats {
     pub bytes: u64,
     /// Simulated transfer seconds charged (latency + bytes/bandwidth).
     pub simulated_secs: f64,
+    /// Bundles evicted from the shard-local store (capacity-bounded LRU).
+    pub evictions: u64,
 }
 
 impl StagingStats {
@@ -40,6 +44,7 @@ impl StagingStats {
         self.misses += other.misses;
         self.bytes += other.bytes;
         self.simulated_secs += other.simulated_secs;
+        self.evictions += other.evictions;
     }
 }
 
@@ -49,6 +54,9 @@ pub struct ImageDistributor {
     root: PathBuf,
     /// Per shard: digest -> staged bundle dir.
     present: Vec<BTreeMap<String, PathBuf>>,
+    /// Per shard: LRU bookkeeping over staged digests (capacity-bounded
+    /// eviction of cold bundles — ROADMAP: registry eviction).
+    lru: Vec<Lru<String>>,
     /// tag -> (digest, shared-registry source dir): lets the cluster
     /// re-stage a migrated job's image on its new shard.
     sources: BTreeMap<String, (String, PathBuf)>,
@@ -59,9 +67,24 @@ pub struct ImageDistributor {
 
 impl ImageDistributor {
     pub fn new(root: impl AsRef<Path>, shards: usize) -> ImageDistributor {
+        Self::with_capacity(root, shards, None)
+    }
+
+    /// A distributor whose per-shard stores are capacity-bounded: staging
+    /// past `cap_bytes` evicts least-recently-used bundles (their staged
+    /// copies are deleted; a later placement of an evicted digest is a
+    /// fresh miss and re-transfers). As with the build pool's store GC,
+    /// eviction does not pin bundles referenced by not-yet-dispatched
+    /// jobs — size the cap above the active working set.
+    pub fn with_capacity(
+        root: impl AsRef<Path>,
+        shards: usize,
+        cap_bytes: Option<u64>,
+    ) -> ImageDistributor {
         ImageDistributor {
             root: root.as_ref().to_path_buf(),
             present: vec![BTreeMap::new(); shards],
+            lru: (0..shards).map(|_| Lru::new(cap_bytes)).collect(),
             sources: BTreeMap::new(),
             sizes: BTreeMap::new(),
             stats: vec![StagingStats::default(); shards],
@@ -115,6 +138,7 @@ impl ImageDistributor {
             .insert(tag.to_string(), (digest.to_string(), source.to_path_buf()));
         if let Some(local) = self.present[shard].get(digest) {
             self.stats[shard].hits += 1;
+            self.lru[shard].touch(&digest.to_string());
             return Ok(local.clone());
         }
         let local_dir = self
@@ -132,6 +156,17 @@ impl ImageDistributor {
         st.bytes += bytes;
         st.simulated_secs += STAGE_LATENCY_SECS + bytes as f64 / STAGE_BANDWIDTH_BYTES_PER_SEC;
         self.present[shard].insert(digest.to_string(), dir.clone());
+        // capacity-bounded store: evict the coldest digests past the cap
+        for ev in self.lru[shard].insert(digest.to_string(), bytes) {
+            if let Some(stale) = self.present[shard].remove(&ev.key) {
+                // only delete what we copied — in-place registrations
+                // point at the shared registry dir, which is not ours
+                if stale.starts_with(&self.root) {
+                    let _ = std::fs::remove_dir_all(&stale);
+                }
+            }
+            self.stats[shard].evictions += 1;
+        }
         Ok(dir)
     }
 
@@ -153,7 +188,7 @@ impl ImageDistributor {
         if let Some(b) = self.sizes.get(digest) {
             return *b;
         }
-        let bytes = dir_size(source).unwrap_or(0);
+        let bytes = crate::util::dir_size(source);
         self.sizes.insert(digest.to_string(), bytes);
         bytes
     }
@@ -170,19 +205,6 @@ fn copy_dir(src: &Path, dst: &Path) -> std::io::Result<u64> {
             bytes += copy_dir(&entry.path(), &to)?;
         } else {
             bytes += std::fs::copy(entry.path(), &to)?;
-        }
-    }
-    Ok(bytes)
-}
-
-fn dir_size(dir: &Path) -> std::io::Result<u64> {
-    let mut bytes = 0;
-    for entry in std::fs::read_dir(dir)? {
-        let entry = entry?;
-        if entry.file_type()?.is_dir() {
-            bytes += dir_size(&entry.path())?;
-        } else {
-            bytes += entry.metadata()?.len();
         }
     }
     Ok(bytes)
@@ -234,6 +256,31 @@ mod tests {
         let (dig, recorded) = dist.source_of("tf:2.1").unwrap();
         assert_eq!(dig, "fnv1a:abc");
         assert_eq!(recorded, src);
+    }
+
+    /// Satellite (registry eviction): a capacity-bounded shard store
+    /// evicts its least-recently-used bundle; re-staging the evicted
+    /// digest is a fresh miss that re-copies the bytes.
+    #[test]
+    fn capacity_bounded_shard_store_evicts_lru_bundle() {
+        let a = fake_bundle("ev_a", &[1u8; 1500]);
+        let b = fake_bundle("ev_b", &[2u8; 1500]);
+        let c = fake_bundle("ev_c", &[3u8; 1500]);
+        let mut dist = ImageDistributor::with_capacity(root("ev_store"), 1, Some(3200));
+        let staged_a = dist.stage(0, "a:1", "fnv1a:a", &a).unwrap();
+        dist.stage(0, "b:1", "fnv1a:b", &b).unwrap();
+        // refresh a: b becomes the eviction candidate
+        dist.stage(0, "a:1", "fnv1a:a", &a).unwrap();
+        dist.stage(0, "c:1", "fnv1a:c", &c).unwrap(); // 4500 > 3200
+        assert!(dist.holds(0, "fnv1a:a") && dist.holds(0, "fnv1a:c"));
+        assert!(!dist.holds(0, "fnv1a:b"), "b was coldest");
+        let s = dist.stats(0);
+        assert_eq!(s.evictions, 1, "{s:?}");
+        assert!(staged_a.exists(), "survivor untouched");
+        // evicted bundle is gone from disk; restaging is a fresh miss
+        let misses_before = dist.stats(0).misses;
+        dist.stage(0, "b:1", "fnv1a:b", &b).unwrap();
+        assert_eq!(dist.stats(0).misses, misses_before + 1);
     }
 
     #[test]

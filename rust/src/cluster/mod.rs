@@ -32,6 +32,8 @@ pub use distributor::{ImageDistributor, StagingStats};
 pub use router::{route, ShardLoad, ShardRouter};
 pub use sim::{simulate_cluster, ClusterSimJob, ClusterSimOutcome};
 
+use crate::data::stage::{DataStageStats, StageManager};
+use crate::data::DatasetSpec;
 use crate::frameworks::Target;
 use crate::scheduler::{JobId, JobRecord, JobScript, NodeSpec, SchedulePolicy, TorqueServer};
 use crate::util::sync::Signal;
@@ -109,6 +111,10 @@ pub struct ClusterConfig {
     pub router: ShardRouter,
     /// Per-shard dispatch policy (every shard runs the same one).
     pub policy: SchedulePolicy,
+    /// Capacity bound on each shard's local caches — the image store AND
+    /// the dataset cache tier — enforced by LRU eviction. `None` disables
+    /// eviction (the default; `modak serve-batch --store-cap-mb` sets it).
+    pub cache_cap_bytes: Option<u64>,
 }
 
 struct Shard {
@@ -139,6 +145,8 @@ pub struct ShardSnapshot {
     pub slot_capacity: usize,
     pub migrations_in: u64,
     pub staging: StagingStats,
+    /// Dataset staging counters for this shard (both tiers).
+    pub data: DataStageStats,
 }
 
 /// N scheduler shards behind one submit/poll surface.
@@ -146,6 +154,10 @@ pub struct ClusterScheduler {
     shards: Vec<Shard>,
     router: ShardRouter,
     distributor: Mutex<ImageDistributor>,
+    /// Tiered dataset staging (shared store -> shard cache -> node
+    /// scratch); shared with every shard's server for node-tier staging
+    /// at dispatch. Lock order: any server lock BEFORE this one.
+    stager: Arc<Mutex<StageManager>>,
     map: Mutex<MapState>,
     signal: Arc<Signal>,
 }
@@ -158,27 +170,36 @@ impl ClusterScheduler {
         cfg: &ClusterConfig,
         signal: Arc<Signal>,
     ) -> ClusterScheduler {
+        let n = cfg.shards.len();
+        let stager = Arc::new(Mutex::new(StageManager::new(
+            n,
+            cfg.cache_cap_bytes,
+            cfg.cache_cap_bytes,
+        )));
         let shards: Vec<Shard> = cfg
             .shards
             .iter()
-            .map(|spec| {
+            .enumerate()
+            .map(|(i, spec)| {
                 let mut server =
                     TorqueServer::boot_nodes(spec.node_specs(), Some(Arc::clone(&signal)));
                 server.set_policy(cfg.policy);
+                server.attach_data_stager(i, Arc::clone(&stager));
                 Shard {
                     server: Mutex::new(server),
                     spec: spec.clone(),
                 }
             })
             .collect();
-        let n = shards.len();
         ClusterScheduler {
             shards,
             router: cfg.router,
-            distributor: Mutex::new(ImageDistributor::new(
+            distributor: Mutex::new(ImageDistributor::with_capacity(
                 store_root.as_ref().join("shard-cache"),
                 n,
+                cfg.cache_cap_bytes,
             )),
+            stager,
             map: Mutex::new(MapState {
                 next_id: 1,
                 migrations_in: vec![0; n],
@@ -212,17 +233,22 @@ impl ClusterScheduler {
     /// `digest`/`bundle_dir` identify the built bundle in the shared
     /// registry; the distributor stages it into the chosen shard's local
     /// store (a miss charges the simulated transfer, a hit is free — and
-    /// the `perf-aware` router saw those costs when choosing).
+    /// the `perf-aware` router saw those costs when choosing). `dataset`
+    /// is the job's declared dataset: it is staged into the chosen shard's
+    /// data cache the same way, and the router's dataset-locality term saw
+    /// that cost too — so data-heavy jobs gravitate to the shard that
+    /// already holds their data.
     pub fn submit(
         &self,
         script: JobScript,
         tag: &str,
         digest: &str,
         bundle_dir: &Path,
+        dataset: Option<&DatasetSpec>,
     ) -> Result<ClusterJobId> {
         let class = TorqueServer::class_of(&script);
         let demand = script.resources.slot_demand();
-        let loads = self.loads(class, demand, digest, bundle_dir);
+        let loads = self.loads(class, demand, digest, bundle_dir, dataset);
         let shard = {
             let mut map = self.map.lock().unwrap();
             route(self.router, &loads, &mut map.rr_cursor)
@@ -239,6 +265,11 @@ impl ClusterScheduler {
             .lock()
             .unwrap()
             .stage(shard, tag, digest, bundle_dir)?;
+        // shard-tier data staging BEFORE qsub: dispatch may fire inside
+        // qsub, and its node-tier staging pulls from this shard's cache
+        if let Some(spec) = dataset {
+            self.stager.lock().unwrap().stage_to_shard(shard, spec);
+        }
         let local = {
             let mut srv = self.shards[shard].server.lock().unwrap();
             srv.register_image(tag, local_dir);
@@ -259,7 +290,11 @@ impl ClusterScheduler {
         demand: usize,
         digest: &str,
         bundle_dir: &Path,
+        dataset: Option<&DatasetSpec>,
     ) -> Vec<ShardLoad> {
+        // dataset-locality estimates first, under the stager lock alone
+        // (lock order: server before stager — never interleave them here)
+        let data_secs = self.stager.lock().unwrap().estimate_all_shards(dataset);
         let mut dist = self.distributor.lock().unwrap();
         self.shards
             .iter()
@@ -274,6 +309,7 @@ impl ClusterScheduler {
                     queued: srv.queued(),
                     backlog_secs: srv.backlog_secs(),
                     staging_secs: dist.estimate_secs(i, digest, bundle_dir),
+                    data_staging_secs: data_secs[i],
                 }
             })
             .collect()
@@ -374,6 +410,16 @@ impl ClusterScheduler {
                 .lock()
                 .unwrap()
                 .stage(to, &tag, &digest, &source)?;
+            // re-stage the migrated job's dataset on the destination shard
+            // (a hit when the destination already holds it, a single fresh
+            // miss otherwise — the counters record exactly one event, so
+            // migration never double-counts staging in the batch report)
+            if let Some(name) = &script.payload.dataset {
+                let spec = self.stager.lock().unwrap().spec_of(name);
+                if let Some(spec) = spec {
+                    self.stager.lock().unwrap().stage_to_shard(to, &spec);
+                }
+            }
             let new_local = {
                 let mut srv = self.shards[to].server.lock().unwrap();
                 srv.register_image(&tag, staged);
@@ -456,6 +502,12 @@ impl ClusterScheduler {
 
     /// Per-shard point-in-time stats for batch reporting.
     pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
+        // dataset counters snapshotted first: the stager lock never nests
+        // inside the distributor's or a server's here
+        let data: Vec<DataStageStats> = {
+            let stager = self.stager.lock().unwrap();
+            (0..self.shards.len()).map(|i| stager.stats(i)).collect()
+        };
         let map = self.map.lock().unwrap();
         let dist = self.distributor.lock().unwrap();
         self.shards
@@ -471,6 +523,7 @@ impl ClusterScheduler {
                     slot_capacity: shard.spec.slot_capacity(),
                     migrations_in: map.migrations_in[i],
                     staging: dist.stats(i),
+                    data: data[i].clone(),
                 }
             })
             .collect()
@@ -479,6 +532,11 @@ impl ClusterScheduler {
     /// Cluster-wide staging counters.
     pub fn staging_totals(&self) -> StagingStats {
         self.distributor.lock().unwrap().totals()
+    }
+
+    /// Cluster-wide dataset staging counters (both tiers).
+    pub fn data_totals(&self) -> DataStageStats {
+        self.stager.lock().unwrap().totals()
     }
 
     /// Sum of per-shard running peaks: an upper bound on the most jobs
@@ -555,6 +613,7 @@ mod tests {
                 lr: 0.05,
                 seed: 0,
                 nv: false,
+                dataset: None,
             },
             predicted_secs: predicted,
         }
@@ -567,6 +626,7 @@ mod tests {
                 shards,
                 router,
                 policy: SchedulePolicy::Fifo,
+                cache_cap_bytes: None,
             },
             Arc::new(Signal::new()),
         )
@@ -629,7 +689,7 @@ mod tests {
         let ghost = PathBuf::from("/not/a/bundle");
         let ids: Vec<ClusterJobId> = (0..4)
             .map(|_| {
-                c.submit(script("img:1", 1, None), "img:1", "fnv1a:x", &ghost)
+                c.submit(script("img:1", 1, None), "img:1", "fnv1a:x", &ghost, None)
                     .unwrap()
             })
             .collect();
@@ -659,14 +719,14 @@ mod tests {
         let ghost = PathBuf::from("/not/a/bundle");
         // demand 2 on a cluster whose largest node has 1 slot
         let err = c
-            .submit(script("img:1", 2, None), "img:1", "fnv1a:x", &ghost)
+            .submit(script("img:1", 2, None), "img:1", "fnv1a:x", &ghost, None)
             .unwrap_err();
         assert!(err.to_string().contains("no shard"), "{err}");
         // gpu job on a cpu-only cluster
         let mut gpu = script("img:1", 1, None);
         gpu.resources.gpus = 1;
         gpu.payload.nv = true;
-        assert!(c.submit(gpu, "img:1", "fnv1a:x", &ghost).is_err());
+        assert!(c.submit(gpu, "img:1", "fnv1a:x", &ghost, None).is_err());
     }
 
     /// Tentpole: the rebalancer migrates a still-queued job from a
@@ -685,13 +745,13 @@ mod tests {
         // unabsorbed — poll is never called here, so the snapshot is
         // deterministic)
         let j1 = c
-            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost)
+            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost, None)
             .unwrap();
         let j2 = c
-            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost)
+            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost, None)
             .unwrap();
         let j3 = c
-            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost)
+            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost, None)
             .unwrap();
         assert_eq!(c.shard_of(j3), Some(0));
         assert_eq!(c.with_job(j3, |r| r.state.code()).unwrap(), 'Q');
@@ -712,5 +772,62 @@ mod tests {
         // the qstat line renders global ids grouped by shard
         let line = c.qstat_line();
         assert!(line.contains("s0:") && line.contains("| s1:"), "{line}");
+    }
+
+    /// Satellite: cross-shard migration with staged data. A withdrawn,
+    /// re-routed job re-stages its dataset on the destination shard (a
+    /// fresh miss there, a hit when the destination already holds it), the
+    /// cluster-global id is preserved, and the staging counters record
+    /// exactly one event per placement — migration never double-counts.
+    #[test]
+    fn migrated_job_restages_dataset_on_destination_shard() {
+        let c = cluster(
+            "rebalance_data",
+            vec![one_node_shard(), one_node_shard()],
+            ShardRouter::RoundRobin,
+        );
+        let ghost = PathBuf::from("/not/a/bundle");
+        let spec = crate::data::DatasetSpec::new("set-a", 1024 * 1024, 1000, 1);
+        let with_data = || {
+            let mut s = script("img:1", 1, Some(5.0));
+            s.payload.dataset = Some(spec.name.clone());
+            s
+        };
+        // round-robin: j1 (data) -> shard 0 runs; j2 (no data) -> shard 1
+        // runs; j3 (data) -> shard 0, queued behind j1
+        let j1 = c
+            .submit(with_data(), "img:1", "fnv1a:x", &ghost, Some(&spec))
+            .unwrap();
+        let j2 = c
+            .submit(script("img:1", 1, Some(5.0)), "img:1", "fnv1a:x", &ghost, None)
+            .unwrap();
+        let j3 = c
+            .submit(with_data(), "img:1", "fnv1a:x", &ghost, Some(&spec))
+            .unwrap();
+        assert_eq!(c.shard_of(j3), Some(0));
+        // after the submits: shard 0 staged the dataset once (j1 miss,
+        // j3 hit); shard 1 never saw it
+        let t = c.data_totals();
+        assert_eq!((t.shard_misses, t.shard_hits), (1, 1), "{t:?}");
+        // shard 1 drains and goes idle; rebalance migrates j3 there
+        c.with_shard(1, |srv| srv.wait_all()).unwrap();
+        c.rebalance().unwrap();
+        assert_eq!(c.migrations(), 1);
+        assert_eq!(c.shard_of(j3), Some(1), "j3 migrated with its identity");
+        // the migration staged the dataset onto the cold destination:
+        // exactly one new shard-tier miss, bytes charged exactly once
+        let t = c.data_totals();
+        assert_eq!((t.shard_misses, t.shard_hits), (2, 1), "{t:?}");
+        let snaps = c.shard_snapshots();
+        assert_eq!(snaps[0].data.shard_misses, 1, "{:?}", snaps[0].data);
+        assert_eq!(snaps[1].data.shard_misses, 1, "{:?}", snaps[1].data);
+        drain(&c, &[j1, j2, j3]);
+        // dispatches staged node-local where the jobs ran: one node miss
+        // per shard that ran a data job, and no extra shard-tier events
+        let t = c.data_totals();
+        assert_eq!(t.shard_misses, 2, "drain added no shard events: {t:?}");
+        assert_eq!(t.node_misses, 2, "{t:?}");
+        // bytes: 2 shard-tier placements + 2 node-tier placements
+        assert_eq!(t.bytes_moved, 4 * spec.size_bytes, "{t:?}");
     }
 }

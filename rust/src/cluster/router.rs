@@ -14,10 +14,12 @@
 //!   normalised backlog, itself the sum of the resident jobs' per-job
 //!   performance-model predictions — plus the simulated image-staging
 //!   cost on shards that do not yet hold the bundle (the
-//!   [`crate::cluster::ImageDistributor`] supplies that term), so routing
-//!   prefers shards where the image is already staged. With uniform
-//!   staging state it coincides with least-loaded; its edge is image
-//!   locality.
+//!   [`crate::cluster::ImageDistributor`] supplies that term) and the
+//!   simulated *dataset*-staging cost on shards whose data cache lacks
+//!   the job's dataset (the [`crate::data::stage::StageManager`] supplies
+//!   that one), so routing prefers shards where the image and the data
+//!   already live. With uniform staging state it coincides with
+//!   least-loaded; its edge is locality.
 
 use anyhow::{bail, Result};
 
@@ -78,6 +80,10 @@ pub struct ShardLoad {
     /// Simulated transfer seconds to stage this job's image here
     /// (0.0 when the shard already holds the digest).
     pub staging_secs: f64,
+    /// Simulated transfer seconds to stage this job's *dataset* here
+    /// (0.0 when the shard's dataset cache holds it, or the job has no
+    /// dataset). Supplied by [`crate::data::stage::StageManager`].
+    pub data_staging_secs: f64,
 }
 
 impl ShardLoad {
@@ -118,7 +124,8 @@ pub fn route(router: ShardRouter, loads: &[ShardLoad], rr_cursor: &mut usize) ->
         ShardRouter::PerfAware => eligible
             .iter()
             .min_by(|a, b| {
-                let cost = |l: &ShardLoad| l.pressure() + l.staging_secs;
+                let cost =
+                    |l: &ShardLoad| l.pressure() + l.staging_secs + l.data_staging_secs;
                 cost(a)
                     .total_cmp(&cost(b))
                     .then(b.free_slots.cmp(&a.free_slots))
@@ -141,6 +148,7 @@ mod tests {
             queued: 0,
             backlog_secs: backlog,
             staging_secs: staging,
+            data_staging_secs: 0.0,
         }
     }
 
@@ -203,6 +211,27 @@ mod tests {
         assert_eq!(
             route(ShardRouter::PerfAware, &[busy, b], &mut cursor),
             Some(1)
+        );
+    }
+
+    /// Tentpole: the dataset-locality term sits next to image locality in
+    /// the perf-aware cost; routers that ignore data stay data-blind.
+    #[test]
+    fn perf_aware_prefers_shard_already_holding_the_dataset() {
+        // equal backlog and image state; shard 0 must stage the dataset
+        let mut cold = load(0, 10.0, 0.0);
+        cold.data_staging_secs = 5.0;
+        let warm = load(1, 10.0, 0.0);
+        let mut cursor = 0;
+        assert_eq!(
+            route(ShardRouter::PerfAware, &[cold.clone(), warm.clone()], &mut cursor),
+            Some(1)
+        );
+        // least-loaded ignores the data term: equal pressure falls back to
+        // the shard-id tie-break
+        assert_eq!(
+            route(ShardRouter::LeastLoaded, &[cold, warm], &mut cursor),
+            Some(0)
         );
     }
 }

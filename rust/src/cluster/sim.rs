@@ -94,6 +94,7 @@ impl SimShard {
             queued: self.queued.len(),
             backlog_secs,
             staging_secs: 0.0,
+            data_staging_secs: 0.0,
         }
     }
 }

@@ -23,7 +23,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::executor::{CopyPolicy, ExecPolicy};
 use crate::runtime::{Manifest, VariantBinding};
+use crate::util::dir_size;
 use crate::util::json::Json;
+use crate::util::lru::Lru;
 
 use super::definition::DefinitionFile;
 use super::image::{Digest, Image, Layer};
@@ -256,6 +258,9 @@ pub struct BuildStats {
     /// Requests satisfied without a build: an identical in-flight or
     /// completed build (digest-keyed), or a prebuilt bundle on disk.
     pub cache_hits: usize,
+    /// Cold bundles garbage-collected from the store (capacity-bounded
+    /// LRU; see `--store-cap-mb`).
+    pub evictions: usize,
 }
 
 /// State of one digest-keyed build slot.
@@ -274,6 +279,9 @@ struct PoolState {
     /// Builds currently executing (capped at `max_workers`).
     active: usize,
     stats: BuildStats,
+    /// LRU bookkeeping over completed bundles (key = cache key, bytes =
+    /// bundle dir size); bounds the store when a cap is set.
+    lru: Lru<String>,
 }
 
 /// A concurrent front to the [`Builder`]: callers from many threads request
@@ -299,7 +307,41 @@ impl BuildPool {
     /// a restarted service reuses prior builds instead of redoing them
     /// (ROADMAP: registry persistence).
     pub fn new(store: impl AsRef<Path>, artifacts: Manifest, max_workers: usize) -> BuildPool {
+        Self::with_capacity(store, artifacts, max_workers, None)
+    }
+
+    /// [`Self::new`] with a byte cap on the store: after every successful
+    /// build, bundles past the cap are garbage-collected coldest-first
+    /// (their dirs deleted, their index entries dropped — an evicted image
+    /// rebuilds on demand). Bundles restored from the persisted index are
+    /// tracked too, so a restarted service still evicts its history.
+    ///
+    /// Known limit: eviction does not pin bundles referenced by queued or
+    /// running jobs (the pool has no view of the scheduler). A cap sized
+    /// well below the working set can evict a bundle between qsub and
+    /// dispatch, failing that job at launch — size the cap generously;
+    /// reference-pinned eviction is a ROADMAP follow-on.
+    pub fn with_capacity(
+        store: impl AsRef<Path>,
+        artifacts: Manifest,
+        max_workers: usize,
+        store_cap_bytes: Option<u64>,
+    ) -> BuildPool {
         let slots = load_index(store.as_ref());
+        let mut lru = Lru::new(store_cap_bytes);
+        // seed in sorted order so restart-time recency (and therefore any
+        // later eviction tie-breaks) is deterministic
+        let mut restored: Vec<(String, u64)> = slots
+            .iter()
+            .filter_map(|(key, slot)| match slot {
+                BuildSlot::Done(img) => Some((key.clone(), dir_size(&img.dir))),
+                _ => None,
+            })
+            .collect();
+        restored.sort();
+        for (key, bytes) in restored {
+            lru.insert(key, bytes);
+        }
         BuildPool {
             builder: Builder::new(store, artifacts),
             max_workers: max_workers.max(1),
@@ -307,6 +349,7 @@ impl BuildPool {
                 slots,
                 active: 0,
                 stats: BuildStats::default(),
+                lru,
             }),
             cv: Condvar::new(),
         }
@@ -346,6 +389,7 @@ impl BuildPool {
             match found {
                 Found::Done(img) => {
                     st.stats.cache_hits += 1;
+                    st.lru.touch(&key); // keep hot bundles off the GC list
                     return Ok(img);
                 }
                 Found::Failed(e) => {
@@ -375,11 +419,21 @@ impl BuildPool {
 
         let mut st = self.state.lock().unwrap();
         st.active -= 1;
+        let mut evicted_dirs: Vec<PathBuf> = Vec::new();
         let index_snapshot = match &result {
             Ok(img) => {
                 st.stats.builds += 1;
-                st.slots.insert(key, BuildSlot::Done(img.clone()));
-                // append-on-build: serialize the index under the lock...
+                st.slots.insert(key.clone(), BuildSlot::Done(img.clone()));
+                // store GC: track the new bundle, collect whatever the LRU
+                // pushed past the cap (never the bundle just built)
+                for ev in st.lru.insert(key, dir_size(&img.dir)) {
+                    if let Some(BuildSlot::Done(old)) = st.slots.remove(&ev.key) {
+                        evicted_dirs.push(old.dir);
+                    }
+                    st.stats.evictions += 1;
+                }
+                // append-on-build: serialize the index under the lock
+                // (evicted entries are already gone from the slots)...
                 Some(render_index(&st))
             }
             Err(e) => {
@@ -393,6 +447,9 @@ impl BuildPool {
         // queue behind file I/O. Concurrent writers last-write-wins on a
         // whole-file write; a momentarily stale index only costs a rebuild
         // after a restart, never correctness.
+        for dir in evicted_dirs {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
         if let Some(text) = index_snapshot {
             let path = index_path(self.builder.store());
             if let Some(dir) = path.parent() {
@@ -639,6 +696,50 @@ mod tests {
         let rebuilt = third.build_cached("base", "os", &base_def()).unwrap();
         assert_eq!(third.stats().builds, 1, "stale entry must rebuild");
         assert_eq!(rebuilt.digest, img.digest);
+    }
+
+    /// Satellite (ROADMAP: registry eviction): a capacity-bounded store
+    /// garbage-collects the coldest bundle — its dir is deleted and its
+    /// `build_index.json` entry dropped — and an evicted image rebuilds on
+    /// demand in a fresh pool.
+    #[test]
+    fn store_cap_evicts_cold_bundles_and_honours_the_index() {
+        let dir = store("pool_evict");
+        // each base-OS bundle is a small dir; cap the store at one bundle
+        let probe = BuildPool::new(&dir, empty_manifest(), 1);
+        let first = probe.build_cached("base", "a", &base_def()).unwrap();
+        let bundle_bytes = dir_size(&first.dir).max(1);
+        drop(probe);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let pool = BuildPool::with_capacity(
+            &dir,
+            empty_manifest(),
+            1,
+            Some(bundle_bytes + bundle_bytes / 2), // fits 1, not 2
+        );
+        let a = pool.build_cached("base", "a", &base_def()).unwrap();
+        let mut def_b = base_def();
+        def_b.post.push("pip install extras".into());
+        let b = pool.build_cached("base", "b", &def_b).unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.builds, 2, "{stats:?}");
+        assert_eq!(stats.evictions, 1, "a evicted to fit b: {stats:?}");
+        assert!(!a.dir.exists(), "evicted bundle deleted from the store");
+        assert!(b.dir.exists(), "freshly built bundle kept");
+        // the persisted index honours the eviction: the evicted bundle's
+        // entry is gone, the survivor's remains
+        let text = std::fs::read_to_string(index_path(&dir)).unwrap();
+        assert!(
+            !text.contains(a.dir.to_string_lossy().as_ref()),
+            "index still references the evicted bundle: {text}"
+        );
+        assert!(text.contains(b.dir.to_string_lossy().as_ref()), "{text}");
+        // a restarted pool rebuilds the evicted image on demand
+        let restarted = BuildPool::with_capacity(&dir, empty_manifest(), 1, None);
+        let again = restarted.build_cached("base", "a", &base_def()).unwrap();
+        assert_eq!(restarted.stats().builds, 1, "evicted image rebuilt");
+        assert_eq!(again.digest, a.digest);
     }
 
     #[test]

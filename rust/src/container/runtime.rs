@@ -8,10 +8,11 @@
 
 use anyhow::{bail, Result};
 
+use crate::data::IoProfile;
 use crate::executor::TrainSession;
 use crate::frameworks::Target;
 use crate::runtime::{Engine, Manifest};
-use crate::trainer::{train_cancellable, TrainConfig, TrainReport};
+use crate::trainer::{train_with_io, TrainConfig, TrainReport};
 use crate::util::sync::CancelToken;
 
 use super::image::Image;
@@ -21,6 +22,10 @@ use super::image::Image;
 pub struct RunOptions {
     /// `--nv`: bind the host NVIDIA stack into the container.
     pub nv: bool,
+    /// Dataset streaming-IO profile for the node-staged dataset (None =
+    /// synthetic in-memory data, no IO simulation). The training loop
+    /// routes batches through the double-buffered prefetcher when set.
+    pub io: Option<IoProfile>,
 }
 
 /// The container runtime bound to one node's device.
@@ -104,7 +109,7 @@ impl<'e> ContainerRuntime<'e> {
             seed,
             lr,
         )?;
-        let report = train_cancellable(&mut session, cfg, kill)?;
+        let report = train_with_io(&mut session, cfg, kill, opts.io.as_ref())?;
         Ok(ContainerRun {
             image: image.reference(),
             workload,
@@ -193,8 +198,12 @@ mod tests {
         let c = Checker {
             target: Target::GpuSim,
         };
-        assert!(c.check(&img, &RunOptions { nv: false }).is_err());
-        assert!(c.check(&img, &RunOptions { nv: true }).is_ok());
+        let nv = |nv: bool| RunOptions {
+            nv,
+            ..RunOptions::default()
+        };
+        assert!(c.check(&img, &nv(false)).is_err());
+        assert!(c.check(&img, &nv(true)).is_ok());
     }
 
     #[test]
@@ -203,7 +212,11 @@ mod tests {
         let c = Checker {
             target: Target::Cpu,
         };
-        assert!(c.check(&img, &RunOptions { nv: true }).is_err());
+        let opts = RunOptions {
+            nv: true,
+            ..RunOptions::default()
+        };
+        assert!(c.check(&img, &opts).is_err());
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Tiered dataset staging: shared store → shard-local cache → node-local
+//! scratch, digest-keyed, with per-tier simulated transfer costs and
+//! capacity-bounded LRU eviction.
+//!
+//! Generalises the transfer model of [`crate::cluster::ImageDistributor`]
+//! (latency + bytes/bandwidth per placement, hit/miss/bytes counters) to a
+//! second tier: a dataset must first reach the *shard* cache (charged at
+//! shared-store bandwidth), then the *node* scratch of whichever node the
+//! job dispatches to (charged at the faster rack-local bandwidth). Repeat
+//! placements at either tier are hits. Both tiers evict least-recently-used
+//! datasets when capacity-bounded ([`crate::util::lru`]), so a shard that
+//! churns through many datasets re-stages cold ones — exactly the behaviour
+//! the dataset-locality router term exists to avoid.
+
+use std::collections::BTreeMap;
+
+use crate::data::{
+    DatasetSpec, IoProfile, NODE_BW_BYTES_PER_SEC, NODE_LATENCY_SECS,
+    SHARED_BW_BYTES_PER_SEC, SHARED_LATENCY_SECS,
+};
+use crate::util::lru::Lru;
+
+/// Per-shard dataset staging counters (surfaced in the batch report).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DataStageStats {
+    /// Shard-tier placements that found the digest cached.
+    pub shard_hits: u64,
+    /// Shard-tier first placements (shared store → shard transfer).
+    pub shard_misses: u64,
+    /// Node-tier placements that found the digest on the node's scratch.
+    pub node_hits: u64,
+    /// Node-tier first placements (shard cache → node transfer).
+    pub node_misses: u64,
+    /// Bytes moved across both tiers.
+    pub bytes_moved: u64,
+    /// Simulated transfer seconds charged across both tiers.
+    pub simulated_secs: f64,
+    /// Datasets evicted from this shard's caches (both tiers).
+    pub evictions: u64,
+}
+
+impl DataStageStats {
+    pub fn accumulate(&mut self, other: &DataStageStats) {
+        self.shard_hits += other.shard_hits;
+        self.shard_misses += other.shard_misses;
+        self.node_hits += other.node_hits;
+        self.node_misses += other.node_misses;
+        self.bytes_moved += other.bytes_moved;
+        self.simulated_secs += other.simulated_secs;
+        self.evictions += other.evictions;
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.shard_hits + self.node_hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.shard_misses + self.node_misses
+    }
+}
+
+/// Digest-keyed tiered staging across a cluster's shards and nodes.
+pub struct StageManager {
+    /// Per shard: digest -> LRU slot (bytes = dataset size).
+    shard_caches: Vec<Lru<String>>,
+    /// Per (shard, node): digest -> LRU slot on that node's scratch.
+    node_caches: BTreeMap<(usize, usize), Lru<String>>,
+    node_cap_bytes: Option<u64>,
+    /// name -> spec recorded at first staging: the migration path and the
+    /// node dispatch hook look datasets up by the payload's name.
+    specs: BTreeMap<String, DatasetSpec>,
+    stats: Vec<DataStageStats>,
+}
+
+impl StageManager {
+    /// A manager over `shards` shards. `shard_cap_bytes` bounds each
+    /// shard-local cache, `node_cap_bytes` each node's scratch; `None`
+    /// disables eviction at that tier.
+    pub fn new(
+        shards: usize,
+        shard_cap_bytes: Option<u64>,
+        node_cap_bytes: Option<u64>,
+    ) -> StageManager {
+        StageManager {
+            shard_caches: (0..shards).map(|_| Lru::new(shard_cap_bytes)).collect(),
+            node_caches: BTreeMap::new(),
+            node_cap_bytes,
+            specs: BTreeMap::new(),
+            stats: vec![DataStageStats::default(); shards],
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shard_caches.len()
+    }
+
+    /// Does `shard`'s cache currently hold the dataset?
+    pub fn shard_holds(&self, shard: usize, spec: &DatasetSpec) -> bool {
+        self.shard_caches[shard].contains(&spec.digest)
+    }
+
+    /// Simulated seconds to make the dataset shard-resident: 0.0 when
+    /// cached. This is the router's dataset-locality term.
+    pub fn estimate_shard_secs(&self, shard: usize, spec: &DatasetSpec) -> f64 {
+        if self.shard_holds(shard, spec) {
+            0.0
+        } else {
+            spec.transfer_secs(SHARED_LATENCY_SECS, SHARED_BW_BYTES_PER_SEC)
+        }
+    }
+
+    /// Locality estimates for every shard at once (one lock acquisition in
+    /// the cluster's routing path).
+    pub fn estimate_all_shards(&self, spec: Option<&DatasetSpec>) -> Vec<f64> {
+        (0..self.shard_count())
+            .map(|s| spec.map_or(0.0, |sp| self.estimate_shard_secs(s, sp)))
+            .collect()
+    }
+
+    /// The spec recorded for `name` at first staging (migration re-staging
+    /// and node dispatch both key by the payload's dataset name).
+    pub fn spec_of(&self, name: &str) -> Option<DatasetSpec> {
+        self.specs.get(name).cloned()
+    }
+
+    /// Ensure the dataset is resident in `shard`'s cache. First placement
+    /// charges the shared-store transfer and may evict colder datasets;
+    /// repeats are hits. Returns the simulated seconds charged (0.0 on hit).
+    pub fn stage_to_shard(&mut self, shard: usize, spec: &DatasetSpec) -> f64 {
+        self.specs.insert(spec.name.clone(), spec.clone());
+        let cache = &mut self.shard_caches[shard];
+        if cache.touch(&spec.digest) {
+            self.stats[shard].shard_hits += 1;
+            return 0.0;
+        }
+        let evicted = cache.insert(spec.digest.clone(), spec.size_bytes);
+        let secs = spec.transfer_secs(SHARED_LATENCY_SECS, SHARED_BW_BYTES_PER_SEC);
+        let st = &mut self.stats[shard];
+        st.shard_misses += 1;
+        st.bytes_moved += spec.size_bytes;
+        st.simulated_secs += secs;
+        st.evictions += evicted.len() as u64;
+        secs
+    }
+
+    /// Ensure the dataset named by the job payload is on `node`'s scratch
+    /// (staging it into the shard cache first if it is somehow not there),
+    /// and hand back the streaming-IO profile the training loop's
+    /// prefetcher should simulate. `None` when the name was never staged
+    /// through this manager — the synthetic in-memory fallback.
+    pub fn stage_to_node(&mut self, shard: usize, node: usize, name: &str) -> Option<IoProfile> {
+        let spec = self.spec_of(name)?;
+        // tier 1 first: a node can only pull from its own shard's cache
+        if !self.shard_holds(shard, &spec) {
+            self.stage_to_shard(shard, &spec);
+        }
+        let cap = self.node_cap_bytes;
+        let cache = self
+            .node_caches
+            .entry((shard, node))
+            .or_insert_with(|| Lru::new(cap));
+        if cache.touch(&spec.digest) {
+            self.stats[shard].node_hits += 1;
+        } else {
+            let evicted = cache.insert(spec.digest.clone(), spec.size_bytes);
+            let secs = spec.transfer_secs(NODE_LATENCY_SECS, NODE_BW_BYTES_PER_SEC);
+            let st = &mut self.stats[shard];
+            st.node_misses += 1;
+            st.bytes_moved += spec.size_bytes;
+            st.simulated_secs += secs;
+            st.evictions += evicted.len() as u64;
+        }
+        Some(IoProfile::for_spec(&spec))
+    }
+
+    /// One shard's staging counters.
+    pub fn stats(&self, shard: usize) -> DataStageStats {
+        self.stats[shard].clone()
+    }
+
+    /// Cluster-wide staging counters.
+    pub fn totals(&self) -> DataStageStats {
+        let mut t = DataStageStats::default();
+        for s in &self.stats {
+            t.accumulate(s);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, mb: u64) -> DatasetSpec {
+        DatasetSpec::new(name, mb * 1024 * 1024, 10_000, 2)
+    }
+
+    #[test]
+    fn first_shard_placement_is_a_miss_then_hits_and_shards_are_independent() {
+        let mut sm = StageManager::new(2, None, None);
+        let d = spec("mnist", 47);
+        assert!(sm.estimate_shard_secs(0, &d) > 0.0);
+        let secs = sm.stage_to_shard(0, &d);
+        assert!(secs >= SHARED_LATENCY_SECS);
+        assert_eq!(sm.estimate_shard_secs(0, &d), 0.0, "now cached");
+        assert_eq!(sm.stage_to_shard(0, &d), 0.0, "repeat is a free hit");
+        let s = sm.stats(0);
+        assert_eq!((s.shard_hits, s.shard_misses), (1, 1));
+        assert_eq!(s.bytes_moved, d.size_bytes);
+        // the other shard is cold
+        assert!(!sm.shard_holds(1, &d));
+        sm.stage_to_shard(1, &d);
+        let t = sm.totals();
+        assert_eq!((t.shard_hits, t.shard_misses), (1, 2));
+        assert_eq!(t.bytes_moved, 2 * d.size_bytes);
+        // estimate_all_shards: both warm now, and None means no dataset
+        assert_eq!(sm.estimate_all_shards(Some(&d)), vec![0.0, 0.0]);
+        assert_eq!(sm.estimate_all_shards(None), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn node_tier_charges_the_faster_transfer_once_per_node() {
+        let mut sm = StageManager::new(1, None, None);
+        let d = spec("mnist", 47);
+        sm.stage_to_shard(0, &d);
+        let io = sm.stage_to_node(0, 3, "mnist").expect("spec recorded");
+        assert!(io.secs_per_sample > 0.0);
+        let s = sm.stats(0);
+        assert_eq!((s.node_hits, s.node_misses), (0, 1));
+        // node transfer is cheaper than the shared-store transfer
+        let node_secs = d.transfer_secs(NODE_LATENCY_SECS, NODE_BW_BYTES_PER_SEC);
+        let shard_secs = d.transfer_secs(SHARED_LATENCY_SECS, SHARED_BW_BYTES_PER_SEC);
+        assert!(node_secs < shard_secs);
+        // same node again: hit; different node: its own miss
+        sm.stage_to_node(0, 3, "mnist");
+        sm.stage_to_node(0, 4, "mnist");
+        let s = sm.stats(0);
+        assert_eq!((s.node_hits, s.node_misses), (1, 2));
+        // unknown dataset name: synthetic fallback, no IO simulation
+        assert!(sm.stage_to_node(0, 3, "never-staged").is_none());
+    }
+
+    #[test]
+    fn node_stage_backfills_a_cold_shard_cache_first() {
+        let mut sm = StageManager::new(2, None, None);
+        let d = spec("d", 10);
+        sm.stage_to_shard(0, &d); // records the spec under its name
+        // shard 1 never staged the dataset; a node dispatch there must
+        // charge the shard tier too (migration without a prior submit)
+        sm.stage_to_node(1, 0, "d").unwrap();
+        let s = sm.stats(1);
+        assert_eq!(s.shard_misses, 1, "{s:?}");
+        assert_eq!(s.node_misses, 1, "{s:?}");
+        assert_eq!(s.bytes_moved, 2 * d.size_bytes);
+    }
+
+    /// Tentpole: capacity-bounded tiers evict LRU datasets; a churned-out
+    /// dataset is a fresh miss when it comes back.
+    #[test]
+    fn capacity_bounded_shard_cache_evicts_lru_dataset() {
+        let mb = 1024 * 1024;
+        let mut sm = StageManager::new(1, Some(100 * mb), None);
+        let a = spec("a", 45);
+        let b = spec("b", 45);
+        let c = spec("c", 45);
+        sm.stage_to_shard(0, &a);
+        sm.stage_to_shard(0, &b);
+        sm.stage_to_shard(0, &a); // refresh a: b is now the cold one
+        sm.stage_to_shard(0, &c); // 135 MB > 100 MB: evicts b
+        assert!(sm.shard_holds(0, &a) && sm.shard_holds(0, &c));
+        assert!(!sm.shard_holds(0, &b), "b was least recently used");
+        let s = sm.stats(0);
+        assert_eq!(s.evictions, 1, "{s:?}");
+        // b comes back: a fresh miss, moving its bytes again
+        let before = sm.stats(0).bytes_moved;
+        assert!(sm.stage_to_shard(0, &b) > 0.0);
+        assert_eq!(sm.stats(0).bytes_moved, before + b.size_bytes);
+    }
+
+    #[test]
+    fn deterministic_across_identical_runs() {
+        let run = || {
+            let mut sm = StageManager::new(2, Some(90 * 1024 * 1024), None);
+            for i in 0..6 {
+                let d = spec(&format!("d{}", i % 3), 40);
+                sm.stage_to_shard(i % 2, &d);
+            }
+            sm.totals()
+        };
+        assert_eq!(run(), run());
+    }
+}

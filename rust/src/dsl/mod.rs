@@ -15,6 +15,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::data::DatasetRequest;
 use crate::util::json::Json;
 
 /// MODAK's three supported application types (paper §III).
@@ -79,6 +80,12 @@ pub struct Optimisation {
     /// the job's walltime from the performance-model prediction
     /// (`k x predicted`, clamped) instead of a fixed constant.
     pub walltime_secs: Option<u64>,
+    /// Optional `dataset:` block — the named dataset the job trains on.
+    /// Resolved through the [`crate::data::DatasetCatalog`] at planning
+    /// (explicit `size_mb`/`samples`/`shards` fields override or define
+    /// the entry); omitted = synthetic in-memory data, exactly the
+    /// pre-data-path behaviour.
+    pub dataset: Option<DatasetRequest>,
 }
 
 const KNOWN_COMPILERS: &[&str] = &["xla", "ngraph", "glow"];
@@ -148,6 +155,7 @@ impl Optimisation {
                 .as_f64()
                 .filter(|v| *v >= 1.0)
                 .map(|v| v as u64),
+            dataset: parse_dataset(o.get("dataset"))?,
         })
     }
 
@@ -186,6 +194,20 @@ impl Optimisation {
         if let Some(w) = self.walltime_secs {
             inner.set("walltime_secs", Json::from(w as f64));
         }
+        if let Some(d) = &self.dataset {
+            let mut dj = Json::obj();
+            dj.set("name", Json::from(d.name.as_str()));
+            if let Some(b) = d.size_bytes {
+                dj.set("size_mb", Json::from((b / (1024 * 1024)) as f64));
+            }
+            if let Some(s) = d.samples {
+                dj.set("samples", Json::from(s as f64));
+            }
+            if let Some(s) = d.shard_files {
+                dj.set("shards", Json::from(s as f64));
+            }
+            inner.set("dataset", dj);
+        }
         let mut root = Json::obj();
         root.set("optimisation", inner);
         root
@@ -202,6 +224,31 @@ impl Optimisation {
             })
             .unwrap_or(false)
     }
+}
+
+/// Parse the optional `dataset:` block. A present block must name the
+/// dataset; size/samples/shards are optional overrides (size in MB).
+fn parse_dataset(d: &Json) -> Result<Option<DatasetRequest>> {
+    if d.is_null() {
+        return Ok(None);
+    }
+    let name = d
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow!("dataset block missing name"))?
+        .to_string();
+    let non_neg = |field: &str| -> Result<Option<f64>> {
+        match d.get(field).as_f64() {
+            Some(v) if v < 0.0 => bail!("dataset {field} must be non-negative, got {v}"),
+            other => Ok(other),
+        }
+    };
+    Ok(Some(DatasetRequest {
+        name,
+        size_bytes: non_neg("size_mb")?.map(|mb| (mb * 1024.0 * 1024.0) as u64),
+        samples: non_neg("samples")?.map(|v| v as u64),
+        shard_files: non_neg("shards")?.map(|v| v as u32),
+    }))
 }
 
 /// The paper's Listing 1, verbatim.
@@ -292,6 +339,50 @@ mod tests {
             .unwrap();
             assert_eq!(opt.walltime_secs, None, "walltime_secs {bad}");
         }
+    }
+
+    /// Tentpole: the `dataset:` block parses, validates, and round-trips.
+    #[test]
+    fn dataset_block_parses_and_roundtrips() {
+        let opt = Optimisation::parse(
+            r#"{"app_type": "ai_training",
+                "dataset": {"name": "imagenet-mini", "size_mb": 2048,
+                            "samples": 50000, "shards": 8},
+                "ai_training": {"tensorflow": {"version": "2.1"}}}"#,
+        )
+        .unwrap();
+        let d = opt.dataset.as_ref().expect("dataset parsed");
+        assert_eq!(d.name, "imagenet-mini");
+        assert_eq!(d.size_bytes, Some(2048 * 1024 * 1024));
+        assert_eq!(d.samples, Some(50_000));
+        assert_eq!(d.shard_files, Some(8));
+        let back = Optimisation::parse(&opt.to_json().to_string_pretty()).unwrap();
+        assert_eq!(opt, back);
+        // name-only reference (catalog supplies the shape)
+        let opt = Optimisation::parse(
+            r#"{"app_type": "ai_training",
+                "dataset": {"name": "mnist-60k"},
+                "ai_training": {"pytorch": {"version": "1.14"}}}"#,
+        )
+        .unwrap();
+        let d = opt.dataset.unwrap();
+        assert_eq!(d.name, "mnist-60k");
+        assert_eq!(d.size_bytes, None);
+        // a block without a name is an error; negative sizes rejected
+        assert!(Optimisation::parse(
+            r#"{"app_type": "ai_training", "dataset": {"size_mb": 10},
+                "ai_training": {"pytorch": {}}}"#
+        )
+        .is_err());
+        assert!(Optimisation::parse(
+            r#"{"app_type": "ai_training",
+                "dataset": {"name": "x", "size_mb": -5},
+                "ai_training": {"pytorch": {}}}"#
+        )
+        .is_err());
+        // no block at all: None, the synthetic in-memory path
+        let opt = Optimisation::parse(LISTING_1).unwrap();
+        assert_eq!(opt.dataset, None);
     }
 
     #[test]

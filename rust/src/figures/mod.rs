@@ -146,6 +146,7 @@ impl<'a> Harness<'a> {
                 lr: cfg.lr,
                 seed: cfg.seed,
                 nv: profile.target == Target::GpuSim,
+                dataset: None,
             },
             predicted_secs: None,
         };

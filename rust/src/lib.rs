@@ -12,6 +12,7 @@
 
 pub mod cluster;
 pub mod container;
+pub mod data;
 pub mod dsl;
 pub mod metrics;
 pub mod optimiser;

@@ -43,6 +43,7 @@ USAGE:
               [--shards N] [--router round-robin|least-loaded|perf-aware]
               [--max-build-workers N] [--slots-per-node N]
               [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
+              [--store-cap-mb N]
   modak build --tag <image:tag>
   modak registry [--table1]
   modak submit --script <file>
@@ -67,7 +68,15 @@ COMMON FLAGS:
                           per-shard image staging + queue rebalancing)
   --router <r>            shard routing rule: round-robin (default) |
                           least-loaded | perf-aware (model-predicted
-                          queue backlog + image-staging cost)
+                          queue backlog + image- and dataset-staging cost)
+  --store-cap-mb <n>      byte cap on the bundle store and the per-shard
+                          caches: cold image bundles and datasets past the
+                          cap are garbage-collected LRU-first (default:
+                          unbounded). DSL requests may declare a
+                          \"dataset\": {name, size_mb, samples, shards}
+                          block; MODAK stages it shared store -> shard
+                          cache -> node scratch and overlaps streaming IO
+                          with compute (see README, data pipeline)
 ";
 
 fn main() {
@@ -175,6 +184,11 @@ fn service_config(cli: &Cli) -> Result<ServiceConfig> {
             None => defaults.router,
             Some(r) => ShardRouter::parse(r)?,
         },
+        // 0 is treated as "no cap" rather than an instantly-full store
+        store_cap_mb: match cli.get_usize("store-cap-mb", 0)? {
+            0 => None,
+            mb => Some(mb as u64),
+        },
     })
 }
 
@@ -229,6 +243,15 @@ fn cmd_optimise(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Resul
     println!("  digest:    {}", plan.image.digest);
     if let Some(p) = plan.predicted_secs {
         println!("  predicted: {p:.2} s");
+    }
+    if let (Some(d), Some(io)) = (&plan.dataset, &plan.io) {
+        println!(
+            "  dataset:   {} ({} MB; cold staging {:.2}s, streaming {:.3}s/step)",
+            d.name,
+            d.size_bytes / (1024 * 1024),
+            io.cold_stage_secs(),
+            io.per_step_secs,
+        );
     }
     for note in &plan.notes {
         println!("  note: {note}");

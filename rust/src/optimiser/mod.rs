@@ -21,9 +21,10 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::container::Image;
+use crate::data::{DatasetCatalog, DatasetSpec, IoEstimate};
 use crate::dsl::Optimisation;
 use crate::frameworks::{ImageSource, Profile, Target};
-use crate::perfmodel::{Features, PerfModel};
+use crate::perfmodel::{io_adjusted_secs, Features, PerfModel};
 use crate::registry::{Query, RegistryHandle};
 use crate::runtime::Manifest;
 use crate::scheduler::{JobScript, Payload, Resources};
@@ -35,8 +36,14 @@ pub struct DeploymentPlan {
     pub profile: Profile,
     pub image: Image,
     pub script: JobScript,
-    /// Model prediction for the run (None until the model is trained).
+    /// Model prediction for the run — IO-adjusted when the request names a
+    /// dataset (None until the model is trained).
     pub predicted_secs: Option<f64>,
+    /// The dataset the request declared, resolved through the catalog
+    /// (None = synthetic in-memory data).
+    pub dataset: Option<DatasetSpec>,
+    /// Per-tier staged-IO prediction for the dataset (None without one).
+    pub io: Option<IoEstimate>,
     /// Human-readable notes about the decisions taken.
     pub notes: Vec<String>,
 }
@@ -52,6 +59,7 @@ pub fn plan_deployment(
     registry: &RegistryHandle,
     model: &PerfModel,
     manifest: &Manifest,
+    catalog: &DatasetCatalog,
     dsl: &Optimisation,
     cfg: &TrainConfig,
 ) -> Result<DeploymentPlan> {
@@ -157,11 +165,48 @@ pub fn plan_deployment(
     // 4. job script, carrying the model prediction so the scheduler can
     // pack by expected runtime (sjf) and size reservation shadows
     let wl = manifest.workload(chosen.workload)?;
-    let predicted_secs = model.predict(&Features::derive(&chosen, wl, cfg));
-    let walltime = derive_walltime(dsl.walltime_secs, predicted_secs);
+    let compute_pred = model.predict(&Features::derive(&chosen, wl, cfg));
+
+    // IO-aware planning: resolve the declared dataset through the catalog
+    // and predict staged-IO per tier. The prediction the scheduler packs
+    // by is IO-adjusted (streaming IO not hidden by the prefetch overlap
+    // stalls the step loop), and the walltime request absorbs the
+    // worst-case cold staging so a cold-data job is not killed by a
+    // walltime sized for warm data.
+    let steps = cfg.epochs * cfg.steps_per_epoch;
+    let dataset = dsl.dataset.as_ref().map(|req| catalog.resolve(req));
+    let io = dataset
+        .as_ref()
+        .map(|spec| IoEstimate::derive(spec, wl.batch, steps));
+    let predicted_secs = match (&io, compute_pred) {
+        (Some(est), Some(p)) => {
+            let adjusted = io_adjusted_secs(p, est.per_step_secs, steps as f64);
+            if adjusted > p {
+                notes.push(format!(
+                    "prediction {p:.2}s -> {adjusted:.2}s after dataset IO \
+                     ({:.3}s/step streaming)",
+                    est.per_step_secs
+                ));
+            }
+            Some(adjusted)
+        }
+        _ => compute_pred,
+    };
+    let cold_stage_secs = io.as_ref().map_or(0.0, |est| est.cold_stage_secs());
+    if let (Some(spec), Some(est)) = (&dataset, &io) {
+        notes.push(format!(
+            "dataset {} ({} MB): staged_io_secs shard {:.2}s + node {:.2}s (cold)",
+            spec.name,
+            spec.size_bytes / (1024 * 1024),
+            est.shard_stage_secs,
+            est.node_stage_secs,
+        ));
+    }
+    let walltime = derive_walltime(dsl.walltime_secs, predicted_secs, cold_stage_secs);
     if let (None, Some(p)) = (dsl.walltime_secs, predicted_secs) {
         notes.push(format!(
-            "walltime {}s derived from prediction ({p:.2}s x {WALLTIME_HEADROOM_FACTOR}, clamped)",
+            "walltime {}s derived from prediction ({p:.2}s x \
+             {WALLTIME_HEADROOM_FACTOR} + {cold_stage_secs:.2}s cold staging, clamped)",
             walltime.as_secs()
         ));
     }
@@ -181,6 +226,7 @@ pub fn plan_deployment(
             lr: 0.05,
             seed: cfg.seed as i32,
             nv: target == Target::GpuSim,
+            dataset: dataset.as_ref().map(|d| d.name.clone()),
         },
         predicted_secs,
     };
@@ -190,6 +236,8 @@ pub fn plan_deployment(
         image,
         script,
         predicted_secs,
+        dataset,
+        io,
         notes,
     })
 }
@@ -201,6 +249,9 @@ pub struct Optimiser<'a> {
     pub registry: &'a RegistryHandle,
     pub model: &'a PerfModel,
     pub manifest: &'a Manifest,
+    /// Dataset catalog the DSL's `dataset:` blocks resolve against
+    /// (defaults to the built-in catalog; replace to add private sets).
+    pub catalog: DatasetCatalog,
 }
 
 impl<'a> Optimiser<'a> {
@@ -213,13 +264,21 @@ impl<'a> Optimiser<'a> {
             registry,
             model,
             manifest,
+            catalog: DatasetCatalog::builtin(),
         }
     }
 
     /// Map a DSL request + run config to a deployment plan (delegates to
     /// [`plan_deployment`], the shared code path).
     pub fn plan(&self, dsl: &Optimisation, cfg: &TrainConfig) -> Result<DeploymentPlan> {
-        plan_deployment(self.registry, self.model, self.manifest, dsl, cfg)
+        plan_deployment(
+            self.registry,
+            self.model,
+            self.manifest,
+            &self.catalog,
+            dsl,
+            cfg,
+        )
     }
 }
 
@@ -233,15 +292,23 @@ pub const WALLTIME_MIN_SECS: u64 = 120;
 pub const WALLTIME_MAX_SECS: u64 = 3600;
 
 /// Prediction-aware walltime: an explicit DSL request wins; otherwise
-/// `k x predicted` clamped to `[WALLTIME_MIN_SECS, WALLTIME_MAX_SECS]`,
-/// falling back to the fixed maximum while the model is untrained.
-pub fn derive_walltime(dsl_walltime_secs: Option<u64>, predicted_secs: Option<f64>) -> Duration {
+/// `k x predicted + cold_stage_secs` clamped to
+/// `[WALLTIME_MIN_SECS, WALLTIME_MAX_SECS]`, falling back to the fixed
+/// maximum while the model is untrained. Cold staging is added *before*
+/// clamping (and outside the headroom multiplier — staging is a one-off,
+/// not noise to buffer), so a cold-data job is never killed by a walltime
+/// sized for warm data.
+pub fn derive_walltime(
+    dsl_walltime_secs: Option<u64>,
+    predicted_secs: Option<f64>,
+    cold_stage_secs: f64,
+) -> Duration {
     if let Some(s) = dsl_walltime_secs {
         return Duration::from_secs(s.max(1));
     }
     match predicted_secs {
         Some(p) if p > 0.0 => {
-            let secs = (p * WALLTIME_HEADROOM_FACTOR).ceil() as u64;
+            let secs = (p * WALLTIME_HEADROOM_FACTOR + cold_stage_secs.max(0.0)).ceil() as u64;
             Duration::from_secs(secs.clamp(WALLTIME_MIN_SECS, WALLTIME_MAX_SECS))
         }
         _ => Duration::from_secs(WALLTIME_MAX_SECS),
@@ -275,18 +342,43 @@ mod tests {
     fn walltime_derivation_clamps_and_respects_dsl() {
         let secs = |d: Duration| d.as_secs();
         // untrained model / no request: the legacy fixed default
-        assert_eq!(secs(derive_walltime(None, None)), WALLTIME_MAX_SECS);
+        assert_eq!(secs(derive_walltime(None, None, 0.0)), WALLTIME_MAX_SECS);
         // k x predicted in the linear range: 100s x 4 = 400s
-        assert_eq!(secs(derive_walltime(None, Some(100.0))), 400);
+        assert_eq!(secs(derive_walltime(None, Some(100.0), 0.0)), 400);
         // tiny prediction clamps up to the floor
-        assert_eq!(secs(derive_walltime(None, Some(0.5))), WALLTIME_MIN_SECS);
+        assert_eq!(secs(derive_walltime(None, Some(0.5), 0.0)), WALLTIME_MIN_SECS);
         // huge prediction clamps down to the cap
-        assert_eq!(secs(derive_walltime(None, Some(50_000.0))), WALLTIME_MAX_SECS);
+        assert_eq!(
+            secs(derive_walltime(None, Some(50_000.0), 0.0)),
+            WALLTIME_MAX_SECS
+        );
         // non-positive predictions are not trusted
-        assert_eq!(secs(derive_walltime(None, Some(0.0))), WALLTIME_MAX_SECS);
+        assert_eq!(secs(derive_walltime(None, Some(0.0), 0.0)), WALLTIME_MAX_SECS);
         // an explicit DSL walltime always wins, unclamped
-        assert_eq!(secs(derive_walltime(Some(7200), Some(1.0))), 7200);
-        assert_eq!(secs(derive_walltime(Some(30), None)), 30);
+        assert_eq!(secs(derive_walltime(Some(7200), Some(1.0), 0.0)), 7200);
+        assert_eq!(secs(derive_walltime(Some(30), None, 0.0)), 30);
+    }
+
+    /// Satellite: predicted cold-staging time is added to the compute
+    /// prediction before clamping — a cold-data job is not killed by a
+    /// walltime sized for warm data.
+    #[test]
+    fn walltime_absorbs_cold_staging_before_clamping() {
+        let secs = |d: Duration| d.as_secs();
+        // 100s x 4 + 50s staging = 450s (staging outside the multiplier)
+        assert_eq!(secs(derive_walltime(None, Some(100.0), 50.0)), 450);
+        // staging alone can lift a tiny job off the floor: 1x4 + 200 = 204s,
+        // still >= the floor
+        assert_eq!(secs(derive_walltime(None, Some(1.0), 200.0)), 204);
+        // ...but never past the cap
+        assert_eq!(
+            secs(derive_walltime(None, Some(800.0), 9_000.0)),
+            WALLTIME_MAX_SECS
+        );
+        // explicit DSL walltime still wins, staging or not
+        assert_eq!(secs(derive_walltime(Some(300), Some(100.0), 500.0)), 300);
+        // negative staging input is ignored, not subtracted
+        assert_eq!(secs(derive_walltime(None, Some(100.0), -10.0)), 400);
     }
 
     // plan_deployment() needs a registry store + artifacts; exercised in

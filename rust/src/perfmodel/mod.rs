@@ -100,6 +100,20 @@ pub fn kernel_penalty_of(variant: &str) -> f64 {
     }
 }
 
+/// Fold per-step dataset IO into a compute-only wall-time prediction,
+/// assuming the double-buffered prefetcher overlaps IO with compute: IO
+/// slower than compute stalls the step loop by the difference, IO faster
+/// hides entirely. With `steps` steps at `compute/steps` seconds each,
+/// the expected stall is `max(0, io_per_step - compute_per_step)` per
+/// step — so total = compute + steps * stall.
+pub fn io_adjusted_secs(compute_secs: f64, io_secs_per_step: f64, steps: f64) -> f64 {
+    if steps <= 0.0 || io_secs_per_step <= 0.0 {
+        return compute_secs;
+    }
+    let compute_per_step = (compute_secs / steps).max(0.0);
+    compute_secs + steps * (io_secs_per_step - compute_per_step).max(0.0)
+}
+
 /// One observed benchmark run.
 #[derive(Debug, Clone)]
 pub struct Record {
@@ -330,6 +344,19 @@ mod tests {
         assert_eq!(back.history.len(), 10);
         assert_eq!(back.history[3].image, "i3");
         assert!((back.history[3].measured_secs - 4.0).abs() < 1e-9);
+    }
+
+    /// Tentpole (IO-aware planning): IO hidden behind compute costs
+    /// nothing; IO slower than compute stalls the loop by the difference.
+    #[test]
+    fn io_adjustment_models_overlap() {
+        // compute 10s over 10 steps (1 s/step); 0.2 s/step IO hides fully
+        assert!((io_adjusted_secs(10.0, 0.2, 10.0) - 10.0).abs() < 1e-12);
+        // 1.5 s/step IO: the loop is IO-bound — total = steps x io
+        assert!((io_adjusted_secs(10.0, 1.5, 10.0) - 15.0).abs() < 1e-12);
+        // degenerate inputs change nothing
+        assert_eq!(io_adjusted_secs(7.0, 0.0, 10.0), 7.0);
+        assert_eq!(io_adjusted_secs(7.0, 1.0, 0.0), 7.0);
     }
 
     #[test]

@@ -167,10 +167,27 @@ impl RegistryHandle {
         artifacts: &Manifest,
         max_build_workers: usize,
     ) -> RegistryHandle {
+        Self::open_capped(store, artifacts, max_build_workers, None)
+    }
+
+    /// [`Self::open`] with a byte cap on the bundle store: the build pool
+    /// garbage-collects cold bundles past the cap via LRU (ROADMAP:
+    /// registry eviction; `modak serve-batch --store-cap-mb`).
+    pub fn open_capped(
+        store: impl AsRef<Path>,
+        artifacts: &Manifest,
+        max_build_workers: usize,
+        store_cap_bytes: Option<u64>,
+    ) -> RegistryHandle {
         let store = store.as_ref().to_path_buf();
         RegistryHandle {
             inner: Arc::new(Mutex::new(Registry::open(&store))),
-            pool: Arc::new(BuildPool::new(&store, artifacts.clone(), max_build_workers)),
+            pool: Arc::new(BuildPool::with_capacity(
+                &store,
+                artifacts.clone(),
+                max_build_workers,
+                store_cap_bytes,
+            )),
         }
     }
 

@@ -53,6 +53,11 @@ pub struct Payload {
     pub seed: i32,
     /// Launch with --nv (GPU containers).
     pub nv: bool,
+    /// Declared dataset the job trains on (None = synthetic in-memory
+    /// data). The cluster stages it shard-local at submit; node dispatch
+    /// stages it onto the node's scratch and hands the trainer an IO
+    /// profile. Rendered as `--dataset <name>` on the command line.
+    pub dataset: Option<String>,
 }
 
 impl Payload {
@@ -114,6 +119,9 @@ impl JobScript {
             self.payload.lr,
             self.payload.seed,
         );
+        if let Some(d) = &self.payload.dataset {
+            cmd.push_str(&format!(" --dataset {d}"));
+        }
         if self.payload.nv {
             cmd = cmd.replace("singularity exec", "singularity exec --nv");
         }
@@ -224,6 +232,7 @@ fn parse_command(line: &str) -> Result<Payload> {
         lr: flag("--lr").and_then(|v| v.parse().ok()).unwrap_or(0.05),
         seed: flag("--seed").and_then(|v| v.parse().ok()).unwrap_or(0),
         nv,
+        dataset: flag("--dataset").map(str::to_string),
     })
 }
 
@@ -248,9 +257,25 @@ mod tests {
                 lr: 0.05,
                 seed: 7,
                 nv: false,
+                dataset: None,
             },
             predicted_secs: None,
         }
+    }
+
+    #[test]
+    fn dataset_flag_roundtrips() {
+        let mut js = sample();
+        js.payload.dataset = Some("imagenet-mini".into());
+        let text = js.render();
+        assert!(text.contains("--dataset imagenet-mini"), "{text}");
+        let back = JobScript::parse(&text).unwrap();
+        assert_eq!(js, back);
+        assert_eq!(back.payload.dataset.as_deref(), Some("imagenet-mini"));
+        // absent flag parses to None (synthetic fallback)
+        let plain = sample();
+        let back = JobScript::parse(&plain.render()).unwrap();
+        assert_eq!(back.payload.dataset, None);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::container::{ContainerRuntime, Image, RunOptions};
+use crate::data::IoProfile;
 use crate::frameworks::Target;
 use crate::runtime::Engine;
 use crate::scheduler::job::Payload;
@@ -49,6 +50,9 @@ pub struct NodeTask {
     pub bundle_dir: PathBuf,
     pub payload: Payload,
     pub walltime: Duration,
+    /// Streaming-IO profile for the dataset staged onto this node's
+    /// scratch at dispatch (None = synthetic in-memory data).
+    pub io: Option<IoProfile>,
 }
 
 /// What a node reports back.
@@ -238,6 +242,7 @@ fn run_task(
         &image,
         &RunOptions {
             nv: task.payload.nv,
+            io: task.io.clone(),
         },
         &task.payload.train_config(),
         task.payload.seed,
@@ -258,6 +263,7 @@ mod tests {
             lr: 0.1,
             seed: 0,
             nv: false,
+            dataset: None,
         }
     }
 
@@ -267,6 +273,7 @@ mod tests {
             bundle_dir: "/definitely/not/a/bundle".into(),
             payload: payload(),
             walltime: Duration::from_secs(600),
+            io: None,
         }
     }
 

@@ -20,12 +20,13 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::container::ContainerRun;
+use crate::data::stage::StageManager;
 use crate::frameworks::Target;
 use crate::scheduler::job::JobScript;
 use crate::scheduler::node::{NodeHandle, NodeResult, NodeSpec, NodeTask, ResultSink};
@@ -114,6 +115,12 @@ pub struct TorqueServer {
     peak_running: usize,
     /// Dispatch rule applied on every scheduling pass.
     policy: SchedulePolicy,
+    /// Dataset staging hook: (this server's shard id, the cluster's stage
+    /// manager). When set, node dispatch stages the job's declared dataset
+    /// onto the chosen node's scratch and hands the runner an IO profile.
+    /// Lock order: the server lock is always taken BEFORE the stage
+    /// manager's — no path locks the stager and then a server.
+    data_stager: Option<(usize, Arc<Mutex<StageManager>>)>,
 }
 
 impl TorqueServer {
@@ -170,7 +177,16 @@ impl TorqueServer {
             finish_order: Vec::new(),
             peak_running: 0,
             policy: SchedulePolicy::Fifo,
+            data_stager: None,
         }
+    }
+
+    /// Wire this server (shard `shard`) to the cluster's dataset stage
+    /// manager: from now on, dispatching a job whose payload declares a
+    /// dataset stages it node-local first and threads the streaming-IO
+    /// profile into the runner.
+    pub fn attach_data_stager(&mut self, shard: usize, stager: Arc<Mutex<StageManager>>) {
+        self.data_stager = Some((shard, stager));
     }
 
     /// Switch the dispatch rule (takes effect from the next scheduling
@@ -397,11 +413,21 @@ impl TorqueServer {
             .iter()
             .find(|n| n.spec.id == node_id)
             .expect("policy engine picked an existing node");
+        // stage the declared dataset onto the node's scratch before launch
+        // (shard cache -> node scratch; a repeat dispatch to this node is a
+        // free hit). Unstaged/unknown names fall back to synthetic data.
+        let io = match (&self.data_stager, &payload.dataset) {
+            (Some((shard, stager)), Some(name)) => {
+                stager.lock().unwrap().stage_to_node(*shard, node_id, name)
+            }
+            _ => None,
+        };
         node.dispatch(NodeTask {
             job_id: id,
             bundle_dir,
             payload,
             walltime,
+            io,
         })?;
         let rec = self.jobs.get_mut(&id).expect("job exists");
         rec.state = JobState::Running { node: node_id };
@@ -621,6 +647,7 @@ mod tests {
                 lr: 0.05,
                 seed: 0,
                 nv: gpus > 0,
+                dataset: None,
             },
             predicted_secs: None,
         }
@@ -647,6 +674,8 @@ mod tests {
                 epoch_loss: Vec::new(),
                 step_loss: Vec::new(),
                 total_secs: 0.0,
+                io_secs: 0.0,
+                io_stall_secs: 0.0,
             },
             dispatches: 0,
             bytes_h2d: 0,
@@ -882,6 +911,36 @@ mod tests {
         assert_eq!(server.total_slots(Target::Cpu), 1);
         assert_eq!(server.free_slots(Target::Cpu), 1);
         assert_eq!(server.max_node_slots(Target::GpuSim), None);
+    }
+
+    /// Tentpole: node dispatch stages the job's declared dataset onto the
+    /// chosen node's scratch (shard tier already warm -> only the node
+    /// tier is charged); unknown names fall back to synthetic data.
+    #[test]
+    fn dispatch_stages_declared_dataset_onto_the_node() {
+        use crate::data::stage::StageManager;
+        use crate::data::DatasetSpec;
+        let mut server = TorqueServer::boot(1, 0);
+        let stager = Arc::new(Mutex::new(StageManager::new(1, None, None)));
+        let spec = DatasetSpec::new("mnist-60k", 1024, 100, 1);
+        stager.lock().unwrap().stage_to_shard(0, &spec);
+        server.attach_data_stager(0, Arc::clone(&stager));
+        server.register_image("img:1", "/not/a/bundle".into());
+        let mut s = script("img:1", 0);
+        s.payload.dataset = Some("mnist-60k".into());
+        server.qsub(s).unwrap();
+        server.wait_all().unwrap();
+        let st = stager.lock().unwrap().stats(0);
+        assert_eq!(st.shard_misses, 1, "{st:?}");
+        assert_eq!(st.node_misses, 1, "staged node-local at dispatch: {st:?}");
+        // a dataset name never staged through the manager: synthetic
+        // fallback, no extra staging recorded
+        let mut s = script("img:1", 0);
+        s.payload.dataset = Some("ghost-set".into());
+        server.qsub(s).unwrap();
+        server.wait_all().unwrap();
+        let st = stager.lock().unwrap().stats(0);
+        assert_eq!(st.node_misses, 1, "{st:?}");
     }
 
     #[test]

@@ -47,6 +47,8 @@ use crate::cluster::{
     ClusterConfig, ClusterJobId, ClusterScheduler, ShardRouter, ShardSpec, StagingStats,
 };
 use crate::container::BuildStats;
+use crate::data::stage::DataStageStats;
+use crate::data::DatasetCatalog;
 use crate::dsl::Optimisation;
 use crate::optimiser::{plan_deployment, DeploymentPlan};
 use crate::perfmodel::{Features, PerfModel, Record};
@@ -76,6 +78,10 @@ pub struct ServiceConfig {
     pub shards: usize,
     /// Shard routing rule (`--router`), used when `shards > 1`.
     pub router: ShardRouter,
+    /// Byte cap (in MB) on the bundle store and the per-shard caches
+    /// (`--store-cap-mb`): cold image bundles and datasets past the cap
+    /// are garbage-collected LRU-first. None = unbounded.
+    pub store_cap_mb: Option<u64>,
 }
 
 impl Default for ServiceConfig {
@@ -89,7 +95,14 @@ impl Default for ServiceConfig {
             policy: SchedulePolicy::Fifo,
             shards: 1,
             router: ShardRouter::RoundRobin,
+            store_cap_mb: None,
         }
+    }
+}
+
+impl ServiceConfig {
+    fn cache_cap_bytes(&self) -> Option<u64> {
+        self.store_cap_mb.map(|mb| mb * 1024 * 1024)
     }
 }
 
@@ -170,6 +183,11 @@ pub struct JobSummary {
     /// Node within that shard.
     pub node: Option<usize>,
     pub predicted_secs: Option<f64>,
+    /// Simulated dataset-IO seconds the run's prefetcher paid (completed
+    /// runs of jobs with a `dataset:` block only).
+    pub io_secs: Option<f64>,
+    /// Slice of `io_secs` the step loop actually stalled on.
+    pub io_stall_secs: Option<f64>,
     pub error: Option<String>,
 }
 
@@ -202,6 +220,12 @@ pub struct ShardReport {
     /// Jobs the rebalancer migrated onto this shard.
     pub migrations_in: u64,
     pub staging: StagingStats,
+    /// Dataset staging counters for this shard (both tiers).
+    pub data: DataStageStats,
+    /// Mean IO-overlap ratio across this shard's completed data jobs
+    /// (None when no job here simulated dataset IO): 1.0 = the prefetcher
+    /// hid every IO second behind compute.
+    pub io_overlap: Option<f64>,
 }
 
 /// Cluster-level slice of a [`BatchReport`].
@@ -212,6 +236,8 @@ pub struct ClusterReport {
     /// Total cross-shard migrations the rebalancer executed.
     pub migrations: u64,
     pub staging_totals: StagingStats,
+    /// Cluster-wide dataset staging counters.
+    pub data_totals: DataStageStats,
 }
 
 /// Outcome of a whole batch: per-job lines + concurrency evidence.
@@ -347,6 +373,21 @@ impl BatchReport {
             }
             _ => {}
         }
+        // dataset staging summary whenever the batch actually moved data
+        if let Some(c) = self.cluster.as_ref() {
+            let d = &c.data_totals;
+            if d.misses() + d.hits() > 0 {
+                out.push_str(&format!(
+                    "data staging: {} miss / {} hit | {:.1} MB moved \
+                     ({:.2}s simulated) | {} evicted\n",
+                    d.misses(),
+                    d.hits(),
+                    d.bytes_moved as f64 / (1024.0 * 1024.0),
+                    d.simulated_secs,
+                    d.evictions,
+                ));
+            }
+        }
         // per-shard section only when there is more than one shard to show
         if let Some(c) = self.cluster.as_ref().filter(|c| c.shards.len() > 1) {
             out.push_str(&format!(
@@ -360,9 +401,14 @@ impl BatchReport {
                 c.staging_totals.simulated_secs,
             ));
             for s in &c.shards {
+                let io = match s.io_overlap {
+                    Some(r) => format!(" | io-overlap {:.0}%", r * 100.0),
+                    None => String::new(),
+                };
                 out.push_str(&format!(
                     "  shard {}: {} jobs ({} C) | makespan {:>7.2}s | \
-                     util {:>3.0}% | peak {} | staged {}m/{}h | +{} migrated in\n",
+                     util {:>3.0}% | peak {} | staged {}m/{}h | \
+                     data {}m/{}h | +{} migrated in{io}\n",
                     s.shard,
                     s.jobs,
                     s.completed,
@@ -371,6 +417,8 @@ impl BatchReport {
                     s.peak_running,
                     s.staging.misses,
                     s.staging.hits,
+                    s.data.misses(),
+                    s.data.hits(),
                     s.migrations_in,
                 ));
             }
@@ -397,6 +445,9 @@ pub struct DeploymentService {
     /// jobs feed measured wall times back into it (online refit).
     model: Arc<Mutex<PerfModel>>,
     manifest: Manifest,
+    /// Dataset catalog `dataset:` blocks resolve against (immutable:
+    /// ad-hoc DSL declarations carry their own shape).
+    catalog: Arc<DatasetCatalog>,
     /// The scheduling substrate: one shard = the embedded single server,
     /// more = the routed multi-shard cluster.
     cluster: Arc<ClusterScheduler>,
@@ -416,7 +467,12 @@ impl DeploymentService {
         model: PerfModel,
         cfg: &ServiceConfig,
     ) -> DeploymentService {
-        let registry = RegistryHandle::open(store, &manifest, cfg.max_build_workers);
+        let registry = RegistryHandle::open_capped(
+            store,
+            &manifest,
+            cfg.max_build_workers,
+            cfg.cache_cap_bytes(),
+        );
         Self::with_registry(registry, manifest, model, cfg)
     }
 
@@ -437,6 +493,7 @@ impl DeploymentService {
             shards: ShardSpec::heterogeneous(cfg.shards.max(1), &base),
             router: cfg.router,
             policy: cfg.policy,
+            cache_cap_bytes: cfg.cache_cap_bytes(),
         };
         let store_root = registry.with(|r| r.store().to_path_buf());
         let cluster = Arc::new(ClusterScheduler::new(
@@ -448,6 +505,7 @@ impl DeploymentService {
             registry,
             model: Arc::new(Mutex::new(model)),
             manifest,
+            catalog: Arc::new(DatasetCatalog::builtin()),
             cluster,
             signal,
             planner_workers: cfg.planner_workers.max(1),
@@ -518,6 +576,7 @@ impl DeploymentService {
             let registry = self.registry.clone();
             let model = Arc::clone(&self.model);
             let manifest = self.manifest.clone();
+            let catalog = Arc::clone(&self.catalog);
             let cluster = Arc::clone(&self.cluster);
             let signal = Arc::clone(&self.signal);
             let cfg = cfg.clone();
@@ -530,7 +589,8 @@ impl DeploymentService {
                     let work = work_rx.lock().unwrap().recv();
                     let Ok(Work { req, done }) = work else { break };
                     let outcome = plan_and_dispatch(
-                        &registry, &model, &manifest, &cluster, &req, &cfg, dispatch,
+                        &registry, &model, &manifest, &catalog, &cluster, &req, &cfg,
+                        dispatch,
                     );
                     let _ = done.send(outcome);
                     // wake await_batch: a handle just became resolvable
@@ -687,6 +747,8 @@ impl DeploymentService {
                     shard: None,
                     node: None,
                     predicted_secs: None,
+                    io_secs: None,
+                    io_stall_secs: None,
                     error: Some(format!("{e:#}")),
                 },
                 Ok(plan) => {
@@ -699,11 +761,23 @@ impl DeploymentService {
                                     JobState::Failed { error, .. } => Some(error.clone()),
                                     _ => None,
                                 };
+                                let io = match &rec.state {
+                                    JobState::Completed { run, .. }
+                                        if run.report.io_secs > 0.0 =>
+                                    {
+                                        Some((
+                                            run.report.io_secs,
+                                            run.report.io_stall_secs,
+                                        ))
+                                    }
+                                    _ => None,
+                                };
                                 (
                                     rec.state.code(),
                                     rec.queue_wait_secs,
                                     rec.state.wall_secs(),
                                     rec.node,
+                                    io,
                                     error,
                                 )
                             })
@@ -721,22 +795,28 @@ impl DeploymentService {
                             shard: None,
                             node: None,
                             predicted_secs: plan.predicted_secs,
+                            io_secs: None,
+                            io_stall_secs: None,
                             error: None,
                         },
-                        Some((id, shard, (state, queue_wait_secs, run_secs, node, error))) => {
-                            JobSummary {
-                                label,
-                                image,
-                                job_id: Some(id),
-                                state,
-                                queue_wait_secs,
-                                run_secs,
-                                shard,
-                                node,
-                                predicted_secs: plan.predicted_secs,
-                                error,
-                            }
-                        }
+                        Some((
+                            id,
+                            shard,
+                            (state, queue_wait_secs, run_secs, node, io, error),
+                        )) => JobSummary {
+                            label,
+                            image,
+                            job_id: Some(id),
+                            state,
+                            queue_wait_secs,
+                            run_secs,
+                            shard,
+                            node,
+                            predicted_secs: plan.predicted_secs,
+                            io_secs: io.map(|(i, _)| i),
+                            io_stall_secs: io.map(|(_, s)| s),
+                            error,
+                        },
                     }
                 }
             };
@@ -780,6 +860,15 @@ impl DeploymentService {
                     .filter_map(|j| j.run_secs)
                     .sum();
                 let capacity_secs = makespan_secs * snap.slot_capacity as f64;
+                // mean IO-overlap over this shard's completed data jobs
+                let io: Vec<(f64, f64)> = mine
+                    .iter()
+                    .filter_map(|j| Some((j.io_secs?, j.io_stall_secs?)))
+                    .collect();
+                let io_overlap = crate::data::overlap_ratio(
+                    io.iter().map(|(i, _)| i).sum(),
+                    io.iter().map(|(_, s)| s).sum(),
+                );
                 ShardReport {
                     shard: snap.shard,
                     jobs: mine.len(),
@@ -794,6 +883,8 @@ impl DeploymentService {
                     peak_running: snap.peak_running,
                     migrations_in: snap.migrations_in,
                     staging: snap.staging.clone(),
+                    data: snap.data.clone(),
+                    io_overlap,
                 }
             })
             .collect();
@@ -802,14 +893,17 @@ impl DeploymentService {
             shards,
             migrations: self.cluster.migrations(),
             staging_totals: self.cluster.staging_totals(),
+            data_totals: self.cluster.data_totals(),
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)] // the service's full planning context
 fn plan_and_dispatch(
     registry: &RegistryHandle,
     model: &Mutex<PerfModel>,
     manifest: &Manifest,
+    catalog: &DatasetCatalog,
     cluster: &Arc<ClusterScheduler>,
     req: &BatchRequest,
     cfg: &TrainConfig,
@@ -819,7 +913,7 @@ fn plan_and_dispatch(
     // container build) runs lock-free, and later requests in a batch see
     // coefficients refreshed by earlier completions' feedback
     let model = model.lock().unwrap().clone();
-    let plan = match plan_deployment(registry, &model, manifest, &req.dsl, cfg) {
+    let plan = match plan_deployment(registry, &model, manifest, catalog, &req.dsl, cfg) {
         Ok(p) => p,
         Err(e) => {
             return PlanOutcome {
@@ -829,12 +923,14 @@ fn plan_and_dispatch(
         }
     };
     let job_id = if dispatch {
-        // route to a shard, stage the bundle into its local store, qsub
+        // route to a shard, stage the bundle (and the declared dataset)
+        // into its local stores, qsub
         match cluster.submit(
             plan.script.clone(),
             &plan.profile.image_tag(),
             &plan.image.digest,
             &plan.image.dir,
+            plan.dataset.as_ref(),
         ) {
             Ok(id) => Some(id),
             Err(e) => {
@@ -898,6 +994,8 @@ mod tests {
             shard: Some(0),
             node: None,
             predicted_secs: pred,
+            io_secs: None,
+            io_stall_secs: None,
             error: None,
         };
         let report = BatchReport::from_jobs(

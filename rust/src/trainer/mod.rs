@@ -6,6 +6,8 @@ pub mod data;
 
 use anyhow::{bail, Result};
 
+use crate::data::prefetch::Prefetcher;
+use crate::data::IoProfile;
 use crate::executor::TrainSession;
 use crate::util::sync::CancelToken;
 use crate::util::timer::Stopwatch;
@@ -40,6 +42,12 @@ pub struct TrainReport {
     /// Loss after every step (for the e2e loss curve).
     pub step_loss: Vec<f32>,
     pub total_secs: f64,
+    /// Simulated dataset-IO seconds the prefetcher spent reading batches
+    /// (0.0 for synthetic in-memory runs without a `dataset:` block).
+    pub io_secs: f64,
+    /// Seconds the step loop actually stalled waiting for a batch — the
+    /// slice of `io_secs` the double buffer failed to hide behind compute.
+    pub io_stall_secs: f64,
 }
 
 impl TrainReport {
@@ -63,6 +71,12 @@ impl TrainReport {
     pub fn final_loss(&self) -> f64 {
         *self.epoch_loss.last().unwrap_or(&f64::NAN)
     }
+
+    /// Fraction of dataset IO hidden behind compute (None when the run did
+    /// no simulated IO).
+    pub fn io_overlap_ratio(&self) -> Option<f64> {
+        crate::data::overlap_ratio(self.io_secs, self.io_stall_secs)
+    }
 }
 
 /// Run `cfg.epochs` training epochs of `cfg.steps_per_epoch` batches.
@@ -80,13 +94,39 @@ pub fn train_cancellable(
     cfg: &TrainConfig,
     kill: &CancelToken,
 ) -> Result<TrainReport> {
-    let mut dataset = Dataset::for_workload(&session.workload, cfg.seed);
+    train_with_io(session, cfg, kill, None)
+}
+
+/// [`train_cancellable`] with an IO-aware data path: when `io` is present
+/// (the node staged a declared dataset onto its scratch), batches come
+/// through a double-buffered [`Prefetcher`] that simulates streaming the
+/// dataset off node-local scratch, overlapping IO with compute. The
+/// report's `io_secs`/`io_stall_secs` record how much of that IO the
+/// overlap actually hid. Without `io`, batches are generated inline — the
+/// synthetic in-memory path, byte-identical to the pre-data-path trainer.
+pub fn train_with_io(
+    session: &mut TrainSession,
+    cfg: &TrainConfig,
+    kill: &CancelToken,
+    io: Option<&IoProfile>,
+) -> Result<TrainReport> {
+    let dataset = Dataset::for_workload(&session.workload, cfg.seed);
+    let mut source = match io {
+        Some(io) => BatchSource::Prefetched(Prefetcher::spawn(
+            dataset,
+            io.clone(),
+            kill.clone(),
+        )),
+        None => BatchSource::Inline(Box::new(dataset)),
+    };
     let total = Stopwatch::start();
     let mut report = TrainReport {
         epoch_secs: Vec::with_capacity(cfg.epochs),
         epoch_loss: Vec::with_capacity(cfg.epochs),
         step_loss: Vec::with_capacity(cfg.epochs * cfg.steps_per_epoch),
         total_secs: 0.0,
+        io_secs: 0.0,
+        io_stall_secs: 0.0,
     };
     for _epoch in 0..cfg.epochs {
         let sw = Stopwatch::start();
@@ -96,7 +136,9 @@ pub fn train_cancellable(
             if kill.is_cancelled() {
                 bail!("training cancelled at a step boundary (walltime kill)");
             }
-            let (x, y) = dataset.next_batch();
+            let Some((x, y)) = source.next_batch() else {
+                bail!("training cancelled at a step boundary (data path killed)");
+            };
             let loss = session.step(&x, &y)?;
             report.step_loss.push(loss);
             loss_sum += loss as f64;
@@ -105,7 +147,28 @@ pub fn train_cancellable(
         report.epoch_loss.push(loss_sum / cfg.steps_per_epoch as f64);
     }
     report.total_secs = total.elapsed_secs();
+    if let BatchSource::Prefetched(pf) = &source {
+        let stats = pf.stats();
+        report.io_secs = stats.io_secs;
+        report.io_stall_secs = stats.stall_secs;
+    }
     Ok(report)
+}
+
+/// Where the step loop's batches come from: inline synthetic generation,
+/// or the double-buffered prefetcher simulating dataset IO.
+enum BatchSource {
+    Inline(Box<Dataset>),
+    Prefetched(Prefetcher),
+}
+
+impl BatchSource {
+    fn next_batch(&mut self) -> Option<(crate::runtime::HostTensor, crate::runtime::HostTensor)> {
+        match self {
+            BatchSource::Inline(d) => Some(d.next_batch()),
+            BatchSource::Prefetched(p) => p.next_batch(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,9 +182,12 @@ mod tests {
             epoch_loss: vec![2.0, 1.0, 0.6, 0.5],
             step_loss: vec![],
             total_secs: 16.0,
+            io_secs: 0.0,
+            io_stall_secs: 0.0,
         };
         assert!((r.steady_epoch_secs() - 2.0).abs() < 1e-12);
         assert_eq!(r.final_loss(), 0.5);
+        assert_eq!(r.io_overlap_ratio(), None, "no IO, no ratio");
     }
 
     #[test]
@@ -131,7 +197,25 @@ mod tests {
             epoch_loss: vec![1.0],
             step_loss: vec![],
             total_secs: 3.0,
+            io_secs: 0.0,
+            io_stall_secs: 0.0,
         };
         assert_eq!(r.steady_epoch_secs(), 3.0);
+    }
+
+    #[test]
+    fn io_overlap_ratio_clamps_and_divides() {
+        let r = |io: f64, stall: f64| TrainReport {
+            epoch_secs: vec![1.0],
+            epoch_loss: vec![1.0],
+            step_loss: vec![],
+            total_secs: 1.0,
+            io_secs: io,
+            io_stall_secs: stall,
+        };
+        assert!((r(4.0, 1.0).io_overlap_ratio().unwrap() - 0.75).abs() < 1e-12);
+        // stall can exceed io (pipeline-fill latency): clamp at 0
+        assert_eq!(r(1.0, 5.0).io_overlap_ratio(), Some(0.0));
+        assert_eq!(r(0.0, 0.0).io_overlap_ratio(), None);
     }
 }

@@ -1,0 +1,213 @@
+//! Capacity-bounded LRU bookkeeping shared by every store in the system:
+//! the build pool's bundle store, the image distributor's per-shard caches,
+//! and the dataset stage manager's shard/node tiers.
+//!
+//! This is *bookkeeping only*: the cache tracks keys, byte sizes, and
+//! recency, and tells the caller which keys fell out — the caller owns the
+//! actual bytes (a bundle dir, a staged dataset) and deletes them. Keeping
+//! the policy pure makes every eviction decision unit-testable without a
+//! filesystem.
+
+use std::collections::BTreeMap;
+
+/// One evicted entry: the key that fell out and how many bytes it held.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Evicted<K> {
+    pub key: K,
+    pub bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    bytes: u64,
+    /// Monotonic recency stamp (higher = more recently used).
+    stamp: u64,
+}
+
+/// A capacity-bounded LRU over keys with byte sizes. `cap_bytes: None`
+/// disables eviction (the cache still tracks usage and recency).
+#[derive(Debug, Clone)]
+pub struct Lru<K: Ord + Clone> {
+    cap_bytes: Option<u64>,
+    slots: BTreeMap<K, Slot>,
+    tick: u64,
+    used: u64,
+    evictions: u64,
+}
+
+impl<K: Ord + Clone> Lru<K> {
+    pub fn new(cap_bytes: Option<u64>) -> Lru<K> {
+        Lru {
+            cap_bytes,
+            slots: BTreeMap::new(),
+            tick: 0,
+            used: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn unbounded() -> Lru<K> {
+        Lru::new(None)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn cap_bytes(&self) -> Option<u64> {
+        self.cap_bytes
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.slots.contains_key(key)
+    }
+
+    /// Mark `key` as just-used; true when the key is resident.
+    pub fn touch(&mut self, key: &K) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.slots.get_mut(key) {
+            Some(s) => {
+                s.stamp = tick;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Insert (or refresh) `key` at `bytes`, then evict least-recently-used
+    /// entries until the cache fits its capacity again. The entry just
+    /// inserted is never evicted, even when it alone exceeds the cap —
+    /// evicting the working set's newest member would only thrash.
+    /// Returns what fell out, oldest first.
+    pub fn insert(&mut self, key: K, bytes: u64) -> Vec<Evicted<K>> {
+        self.tick += 1;
+        let stamp = self.tick;
+        if let Some(old) = self.slots.insert(key.clone(), Slot { bytes, stamp }) {
+            self.used = self.used.saturating_sub(old.bytes);
+        }
+        self.used += bytes;
+        let mut out = Vec::new();
+        let Some(cap) = self.cap_bytes else {
+            return out;
+        };
+        while self.used > cap {
+            // oldest stamp among everything except the fresh insert
+            let victim = self
+                .slots
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, s)| s.stamp)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            let slot = self.slots.remove(&victim).expect("victim resident");
+            self.used = self.used.saturating_sub(slot.bytes);
+            self.evictions += 1;
+            out.push(Evicted {
+                key: victim,
+                bytes: slot.bytes,
+            });
+        }
+        out
+    }
+
+    /// Remove `key` without counting an eviction (the caller deleted the
+    /// backing bytes for its own reasons). Returns the entry's size.
+    pub fn remove(&mut self, key: &K) -> Option<u64> {
+        let slot = self.slots.remove(key)?;
+        self.used = self.used.saturating_sub(slot.bytes);
+        Some(slot.bytes)
+    }
+
+    /// Resident keys, least-recently-used first (diagnostics, tests).
+    pub fn keys_lru_first(&self) -> Vec<K> {
+        let mut v: Vec<(&K, &Slot)> = self.slots.iter().collect();
+        v.sort_by_key(|(_, s)| s.stamp);
+        v.into_iter().map(|(k, _)| k.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_tracks_usage_without_evicting() {
+        let mut lru: Lru<String> = Lru::unbounded();
+        assert!(lru.insert("a".into(), 10).is_empty());
+        assert!(lru.insert("b".into(), 20).is_empty());
+        assert_eq!(lru.used_bytes(), 30);
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.evictions(), 0);
+    }
+
+    /// Satellite (store eviction): the coldest entry falls out first, and
+    /// touching an entry protects it.
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut lru: Lru<&str> = Lru::new(Some(30));
+        lru.insert("a", 10);
+        lru.insert("b", 10);
+        lru.insert("c", 10);
+        // refresh `a`: `b` is now the coldest
+        assert!(lru.touch(&"a"));
+        let out = lru.insert("d", 10);
+        assert_eq!(out, vec![Evicted { key: "b", bytes: 10 }]);
+        assert!(lru.contains(&"a") && lru.contains(&"c") && lru.contains(&"d"));
+        assert_eq!(lru.used_bytes(), 30);
+        assert_eq!(lru.evictions(), 1);
+        assert_eq!(lru.keys_lru_first().first(), Some(&"c"));
+    }
+
+    #[test]
+    fn oversized_insert_evicts_everything_else_but_stays() {
+        let mut lru: Lru<&str> = Lru::new(Some(25));
+        lru.insert("a", 10);
+        lru.insert("b", 10);
+        let out = lru.insert("huge", 100);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(lru.contains(&"huge"), "fresh insert is never its own victim");
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.used_bytes(), 100);
+    }
+
+    #[test]
+    fn reinsert_updates_size_and_remove_is_not_an_eviction() {
+        let mut lru: Lru<&str> = Lru::new(Some(100));
+        lru.insert("a", 10);
+        lru.insert("a", 30);
+        assert_eq!(lru.used_bytes(), 30);
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.remove(&"a"), Some(30));
+        assert_eq!(lru.used_bytes(), 0);
+        assert_eq!(lru.evictions(), 0);
+        assert_eq!(lru.remove(&"a"), None);
+        assert!(!lru.touch(&"a"));
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic_across_runs() {
+        let run = || {
+            let mut lru: Lru<u32> = Lru::new(Some(3));
+            let mut evicted = Vec::new();
+            for i in 0..10u32 {
+                evicted.extend(lru.insert(i, 1).into_iter().map(|e| e.key));
+            }
+            evicted
+        };
+        assert_eq!(run(), run());
+        assert_eq!(run(), (0..7).collect::<Vec<u32>>());
+    }
+}

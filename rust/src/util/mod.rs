@@ -1,11 +1,31 @@
-//! Dependency-light substrates: JSON, PRNG, property-testing, timing.
+//! Dependency-light substrates: JSON, PRNG, property-testing, timing, LRU.
 //!
 //! The build environment vendors only the `xla` crate's dependency closure,
 //! so these stand in for serde_json / rand / proptest / criterion.
 
 pub mod json;
+pub mod lru;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod sync;
 pub mod timer;
+
+/// Total bytes under `dir`, recursively; 0 for unreadable/absent paths.
+/// Shared by every capacity-bounded store (build pool, image distributor)
+/// so "bytes" means the same thing to each of them.
+pub fn dir_size(dir: &std::path::Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut bytes = 0;
+    for entry in entries.flatten() {
+        let Ok(ft) = entry.file_type() else { continue };
+        if ft.is_dir() {
+            bytes += dir_size(&entry.path());
+        } else if let Ok(md) = entry.metadata() {
+            bytes += md.len();
+        }
+    }
+    bytes
+}

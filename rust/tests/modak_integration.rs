@@ -174,6 +174,7 @@ fn scheduler_runs_two_containers_back_to_back() {
             lr: 0.05,
             seed,
             nv: false,
+            dataset: None,
         },
         predicted_secs: None,
     };
@@ -213,6 +214,7 @@ fn walltime_violation_kills_job() {
             lr: 0.05,
             seed: 0,
             nv: false,
+            dataset: None,
         },
         predicted_secs: None,
     };
@@ -253,6 +255,7 @@ fn gpu_image_without_nv_fails_inside_scheduler() {
             lr: 0.05,
             seed: 0,
             nv: false, // forgot --nv
+            dataset: None,
         },
         predicted_secs: None,
     };
@@ -325,7 +328,8 @@ fn legacy_and_batch_paths_produce_identical_plans() {
     let dsl = Optimisation::parse(dsl_text).unwrap();
 
     // legacy path: direct plan_deployment (what `modak optimise` resolves to)
-    let legacy = plan_deployment(&registry, &model, &m, &dsl, &cfg).unwrap();
+    let catalog = modak::data::DatasetCatalog::builtin();
+    let legacy = plan_deployment(&registry, &model, &m, &catalog, &dsl, &cfg).unwrap();
 
     // batch path: through the service work queue, same registry handle
     let service = DeploymentService::with_registry(
@@ -480,6 +484,89 @@ fn multi_shard_batch_completes_with_per_shard_stats() {
     let rendered = report.render();
     assert!(rendered.contains("cluster: 4 shards"), "{rendered}");
     assert!(rendered.contains("shard 0:"), "{rendered}");
+}
+
+/// Tentpole acceptance: the data pipeline end to end. A DSL request with a
+/// `dataset:` block plans with per-tier IO estimates, stages the dataset
+/// shard- and node-local, trains through the double-buffered prefetcher
+/// (IO overlapped with compute), and the batch report carries the dataset
+/// staging counters.
+#[test]
+fn dataset_request_stages_and_trains_with_io_overlap() {
+    let _g = serial();
+    let Some(m) = manifest() else { return };
+    let service = DeploymentService::new(
+        store("data_pipeline"),
+        m.clone(),
+        PerfModel::new(),
+        &ServiceConfig {
+            cpu_nodes: 2,
+            gpu_nodes: 0,
+            slots_per_node: 1,
+            ..ServiceConfig::default()
+        },
+    );
+    let cfg = TrainConfig {
+        epochs: 1,
+        steps_per_epoch: 2,
+        seed: 0,
+    };
+    let with_data = Optimisation::parse(
+        r#"{"app_type": "ai_training", "workload": "mnist_cnn",
+            "dataset": {"name": "mnist-60k"},
+            "ai_training": {"tensorflow": {"version": "2.1"}}}"#,
+    )
+    .unwrap();
+    let plain = Optimisation::parse(
+        r#"{"app_type": "ai_training", "workload": "mnist_cnn",
+            "ai_training": {"pytorch": {"version": "1.14"}}}"#,
+    )
+    .unwrap();
+    let report = service.run_batch(
+        vec![
+            BatchRequest { label: "with-data".into(), dsl: with_data },
+            BatchRequest { label: "plain".into(), dsl: plain },
+        ],
+        &cfg,
+        |_| {},
+    );
+    eprintln!("{}", report.render());
+    assert_eq!(report.completed(), 2, "{report:?}");
+    // the data job simulated IO through the prefetcher; the plain job
+    // stayed on the synthetic in-memory path
+    let data_job = &report.jobs[0];
+    assert!(data_job.io_secs.unwrap_or(0.0) > 0.0, "{data_job:?}");
+    assert!(report.jobs[1].io_secs.is_none(), "{:?}", report.jobs[1]);
+    // staging counters: one shard-tier and one node-tier placement
+    let cluster = report.cluster.as_ref().unwrap();
+    let d = &cluster.data_totals;
+    assert_eq!(d.shard_misses, 1, "{d:?}");
+    assert_eq!(d.node_misses, 1, "{d:?}");
+    assert!(d.bytes_moved > 0, "{d:?}");
+    assert!(report.render().contains("data staging:"), "render shows data");
+    // warm rerun of the same request: the shard tier hits, bytes move only
+    // for tiers not yet warm on whichever node runs it
+    let rerun = Optimisation::parse(
+        r#"{"app_type": "ai_training", "workload": "mnist_cnn",
+            "dataset": {"name": "mnist-60k"},
+            "ai_training": {"tensorflow": {"version": "2.1"}}}"#,
+    )
+    .unwrap();
+    let bytes_before = service.cluster().data_totals().bytes_moved;
+    let report2 = service.run_batch(
+        vec![BatchRequest { label: "warm".into(), dsl: rerun }],
+        &cfg,
+        |_| {},
+    );
+    assert_eq!(report2.completed(), 1, "{report2:?}");
+    let d = service.cluster().data_totals();
+    assert!(d.shard_hits >= 1, "warm shard tier: {d:?}");
+    // warm rerun moved strictly fewer new bytes than the cold first run
+    let new_bytes = d.bytes_moved - bytes_before;
+    assert!(
+        new_bytes < bytes_before,
+        "warm rerun moved {new_bytes} vs cold {bytes_before}"
+    );
 }
 
 /// Acceptance: perf-model-driven co-scheduling closes the loop. A trained
