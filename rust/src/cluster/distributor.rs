@@ -170,6 +170,18 @@ impl ImageDistributor {
         Ok(dir)
     }
 
+    /// Reference-pin `digest` in `shard`'s store: a queued/running job
+    /// still points at the bundle, so capacity-bounded eviction must never
+    /// GC it (refcounted; pin before or after staging both work).
+    pub fn pin(&mut self, shard: usize, digest: &str) {
+        self.lru[shard].pin(&digest.to_string());
+    }
+
+    /// Drop one pin reference on `digest` in `shard`'s store.
+    pub fn unpin(&mut self, shard: usize, digest: &str) {
+        self.lru[shard].unpin(&digest.to_string());
+    }
+
     /// One shard's staging counters.
     pub fn stats(&self, shard: usize) -> StagingStats {
         self.stats[shard].clone()
@@ -281,6 +293,27 @@ mod tests {
         let misses_before = dist.stats(0).misses;
         dist.stage(0, "b:1", "fnv1a:b", &b).unwrap();
         assert_eq!(dist.stats(0).misses, misses_before + 1);
+    }
+
+    /// Satellite (reference-pinned eviction): a bundle digest pinned by a
+    /// queued/running job survives shard-store capacity pressure.
+    #[test]
+    fn pinned_bundle_survives_shard_store_pressure() {
+        let a = fake_bundle("pin_a", &[1u8; 1500]);
+        let b = fake_bundle("pin_b", &[2u8; 1500]);
+        let c = fake_bundle("pin_c", &[3u8; 1500]);
+        let mut dist = ImageDistributor::with_capacity(root("pin_store"), 1, Some(3200));
+        let staged_a = dist.stage(0, "a:1", "fnv1a:a", &a).unwrap();
+        dist.pin(0, "fnv1a:a"); // a queued job still references a:1
+        dist.stage(0, "b:1", "fnv1a:b", &b).unwrap();
+        dist.stage(0, "c:1", "fnv1a:c", &c).unwrap(); // 4500 > 3200
+        assert!(dist.holds(0, "fnv1a:a"), "pinned bundle survives");
+        assert!(staged_a.exists(), "its staged copy is untouched on disk");
+        assert!(!dist.holds(0, "fnv1a:b"), "the unpinned one was evicted");
+        // job finished: unpin makes it ordinary LRU prey again
+        dist.unpin(0, "fnv1a:a");
+        dist.stage(0, "b:1", "fnv1a:b", &b).unwrap();
+        assert!(!dist.holds(0, "fnv1a:a"));
     }
 
     #[test]

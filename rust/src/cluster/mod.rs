@@ -17,6 +17,14 @@
 //! A shared completion [`Signal`] is pinged by every shard's nodes, which
 //! is what lets the deployment service sleep on a condvar instead of
 //! polling.
+//!
+//! Every "which shard" decision — initial routing, queued-job migration,
+//! and elastic checkpoint/restart migration — consults the unified
+//! [`crate::placement::PlacementEngine`]: one cost model (normalised
+//! backlog + image-staging + dataset-warmth), three decision points, zero
+//! duplicated scoring logic. Staged bundles and datasets referenced by
+//! queued/running jobs are reference-pinned against LRU eviction for the
+//! job's lifetime.
 
 pub mod distributor;
 pub mod router;
@@ -25,6 +33,7 @@ pub mod sim;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -35,6 +44,7 @@ pub use sim::{simulate_cluster, ClusterSimJob, ClusterSimOutcome};
 use crate::data::stage::{DataStageStats, StageManager};
 use crate::data::DatasetSpec;
 use crate::frameworks::Target;
+use crate::placement::{PlacementEngine, RebalanceMode};
 use crate::scheduler::{JobId, JobRecord, JobScript, NodeSpec, SchedulePolicy, TorqueServer};
 use crate::util::sync::Signal;
 
@@ -47,6 +57,9 @@ pub struct ShardSpec {
     pub cpu_nodes: usize,
     pub gpu_nodes: usize,
     pub slots_per_node: usize,
+    /// Per-shard dispatch-policy override (`--policy-shard N=<policy>`):
+    /// None = the cluster-wide [`ClusterConfig::policy`].
+    pub policy: Option<SchedulePolicy>,
 }
 
 impl ShardSpec {
@@ -109,17 +122,84 @@ impl ShardSpec {
 pub struct ClusterConfig {
     pub shards: Vec<ShardSpec>,
     pub router: ShardRouter,
-    /// Per-shard dispatch policy (every shard runs the same one).
+    /// Default dispatch policy (shards may override via
+    /// [`ShardSpec::policy`]).
     pub policy: SchedulePolicy,
     /// Capacity bound on each shard's local caches — the image store AND
     /// the dataset cache tier — enforced by LRU eviction. `None` disables
     /// eviction (the default; `modak serve-batch --store-cap-mb` sets it).
     pub cache_cap_bytes: Option<u64>,
+    /// What the rebalancer may migrate (`--rebalance queued|elastic`):
+    /// queued jobs only (the default), or also running jobs via
+    /// checkpoint/restart.
+    pub rebalance: RebalanceMode,
 }
 
 struct Shard {
     server: Mutex<TorqueServer>,
     spec: ShardSpec,
+}
+
+/// What a live job holds pinned against cache eviction: its image digest
+/// and (when declared) its dataset digest, on the shard that owns it.
+#[derive(Debug, Clone)]
+struct PinRecord {
+    shard: usize,
+    image_digest: String,
+    data_digest: Option<String>,
+}
+
+/// One shard's queue/capacity snapshot used by the rebalancer (taken
+/// under its server lock, scored lock-free afterwards).
+struct QueueSnap {
+    free: BTreeMap<Target, usize>,
+    total: BTreeMap<Target, usize>,
+    max_slots: BTreeMap<Target, usize>,
+    idle: bool,
+    queued: Vec<JobId>,
+    queued_count: usize,
+    backlog: f64,
+}
+
+impl QueueSnap {
+    fn free_of(&self, class: Target) -> usize {
+        self.free.get(&class).copied().unwrap_or(0)
+    }
+
+    fn max_of(&self, class: Target) -> usize {
+        self.max_slots.get(&class).copied().unwrap_or(0)
+    }
+
+    /// The engine's load view of this shard for a specific job.
+    fn load(
+        &self,
+        shard: usize,
+        class: Target,
+        demand: usize,
+        staging_secs: f64,
+        data_staging_secs: f64,
+    ) -> ShardLoad {
+        ShardLoad {
+            shard,
+            eligible: self.max_of(class) >= demand,
+            free_slots: self.free_of(class),
+            total_slots: self.total.get(&class).copied().unwrap_or(0),
+            queued: self.queued_count,
+            backlog_secs: self.backlog,
+            staging_secs,
+            data_staging_secs,
+        }
+    }
+}
+
+/// The placement-relevant shape of one job (class, slots, prediction,
+/// image tag, dataset name).
+struct JobShape {
+    class: Target,
+    demand: usize,
+    expected: f64,
+    tag: String,
+    dataset: Option<String>,
 }
 
 /// Global-id bookkeeping + migration counters.
@@ -132,7 +212,11 @@ struct MapState {
     rev: BTreeMap<(usize, JobId), ClusterJobId>,
     rr_cursor: usize,
     migrations: u64,
+    /// Slice of `migrations` executed via checkpoint/restart (elastic).
+    migrations_elastic: u64,
     migrations_in: Vec<u64>,
+    /// Reference pins held by live (queued/running/preempted) jobs.
+    pins: BTreeMap<ClusterJobId, PinRecord>,
 }
 
 /// Point-in-time stats for one shard (batch reporting).
@@ -153,6 +237,8 @@ pub struct ShardSnapshot {
 pub struct ClusterScheduler {
     shards: Vec<Shard>,
     router: ShardRouter,
+    /// What the rebalancer may migrate (queued-only or elastic).
+    rebalance_mode: RebalanceMode,
     distributor: Mutex<ImageDistributor>,
     /// Tiered dataset staging (shared store -> shard cache -> node
     /// scratch); shared with every shard's server for node-tier staging
@@ -183,7 +269,8 @@ impl ClusterScheduler {
             .map(|(i, spec)| {
                 let mut server =
                     TorqueServer::boot_nodes(spec.node_specs(), Some(Arc::clone(&signal)));
-                server.set_policy(cfg.policy);
+                // per-shard policy override, else the cluster default
+                server.set_policy(spec.policy.unwrap_or(cfg.policy));
                 server.attach_data_stager(i, Arc::clone(&stager));
                 Shard {
                     server: Mutex::new(server),
@@ -194,6 +281,7 @@ impl ClusterScheduler {
         ClusterScheduler {
             shards,
             router: cfg.router,
+            rebalance_mode: cfg.rebalance,
             distributor: Mutex::new(ImageDistributor::with_capacity(
                 store_root.as_ref().join("shard-cache"),
                 n,
@@ -215,6 +303,10 @@ impl ClusterScheduler {
 
     pub fn router(&self) -> ShardRouter {
         self.router
+    }
+
+    pub fn rebalance_mode(&self) -> RebalanceMode {
+        self.rebalance_mode
     }
 
     /// The completion signal every shard's nodes ping (service sleeps on
@@ -275,11 +367,26 @@ impl ClusterScheduler {
             srv.register_image(tag, local_dir);
             srv.qsub(script)?
         };
+        // reference-pin the staged artefacts for this job's lifetime:
+        // eviction under cache pressure must never GC a digest a live job
+        // still points at (released when the job is observed terminal)
+        self.distributor.lock().unwrap().pin(shard, digest);
+        if let Some(spec) = dataset {
+            self.stager.lock().unwrap().pin_shard(shard, &spec.digest);
+        }
         let mut map = self.map.lock().unwrap();
         let gid = map.next_id;
         map.next_id += 1;
         map.fwd.insert(gid, (shard, local));
         map.rev.insert((shard, local), gid);
+        map.pins.insert(
+            gid,
+            PinRecord {
+                shard,
+                image_digest: digest.to_string(),
+                data_digest: dataset.map(|d| d.digest.clone()),
+            },
+        );
         Ok(gid)
     }
 
@@ -315,65 +422,67 @@ impl ClusterScheduler {
             .collect()
     }
 
-    /// Absorb completions on every shard, then rebalance queued work.
+    /// Absorb completions on every shard, release the pins of finished
+    /// jobs, then rebalance.
     pub fn poll(&self) -> Result<()> {
         for shard in &self.shards {
             shard.server.lock().unwrap().poll()?;
         }
+        self.release_finished_pins();
         self.rebalance()
     }
 
-    /// Cross-shard queue rebalancing: withdraw still-queued jobs from
-    /// backlogged shards into a (transient) global overflow queue and
-    /// drain it onto idle shards — a shard with a free class-matching
-    /// slot and an empty queue. Jobs that find no idle target go straight
-    /// back to their origin shard. Public so the policy can be driven
-    /// (and tested) independently of `poll`.
+    /// Cross-shard rebalancing, every decision scored by the unified
+    /// [`PlacementEngine`]:
+    ///
+    /// 1. (elastic mode) checkpointed jobs collected from their shards
+    ///    restart from their checkpoints on the engine's best-scoring
+    ///    shard, keeping their cluster-global ids and cumulative run-time
+    ///    accounting;
+    /// 2. still-queued jobs on backlogged shards are withdrawn and
+    ///    re-queued on the best-scoring idle shard — strictly better than
+    ///    staying, never merely the first idle fit;
+    /// 3. (elastic mode) on shards whose queue is stuck behind running
+    ///    work, one running job is asked to checkpoint at its next epoch
+    ///    boundary, to be collected by a later pass.
+    ///
+    /// Public so the policy can be driven (and tested) independently of
+    /// `poll`.
     pub fn rebalance(&self) -> Result<()> {
-        // phase 1: plan moves from per-shard snapshots (no two shard locks
-        // held at once; free capacity tracked locally as moves are planned)
-        let mut free: Vec<BTreeMap<Target, usize>> = Vec::new();
-        let mut idle: Vec<bool> = Vec::new();
-        let mut queued: Vec<Vec<JobId>> = Vec::new();
-        for shard in &self.shards {
-            let srv = shard.server.lock().unwrap();
-            let mut f = BTreeMap::new();
-            for class in [Target::Cpu, Target::GpuSim] {
-                f.insert(class, srv.free_slots(class));
-            }
-            free.push(f);
-            idle.push(srv.queued() == 0);
-            queued.push(srv.queued_ids());
+        if self.rebalance_mode == RebalanceMode::Elastic {
+            self.restart_preempted()?;
         }
+        self.rebalance_queued()?;
+        if self.rebalance_mode == RebalanceMode::Elastic {
+            self.trigger_preemptions();
+        }
+        Ok(())
+    }
+
+    /// Queued-job migration: plan moves from per-shard snapshots (no two
+    /// shard locks held at once; capacity/backlog tracked locally as moves
+    /// are planned), then execute — withdraw, restage image + dataset on
+    /// the destination, re-queue with the original submission clock.
+    fn rebalance_queued(&self) -> Result<()> {
+        let mut snaps = self.collect_snaps();
         let mut moves: Vec<(usize, JobId, usize)> = Vec::new(); // (from, local, to)
-        for (from, ids) in queued.iter().enumerate() {
-            for &local in ids {
-                let (class, demand) = {
-                    let srv = self.shards[from].server.lock().unwrap();
-                    let Ok(rec) = srv.job(local) else { continue };
-                    (
-                        TorqueServer::class_of(&rec.script),
-                        rec.script.resources.slot_demand(),
-                    )
+        for from in 0..self.shards.len() {
+            let ids = snaps[from].queued.clone();
+            for local in ids {
+                let Some(job) = self.job_shape(from, local) else {
+                    continue;
                 };
-                let target = (0..self.shards.len()).find(|&t| {
-                    t != from
-                        && idle[t]
-                        && free[t].get(&class).copied().unwrap_or(0) >= demand
-                        && self.shards[t]
-                            .spec
-                            .node_specs()
-                            .iter()
-                            .any(|n| n.class == class && n.slots >= demand)
-                });
-                if let Some(t) = target {
-                    *free[t].get_mut(&class).unwrap() -= demand;
-                    moves.push((from, local, t));
-                }
+                let Some(best) = self.best_strict_improvement(&snaps, from, &job) else {
+                    continue;
+                };
+                moves.push((from, local, best));
+                // later placements in this pass see the planned move
+                *snaps[best].free.entry(job.class).or_insert(0) -= job.demand;
+                snaps[best].backlog += job.expected;
+                snaps[from].backlog = (snaps[from].backlog - job.expected).max(0.0);
             }
         }
-        // phase 2: execute — withdraw into the overflow buffer, drain to
-        // the planned target, fall back to the origin if anything moved
+        // phase 2: execute — fall back to the origin if anything moved
         // underneath us (the job dispatched, the target filled up)
         for (from, local, to) in moves {
             // only migrate jobs this cluster owns: a queued job with no
@@ -389,52 +498,30 @@ impl ClusterScheduler {
             {
                 continue;
             }
-            let (script, submitted_at) =
+            // the withdrawn state carries any checkpoint + prior-segment
+            // accounting: a restarted job migrated AGAIN while still
+            // queued must not lose its completed epochs
+            let (script, submitted_at, resume, prior_run_secs) =
                 match self.shards[from].server.lock().unwrap().withdraw(local) {
                     Ok(s) => s,
                     Err(_) => continue, // dispatched since the snapshot
                 };
-            let tag = script.payload.image.clone();
-            // bound to a let so the distributor guard is released before
-            // any shard lock is taken on the fallback path
-            let source_info = self.distributor.lock().unwrap().source_of(&tag);
-            let Some((digest, source)) = source_info else {
-                // image never staged through this cluster: put the job
-                // back where it was (clock preserved) and move on
-                let back = self.requeue(from, script, submitted_at)?;
-                self.remap(from, local, from, back);
-                continue;
-            };
-            let staged = self
-                .distributor
-                .lock()
-                .unwrap()
-                .stage(to, &tag, &digest, &source)?;
-            // re-stage the migrated job's dataset on the destination shard
-            // (a hit when the destination already holds it, a single fresh
-            // miss otherwise — the counters record exactly one event, so
-            // migration never double-counts staging in the batch report)
-            if let Some(name) = &script.payload.dataset {
-                let spec = self.stager.lock().unwrap().spec_of(name);
-                if let Some(spec) = spec {
-                    self.stager.lock().unwrap().stage_to_shard(to, &spec);
-                }
-            }
-            let new_local = {
-                let mut srv = self.shards[to].server.lock().unwrap();
-                srv.register_image(&tag, staged);
-                srv.qsub_at(script.clone(), submitted_at)
-            };
-            match new_local {
+            let placed =
+                self.place_and_queue(&script, submitted_at, to, resume.clone(), prior_run_secs);
+            match placed {
                 Ok(nl) => {
-                    self.remap(from, local, to, nl);
+                    let gid = self.remap(from, local, to, nl);
                     let mut map = self.map.lock().unwrap();
                     map.migrations += 1;
                     map.migrations_in[to] += 1;
+                    drop(map);
+                    if let Some(gid) = gid {
+                        self.move_pin(gid, to);
+                    }
                 }
                 Err(_) => {
                     // drain failed: return the job to its origin shard
-                    let back = self.requeue(from, script, submitted_at)?;
+                    let back = self.requeue(from, script, submitted_at, resume, prior_run_secs)?;
                     self.remap(from, local, from, back);
                 }
             }
@@ -442,29 +529,401 @@ impl ClusterScheduler {
         Ok(())
     }
 
+    /// Elastic phase A: collect checkpointed jobs from every shard and
+    /// restart each from its checkpoint on the engine's best-scoring
+    /// shard (the origin is allowed — by the time the checkpoint landed,
+    /// the cluster may have changed). Global id, queue-wait clock, and
+    /// cumulative run seconds all ride along.
+    fn restart_preempted(&self) -> Result<()> {
+        for from in 0..self.shards.len() {
+            let taken = self.shards[from].server.lock().unwrap().take_preempted();
+            for (old_local, script, submitted_at, ckpt, run_secs) in taken {
+                let job = JobShape {
+                    class: TorqueServer::class_of(&script),
+                    demand: script.resources.slot_demand(),
+                    expected: script.expected_secs(),
+                    tag: script.payload.image.clone(),
+                    dataset: script.payload.dataset.clone(),
+                };
+                let snaps = self.collect_snaps();
+                let to = match self.image_estimates(&job) {
+                    None => from, // not cluster-staged: restart in place
+                    Some(image_est) => {
+                        let data_est = self.data_estimates(&job);
+                        let loads: Vec<ShardLoad> = (0..self.shards.len())
+                            .map(|t| {
+                                let staging = if t == from { 0.0 } else { image_est[t] };
+                                let data = if t == from { 0.0 } else { data_est[t] };
+                                snaps[t].load(t, job.class, job.demand, staging, data)
+                            })
+                            .collect();
+                        PlacementEngine::best_scoring(&loads).unwrap_or(from)
+                    }
+                };
+                let queued = self.place_and_queue(
+                    &script,
+                    submitted_at,
+                    to,
+                    Some(ckpt.clone()),
+                    run_secs,
+                );
+                match queued {
+                    Ok(nl) => {
+                        let gid = self.remap(from, old_local, to, nl);
+                        let mut map = self.map.lock().unwrap();
+                        if to != from {
+                            map.migrations += 1;
+                            map.migrations_elastic += 1;
+                            map.migrations_in[to] += 1;
+                        }
+                        drop(map);
+                        if let Some(gid) = gid {
+                            if to != from {
+                                self.move_pin(gid, to);
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        // restart failed on the pick: resume on the origin
+                        let fallback = self.shards[from].server.lock().unwrap().qsub_resume(
+                            script,
+                            submitted_at,
+                            Some(ckpt),
+                            run_secs,
+                        );
+                        match fallback {
+                            Ok(back) => {
+                                self.remap(from, old_local, from, back);
+                            }
+                            Err(e) => {
+                                // double failure: surface it and drop the
+                                // mapping — an abort here would silently
+                                // lose every remaining checkpoint already
+                                // taken off its server, and a dangling id
+                                // would stall the batch forever
+                                eprintln!(
+                                    "cluster: restarting checkpointed job failed: {e:#}"
+                                );
+                                let mut map = self.map.lock().unwrap();
+                                if let Some(gid) = map.rev.remove(&(from, old_local)) {
+                                    map.fwd.remove(&gid);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Elastic phase B: on a shard whose queued work is blocked behind
+    /// running jobs, ask ONE running job to checkpoint at its next epoch
+    /// boundary — when moving it to the engine's best idle shard scores
+    /// strictly better than keeping it, and freeing its slots would let a
+    /// blocked queued job dispatch. The checkpoint is collected and
+    /// restarted by a later `rebalance` pass (the node reports it
+    /// asynchronously).
+    fn trigger_preemptions(&self) {
+        let snaps = self.collect_snaps();
+        for from in 0..self.shards.len() {
+            if snaps[from].queued_count == 0 {
+                continue;
+            }
+            // blocked queued jobs + movable running candidates (with their
+            // node's slot state), snapshotted under one server lock
+            let (blocked, running, already_preempting) = {
+                let srv = self.shards[from].server.lock().unwrap();
+                let blocked: Vec<(Target, usize)> = srv
+                    .queued_ids()
+                    .iter()
+                    .filter_map(|id| srv.job(*id).ok())
+                    .map(|r| {
+                        (
+                            TorqueServer::class_of(&r.script),
+                            r.script.resources.slot_demand(),
+                        )
+                    })
+                    .filter(|(class, demand)| *demand > srv.free_slots(*class))
+                    .collect();
+                let running: Vec<(JobId, usize, usize)> = srv
+                    .running_ids()
+                    .into_iter()
+                    .filter_map(|id| {
+                        let node = srv.job(id).ok()?.node?;
+                        let (node_free, node_total) = srv.node_slot_state(node)?;
+                        Some((id, node_free, node_total))
+                    })
+                    .collect();
+                let pending = running.iter().any(|(id, _, _)| srv.preempt_requested(*id));
+                (blocked, running, pending)
+            };
+            if blocked.is_empty() || already_preempting {
+                continue;
+            }
+            for (local, node_free, node_total) in running {
+                // only preempt jobs this cluster owns
+                if !self.map.lock().unwrap().rev.contains_key(&(from, local)) {
+                    continue;
+                }
+                let Some(job) = self.job_shape(from, local) else {
+                    continue;
+                };
+                // freeing this job's slots must actually unblock work —
+                // at NODE granularity: a blocked job only dispatches where
+                // the freed and free slots sit on the same node
+                let helps = blocked.iter().any(|(class, demand)| {
+                    *class == job.class
+                        && *demand <= node_free + job.demand
+                        && *demand <= node_total
+                });
+                if !helps {
+                    continue;
+                }
+                let Some(_best) = self.best_strict_improvement(&snaps, from, &job) else {
+                    continue;
+                };
+                let _ = self.shards[from].server.lock().unwrap().preempt(local);
+                break; // at most one new checkpoint per shard per pass
+            }
+        }
+    }
+
+    /// The engine's best strictly-better migration target for `job`
+    /// (currently resident on `from`): candidates must be idle with room
+    /// now, and the winner must beat staying put under the unified score
+    /// (with a small hysteresis epsilon — a tie is not worth a move).
+    /// The ONE implementation behind queued migration and elastic
+    /// preemption, so the two tiers can never disagree about what "a
+    /// better shard" means. None when the job's image never staged
+    /// through this cluster (it cannot be restaged elsewhere).
+    fn best_strict_improvement(
+        &self,
+        snaps: &[QueueSnap],
+        from: usize,
+        job: &JobShape,
+    ) -> Option<usize> {
+        let image_est = self.image_estimates(job)?;
+        let data_est = self.data_estimates(job);
+        let candidates: Vec<ShardLoad> = (0..self.shards.len())
+            .filter(|&t| t != from)
+            .map(|t| {
+                let mut l = snaps[t].load(t, job.class, job.demand, image_est[t], data_est[t]);
+                l.eligible =
+                    l.eligible && snaps[t].idle && snaps[t].free_of(job.class) >= job.demand;
+                l
+            })
+            .collect();
+        let best = PlacementEngine::best_scoring(&candidates)?;
+        let best_load = candidates
+            .iter()
+            .find(|l| l.shard == best)
+            .expect("best came from candidates");
+        // strict improvement over staying put (the origin load still
+        // counts a queued job in its backlog)
+        let origin = snaps[from].load(from, job.class, job.demand, 0.0, 0.0);
+        (PlacementEngine::score(best_load) + 1e-9 < PlacementEngine::score(&origin))
+            .then_some(best)
+    }
+
+    /// Stage the job's image (and dataset) onto `to` and queue it there —
+    /// the shared tail of queued migration and checkpoint restart.
+    fn place_and_queue(
+        &self,
+        script: &JobScript,
+        submitted_at: Instant,
+        to: usize,
+        resume: Option<crate::trainer::Checkpoint>,
+        prior_run_secs: f64,
+    ) -> Result<JobId> {
+        let tag = script.payload.image.clone();
+        // bound to a let so the distributor guard is released before any
+        // shard lock is taken
+        let source_info = self.distributor.lock().unwrap().source_of(&tag);
+        let Some((digest, source)) = source_info else {
+            return Err(anyhow!("image {tag:?} never staged through this cluster"));
+        };
+        let staged = self
+            .distributor
+            .lock()
+            .unwrap()
+            .stage(to, &tag, &digest, &source)?;
+        // re-stage the migrated job's dataset on the destination shard
+        // (a hit when the destination already holds it, a single fresh
+        // miss otherwise — the counters record exactly one event, so
+        // migration never double-counts staging in the batch report)
+        if let Some(name) = &script.payload.dataset {
+            let spec = self.stager.lock().unwrap().spec_of(name);
+            if let Some(spec) = spec {
+                self.stager.lock().unwrap().stage_to_shard(to, &spec);
+            }
+        }
+        let mut srv = self.shards[to].server.lock().unwrap();
+        srv.register_image(&tag, staged);
+        srv.qsub_resume(script.clone(), submitted_at, resume, prior_run_secs)
+    }
+
     /// Re-qsub a withdrawn script on `shard` with its original submission
-    /// instant (its image is registered there already — the job ran its
-    /// submit path on that shard).
+    /// instant and checkpoint/restart state (its image is registered there
+    /// already — the job ran its submit path on that shard).
     fn requeue(
         &self,
         shard: usize,
         script: JobScript,
-        submitted_at: std::time::Instant,
+        submitted_at: Instant,
+        resume: Option<crate::trainer::Checkpoint>,
+        prior_run_secs: f64,
     ) -> Result<JobId> {
         self.shards[shard]
             .server
             .lock()
             .unwrap()
-            .qsub_at(script, submitted_at)
+            .qsub_resume(script, submitted_at, resume, prior_run_secs)
     }
 
     /// Point the global id that mapped to (`from`, `old_local`) at
-    /// (`to`, `new_local`).
-    fn remap(&self, from: usize, old_local: JobId, to: usize, new_local: JobId) {
+    /// (`to`, `new_local`); returns the id when the cluster owned the job.
+    fn remap(
+        &self,
+        from: usize,
+        old_local: JobId,
+        to: usize,
+        new_local: JobId,
+    ) -> Option<ClusterJobId> {
         let mut map = self.map.lock().unwrap();
-        if let Some(gid) = map.rev.remove(&(from, old_local)) {
-            map.fwd.insert(gid, (to, new_local));
-            map.rev.insert((to, new_local), gid);
+        let gid = map.rev.remove(&(from, old_local))?;
+        map.fwd.insert(gid, (to, new_local));
+        map.rev.insert((to, new_local), gid);
+        Some(gid)
+    }
+
+    /// Per-shard queue/capacity snapshot for rebalancing decisions (one
+    /// server lock at a time, never two at once).
+    fn collect_snaps(&self) -> Vec<QueueSnap> {
+        self.shards
+            .iter()
+            .map(|shard| {
+                let srv = shard.server.lock().unwrap();
+                let mut free = BTreeMap::new();
+                let mut total = BTreeMap::new();
+                let mut max_slots = BTreeMap::new();
+                for class in [Target::Cpu, Target::GpuSim] {
+                    free.insert(class, srv.free_slots(class));
+                    total.insert(class, srv.total_slots(class));
+                    max_slots.insert(class, srv.max_node_slots(class).unwrap_or(0));
+                }
+                QueueSnap {
+                    free,
+                    total,
+                    max_slots,
+                    idle: srv.queued() == 0,
+                    queued: srv.queued_ids(),
+                    queued_count: srv.queued(),
+                    backlog: srv.backlog_secs(),
+                }
+            })
+            .collect()
+    }
+
+    /// The placement-relevant shape of one resident job.
+    fn job_shape(&self, shard: usize, local: JobId) -> Option<JobShape> {
+        let srv = self.shards[shard].server.lock().unwrap();
+        let rec = srv.job(local).ok()?;
+        Some(JobShape {
+            class: TorqueServer::class_of(&rec.script),
+            demand: rec.script.resources.slot_demand(),
+            expected: rec.script.expected_secs(),
+            tag: rec.script.payload.image.clone(),
+            dataset: rec.script.payload.dataset.clone(),
+        })
+    }
+
+    /// Per-shard image-staging estimates for a job (None when its tag was
+    /// never staged through this cluster — it cannot be restaged).
+    fn image_estimates(&self, job: &JobShape) -> Option<Vec<f64>> {
+        let mut dist = self.distributor.lock().unwrap();
+        let (digest, source) = dist.source_of(&job.tag)?;
+        Some(
+            (0..self.shards.len())
+                .map(|t| dist.estimate_secs(t, &digest, &source))
+                .collect(),
+        )
+    }
+
+    /// Per-shard dataset-staging estimates for a job (zeros without one).
+    fn data_estimates(&self, job: &JobShape) -> Vec<f64> {
+        let stager = self.stager.lock().unwrap();
+        match job.dataset.as_ref().and_then(|n| stager.spec_of(n)) {
+            Some(spec) => (0..self.shards.len())
+                .map(|t| stager.estimate_shard_secs(t, &spec))
+                .collect(),
+            None => vec![0.0; self.shards.len()],
+        }
+    }
+
+    /// Re-point a migrated job's reference pins at its new shard.
+    fn move_pin(&self, gid: ClusterJobId, to: usize) {
+        let rec = { self.map.lock().unwrap().pins.get(&gid).cloned() };
+        let Some(rec) = rec else { return };
+        if rec.shard == to {
+            return;
+        }
+        {
+            let mut dist = self.distributor.lock().unwrap();
+            dist.unpin(rec.shard, &rec.image_digest);
+            dist.pin(to, &rec.image_digest);
+        }
+        if let Some(d) = &rec.data_digest {
+            let mut stager = self.stager.lock().unwrap();
+            stager.unpin_shard(rec.shard, d);
+            stager.pin_shard(to, d);
+        }
+        if let Some(r) = self.map.lock().unwrap().pins.get_mut(&gid) {
+            r.shard = to;
+        }
+    }
+
+    /// Release the reference pins of jobs that reached a terminal state
+    /// (their bundles/datasets become ordinary LRU prey again).
+    fn release_finished_pins(&self) {
+        let candidates: Vec<(ClusterJobId, Option<(usize, JobId)>)> = {
+            let map = self.map.lock().unwrap();
+            map.pins
+                .keys()
+                .map(|gid| (*gid, map.fwd.get(gid).copied()))
+                .collect()
+        };
+        let mut done: Vec<ClusterJobId> = Vec::new();
+        for (gid, loc) in candidates {
+            let terminal = match loc {
+                None => true, // unmapped pin: nothing can release it later
+                Some((shard, local)) => {
+                    let srv = self.shards[shard].server.lock().unwrap();
+                    srv.job(local).map(|r| r.state.is_terminal()).unwrap_or(true)
+                }
+            };
+            if terminal {
+                done.push(gid);
+            }
+        }
+        if done.is_empty() {
+            return;
+        }
+        let recs: Vec<PinRecord> = {
+            let mut map = self.map.lock().unwrap();
+            done.iter().filter_map(|gid| map.pins.remove(gid)).collect()
+        };
+        {
+            let mut dist = self.distributor.lock().unwrap();
+            for r in &recs {
+                dist.unpin(r.shard, &r.image_digest);
+            }
+        }
+        let mut stager = self.stager.lock().unwrap();
+        for r in &recs {
+            if let Some(d) = &r.data_digest {
+                stager.unpin_shard(r.shard, d);
+            }
         }
     }
 
@@ -498,6 +957,11 @@ impl ClusterScheduler {
     /// Total migrations executed by the rebalancer.
     pub fn migrations(&self) -> u64 {
         self.map.lock().unwrap().migrations
+    }
+
+    /// Slice of [`Self::migrations`] executed via checkpoint/restart.
+    pub fn elastic_migrations(&self) -> u64 {
+        self.map.lock().unwrap().migrations_elastic
     }
 
     /// Per-shard point-in-time stats for batch reporting.
@@ -619,7 +1083,12 @@ mod tests {
         }
     }
 
-    fn cluster(name: &str, shards: Vec<ShardSpec>, router: ShardRouter) -> ClusterScheduler {
+    fn cluster_mode(
+        name: &str,
+        shards: Vec<ShardSpec>,
+        router: ShardRouter,
+        rebalance: RebalanceMode,
+    ) -> ClusterScheduler {
         ClusterScheduler::new(
             store(name),
             &ClusterConfig {
@@ -627,9 +1096,14 @@ mod tests {
                 router,
                 policy: SchedulePolicy::Fifo,
                 cache_cap_bytes: None,
+                rebalance,
             },
             Arc::new(Signal::new()),
         )
+    }
+
+    fn cluster(name: &str, shards: Vec<ShardSpec>, router: ShardRouter) -> ClusterScheduler {
+        cluster_mode(name, shards, router, RebalanceMode::Queued)
     }
 
     fn one_node_shard() -> ShardSpec {
@@ -637,6 +1111,16 @@ mod tests {
             cpu_nodes: 1,
             gpu_nodes: 0,
             slots_per_node: 1,
+            policy: None,
+        }
+    }
+
+    fn shard_with_slots(slots: usize) -> ShardSpec {
+        ShardSpec {
+            cpu_nodes: 1,
+            gpu_nodes: 0,
+            slots_per_node: slots,
+            policy: None,
         }
     }
 
@@ -662,6 +1146,7 @@ mod tests {
             cpu_nodes: 3,
             gpu_nodes: 2,
             slots_per_node: 2,
+            policy: None,
         };
         let one = ShardSpec::heterogeneous(1, &base);
         assert_eq!(one, vec![base.clone()], "single shard is exactly the base");
@@ -772,6 +1257,129 @@ mod tests {
         // the qstat line renders global ids grouped by shard
         let line = c.qstat_line();
         assert!(line.contains("s0:") && line.contains("| s1:"), "{line}");
+    }
+
+    /// Satellite: per-shard dispatch-policy overrides (`--policy-shard`)
+    /// ride in on `ShardSpec.policy`; unset shards keep the cluster-wide
+    /// default.
+    #[test]
+    fn per_shard_policy_overrides_apply() {
+        let mut specs = vec![one_node_shard(), one_node_shard(), one_node_shard()];
+        specs[1].policy = Some(SchedulePolicy::Sjf);
+        specs[2].policy = Some(SchedulePolicy::Reservation);
+        let c = cluster("policy_overrides", specs, ShardRouter::RoundRobin);
+        assert_eq!(c.with_shard(0, |s| s.policy()), SchedulePolicy::Fifo);
+        assert_eq!(c.with_shard(1, |s| s.policy()), SchedulePolicy::Sjf);
+        assert_eq!(c.with_shard(2, |s| s.policy()), SchedulePolicy::Reservation);
+    }
+
+    /// Tentpole acceptance: queued rebalancing migrates to the BEST-
+    /// scoring idle shard — not the first idle fit. Shard 1 (lower index)
+    /// is idle but carries heavy running backlog; shard 2 is idle with a
+    /// light one: the engine must pick shard 2.
+    #[test]
+    fn rebalance_migrates_to_best_scoring_idle_shard_not_first_fit() {
+        let c = cluster(
+            "best_score",
+            vec![one_node_shard(), shard_with_slots(2), shard_with_slots(2)],
+            ShardRouter::RoundRobin,
+        );
+        let ghost = PathBuf::from("/not/a/bundle");
+        let submit = |pred: f64| {
+            c.submit(script("img:1", 1, Some(pred)), "img:1", "fnv1a:x", &ghost, None)
+                .unwrap()
+        };
+        let j1 = submit(50.0); // rr -> shard 0, runs (occupies its slot)
+        let j2 = submit(50.0); // rr -> shard 1, runs: ~25 s/slot pressure
+        let j3 = submit(5.0); // rr -> shard 2, runs:  ~2.5 s/slot pressure
+        let j4 = submit(5.0); // rr -> shard 0, queued behind j1
+        assert_eq!(c.shard_of(j4), Some(0));
+        assert_eq!(c.with_job(j4, |r| r.state.code()).unwrap(), 'Q');
+        c.rebalance().unwrap();
+        assert_eq!(
+            c.shard_of(j4),
+            Some(2),
+            "first-idle-fit would have picked shard 1; the engine must not"
+        );
+        assert_eq!(c.migrations(), 1);
+        assert_eq!(c.elastic_migrations(), 0, "a queued move, not elastic");
+        let snaps = c.shard_snapshots();
+        assert_eq!(snaps[2].migrations_in, 1);
+        assert_eq!(snaps[1].migrations_in, 0);
+        drain(&c, &[j1, j2, j3, j4]);
+    }
+
+    /// Tentpole: elastic checkpoint/restart. An overloaded shard's queue
+    /// is stuck behind a running job only the wide shard can never help
+    /// (the queued job needs 2 slots; the narrow shard has 1) — the
+    /// rebalancer asks the RUNNING job to checkpoint, collects it, and
+    /// restarts it from the checkpoint on the engine's best shard with
+    /// its global id and cumulative run-time accounting intact.
+    #[test]
+    fn elastic_rebalance_restarts_checkpointed_job_on_best_shard() {
+        use crate::container::RunOutcome;
+        use crate::scheduler::NodeResult;
+        use crate::trainer::Checkpoint;
+        let c = cluster_mode(
+            "elastic",
+            vec![shard_with_slots(2), shard_with_slots(1)],
+            ShardRouter::RoundRobin,
+            RebalanceMode::Elastic,
+        );
+        let ghost = PathBuf::from("/not/a/bundle");
+        let j1 = c
+            .submit(script("img:1", 1, Some(50.0)), "img:1", "fnv1a:x", &ghost, None)
+            .unwrap(); // -> shard 0, runs
+        let j2 = c
+            .submit(script("img:1", 2, Some(5.0)), "img:1", "fnv1a:x", &ghost, None)
+            .unwrap(); // 2 slots: only shard 0 can EVER hold it -> queued
+        assert_eq!(c.shard_of(j1), Some(0));
+        assert_eq!(c.with_job(j2, |r| r.state.code()).unwrap(), 'Q');
+        // pass 1: queued migration can't help (shard 1 is ineligible for
+        // a 2-slot job); elastic asks the running j1 to checkpoint
+        c.rebalance().unwrap();
+        assert!(
+            c.with_shard(0, |srv| srv.preempt_requested(1)),
+            "the running 1-slot job must be asked to checkpoint"
+        );
+        // the node reports the checkpoint at the epoch boundary (the live
+        // payload path is ghost-bundled here, so fabricate the report)
+        c.with_shard(0, |srv| {
+            srv.absorb(NodeResult {
+                job_id: 1,
+                node_id: 0,
+                outcome: Ok(RunOutcome::Preempted(Checkpoint {
+                    epochs_done: 1,
+                    train_secs: 2.0,
+                    ..Checkpoint::default()
+                })),
+                wall_secs: 2.0,
+            })
+        })
+        .unwrap();
+        assert_eq!(c.with_job(j1, |r| r.state.code()).unwrap(), 'S');
+        // the freed slots let the blocked 2-slot job dispatch immediately
+        assert_eq!(c.with_job(j2, |r| r.state.code()).unwrap(), 'R');
+        // pass 2: the checkpoint is collected and restarted on shard 1
+        // (idle, trivially better-scoring than the now-busy shard 0),
+        // same global id
+        c.rebalance().unwrap();
+        assert_eq!(c.shard_of(j1), Some(1), "restarted on the best shard");
+        assert_eq!(c.elastic_migrations(), 1);
+        assert_eq!(c.migrations(), 1);
+        let snaps = c.shard_snapshots();
+        assert_eq!(snaps[1].migrations_in, 1);
+        drain(&c, &[j1, j2]);
+        // measured-time accounting: the ghost-bundle restart fails, but
+        // its terminal wall time still includes the 2.0s first segment —
+        // summed across segments, never double-counted
+        let wall = c
+            .with_job(j1, |r| r.state.wall_secs().unwrap())
+            .unwrap();
+        assert!(
+            (2.0..4.0).contains(&wall),
+            "wall {wall} must be first segment (2.0s) + a tiny restart"
+        );
     }
 
     /// Satellite: cross-shard migration with staged data. A withdrawn,

@@ -1,27 +1,28 @@
-//! Pluggable shard routing for the multi-shard cluster scheduler.
+//! Pluggable shard routing for the multi-shard cluster scheduler — now a
+//! **thin adapter** over the unified [`crate::placement::PlacementEngine`].
 //!
-//! Mirrors the per-shard [`crate::scheduler::policy`] split: routing is a
-//! pure decision over load snapshots, so every router property is testable
-//! without threads or clocks. Three routers:
+//! Routing used to carry its own scoring closures; every cost now lives in
+//! ONE place ([`crate::placement::PlacementCost`]) and this module only
+//! maps the CLI-facing router names onto engine strategies:
 //!
 //! * **round-robin** — cycle through eligible shards; the baseline.
-//! * **least-loaded** — smallest backlog (expected seconds of queued +
-//!   running work) normalised by the shard's slot capacity, so a fat shard
-//!   absorbs more work than a lean one before looking "loaded".
-//! * **perf-aware** — minimises the *expected completion time* of this
-//!   job. The job's own run time is shard-invariant (identical hardware),
-//!   so the shard-differentiating terms are the expected wait — the
-//!   normalised backlog, itself the sum of the resident jobs' per-job
-//!   performance-model predictions — plus the simulated image-staging
-//!   cost on shards that do not yet hold the bundle (the
-//!   [`crate::cluster::ImageDistributor`] supplies that term) and the
-//!   simulated *dataset*-staging cost on shards whose data cache lacks
-//!   the job's dataset (the [`crate::data::stage::StageManager`] supplies
-//!   that one), so routing prefers shards where the image and the data
-//!   already live. With uniform staging state it coincides with
-//!   least-loaded; its edge is locality.
+//! * **least-loaded** — smallest capacity-normalised backlog (the engine's
+//!   pressure term alone).
+//! * **perf-aware** — smallest full placement cost: normalised backlog +
+//!   image-staging cost (shards lacking the bundle digest) + dataset-
+//!   staging cost (shards whose data cache lacks the job's dataset). With
+//!   uniform staging state it coincides with least-loaded; its edge is
+//!   locality.
+//!
+//! The same engine is consulted by the cluster's queued rebalancer and the
+//! elastic checkpoint/restart tier, so initial routing and migration can
+//! never disagree about what "a better shard" means.
 
 use anyhow::{bail, Result};
+
+use crate::placement::{PlacementEngine, PlacementStrategy};
+
+pub use crate::placement::ShardLoad;
 
 /// Which routing rule the cluster applies to each submitted job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -31,7 +32,7 @@ pub enum ShardRouter {
     RoundRobin,
     /// Smallest capacity-normalised backlog.
     LeastLoaded,
-    /// Smallest expected completion time (backlog + image-staging cost).
+    /// Smallest unified placement cost (backlog + image + data staging).
     PerfAware,
 }
 
@@ -54,6 +55,20 @@ impl ShardRouter {
             ShardRouter::PerfAware => "perf-aware",
         }
     }
+
+    /// The placement strategy this router name resolves to.
+    pub fn strategy(&self) -> PlacementStrategy {
+        match self {
+            ShardRouter::RoundRobin => PlacementStrategy::RoundRobin,
+            ShardRouter::LeastLoaded => PlacementStrategy::LeastLoaded,
+            ShardRouter::PerfAware => PlacementStrategy::CostBased,
+        }
+    }
+
+    /// The engine that applies this router's strategy.
+    pub fn engine(&self) -> PlacementEngine {
+        PlacementEngine::new(self.strategy())
+    }
 }
 
 impl std::fmt::Display for ShardRouter {
@@ -62,77 +77,11 @@ impl std::fmt::Display for ShardRouter {
     }
 }
 
-/// One shard's load as the router sees it at submit time.
-#[derive(Debug, Clone)]
-pub struct ShardLoad {
-    pub shard: usize,
-    /// The shard can run this job at all (node class present, largest node
-    /// holds the demand). Ineligible shards are never picked.
-    pub eligible: bool,
-    /// Free class-matching slots right now.
-    pub free_slots: usize,
-    /// Total class-matching slots.
-    pub total_slots: usize,
-    /// Jobs queued (all classes — a deep queue delays everyone).
-    pub queued: usize,
-    /// Expected seconds of queued + running work ahead of a new arrival.
-    pub backlog_secs: f64,
-    /// Simulated transfer seconds to stage this job's image here
-    /// (0.0 when the shard already holds the digest).
-    pub staging_secs: f64,
-    /// Simulated transfer seconds to stage this job's *dataset* here
-    /// (0.0 when the shard's dataset cache holds it, or the job has no
-    /// dataset). Supplied by [`crate::data::stage::StageManager`].
-    pub data_staging_secs: f64,
-}
-
-impl ShardLoad {
-    /// Backlog normalised by capacity: seconds of work per slot.
-    fn pressure(&self) -> f64 {
-        self.backlog_secs / self.total_slots.max(1) as f64
-    }
-}
-
-/// Pick a shard for a job. `rr_cursor` is the round-robin state (advanced
-/// only by the round-robin rule). Returns None when no shard is eligible.
-///
-/// The job's own expected run seconds are deliberately NOT part of any
-/// cost: on identical hardware they shift every shard's completion time
-/// equally and cannot change the argmin. Predictions drive routing
-/// through the *backlog* term instead — each shard's `backlog_secs` is
-/// the sum of its resident jobs' per-job model predictions.
+/// Pick a shard for a job (adapter surface kept for the sims and tests:
+/// the decision is entirely [`PlacementEngine::choose`]). `rr_cursor` is
+/// the round-robin state; returns None when no shard is eligible.
 pub fn route(router: ShardRouter, loads: &[ShardLoad], rr_cursor: &mut usize) -> Option<usize> {
-    let eligible: Vec<&ShardLoad> = loads.iter().filter(|l| l.eligible).collect();
-    if eligible.is_empty() {
-        return None;
-    }
-    match router {
-        ShardRouter::RoundRobin => {
-            let pick = eligible[*rr_cursor % eligible.len()].shard;
-            *rr_cursor = rr_cursor.wrapping_add(1);
-            Some(pick)
-        }
-        ShardRouter::LeastLoaded => eligible
-            .iter()
-            .min_by(|a, b| {
-                a.pressure()
-                    .total_cmp(&b.pressure())
-                    .then(b.free_slots.cmp(&a.free_slots))
-                    .then(a.shard.cmp(&b.shard))
-            })
-            .map(|l| l.shard),
-        ShardRouter::PerfAware => eligible
-            .iter()
-            .min_by(|a, b| {
-                let cost =
-                    |l: &ShardLoad| l.pressure() + l.staging_secs + l.data_staging_secs;
-                cost(a)
-                    .total_cmp(&cost(b))
-                    .then(b.free_slots.cmp(&a.free_slots))
-                    .then(a.shard.cmp(&b.shard))
-            })
-            .map(|l| l.shard),
-    }
+    router.engine().choose(loads, rr_cursor)
 }
 
 #[cfg(test)]
@@ -153,13 +102,15 @@ mod tests {
     }
 
     #[test]
-    fn router_parse_roundtrip() {
-        for r in [
-            ShardRouter::RoundRobin,
-            ShardRouter::LeastLoaded,
-            ShardRouter::PerfAware,
+    fn router_parse_roundtrip_and_strategy_mapping() {
+        for (r, s) in [
+            (ShardRouter::RoundRobin, PlacementStrategy::RoundRobin),
+            (ShardRouter::LeastLoaded, PlacementStrategy::LeastLoaded),
+            (ShardRouter::PerfAware, PlacementStrategy::CostBased),
         ] {
             assert_eq!(ShardRouter::parse(r.as_str()).unwrap(), r);
+            assert_eq!(r.strategy(), s);
+            assert_eq!(r.engine().strategy(), s);
         }
         assert!(ShardRouter::parse("random").is_err());
         assert_eq!(ShardRouter::default(), ShardRouter::RoundRobin);
@@ -215,7 +166,7 @@ mod tests {
     }
 
     /// Tentpole: the dataset-locality term sits next to image locality in
-    /// the perf-aware cost; routers that ignore data stay data-blind.
+    /// the unified cost; routers that ignore data stay data-blind.
     #[test]
     fn perf_aware_prefers_shard_already_holding_the_dataset() {
         // equal backlog and image state; shard 0 must stage the dataset

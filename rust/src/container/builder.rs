@@ -468,6 +468,26 @@ impl BuildPool {
         self.state.lock().unwrap().stats.cache_hits += 1;
     }
 
+    /// Reference-pin every cached bundle for image `reference`
+    /// (`name:tag`) against store GC: a queued/running job still points at
+    /// it, so `--store-cap-mb` pressure must never evict it (refcounted;
+    /// pin after `build_cached`/`ensure_built` returns, unpin when the job
+    /// is terminal).
+    pub fn pin_image(&self, reference: &str) {
+        let mut st = self.state.lock().unwrap();
+        for key in bundle_keys(&st, reference) {
+            st.lru.pin(&key);
+        }
+    }
+
+    /// Drop one pin reference on every cached bundle for `reference`.
+    pub fn unpin_image(&self, reference: &str) {
+        let mut st = self.state.lock().unwrap();
+        for key in bundle_keys(&st, reference) {
+            st.lru.unpin(&key);
+        }
+    }
+
     pub fn stats(&self) -> BuildStats {
         self.state.lock().unwrap().stats.clone()
     }
@@ -475,6 +495,18 @@ impl BuildPool {
 
 fn index_path(store: &Path) -> PathBuf {
     store.join("build_index.json")
+}
+
+/// Cache keys of every completed bundle for image `reference` (`name:tag`)
+/// — the one matching rule behind pin/unpin.
+fn bundle_keys(st: &PoolState, reference: &str) -> Vec<String> {
+    st.slots
+        .iter()
+        .filter_map(|(key, slot)| match slot {
+            BuildSlot::Done(img) if img.reference() == reference => Some(key.clone()),
+            _ => None,
+        })
+        .collect()
 }
 
 /// Serialize the digest -> bundle index (successful builds only: failures
@@ -740,6 +772,46 @@ mod tests {
         let again = restarted.build_cached("base", "a", &base_def()).unwrap();
         assert_eq!(restarted.stats().builds, 1, "evicted image rebuilt");
         assert_eq!(again.digest, a.digest);
+    }
+
+    /// Satellite acceptance (reference-pinned eviction): a bundle pinned
+    /// by a queued/running job SURVIVES `--store-cap-mb` pressure — the
+    /// GC takes unpinned bundles (or nothing) instead — and becomes
+    /// ordinary LRU prey again once unpinned.
+    #[test]
+    fn pinned_bundle_survives_store_cap_pressure() {
+        let dir = store("pool_pinned");
+        let probe = BuildPool::new(&dir, empty_manifest(), 1);
+        let first = probe.build_cached("base", "a", &base_def()).unwrap();
+        let bundle_bytes = dir_size(&first.dir).max(1);
+        drop(probe);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let pool = BuildPool::with_capacity(
+            &dir,
+            empty_manifest(),
+            1,
+            Some(bundle_bytes + bundle_bytes / 2), // fits 1 bundle, not 2
+        );
+        let a = pool.build_cached("base", "a", &base_def()).unwrap();
+        pool.pin_image(&a.reference()); // a queued job references base:a
+        let mut def_b = base_def();
+        def_b.post.push("pip install extras".into());
+        let b = pool.build_cached("base", "b", &def_b).unwrap();
+        // cap pressure, but the only candidate is pinned: nothing evicted
+        let stats = pool.stats();
+        assert_eq!(stats.evictions, 0, "pinned bundle must survive: {stats:?}");
+        assert!(a.dir.exists(), "pinned bundle still on disk");
+        assert!(b.dir.exists());
+        // the job finished: unpin, and the next build may evict `a`
+        pool.unpin_image(&a.reference());
+        let mut def_c = base_def();
+        def_c.post.push("pip install more-extras".into());
+        let c = pool.build_cached("base", "c", &def_c).unwrap();
+        let stats = pool.stats();
+        assert!(stats.evictions >= 1, "unpinned bundles are prey: {stats:?}");
+        assert!(!a.dir.exists(), "coldest unpinned bundle evicted");
+        assert!(c.dir.exists());
     }
 
     #[test]

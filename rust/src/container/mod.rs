@@ -10,4 +10,4 @@ pub mod runtime;
 pub use builder::{BuildOptions, BuildPool, BuildStats, Builder};
 pub use definition::{Bootstrap, DefinitionFile};
 pub use image::{Digest, Image, Layer};
-pub use runtime::{ContainerRun, ContainerRuntime, RunOptions};
+pub use runtime::{ContainerRun, ContainerRuntime, RunOptions, RunOutcome};

@@ -12,7 +12,7 @@ use crate::data::IoProfile;
 use crate::executor::TrainSession;
 use crate::frameworks::Target;
 use crate::runtime::{Engine, Manifest};
-use crate::trainer::{train_with_io, TrainConfig, TrainReport};
+use crate::trainer::{train_resumable, Checkpoint, TrainConfig, TrainOutcome, TrainReport};
 use crate::util::sync::CancelToken;
 
 use super::image::Image;
@@ -26,6 +26,22 @@ pub struct RunOptions {
     /// synthetic in-memory data, no IO simulation). The training loop
     /// routes batches through the double-buffered prefetcher when set.
     pub io: Option<IoProfile>,
+    /// Checkpoint-request token (elastic rebalancing): when the scheduler
+    /// trips it, the training loop stops at its next epoch boundary and
+    /// the run reports [`RunOutcome::Preempted`] instead of completing.
+    pub preempt: Option<CancelToken>,
+    /// Checkpoint to resume from: completed epochs are skipped and the
+    /// saved progress is spliced into the final report.
+    pub resume: Option<Checkpoint>,
+}
+
+/// How a (resumable) containerised run ended.
+#[derive(Debug, Clone)]
+pub enum RunOutcome {
+    Completed(ContainerRun),
+    /// The checkpoint-request token tripped: the payload stopped at an
+    /// epoch boundary; restart elsewhere from this checkpoint.
+    Preempted(Checkpoint),
 }
 
 /// The container runtime bound to one node's device.
@@ -91,6 +107,27 @@ impl<'e> ContainerRuntime<'e> {
         lr: f32,
         kill: &CancelToken,
     ) -> Result<ContainerRun> {
+        match self.run_resumable(image, opts, cfg, seed, lr, kill)? {
+            RunOutcome::Completed(run) => Ok(run),
+            // only reachable when the caller armed opts.preempt but asked
+            // for the non-resumable surface: fail loudly over lying
+            RunOutcome::Preempted(_) => bail!("run preempted at an epoch boundary"),
+        }
+    }
+
+    /// [`Self::run_cancellable`] with checkpoint/restart: honours
+    /// `opts.preempt` (checkpoint at the next epoch boundary) and
+    /// `opts.resume` (skip completed epochs, splice saved progress) — the
+    /// container-level surface of elastic rebalancing.
+    pub fn run_resumable(
+        &self,
+        image: &Image,
+        opts: &RunOptions,
+        cfg: &TrainConfig,
+        seed: i32,
+        lr: f32,
+        kill: &CancelToken,
+    ) -> Result<RunOutcome> {
         self.check_launch(image, opts)?;
         let Some(workload) = image.workload.clone() else {
             bail!("image {} has no workload binding", image.reference())
@@ -109,16 +146,26 @@ impl<'e> ContainerRuntime<'e> {
             seed,
             lr,
         )?;
-        let report = train_with_io(&mut session, cfg, kill, opts.io.as_ref())?;
-        Ok(ContainerRun {
-            image: image.reference(),
-            workload,
-            variant,
-            report,
-            dispatches: session.stats.dispatches,
-            bytes_h2d: session.stats.bytes_h2d,
-            bytes_d2h: session.stats.bytes_d2h,
-            compile_secs: session.stats.compile_secs,
+        let outcome = train_resumable(
+            &mut session,
+            cfg,
+            kill,
+            opts.preempt.as_ref(),
+            opts.io.as_ref(),
+            opts.resume.as_ref(),
+        )?;
+        Ok(match outcome {
+            TrainOutcome::Preempted(ckpt) => RunOutcome::Preempted(ckpt),
+            TrainOutcome::Completed(report) => RunOutcome::Completed(ContainerRun {
+                image: image.reference(),
+                workload,
+                variant,
+                report,
+                dispatches: session.stats.dispatches,
+                bytes_h2d: session.stats.bytes_h2d,
+                bytes_d2h: session.stats.bytes_d2h,
+                compile_secs: session.stats.compile_secs,
+            }),
         })
     }
 }

@@ -173,6 +173,18 @@ impl StageManager {
         Some(IoProfile::for_spec(&spec))
     }
 
+    /// Reference-pin a dataset digest in `shard`'s cache tier: LRU
+    /// eviction under `--store-cap-mb` pressure must never drop a dataset
+    /// a queued/running job still reads (refcounted).
+    pub fn pin_shard(&mut self, shard: usize, digest: &str) {
+        self.shard_caches[shard].pin(&digest.to_string());
+    }
+
+    /// Drop one pin reference on a dataset digest in `shard`'s cache.
+    pub fn unpin_shard(&mut self, shard: usize, digest: &str) {
+        self.shard_caches[shard].unpin(&digest.to_string());
+    }
+
     /// One shard's staging counters.
     pub fn stats(&self, shard: usize) -> DataStageStats {
         self.stats[shard].clone()
@@ -276,6 +288,30 @@ mod tests {
         let before = sm.stats(0).bytes_moved;
         assert!(sm.stage_to_shard(0, &b) > 0.0);
         assert_eq!(sm.stats(0).bytes_moved, before + b.size_bytes);
+    }
+
+    /// Satellite (reference-pinned eviction): a dataset pinned by a live
+    /// job survives cache-capacity pressure; once unpinned it is evictable
+    /// again like any cold entry.
+    #[test]
+    fn pinned_dataset_survives_cap_pressure() {
+        let mb = 1024 * 1024;
+        let mut sm = StageManager::new(1, Some(100 * mb), None);
+        let a = spec("a", 45);
+        let b = spec("b", 45);
+        let c = spec("c", 45);
+        sm.stage_to_shard(0, &a);
+        sm.pin_shard(0, &a.digest); // a queued job still reads `a`
+        sm.stage_to_shard(0, &b);
+        sm.stage_to_shard(0, &c); // 135 MB > 100 MB: must evict...
+        assert!(sm.shard_holds(0, &a), "pinned dataset must survive");
+        assert!(!sm.shard_holds(0, &b), "...the coldest UNPINNED one");
+        assert_eq!(sm.stats(0).evictions, 1);
+        // job finished: unpin; the next pressure wave can take `a`
+        sm.unpin_shard(0, &a.digest);
+        sm.stage_to_shard(0, &b);
+        assert!(!sm.shard_holds(0, &a), "unpinned `a` is evictable again");
+        assert!(sm.shard_holds(0, &b) && sm.shard_holds(0, &c));
     }
 
     #[test]

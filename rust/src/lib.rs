@@ -17,6 +17,7 @@ pub mod dsl;
 pub mod metrics;
 pub mod optimiser;
 pub mod perfmodel;
+pub mod placement;
 pub mod registry;
 pub mod scheduler;
 pub mod service;

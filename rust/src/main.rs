@@ -24,6 +24,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use modak::cluster::ShardRouter;
 use modak::dsl::Optimisation;
+use modak::placement::RebalanceMode;
 use modak::figures::{FigureConfig, Harness};
 use modak::metrics::FigureReport;
 use modak::perfmodel::PerfModel;
@@ -40,7 +41,9 @@ USAGE:
   modak optimise --dsl <file> [--epochs N] [--steps N] [--submit]
   modak serve-batch --dsl-dir <dir> [--epochs N] [--steps N]
               [--policy fifo|sjf|reservation]
+              [--policy-shard <shard>=<policy> ...]
               [--shards N] [--router round-robin|least-loaded|perf-aware]
+              [--rebalance queued|elastic]
               [--max-build-workers N] [--slots-per-node N]
               [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
               [--store-cap-mb N]
@@ -63,6 +66,15 @@ COMMON FLAGS:
   --policy <p>            scheduler dispatch rule: fifo (default) | sjf
                           (pack by predicted runtime) | reservation
                           (EASY backfill, starvation-free)
+  --policy-shard <s>=<p>  per-shard policy override (repeatable), e.g.
+                          --policy reservation --policy-shard 2=sjf runs
+                          reservation everywhere except shard 2
+  --rebalance <m>         cross-shard rebalancing: queued (default; only
+                          still-queued jobs migrate, to the placement
+                          engine's best-scoring shard) | elastic (running
+                          jobs on overloaded shards also checkpoint at an
+                          epoch boundary and restart on the engine's pick,
+                          keeping every completed epoch)
   --shards <n>            scheduler shards (default 1 = single embedded
                           server; more boots a heterogeneous cluster with
                           per-shard image staging + queue rebalancing)
@@ -87,15 +99,17 @@ fn main() {
     }
 }
 
-/// Parsed flag map + positional args.
+/// Parsed flag map + positional args. Flags may repeat (e.g.
+/// `--policy-shard 1=sjf --policy-shard 2=fifo`): every occurrence is
+/// kept in order; `get` returns the last one (last-wins for scalars).
 struct Cli {
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     positional: Vec<String>,
 }
 
 impl Cli {
     fn parse(args: &[String]) -> Cli {
-        let mut flags = BTreeMap::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut positional = Vec::new();
         let mut it = args.iter().peekable();
         while let Some(a) = it.next() {
@@ -105,7 +119,7 @@ impl Cli {
                     Some(v) if !is_flag_like(v) => it.next().unwrap().clone(),
                     _ => "true".to_string(),
                 };
-                flags.insert(name.to_string(), value);
+                flags.entry(name.to_string()).or_default().push(value);
             } else {
                 positional.push(a.clone());
             }
@@ -114,7 +128,15 @@ impl Cli {
     }
 
     fn get(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(String::as_str)
+        self.flags
+            .get(name)
+            .and_then(|vs| vs.last())
+            .map(String::as_str)
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    fn get_all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
@@ -169,6 +191,17 @@ fn run(args: &[String]) -> Result<()> {
 /// Service shape from the common serve flags.
 fn service_config(cli: &Cli) -> Result<ServiceConfig> {
     let defaults = ServiceConfig::default();
+    // repeatable per-shard policy overrides: --policy-shard <idx>=<policy>
+    let mut shard_policies = Vec::new();
+    for spec in cli.get_all("policy-shard") {
+        let (idx, policy) = spec.split_once('=').ok_or_else(|| {
+            anyhow!("--policy-shard expects <shard>=<policy>, got {spec:?}")
+        })?;
+        let idx: usize = idx
+            .parse()
+            .map_err(|_| anyhow!("--policy-shard shard index {idx:?} is not a number"))?;
+        shard_policies.push((idx, SchedulePolicy::parse(policy)?));
+    }
     Ok(ServiceConfig {
         cpu_nodes: cli.get_usize("cpu-nodes", defaults.cpu_nodes)?,
         gpu_nodes: cli.get_usize("gpu-nodes", defaults.gpu_nodes)?,
@@ -189,6 +222,11 @@ fn service_config(cli: &Cli) -> Result<ServiceConfig> {
             0 => None,
             mb => Some(mb as u64),
         },
+        rebalance: match cli.get("rebalance") {
+            None => defaults.rebalance,
+            Some(m) => RebalanceMode::parse(m)?,
+        },
+        shard_policies,
     })
 }
 
@@ -314,12 +352,13 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
     };
 
     println!(
-        "serve-batch: {} requests | {} shard(s), router {} | base shard \
-         {} cpu + {} gpu nodes x {} slots | {} build workers, {} planners \
-         | policy {}",
+        "serve-batch: {} requests | {} shard(s), router {}, rebalance {} \
+         | base shard {} cpu + {} gpu nodes x {} slots | {} build \
+         workers, {} planners | policy {}",
         reqs.len(),
         svc_cfg.shards.max(1),
         svc_cfg.router,
+        svc_cfg.rebalance,
         svc_cfg.cpu_nodes,
         svc_cfg.gpu_nodes,
         svc_cfg.slots_per_node,

@@ -39,6 +39,10 @@ pub struct DeploymentPlan {
     /// Model prediction for the run — IO-adjusted when the request names a
     /// dataset (None until the model is trained).
     pub predicted_secs: Option<f64>,
+    /// Queue-wait prediction — the model's *separate* scheduler-side
+    /// target (None until a wait has been observed). The batch report
+    /// scores it against measured waits in its own error column.
+    pub predicted_wait_secs: Option<f64>,
     /// The dataset the request declared, resolved through the catalog
     /// (None = synthetic in-memory data).
     pub dataset: Option<DatasetSpec>,
@@ -236,6 +240,7 @@ pub fn plan_deployment(
         image,
         script,
         predicted_secs,
+        predicted_wait_secs: model.predict_wait(),
         dataset,
         io,
         notes,

@@ -123,10 +123,30 @@ pub struct Record {
     pub measured_secs: f64,
 }
 
+/// Cap on retained queue-wait observations: the wait target is a
+/// scheduler property that drifts with load, so only a recent window is
+/// worth fitting (oldest observations roll off).
+pub const WAIT_HISTORY_CAP: usize = 512;
+
 /// The trained model + its history store.
+///
+/// Two *separate* observe/fit targets (scheduler-refinements open item):
+///
+/// * **run time** — a function of the job's mechanistic features, fit by
+///   least squares over [`Record`]s ([`Self::observe`] / [`Self::fit`] /
+///   [`Self::predict`]);
+/// * **queue wait** — a property of the scheduler's load, not of the job,
+///   so it gets its own estimator: a rolling window of measured waits
+///   ([`Self::observe_wait`]) predicting via the window mean
+///   ([`Self::predict_wait`]).
+///
+/// Folding waits into the run-time regression would bias both; splitting
+/// them lets the batch report show a run error AND a wait error column.
 #[derive(Clone)]
 pub struct PerfModel {
     pub history: Vec<Record>,
+    /// Rolling window of measured queue waits (seconds), newest last.
+    pub wait_history: Vec<f64>,
     beta: Option<Vec<f64>>,
     pub r2: f64,
     path: Option<PathBuf>,
@@ -136,6 +156,7 @@ impl PerfModel {
     pub fn new() -> PerfModel {
         PerfModel {
             history: Vec::new(),
+            wait_history: Vec::new(),
             beta: None,
             r2: 0.0,
             path: None,
@@ -165,6 +186,11 @@ impl PerfModel {
                     measured_secs: r.get("measured_secs").as_f64().unwrap_or(0.0),
                 });
             }
+            for w in j.get("waits").as_arr().unwrap_or(&[]) {
+                if let Some(secs) = w.as_f64() {
+                    model.wait_history.push(secs);
+                }
+            }
             model.fit();
         }
         Ok(model)
@@ -174,6 +200,29 @@ impl PerfModel {
     pub fn observe(&mut self, rec: Record) {
         self.history.push(rec);
         self.fit();
+    }
+
+    /// Record a measured queue wait (the scheduler-side target, fit
+    /// separately from run time). Oldest observations roll off past
+    /// [`WAIT_HISTORY_CAP`].
+    pub fn observe_wait(&mut self, secs: f64) {
+        if secs.is_finite() && secs >= 0.0 {
+            self.wait_history.push(secs);
+            if self.wait_history.len() > WAIT_HISTORY_CAP {
+                let drop = self.wait_history.len() - WAIT_HISTORY_CAP;
+                self.wait_history.drain(..drop);
+            }
+        }
+    }
+
+    /// Predicted queue wait: the mean of the observed window (None until
+    /// a wait has been measured).
+    pub fn predict_wait(&self) -> Option<f64> {
+        if self.wait_history.is_empty() {
+            None
+        } else {
+            Some(self.wait_history.iter().sum::<f64>() / self.wait_history.len() as f64)
+        }
     }
 
     /// Persist the history (when opened with a path).
@@ -196,6 +245,10 @@ impl PerfModel {
         }
         let mut j = Json::obj();
         j.set("records", Json::Arr(records));
+        j.set(
+            "waits",
+            Json::Arr(self.wait_history.iter().map(|w| Json::from(*w)).collect()),
+        );
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -339,11 +392,44 @@ mod tests {
                 measured_secs: i as f64 + 1.0,
             });
         }
+        model.observe_wait(2.0);
+        model.observe_wait(4.0);
         model.save().unwrap();
         let back = PerfModel::open(&path).unwrap();
         assert_eq!(back.history.len(), 10);
         assert_eq!(back.history[3].image, "i3");
         assert!((back.history[3].measured_secs - 4.0).abs() < 1e-9);
+        // the wait window persists alongside the run-time records
+        assert_eq!(back.wait_history, vec![2.0, 4.0]);
+        assert_eq!(back.predict_wait(), Some(3.0));
+    }
+
+    /// Satellite (scheduler refinements): queue wait is its OWN
+    /// observe/fit target — measured waits never pollute the run-time
+    /// regression, and the wait predictor tracks the observed window.
+    #[test]
+    fn wait_target_is_split_from_run_time() {
+        let mut model = PerfModel::new();
+        assert_eq!(model.predict_wait(), None, "no waits observed yet");
+        model.observe_wait(1.0);
+        model.observe_wait(3.0);
+        assert_eq!(model.predict_wait(), Some(2.0));
+        // wait observations do not create run-time history or train beta
+        assert!(model.history.is_empty());
+        assert!(!model.is_trained());
+        // junk observations are rejected, the window stays clean
+        model.observe_wait(-5.0);
+        model.observe_wait(f64::NAN);
+        assert_eq!(model.wait_history.len(), 2);
+        // the window is bounded: oldest observations roll off
+        for i in 0..(WAIT_HISTORY_CAP + 10) {
+            model.observe_wait(i as f64);
+        }
+        assert_eq!(model.wait_history.len(), WAIT_HISTORY_CAP);
+        // 524 total observations, last 512 kept: the window now starts at
+        // the loop's i=10 observation
+        assert_eq!(model.wait_history[0], 10.0, "oldest rolled off");
+        assert_eq!(*model.wait_history.last().unwrap(), 521.0);
     }
 
     /// Tentpole (IO-aware planning): IO hidden behind compute costs

@@ -246,6 +246,17 @@ impl RegistryHandle {
     pub fn build_stats(&self) -> BuildStats {
         self.pool.stats()
     }
+
+    /// Reference-pin `tag`'s bundle against store GC while a queued or
+    /// running job still points at it (refcounted).
+    pub fn pin_image(&self, tag: &str) {
+        self.pool.pin_image(tag);
+    }
+
+    /// Drop one pin reference on `tag`'s bundle.
+    pub fn unpin_image(&self, tag: &str) {
+        self.pool.unpin_image(tag);
+    }
 }
 
 /// Generate the Singularity definition MODAK would write for a profile

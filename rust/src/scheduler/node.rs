@@ -24,11 +24,12 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::container::{ContainerRuntime, Image, RunOptions};
+use crate::container::{ContainerRuntime, Image, RunOptions, RunOutcome};
 use crate::data::IoProfile;
 use crate::frameworks::Target;
 use crate::runtime::Engine;
 use crate::scheduler::job::Payload;
+use crate::trainer::Checkpoint;
 use crate::util::sync::{CancelToken, Signal};
 use crate::util::timer::Stopwatch;
 
@@ -53,14 +54,22 @@ pub struct NodeTask {
     /// Streaming-IO profile for the dataset staged onto this node's
     /// scratch at dispatch (None = synthetic in-memory data).
     pub io: Option<IoProfile>,
+    /// Checkpoint-request token (elastic rebalancing): the server trips it
+    /// to withdraw this running job at its next epoch boundary.
+    pub preempt: CancelToken,
+    /// Checkpoint to resume from (set for jobs restarted after an elastic
+    /// migration; the payload skips the completed epochs).
+    pub resume: Option<Checkpoint>,
 }
 
-/// What a node reports back.
+/// What a node reports back: the run's result — completed, preempted at
+/// an epoch boundary with a checkpoint, or failed — plus this *segment's*
+/// wall seconds (the server sums segments across migrations).
 #[derive(Debug)]
 pub struct NodeResult {
     pub job_id: u64,
     pub node_id: usize,
-    pub outcome: Result<crate::container::ContainerRun>,
+    pub outcome: Result<RunOutcome>,
     pub wall_secs: f64,
 }
 
@@ -194,7 +203,7 @@ pub(crate) fn run_supervised<F>(
     results: ResultSink,
     work: F,
 ) where
-    F: FnOnce(CancelToken) -> Result<crate::container::ContainerRun> + Send + 'static,
+    F: FnOnce(CancelToken) -> Result<RunOutcome> + Send + 'static,
 {
     let sw = Stopwatch::start();
     let (done_tx, done_rx) = channel();
@@ -229,20 +238,18 @@ pub(crate) fn run_supervised<F>(
     });
 }
 
-fn run_task(
-    spec: &NodeSpec,
-    task: &NodeTask,
-    kill: CancelToken,
-) -> Result<crate::container::ContainerRun> {
+fn run_task(spec: &NodeSpec, task: &NodeTask, kill: CancelToken) -> Result<RunOutcome> {
     // engine per job: PJRT clients are not shared across concurrent jobs
     let engine = Engine::cpu()?;
     let image = Image::load(&task.bundle_dir)?;
     let runtime = ContainerRuntime::new(&engine, spec.class);
-    runtime.run_cancellable(
+    runtime.run_resumable(
         &image,
         &RunOptions {
             nv: task.payload.nv,
             io: task.io.clone(),
+            preempt: Some(task.preempt.clone()),
+            resume: task.resume.clone(),
         },
         &task.payload.train_config(),
         task.payload.seed,
@@ -274,6 +281,8 @@ mod tests {
             payload: payload(),
             walltime: Duration::from_secs(600),
             io: None,
+            preempt: CancelToken::new(),
+            resume: None,
         }
     }
 
@@ -339,6 +348,75 @@ mod tests {
         let res = res_rx.recv().unwrap();
         let err = res.outcome.unwrap_err().to_string();
         assert!(err.contains("fast deterministic failure"), "{err}");
+    }
+
+    /// Tentpole (elastic rebalancing): a checkpoint-preempted payload
+    /// reports [`RunOutcome::Preempted`] with its cumulative checkpoint —
+    /// an epoch-loop-shaped payload observes the preempt token at the next
+    /// epoch boundary, keeps every completed epoch, and exits promptly.
+    #[test]
+    fn preempted_runner_reports_a_checkpoint() {
+        let (res_tx, res_rx) = channel();
+        let preempt = CancelToken::new();
+        let epoch = Duration::from_millis(10);
+        let p = preempt.clone();
+        // trip the checkpoint request mid-run from "the scheduler"
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(25));
+            p.cancel();
+        });
+        run_supervised(11, 0, Duration::from_secs(600), ResultSink::new(res_tx), move |_kill| {
+            // a payload shaped like trainer::train_resumable: many epochs,
+            // preempt token checked at each epoch boundary
+            let mut ckpt = Checkpoint::default();
+            for e in 0..1000 {
+                if preempt.is_cancelled() {
+                    ckpt.epochs_done = e;
+                    return Ok(RunOutcome::Preempted(ckpt));
+                }
+                std::thread::sleep(epoch);
+                ckpt.epoch_secs.push(epoch.as_secs_f64());
+            }
+            Err(anyhow!("unreachable"))
+        });
+        let res = res_rx.recv().unwrap();
+        assert_eq!(res.job_id, 11);
+        match res.outcome.unwrap() {
+            RunOutcome::Preempted(ckpt) => {
+                // the boundary landed within a few epochs, with the
+                // completed epochs preserved in the checkpoint
+                assert!(ckpt.epochs_done >= 1 && ckpt.epochs_done < 100, "{ckpt:?}");
+                assert_eq!(ckpt.epoch_secs.len(), ckpt.epochs_done);
+            }
+            other => panic!("expected a checkpoint, got {other:?}"),
+        }
+        assert!(res.wall_secs < 5.0, "preempt must not wait out the run");
+    }
+
+    /// Satellite (checkpoint coverage): a walltime kill landing while a
+    /// checkpoint is pending is CLEAN — the kill wins, the runner exits
+    /// within one step, and no half-checkpoint is reported.
+    #[test]
+    fn kill_during_checkpoint_is_clean() {
+        let (res_tx, res_rx) = channel();
+        let preempt = CancelToken::new();
+        preempt.cancel(); // checkpoint already requested...
+        run_supervised(12, 0, Duration::from_millis(30), ResultSink::new(res_tx), move |kill| {
+            // ...but the payload is stuck mid-epoch: only the step-level
+            // kill can reach it, and it must win over the checkpoint
+            for _ in 0..3000 {
+                if kill.is_cancelled() {
+                    return Err(anyhow!("cancelled at a step boundary (walltime kill)"));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let _ = &preempt; // the checkpoint request is never honoured
+            Err(anyhow!("unreachable"))
+        });
+        let res = res_rx.recv().unwrap();
+        let err = res.outcome.unwrap_err().to_string();
+        assert!(err.contains("walltime"), "kill outcome wins: {err}");
+        assert!(res.wall_secs < 5.0);
     }
 
     /// Satellite (true preemption): the watchdog kill is no longer just a

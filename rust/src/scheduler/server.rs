@@ -25,13 +25,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::container::ContainerRun;
+use crate::container::{ContainerRun, RunOutcome};
 use crate::data::stage::StageManager;
 use crate::frameworks::Target;
 use crate::scheduler::job::JobScript;
 use crate::scheduler::node::{NodeHandle, NodeResult, NodeSpec, NodeTask, ResultSink};
 use crate::scheduler::policy::{plan_dispatch, NodeState, QueuedJob, RunningJob, SchedulePolicy};
-use crate::util::sync::Signal;
+use crate::trainer::Checkpoint;
+use crate::util::sync::{CancelToken, Signal};
 
 /// Completed work is not discarded for overshooting its walltime by mere
 /// absorption/channel latency: the node watchdog already kills genuinely
@@ -49,6 +50,13 @@ pub type JobId = u64;
 pub enum JobState {
     Queued,
     Running { node: usize },
+    /// Checkpoint-preempted at an epoch boundary (elastic rebalancing):
+    /// the slot is free, the checkpoint waits for the cluster to collect
+    /// it via [`TorqueServer::take_preempted`] and restart the job
+    /// elsewhere. `run_secs` is the cumulative run time across every
+    /// segment so far — the restart carries it so measured-time accounting
+    /// never double-counts.
+    Preempted { checkpoint: Checkpoint, run_secs: f64 },
     Completed { run: ContainerRun, wall_secs: f64 },
     Failed { error: String, wall_secs: f64 },
 }
@@ -58,6 +66,7 @@ impl JobState {
         match self {
             JobState::Queued => 'Q',
             JobState::Running { .. } => 'R',
+            JobState::Preempted { .. } => 'S',
             JobState::Completed { .. } => 'C',
             JobState::Failed { .. } => 'F',
         }
@@ -90,9 +99,16 @@ pub struct JobRecord {
     /// When the job was dispatched to a node (None while queued).
     pub started_at: Option<Instant>,
     /// Seconds spent in the queue before dispatch (None while queued).
+    /// Excludes run time already spent on other shards — a migrated job's
+    /// wait is waiting, not its first segment's training.
     pub queue_wait_secs: Option<f64>,
     /// Node the job was (last) dispatched to.
     pub node: Option<usize>,
+    /// Run seconds accumulated by earlier segments on other shards
+    /// (checkpoint/restart migration); terminal wall times add this in.
+    pub prior_run_secs: f64,
+    /// Checkpoint this job resumes from at dispatch (restarted jobs).
+    pub resume: Option<Checkpoint>,
 }
 
 /// The batch server.
@@ -121,6 +137,10 @@ pub struct TorqueServer {
     /// Lock order: the server lock is always taken BEFORE the stage
     /// manager's — no path locks the stager and then a server.
     data_stager: Option<(usize, Arc<Mutex<StageManager>>)>,
+    /// Per-running-job checkpoint-request tokens (created at dispatch,
+    /// dropped on absorption): [`Self::preempt`] trips one to withdraw a
+    /// running job at its next epoch boundary.
+    preempt_tokens: BTreeMap<JobId, CancelToken>,
 }
 
 impl TorqueServer {
@@ -178,6 +198,7 @@ impl TorqueServer {
             peak_running: 0,
             policy: SchedulePolicy::Fifo,
             data_stager: None,
+            preempt_tokens: BTreeMap::new(),
         }
     }
 
@@ -240,6 +261,21 @@ impl TorqueServer {
     /// `submitted_at`, so queue-wait spans the whole wait, not just the
     /// slice on the final shard.
     pub fn qsub_at(&mut self, script: JobScript, submitted_at: Instant) -> Result<JobId> {
+        self.qsub_resume(script, submitted_at, None, 0.0)
+    }
+
+    /// [`Self::qsub_at`] for checkpoint/restart migration: the job resumes
+    /// from `resume` (completed epochs skipped at dispatch) and
+    /// `prior_run_secs` — the run time its earlier segments already spent —
+    /// rides along so terminal wall times sum segments exactly once and
+    /// queue-wait never counts training as waiting.
+    pub fn qsub_resume(
+        &mut self,
+        script: JobScript,
+        submitted_at: Instant,
+        resume: Option<Checkpoint>,
+        prior_run_secs: f64,
+    ) -> Result<JobId> {
         if script.resources.nodes != 1 {
             bail!(
                 "testbed jobs are single-node (asked for {}) — §V-E",
@@ -285,6 +321,8 @@ impl TorqueServer {
                 started_at: None,
                 queue_wait_secs: None,
                 node: None,
+                prior_run_secs,
+                resume,
             },
         );
         self.queue.push_back(id);
@@ -314,13 +352,19 @@ impl TorqueServer {
         }
     }
 
-    /// Remove a still-queued job entirely and hand back its script plus
-    /// its original submission instant: the cluster layer's migration
-    /// primitive. Unlike [`Self::qdel`] no Failed record is left behind —
-    /// the job is re-submitted elsewhere under the same cluster-global
-    /// identity, and re-queueing with [`Self::qsub_at`] preserves the
-    /// queue-wait clock across the move.
-    pub fn withdraw(&mut self, id: JobId) -> Result<(JobScript, Instant)> {
+    /// Remove a still-queued job entirely and hand back its script, its
+    /// original submission instant, and its checkpoint/restart state: the
+    /// cluster layer's migration primitive. Unlike [`Self::qdel`] no
+    /// Failed record is left behind — the job is re-submitted elsewhere
+    /// under the same cluster-global identity; re-queueing with
+    /// [`Self::qsub_resume`] preserves the queue-wait clock AND (for a
+    /// restarted job migrated again while still queued) the checkpoint
+    /// and the prior segments' run-time accounting.
+    #[allow(clippy::type_complexity)]
+    pub fn withdraw(
+        &mut self,
+        id: JobId,
+    ) -> Result<(JobScript, Instant, Option<Checkpoint>, f64)> {
         let is_queued = matches!(
             self.jobs.get(&id).map(|r| &r.state),
             Some(JobState::Queued)
@@ -330,7 +374,7 @@ impl TorqueServer {
         }
         self.queue.retain(|&q| q != id);
         let rec = self.jobs.remove(&id).expect("checked above");
-        Ok((rec.script, rec.submitted_at))
+        Ok((rec.script, rec.submitted_at, rec.resume, rec.prior_run_secs))
     }
 
     /// Torque `qstat`: all job records.
@@ -399,13 +443,14 @@ impl TorqueServer {
 
     /// Start `id` on node `node_id` (the policy engine guaranteed the fit).
     fn dispatch_to(&mut self, id: JobId, node_id: usize) -> Result<()> {
-        let (demand, bundle_dir, payload, walltime) = {
+        let (demand, bundle_dir, payload, walltime, resume) = {
             let rec = &self.jobs[&id];
             (
                 rec.script.resources.slot_demand(),
                 rec.bundle_dir.clone(),
                 rec.script.payload.clone(),
                 rec.script.resources.walltime,
+                rec.resume.clone(),
             )
         };
         let node = self
@@ -422,17 +467,23 @@ impl TorqueServer {
             }
             _ => None,
         };
+        let preempt = CancelToken::new();
         node.dispatch(NodeTask {
             job_id: id,
             bundle_dir,
             payload,
             walltime,
             io,
+            preempt: preempt.clone(),
+            resume,
         })?;
+        self.preempt_tokens.insert(id, preempt);
         let rec = self.jobs.get_mut(&id).expect("job exists");
         rec.state = JobState::Running { node: node_id };
         rec.started_at = Some(Instant::now());
-        rec.queue_wait_secs = Some(rec.submitted_at.elapsed().as_secs_f64());
+        // a restarted job's earlier segments were training, not waiting
+        rec.queue_wait_secs =
+            Some((rec.submitted_at.elapsed().as_secs_f64() - rec.prior_run_secs).max(0.0));
         rec.node = Some(node_id);
         *self.used.entry(node_id).or_insert(0) += demand;
         self.running.insert(id, (node_id, demand));
@@ -450,41 +501,110 @@ impl TorqueServer {
         self.absorb(res)
     }
 
-    fn absorb(&mut self, res: NodeResult) -> Result<()> {
-        if let Some((node_id, slots)) = self.running.remove(&res.job_id) {
+    pub(crate) fn absorb(&mut self, res: NodeResult) -> Result<()> {
+        let held = self.running.remove(&res.job_id);
+        if let Some((node_id, slots)) = held {
             if let Some(u) = self.used.get_mut(&node_id) {
                 *u = u.saturating_sub(slots);
             }
         }
-        let rec = self
-            .jobs
-            .get_mut(&res.job_id)
-            .ok_or_else(|| anyhow!("result for unknown job {}", res.job_id))?;
+        self.preempt_tokens.remove(&res.job_id);
+        let Some(rec) = self.jobs.get_mut(&res.job_id) else {
+            // a late result for a job that migrated away (checkpointed,
+            // collected, and restarted on another shard): nothing left to
+            // account here — but freed slots may unblock the queue
+            return self.schedule();
+        };
+        if held.is_none() && !matches!(rec.state, JobState::Running { .. }) {
+            // stale duplicate (a result raced a preemption/migration):
+            // the record already holds its authoritative state
+            return self.schedule();
+        }
+        let prior = rec.prior_run_secs;
         let walltime = rec.script.resources.walltime.as_secs_f64();
         // grace: a run that *completed* may clock slightly past its
         // walltime from absorption/channel latency alone; the watchdog
         // (an Err outcome) already handles genuine runaways at the
-        // boundary, so only gross overshoot discards completed work
+        // boundary, so only gross overshoot discards completed work.
+        // The watchdog is per segment, so the check is on the segment's
+        // wall seconds; reported terminal times sum every segment.
         let kill_after = walltime * WALLTIME_GRACE_FACTOR + WALLTIME_GRACE_SLACK_SECS;
         rec.state = match res.outcome {
-            Ok(_run) if res.wall_secs > kill_after => JobState::Failed {
+            // checkpoint-preempted: NOT terminal — the cluster collects it
+            // via take_preempted and restarts it elsewhere
+            Ok(RunOutcome::Preempted(checkpoint)) => JobState::Preempted {
+                checkpoint,
+                run_secs: prior + res.wall_secs,
+            },
+            Ok(RunOutcome::Completed(_)) if res.wall_secs > kill_after => JobState::Failed {
                 error: format!(
                     "walltime exceeded ({:.1}s > {:.0}s + grace): job killed",
                     res.wall_secs, walltime
                 ),
-                wall_secs: res.wall_secs,
+                wall_secs: prior + res.wall_secs,
             },
-            Ok(run) => JobState::Completed {
+            Ok(RunOutcome::Completed(run)) => JobState::Completed {
                 run,
-                wall_secs: res.wall_secs,
+                wall_secs: prior + res.wall_secs,
             },
             Err(e) => JobState::Failed {
                 error: format!("{e:#}"),
-                wall_secs: res.wall_secs,
+                wall_secs: prior + res.wall_secs,
             },
         };
-        self.finish_order.push(res.job_id);
+        if rec.state.is_terminal() {
+            self.finish_order.push(res.job_id);
+        }
         self.schedule()
+    }
+
+    /// Ask a *running* job to checkpoint at its next epoch boundary
+    /// (elastic rebalancing's withdraw-running primitive). Asynchronous:
+    /// the job keeps Running until its runner reports the checkpoint,
+    /// which [`Self::absorb`] turns into [`JobState::Preempted`] — collect
+    /// it with [`Self::take_preempted`].
+    pub fn preempt(&mut self, id: JobId) -> Result<()> {
+        let rec = self
+            .jobs
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown job {id}"))?;
+        if !matches!(rec.state, JobState::Running { .. }) {
+            bail!("job {id} is not running; cannot checkpoint-preempt");
+        }
+        let token = self
+            .preempt_tokens
+            .get(&id)
+            .ok_or_else(|| anyhow!("job {id} has no preempt token"))?;
+        token.cancel();
+        Ok(())
+    }
+
+    /// Remove every checkpoint-preempted job, handing back what the
+    /// cluster needs to restart each one elsewhere: the script, the
+    /// original submission instant (queue-wait clock), the checkpoint,
+    /// and the cumulative run seconds its segments already spent. Like
+    /// [`Self::withdraw`], no tombstone record is left behind — the job
+    /// continues under the same cluster-global identity.
+    #[allow(clippy::type_complexity)]
+    pub fn take_preempted(&mut self) -> Vec<(JobId, JobScript, Instant, Checkpoint, f64)> {
+        let ids: Vec<JobId> = self
+            .jobs
+            .iter()
+            .filter(|(_, r)| matches!(r.state, JobState::Preempted { .. }))
+            .map(|(id, _)| *id)
+            .collect();
+        ids.into_iter()
+            .map(|id| {
+                let rec = self.jobs.remove(&id).expect("filtered above");
+                match rec.state {
+                    JobState::Preempted {
+                        checkpoint,
+                        run_secs,
+                    } => (id, rec.script, rec.submitted_at, checkpoint, run_secs),
+                    _ => unreachable!("filtered on Preempted"),
+                }
+            })
+            .collect()
     }
 
     /// Non-blocking pump: absorb every completion already reported and
@@ -547,6 +667,28 @@ impl TorqueServer {
     /// Jobs currently in the Running state.
     pub fn running_count(&self) -> usize {
         self.running.len()
+    }
+
+    /// Running job ids in id order (elastic-migration candidates).
+    pub fn running_ids(&self) -> Vec<JobId> {
+        self.running.keys().copied().collect()
+    }
+
+    /// (free, total) slots on one node right now (None = unknown node).
+    /// Elastic preemption reasons at node granularity: freeing a job's
+    /// slots only helps a blocked job that can fit on THAT node.
+    pub fn node_slot_state(&self, node: usize) -> Option<(usize, usize)> {
+        self.nodes.iter().find(|n| n.spec.id == node).map(|n| {
+            let used = self.used.get(&node).copied().unwrap_or(0);
+            (n.spec.slots.saturating_sub(used), n.spec.slots)
+        })
+    }
+
+    /// Has a checkpoint already been requested for this (running) job?
+    /// The cluster's elastic rebalancer uses this to avoid stacking a
+    /// second preemption on a shard whose first is still in flight.
+    pub fn preempt_requested(&self, id: JobId) -> bool {
+        self.preempt_tokens.get(&id).is_some_and(|t| t.is_cancelled())
     }
 
     /// Free slots across nodes of `class` right now.
@@ -811,7 +953,7 @@ mod tests {
             .absorb(NodeResult {
                 job_id: a,
                 node_id: 0,
-                outcome: Ok(fake_run()),
+                outcome: Ok(RunOutcome::Completed(fake_run())),
                 wall_secs: 10.2,
             })
             .unwrap();
@@ -821,7 +963,7 @@ mod tests {
             .absorb(NodeResult {
                 job_id: b,
                 node_id: 0,
-                outcome: Ok(fake_run()),
+                outcome: Ok(RunOutcome::Completed(fake_run())),
                 wall_secs: 11.5,
             })
             .unwrap();
@@ -889,8 +1031,10 @@ mod tests {
         assert!(server.withdraw(running).is_err(), "running jobs stay put");
         assert_eq!(server.queued_ids(), vec![queued]);
         assert!(server.backlog_secs() >= 7.5, "{}", server.backlog_secs());
-        let (script, submitted_at) = server.withdraw(queued).unwrap();
+        let (script, submitted_at, resume, prior) = server.withdraw(queued).unwrap();
         assert_eq!(script.predicted_secs, Some(7.5));
+        assert_eq!(resume, None, "a never-run job has no checkpoint");
+        assert_eq!(prior, 0.0);
         assert!(server.job(queued).is_err(), "record fully removed");
         assert_eq!(server.queued(), 0);
         // migration preserves the queue-wait clock: after 50ms "in
@@ -899,7 +1043,7 @@ mod tests {
         // running job's failure is already absorbable and the slot frees
         // immediately once polled)
         std::thread::sleep(Duration::from_millis(50));
-        let back = server.qsub_at(script, submitted_at).unwrap();
+        let back = server.qsub_resume(script, submitted_at, resume, prior).unwrap();
         server.wait_all().unwrap();
         let wait = server.job(back).unwrap().queue_wait_secs.unwrap();
         assert!(
@@ -911,6 +1055,88 @@ mod tests {
         assert_eq!(server.total_slots(Target::Cpu), 1);
         assert_eq!(server.free_slots(Target::Cpu), 1);
         assert_eq!(server.max_node_slots(Target::GpuSim), None);
+    }
+
+    /// Tentpole (elastic rebalancing): `preempt` + `take_preempted` are
+    /// the withdraw-running primitives, and migrated jobs' wall-time
+    /// accounting never double-counts — terminal wall time is the SUM of
+    /// the segments, queue-wait excludes the earlier segments' run time.
+    #[test]
+    fn preempted_job_restarts_with_cumulative_accounting() {
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let a = server.qsub(script("img:1", 0)).unwrap();
+        assert_eq!(server.job(a).unwrap().state.code(), 'R');
+        server.preempt(a).unwrap();
+        // fabricate the runner's checkpoint report (the real ghost-bundle
+        // failure is also in flight; it must be ignored as stale later)
+        let ckpt = Checkpoint {
+            epochs_done: 2,
+            train_secs: 5.0,
+            ..Checkpoint::default()
+        };
+        server
+            .absorb(NodeResult {
+                job_id: a,
+                node_id: 0,
+                outcome: Ok(RunOutcome::Preempted(ckpt)),
+                wall_secs: 5.0,
+            })
+            .unwrap();
+        assert_eq!(server.job(a).unwrap().state.code(), 'S');
+        assert!(server.busy_nodes().is_empty(), "checkpoint freed the slot");
+        let taken = server.take_preempted();
+        assert_eq!(taken.len(), 1);
+        let (id, migrated, submitted_at, got, run_secs) = taken.into_iter().next().unwrap();
+        assert_eq!(id, a);
+        assert_eq!(got.epochs_done, 2, "completed epochs preserved");
+        assert!((run_secs - 5.0).abs() < 1e-9);
+        assert!(server.job(a).is_err(), "no tombstone left behind");
+        // restart "on the destination shard": prior run seconds ride along
+        let b = server
+            .qsub_resume(migrated, submitted_at, Some(got), run_secs)
+            .unwrap();
+        assert_eq!(server.job(b).unwrap().state.code(), 'R');
+        server
+            .absorb(NodeResult {
+                job_id: b,
+                node_id: 0,
+                outcome: Ok(RunOutcome::Completed(fake_run())),
+                wall_secs: 3.0,
+            })
+            .unwrap();
+        let rec = server.job(b).unwrap();
+        assert_eq!(rec.state.code(), 'C');
+        // total wall = 5.0s (first segment) + 3.0s (resumed segment)
+        assert!(
+            (rec.state.wall_secs().unwrap() - 8.0).abs() < 1e-9,
+            "{:?}",
+            rec.state
+        );
+        // queue-wait excludes the 5s the first segment spent TRAINING
+        assert!(
+            rec.queue_wait_secs.unwrap() < 4.0,
+            "wait {} must not count prior run time",
+            rec.queue_wait_secs.unwrap()
+        );
+        // the stale ghost-bundle results for both dispatches are ignored,
+        // not mistaken for fresh terminal transitions
+        server.poll().unwrap();
+        assert_eq!(server.job(b).unwrap().state.code(), 'C');
+        assert!(server.job(a).is_err());
+    }
+
+    #[test]
+    fn preempt_refuses_jobs_that_are_not_running() {
+        let mut server = TorqueServer::boot(1, 0);
+        server.register_image("img:1", "/not/a/bundle".into());
+        let running = server.qsub(script("img:1", 0)).unwrap();
+        let queued = server.qsub(script("img:1", 0)).unwrap();
+        assert!(server.preempt(queued).is_err(), "queued jobs use withdraw");
+        assert!(server.preempt(9999).is_err(), "unknown job");
+        server.wait_all().unwrap();
+        assert!(server.preempt(running).is_err(), "terminal jobs stay put");
+        assert!(server.take_preempted().is_empty());
     }
 
     /// Tentpole: node dispatch stages the job's declared dataset onto the

@@ -46,6 +46,7 @@ use anyhow::{anyhow, Result};
 use crate::cluster::{
     ClusterConfig, ClusterJobId, ClusterScheduler, ShardRouter, ShardSpec, StagingStats,
 };
+use crate::placement::RebalanceMode;
 use crate::container::BuildStats;
 use crate::data::stage::DataStageStats;
 use crate::data::DatasetCatalog;
@@ -80,8 +81,17 @@ pub struct ServiceConfig {
     pub router: ShardRouter,
     /// Byte cap (in MB) on the bundle store and the per-shard caches
     /// (`--store-cap-mb`): cold image bundles and datasets past the cap
-    /// are garbage-collected LRU-first. None = unbounded.
+    /// are garbage-collected LRU-first — digests still referenced by
+    /// queued/running jobs are reference-pinned and never evicted.
+    /// None = unbounded.
     pub store_cap_mb: Option<u64>,
+    /// What the cluster rebalancer may migrate (`--rebalance`): queued
+    /// jobs only, or also running jobs via checkpoint/restart.
+    pub rebalance: RebalanceMode,
+    /// Per-shard dispatch-policy overrides (`--policy-shard N=<policy>`,
+    /// repeatable); unlisted shards run `policy`. Out-of-range indices
+    /// are ignored.
+    pub shard_policies: Vec<(usize, SchedulePolicy)>,
 }
 
 impl Default for ServiceConfig {
@@ -96,6 +106,8 @@ impl Default for ServiceConfig {
             shards: 1,
             router: ShardRouter::RoundRobin,
             store_cap_mb: None,
+            rebalance: RebalanceMode::Queued,
+            shard_policies: Vec::new(),
         }
     }
 }
@@ -183,6 +195,8 @@ pub struct JobSummary {
     /// Node within that shard.
     pub node: Option<usize>,
     pub predicted_secs: Option<f64>,
+    /// Queue-wait prediction from the model's separate wait target.
+    pub predicted_wait_secs: Option<f64>,
     /// Simulated dataset-IO seconds the run's prefetcher paid (completed
     /// runs of jobs with a `dataset:` block only).
     pub io_secs: Option<f64>,
@@ -197,6 +211,17 @@ impl JobSummary {
     pub fn pct_error(&self) -> Option<f64> {
         match (self.state, self.predicted_secs, self.run_secs) {
             ('C', Some(pred), Some(run)) if pred > 0.0 => Some((run - pred) / pred * 100.0),
+            _ => None,
+        }
+    }
+
+    /// Signed wait-prediction error in percent — the model's *separate*
+    /// queue-wait target, scored against the measured wait.
+    pub fn wait_pct_error(&self) -> Option<f64> {
+        match (self.state, self.predicted_wait_secs, self.queue_wait_secs) {
+            ('C', Some(pred), Some(wait)) if pred > 0.0 => {
+                Some((wait - pred) / pred * 100.0)
+            }
             _ => None,
         }
     }
@@ -232,9 +257,13 @@ pub struct ShardReport {
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
     pub router: String,
+    /// Rebalance mode the cluster ran under (`queued` | `elastic`).
+    pub rebalance: String,
     pub shards: Vec<ShardReport>,
     /// Total cross-shard migrations the rebalancer executed.
     pub migrations: u64,
+    /// Slice of `migrations` done via checkpoint/restart of RUNNING jobs.
+    pub elastic_migrations: u64,
     pub staging_totals: StagingStats,
     /// Cluster-wide dataset staging counters.
     pub data_totals: DataStageStats,
@@ -303,7 +332,19 @@ impl BatchReport {
     /// Mean |predicted-vs-measured| error in percent over completed jobs
     /// that carried a prediction.
     pub fn mean_abs_pct_error(&self) -> Option<f64> {
-        let errs: Vec<f64> = self.jobs.iter().filter_map(|j| j.pct_error()).collect();
+        self.mean_abs(JobSummary::pct_error)
+    }
+
+    /// Mean |predicted-vs-measured| QUEUE-WAIT error in percent — the
+    /// model's separate wait target gets its own error column.
+    pub fn mean_abs_wait_pct_error(&self) -> Option<f64> {
+        self.mean_abs(JobSummary::wait_pct_error)
+    }
+
+    /// Mean of |selector| over the batch's jobs, None when no job yields a
+    /// value (the one aggregation behind both error columns).
+    fn mean_abs(&self, selector: impl Fn(&JobSummary) -> Option<f64>) -> Option<f64> {
+        let errs: Vec<f64> = self.jobs.iter().filter_map(selector).collect();
         if errs.is_empty() {
             None
         } else {
@@ -315,17 +356,27 @@ impl BatchReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>8}\n",
-            "request", "image", "job", "st", "wait(s)", "run(s)", "pred(s)", "err%", "sh/node"
+            "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>8} {:>7} {:>8}\n",
+            "request",
+            "image",
+            "job",
+            "st",
+            "wait(s)",
+            "run(s)",
+            "pred(s)",
+            "err%",
+            "wpred(s)",
+            "werr%",
+            "sh/node"
         ));
         for j in &self.jobs {
             let fmt_opt = |v: Option<f64>| match v {
                 Some(v) => format!("{v:.2}"),
                 None => "-".into(),
             };
-            let err_pct = match j.pct_error() {
+            let fmt_err = |v: Option<f64>| match v {
                 Some(e) => format!("{e:+.1}"),
-                None => "-".into(),
+                None => "-".to_string(),
             };
             let place = match (j.shard, j.node) {
                 (Some(s), Some(n)) => format!("s{s}/n{n}"),
@@ -333,7 +384,7 @@ impl BatchReport {
                 _ => "-".into(),
             };
             out.push_str(&format!(
-                "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>8}\n",
+                "{:<22} {:<30} {:>4} {:>2} {:>8} {:>8} {:>8} {:>7} {:>8} {:>7} {:>8}\n",
                 truncate(&j.label, 22),
                 truncate(j.image.as_deref().unwrap_or("-"), 30),
                 j.job_id.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
@@ -341,7 +392,9 @@ impl BatchReport {
                 fmt_opt(j.queue_wait_secs),
                 fmt_opt(j.run_secs),
                 fmt_opt(j.predicted_secs),
-                err_pct,
+                fmt_err(j.pct_error()),
+                fmt_opt(j.predicted_wait_secs),
+                fmt_err(j.wait_pct_error()),
                 place,
             ));
             if let Some(e) = &j.error {
@@ -373,6 +426,13 @@ impl BatchReport {
             }
             _ => {}
         }
+        // the queue-wait target is fit separately: its error column gets
+        // its own summary line
+        if let Some(werr) = self.mean_abs_wait_pct_error() {
+            out.push_str(&format!(
+                "queue-wait mean abs err {werr:.1}% (separate wait target)\n"
+            ));
+        }
         // dataset staging summary whenever the batch actually moved data
         if let Some(c) = self.cluster.as_ref() {
             let d = &c.data_totals;
@@ -391,11 +451,14 @@ impl BatchReport {
         // per-shard section only when there is more than one shard to show
         if let Some(c) = self.cluster.as_ref().filter(|c| c.shards.len() > 1) {
             out.push_str(&format!(
-                "cluster: {} shards | router {} | migrations {} | \
+                "cluster: {} shards | router {} | rebalance {} | \
+                 migrations {} ({} elastic) | \
                  staging {} miss / {} hit ({:.2}s simulated transfer)\n",
                 c.shards.len(),
                 c.router,
+                c.rebalance,
                 c.migrations,
+                c.elastic_migrations,
                 c.staging_totals.misses,
                 c.staging_totals.hits,
                 c.staging_totals.simulated_secs,
@@ -457,6 +520,8 @@ pub struct DeploymentService {
     planner_workers: usize,
     /// Jobs whose measured results were already fed back to the model.
     fed_back: Mutex<HashSet<ClusterJobId>>,
+    /// Jobs whose store-GC image pin was already released (terminal).
+    unpinned: Mutex<HashSet<ClusterJobId>>,
 }
 
 impl DeploymentService {
@@ -488,12 +553,20 @@ impl DeploymentService {
             cpu_nodes: cfg.cpu_nodes,
             gpu_nodes: cfg.gpu_nodes,
             slots_per_node: cfg.slots_per_node,
+            policy: None,
         };
+        let mut shard_specs = ShardSpec::heterogeneous(cfg.shards.max(1), &base);
+        for (i, policy) in &cfg.shard_policies {
+            if let Some(spec) = shard_specs.get_mut(*i) {
+                spec.policy = Some(*policy);
+            }
+        }
         let cluster_cfg = ClusterConfig {
-            shards: ShardSpec::heterogeneous(cfg.shards.max(1), &base),
+            shards: shard_specs,
             router: cfg.router,
             policy: cfg.policy,
             cache_cap_bytes: cfg.cache_cap_bytes(),
+            rebalance: cfg.rebalance,
         };
         let store_root = registry.with(|r| r.store().to_path_buf());
         let cluster = Arc::new(ClusterScheduler::new(
@@ -510,6 +583,7 @@ impl DeploymentService {
             signal,
             planner_workers: cfg.planner_workers.max(1),
             fed_back: Mutex::new(HashSet::new()),
+            unpinned: Mutex::new(HashSet::new()),
         }
     }
 
@@ -631,6 +705,9 @@ impl DeploymentService {
             // batch's queue (and every later request) snapshot refreshed
             // coefficients
             self.feed_back_measurements(handles);
+            // terminal jobs release their store-GC image pins: their
+            // bundles become ordinary LRU prey again
+            self.release_finished_image_pins(handles);
             // absorb completions on every shard + rebalance queued work
             let _ = self.cluster.poll();
             on_poll(&self.cluster);
@@ -646,7 +723,30 @@ impl DeploymentService {
         }
         // final sweep: completions absorbed by the last poll above
         self.feed_back_measurements(handles);
+        self.release_finished_image_pins(handles);
         self.report(handles, 0.0)
+    }
+
+    /// Release the build-store image pin of every batch job observed
+    /// terminal (pinned at dispatch in `plan_and_dispatch`): the
+    /// reference-pinned-eviction contract is "never GC what a queued or
+    /// running job still points at" — finished jobs stop pointing.
+    fn release_finished_image_pins(&self, handles: &[PlanHandle]) {
+        let mut unpinned = self.unpinned.lock().unwrap();
+        for h in handles.iter() {
+            let Some(out) = h.outcome.as_ref() else { continue };
+            let (Ok(plan), Some(id)) = (&out.plan, out.job_id) else {
+                continue;
+            };
+            if unpinned.contains(&id) {
+                continue;
+            }
+            // unknown id (migrated bookkeeping hiccup) counts as finished
+            if self.cluster.job_terminal(id).unwrap_or(true) {
+                self.registry.unpin_image(&plan.profile.image_tag());
+                unpinned.insert(id);
+            }
+        }
     }
 
     /// Close the performance-model loop: for every newly-completed job in
@@ -665,9 +765,10 @@ impl DeploymentService {
     /// code path in this service holds a shard lock and the model lock at
     /// once.
     fn feed_back_measurements(&self, handles: &[PlanHandle]) {
-        let fresh: Vec<Record> = {
+        let (fresh, waits): (Vec<Record>, Vec<f64>) = {
             let mut fed = self.fed_back.lock().unwrap();
             let mut fresh = Vec::new();
+            let mut waits = Vec::new();
             for h in handles.iter() {
                 let Some(out) = h.outcome.as_ref() else { continue };
                 let (Ok(plan), Some(id)) = (&out.plan, out.job_id) else {
@@ -678,15 +779,17 @@ impl DeploymentService {
                 }
                 let Ok(measured) = self.cluster.with_job(id, |rec| {
                     match &rec.state {
-                        JobState::Completed { wall_secs, .. } => {
-                            Some((*wall_secs, rec.script.payload.train_config()))
-                        }
+                        JobState::Completed { wall_secs, .. } => Some((
+                            *wall_secs,
+                            rec.queue_wait_secs,
+                            rec.script.payload.train_config(),
+                        )),
                         _ => None,
                     }
                 }) else {
                     continue;
                 };
-                let Some((measured_secs, cfg)) = measured else { continue };
+                let Some((measured_secs, wait_secs, cfg)) = measured else { continue };
                 let Ok(wl) = self.manifest.workload(plan.profile.workload) else {
                     continue;
                 };
@@ -696,16 +799,25 @@ impl DeploymentService {
                     features: Features::derive(&plan.profile, wl, &cfg),
                     measured_secs,
                 });
+                // queue wait feeds the model's SEPARATE wait target
+                if let Some(w) = wait_secs {
+                    waits.push(w);
+                }
                 fed.insert(id);
             }
-            fresh
+            (fresh, waits)
         };
-        if fresh.is_empty() {
+        if fresh.is_empty() && waits.is_empty() {
             return;
         }
         let mut model = self.model.lock().unwrap();
-        model.history.extend(fresh);
-        model.fit();
+        for w in waits {
+            model.observe_wait(w);
+        }
+        if !fresh.is_empty() {
+            model.history.extend(fresh);
+            model.fit();
+        }
         if let Err(e) = model.save() {
             eprintln!("service: persisting model history failed: {e:#}");
         }
@@ -747,6 +859,7 @@ impl DeploymentService {
                     shard: None,
                     node: None,
                     predicted_secs: None,
+                    predicted_wait_secs: None,
                     io_secs: None,
                     io_stall_secs: None,
                     error: Some(format!("{e:#}")),
@@ -795,6 +908,7 @@ impl DeploymentService {
                             shard: None,
                             node: None,
                             predicted_secs: plan.predicted_secs,
+                            predicted_wait_secs: plan.predicted_wait_secs,
                             io_secs: None,
                             io_stall_secs: None,
                             error: None,
@@ -813,6 +927,7 @@ impl DeploymentService {
                             shard,
                             node,
                             predicted_secs: plan.predicted_secs,
+                            predicted_wait_secs: plan.predicted_wait_secs,
                             io_secs: io.map(|(i, _)| i),
                             io_stall_secs: io.map(|(_, s)| s),
                             error,
@@ -890,8 +1005,10 @@ impl DeploymentService {
             .collect();
         ClusterReport {
             router: self.cluster.router().to_string(),
+            rebalance: self.cluster.rebalance_mode().to_string(),
             shards,
             migrations: self.cluster.migrations(),
+            elastic_migrations: self.cluster.elastic_migrations(),
             staging_totals: self.cluster.staging_totals(),
             data_totals: self.cluster.data_totals(),
         }
@@ -932,7 +1049,12 @@ fn plan_and_dispatch(
             &plan.image.dir,
             plan.dataset.as_ref(),
         ) {
-            Ok(id) => Some(id),
+            Ok(id) => {
+                // reference-pin the bundle against store GC while this
+                // job lives (released when it is observed terminal)
+                registry.pin_image(&plan.profile.image_tag());
+                Some(id)
+            }
             Err(e) => {
                 return PlanOutcome {
                     plan: Err(e.context(format!("dispatching plan for {}", req.label))),
@@ -989,11 +1111,12 @@ mod tests {
             image: None,
             job_id: Some(1),
             state,
-            queue_wait_secs: None,
+            queue_wait_secs: Some(1.0),
             run_secs: run,
             shard: Some(0),
             node: None,
             predicted_secs: pred,
+            predicted_wait_secs: Some(0.8),
             io_secs: None,
             io_stall_secs: None,
             error: None,
@@ -1022,9 +1145,16 @@ mod tests {
         assert_eq!(report.jobs[1].pct_error(), None, "failed job has no error row");
         assert_eq!(report.jobs[2].pct_error(), None, "no prediction, no error row");
         assert!((report.mean_abs_pct_error().unwrap() - 25.0).abs() < 1e-9);
+        // the queue-wait target is scored in its OWN error column
+        assert_eq!(report.jobs[0].wait_pct_error().map(f64::round), Some(25.0));
+        assert_eq!(report.jobs[1].wait_pct_error(), None, "failed job: no wait row");
+        assert!((report.mean_abs_wait_pct_error().unwrap() - 25.0).abs() < 1e-9);
         let rendered = report.render();
         assert!(rendered.contains("prediction mean abs err"), "{rendered}");
         assert!(rendered.contains("pred(s)"), "{rendered}");
+        assert!(rendered.contains("wpred(s)"), "{rendered}");
+        assert!(rendered.contains("werr%"), "{rendered}");
+        assert!(rendered.contains("queue-wait mean abs err"), "{rendered}");
     }
 
     #[test]
@@ -1121,5 +1251,39 @@ mod tests {
         let rendered = report.render();
         assert!(rendered.contains("cluster: 3 shards"), "{rendered}");
         assert!(rendered.contains("router perf-aware"), "{rendered}");
+        assert!(rendered.contains("rebalance queued"), "{rendered}");
+    }
+
+    /// Satellite: `--policy-shard N=<policy>` overrides land on the named
+    /// shard; unlisted shards keep the default, out-of-range indices are
+    /// ignored; `--rebalance elastic` reaches the cluster.
+    #[test]
+    fn per_shard_policies_and_rebalance_mode_are_plumbed() {
+        let service = DeploymentService::new(
+            store("shard_policies"),
+            empty_manifest(),
+            PerfModel::new(),
+            &ServiceConfig {
+                shards: 3,
+                policy: SchedulePolicy::Reservation,
+                shard_policies: vec![
+                    (1, SchedulePolicy::Sjf),
+                    (99, SchedulePolicy::Fifo), // out of range: ignored
+                ],
+                rebalance: RebalanceMode::Elastic,
+                ..ServiceConfig::default()
+            },
+        );
+        let cluster = service.cluster();
+        assert_eq!(cluster.rebalance_mode(), RebalanceMode::Elastic);
+        assert_eq!(
+            cluster.with_shard(0, |s| s.policy()),
+            SchedulePolicy::Reservation
+        );
+        assert_eq!(cluster.with_shard(1, |s| s.policy()), SchedulePolicy::Sjf);
+        assert_eq!(
+            cluster.with_shard(2, |s| s.policy()),
+            SchedulePolicy::Reservation
+        );
     }
 }

@@ -50,6 +50,69 @@ pub struct TrainReport {
     pub io_stall_secs: f64,
 }
 
+/// Epoch-boundary training checkpoint: everything a restarted run needs to
+/// continue on another node/shard without redoing completed epochs.
+///
+/// Checkpoints are taken *between* epochs only — the in-flight epoch runs
+/// to its boundary first — so a resume never loses completed work; at most
+/// one epoch of in-progress time is spent finishing the boundary. The
+/// simulated session's parameters restart fresh on resume (the loss curve
+/// restarts with them); the checkpoint preserves the *progress accounting*
+/// — epochs done, per-epoch timings/losses recorded so far, IO counters,
+/// and the wall seconds already spent training — which is what the
+/// scheduler's measured-time feedback and the batch report consume.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    /// Epochs fully completed across every prior segment.
+    pub epochs_done: usize,
+    pub epoch_secs: Vec<f64>,
+    pub epoch_loss: Vec<f64>,
+    pub step_loss: Vec<f32>,
+    pub io_secs: f64,
+    pub io_stall_secs: f64,
+    /// Wall seconds spent training across every prior segment.
+    pub train_secs: f64,
+}
+
+impl Checkpoint {
+    /// Epochs a resumed run still has to execute.
+    pub fn epochs_remaining(&self, total_epochs: usize) -> usize {
+        total_epochs.saturating_sub(self.epochs_done)
+    }
+
+    /// Splice this checkpoint's recorded progress in front of the resumed
+    /// segment's report: epoch vectors concatenate, wall/IO accounting
+    /// sums — so the final report covers the whole logical run and no
+    /// segment's seconds are counted twice.
+    pub fn splice(&self, rest: &TrainReport) -> TrainReport {
+        let mut epoch_secs = self.epoch_secs.clone();
+        epoch_secs.extend_from_slice(&rest.epoch_secs);
+        let mut epoch_loss = self.epoch_loss.clone();
+        epoch_loss.extend_from_slice(&rest.epoch_loss);
+        let mut step_loss = self.step_loss.clone();
+        step_loss.extend_from_slice(&rest.step_loss);
+        TrainReport {
+            epoch_secs,
+            epoch_loss,
+            step_loss,
+            total_secs: self.train_secs + rest.total_secs,
+            io_secs: self.io_secs + rest.io_secs,
+            io_stall_secs: self.io_stall_secs + rest.io_stall_secs,
+        }
+    }
+}
+
+/// How a (resumable) training segment ended.
+#[derive(Debug, Clone)]
+pub enum TrainOutcome {
+    /// Every epoch ran; the report spans ALL segments (prior checkpoint
+    /// progress spliced in).
+    Completed(TrainReport),
+    /// A checkpoint request landed: the segment stopped at the next epoch
+    /// boundary and this checkpoint carries the cumulative progress.
+    Preempted(Checkpoint),
+}
+
 impl TrainReport {
     pub fn total_wallclock(&self) -> f64 {
         self.total_secs
@@ -110,6 +173,35 @@ pub fn train_with_io(
     kill: &CancelToken,
     io: Option<&IoProfile>,
 ) -> Result<TrainReport> {
+    match train_resumable(session, cfg, kill, None, io, None)? {
+        TrainOutcome::Completed(report) => Ok(report),
+        // unreachable without a preempt token, but fail loudly over lying
+        TrainOutcome::Preempted(_) => bail!("training preempted without a preempt token"),
+    }
+}
+
+/// [`train_with_io`] with checkpoint/restart: the elastic-rebalancing
+/// training loop.
+///
+/// * `preempt` — the checkpoint-request token the scheduler trips to
+///   withdraw a *running* job. It is checked at every **epoch boundary**
+///   (never mid-epoch): when tripped, the loop stops before the next
+///   epoch and returns [`TrainOutcome::Preempted`] carrying the cumulative
+///   [`Checkpoint`]. `kill` (the walltime token) still aborts at step
+///   granularity and always wins over a checkpoint request.
+/// * `resume` — a checkpoint from a previous segment: the loop skips the
+///   `epochs_done` epochs it records and, on completion, splices the saved
+///   progress in front of this segment's report, so the returned report
+///   spans the whole logical run with no double-counted seconds.
+pub fn train_resumable(
+    session: &mut TrainSession,
+    cfg: &TrainConfig,
+    kill: &CancelToken,
+    preempt: Option<&CancelToken>,
+    io: Option<&IoProfile>,
+    resume: Option<&Checkpoint>,
+) -> Result<TrainOutcome> {
+    let start_epoch = resume.map_or(0, |c| c.epochs_done).min(cfg.epochs);
     let dataset = Dataset::for_workload(&session.workload, cfg.seed);
     let mut source = match io {
         Some(io) => BatchSource::Prefetched(Prefetcher::spawn(
@@ -121,14 +213,20 @@ pub fn train_with_io(
     };
     let total = Stopwatch::start();
     let mut report = TrainReport {
-        epoch_secs: Vec::with_capacity(cfg.epochs),
-        epoch_loss: Vec::with_capacity(cfg.epochs),
-        step_loss: Vec::with_capacity(cfg.epochs * cfg.steps_per_epoch),
+        epoch_secs: Vec::with_capacity(cfg.epochs - start_epoch),
+        epoch_loss: Vec::with_capacity(cfg.epochs - start_epoch),
+        step_loss: Vec::with_capacity((cfg.epochs - start_epoch) * cfg.steps_per_epoch),
         total_secs: 0.0,
         io_secs: 0.0,
         io_stall_secs: 0.0,
     };
-    for _epoch in 0..cfg.epochs {
+    let mut epochs_run = 0usize;
+    for _epoch in start_epoch..cfg.epochs {
+        // checkpoint requests land between epochs: completed work is never
+        // discarded, the in-flight epoch always reaches its boundary
+        if preempt.is_some_and(|p| p.is_cancelled()) {
+            break;
+        }
         let sw = Stopwatch::start();
         session.begin_epoch()?;
         let mut loss_sum = 0.0;
@@ -145,6 +243,7 @@ pub fn train_with_io(
         }
         report.epoch_secs.push(sw.elapsed_secs());
         report.epoch_loss.push(loss_sum / cfg.steps_per_epoch as f64);
+        epochs_run += 1;
     }
     report.total_secs = total.elapsed_secs();
     if let BatchSource::Prefetched(pf) = &source {
@@ -152,7 +251,23 @@ pub fn train_with_io(
         report.io_secs = stats.io_secs;
         report.io_stall_secs = stats.stall_secs;
     }
-    Ok(report)
+    let preempted = start_epoch + epochs_run < cfg.epochs;
+    if preempted {
+        let mut ckpt = resume.cloned().unwrap_or_default();
+        ckpt.epochs_done = start_epoch + epochs_run;
+        ckpt.epoch_secs.extend_from_slice(&report.epoch_secs);
+        ckpt.epoch_loss.extend_from_slice(&report.epoch_loss);
+        ckpt.step_loss.extend_from_slice(&report.step_loss);
+        ckpt.io_secs += report.io_secs;
+        ckpt.io_stall_secs += report.io_stall_secs;
+        ckpt.train_secs += report.total_secs;
+        return Ok(TrainOutcome::Preempted(ckpt));
+    }
+    let full = match resume {
+        Some(c) => c.splice(&report),
+        None => report,
+    };
+    Ok(TrainOutcome::Completed(full))
 }
 
 /// Where the step loop's batches come from: inline synthetic generation,
@@ -201,6 +316,45 @@ mod tests {
             io_stall_secs: 0.0,
         };
         assert_eq!(r.steady_epoch_secs(), 3.0);
+    }
+
+    /// Satellite (checkpoint round-trip, accounting half): splicing a
+    /// checkpoint in front of the resumed segment's report reconstructs
+    /// the whole run — epoch vectors concatenate, wall/IO seconds sum
+    /// exactly once. Together with the epoch-boundary semantics of
+    /// `train_resumable` (checkpoints land only between epochs), a resume
+    /// loses no completed epoch and at most the in-flight one.
+    #[test]
+    fn checkpoint_splice_reconstructs_the_whole_run() {
+        let ckpt = Checkpoint {
+            epochs_done: 2,
+            epoch_secs: vec![1.0, 1.1],
+            epoch_loss: vec![2.0, 1.5],
+            step_loss: vec![2.0, 1.5],
+            io_secs: 0.4,
+            io_stall_secs: 0.1,
+            train_secs: 2.3,
+        };
+        assert_eq!(ckpt.epochs_remaining(5), 3);
+        assert_eq!(ckpt.epochs_remaining(2), 0);
+        assert_eq!(ckpt.epochs_remaining(1), 0, "never negative");
+        let rest = TrainReport {
+            epoch_secs: vec![1.2, 1.3, 1.4],
+            epoch_loss: vec![1.0, 0.8, 0.7],
+            step_loss: vec![1.0, 0.8, 0.7],
+            total_secs: 4.0,
+            io_secs: 0.6,
+            io_stall_secs: 0.2,
+        };
+        let full = ckpt.splice(&rest);
+        assert_eq!(full.epoch_secs, vec![1.0, 1.1, 1.2, 1.3, 1.4]);
+        assert_eq!(full.epoch_loss.len(), 5);
+        assert_eq!(full.step_loss.len(), 5);
+        // wall/IO seconds sum across segments, counted exactly once
+        assert!((full.total_secs - 6.3).abs() < 1e-12);
+        assert!((full.io_secs - 1.0).abs() < 1e-12);
+        assert!((full.io_stall_secs - 0.3).abs() < 1e-12);
+        assert_eq!(full.final_loss(), 0.7);
     }
 
     #[test]

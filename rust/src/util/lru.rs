@@ -26,10 +26,20 @@ struct Slot {
 
 /// A capacity-bounded LRU over keys with byte sizes. `cap_bytes: None`
 /// disables eviction (the cache still tracks usage and recency).
+///
+/// Keys can be reference-**pinned** ([`Lru::pin`], refcounted): a pinned
+/// key is never chosen as an eviction victim, however cold — the callers
+/// pin digests still referenced by queued/running jobs so capacity
+/// pressure can never GC a bundle or dataset out from under live work.
+/// When every candidate is pinned the cache simply runs over its cap
+/// (the honest alternative to evicting something in use).
 #[derive(Debug, Clone)]
 pub struct Lru<K: Ord + Clone> {
     cap_bytes: Option<u64>,
     slots: BTreeMap<K, Slot>,
+    /// key -> pin refcount (pins may precede insertion and survive
+    /// eviction-driven removal attempts; they are bookkeeping, not slots).
+    pins: BTreeMap<K, u64>,
     tick: u64,
     used: u64,
     evictions: u64,
@@ -40,10 +50,33 @@ impl<K: Ord + Clone> Lru<K> {
         Lru {
             cap_bytes,
             slots: BTreeMap::new(),
+            pins: BTreeMap::new(),
             tick: 0,
             used: 0,
             evictions: 0,
         }
+    }
+
+    /// Reference-pin `key` against eviction (refcounted: pin twice, unpin
+    /// twice). Pinning a key that is not resident is allowed — it protects
+    /// the key from the moment it is inserted.
+    pub fn pin(&mut self, key: &K) {
+        *self.pins.entry(key.clone()).or_insert(0) += 1;
+    }
+
+    /// Drop one pin reference; the key becomes evictable when the count
+    /// reaches zero. Unpinning an unpinned key is a no-op.
+    pub fn unpin(&mut self, key: &K) {
+        if let Some(count) = self.pins.get_mut(key) {
+            *count -= 1;
+            if *count == 0 {
+                self.pins.remove(key);
+            }
+        }
+    }
+
+    pub fn is_pinned(&self, key: &K) -> bool {
+        self.pins.contains_key(key)
     }
 
     pub fn unbounded() -> Lru<K> {
@@ -104,11 +137,12 @@ impl<K: Ord + Clone> Lru<K> {
             return out;
         };
         while self.used > cap {
-            // oldest stamp among everything except the fresh insert
+            // oldest stamp among everything except the fresh insert and
+            // any reference-pinned key (still in use by a live job)
             let victim = self
                 .slots
                 .iter()
-                .filter(|(k, _)| **k != key)
+                .filter(|(k, _)| **k != key && !self.pins.contains_key(*k))
                 .min_by_key(|(_, s)| s.stamp)
                 .map(|(k, _)| k.clone());
             let Some(victim) = victim else { break };
@@ -195,6 +229,51 @@ mod tests {
         assert_eq!(lru.evictions(), 0);
         assert_eq!(lru.remove(&"a"), None);
         assert!(!lru.touch(&"a"));
+    }
+
+    /// Satellite (reference-pinned eviction): a pinned key is never the
+    /// victim, however cold; unpinning (to zero) makes it evictable again.
+    #[test]
+    fn pinned_keys_survive_capacity_pressure() {
+        let mut lru: Lru<&str> = Lru::new(Some(30));
+        lru.insert("a", 10);
+        lru.insert("b", 10);
+        lru.insert("c", 10);
+        lru.pin(&"a"); // a is the coldest AND pinned
+        lru.pin(&"a"); // refcounted: pinned twice
+        let out = lru.insert("d", 10);
+        assert_eq!(
+            out,
+            vec![Evicted { key: "b", bytes: 10 }],
+            "the pinned cold key is skipped; the next-coldest goes"
+        );
+        assert!(lru.contains(&"a") && lru.is_pinned(&"a"));
+        // one unpin: still pinned (refcount 1), still protected
+        lru.unpin(&"a");
+        assert!(lru.is_pinned(&"a"));
+        let out = lru.insert("e", 10);
+        assert_eq!(out.len(), 1);
+        assert_ne!(out[0].key, "a");
+        // second unpin: evictable again
+        lru.unpin(&"a");
+        assert!(!lru.is_pinned(&"a"));
+        let out = lru.insert("f", 10);
+        assert_eq!(out, vec![Evicted { key: "a", bytes: 10 }]);
+        // unpinning an unpinned key is a no-op
+        lru.unpin(&"zzz");
+    }
+
+    /// When EVERY candidate is pinned the cache runs over its cap rather
+    /// than evicting in-use bytes.
+    #[test]
+    fn fully_pinned_cache_overflows_instead_of_evicting() {
+        let mut lru: Lru<&str> = Lru::new(Some(15));
+        lru.insert("a", 10);
+        lru.pin(&"a");
+        let out = lru.insert("b", 10);
+        assert!(out.is_empty(), "{out:?}");
+        assert_eq!(lru.used_bytes(), 20, "over cap, honestly");
+        assert!(lru.contains(&"a") && lru.contains(&"b"));
     }
 
     #[test]
