@@ -1,0 +1,99 @@
+//! The 100k-job scale benchmark: poll-driven vs event-driven scheduler
+//! core (`modak::placement::scale`) — ROADMAP item 5's headline numbers.
+//!
+//! Needs no AOT artifacts: the simulated clock carries the workload, the
+//! real wall-clock carries only the cost of deciding, so the comparison is
+//! reproducible on any host (absolute times vary with the machine; the
+//! poll-vs-event ratio is the point). Both cores make byte-identical
+//! placement decisions (asserted), so the schedules agree and only the
+//! scheduler's own overhead differs.
+//!
+//! Run: `cargo bench --bench scale` — prints a table and rewrites
+//! `BENCH_scale.json` in the working directory.
+
+use modak::placement::scale::{peak_rss_bytes, run_scale, CoreMode, ScaleConfig, ScaleOutcome};
+
+fn run_mode(mode: CoreMode) -> (ScaleOutcome, u64) {
+    let out = run_scale(&ScaleConfig::headline(mode));
+    assert_eq!(out.completed, 100_000, "{} sim must drain", mode.as_str());
+    // VmHWM is a process-wide high-water mark: sampled after each run, so
+    // the first mode's figure is its own and later ones are upper bounds
+    (out, peak_rss_bytes())
+}
+
+fn json_entry(mode: CoreMode, out: &ScaleOutcome, rss: u64) -> String {
+    format!(
+        "  \"{}\": {{\n    \"jobs\": {},\n    \"shards\": 64,\n    \
+         \"events\": {},\n    \"wall_secs\": {:.4},\n    \
+         \"mean_overhead_ms_per_job\": {:.4},\n    \
+         \"makespan_millis\": {},\n    \"peak_queue\": {},\n    \
+         \"peak_rss_bytes\": {}\n  }}",
+        mode.as_str().replace('-', "_"),
+        out.completed,
+        out.events,
+        out.wall_secs,
+        out.mean_overhead_ms_per_job,
+        out.makespan_millis,
+        out.peak_queue,
+        rss,
+    )
+}
+
+fn main() {
+    println!("scale: 100000 jobs over 64 shards x 32 slots (deterministic sim)\n");
+    println!(
+        "{:<14} {:>10} {:>10} {:>12} {:>11} {:>12}",
+        "core", "events", "wall(s)", "ms/job", "peak queue", "peak rss(MB)"
+    );
+
+    // event-driven first so its RSS sample is not inflated by the other
+    // core's allocations
+    let (event, event_rss) = run_mode(CoreMode::EventDriven);
+    let (poll, poll_rss) = run_mode(CoreMode::PollDriven);
+
+    for (mode, out, rss) in [
+        (CoreMode::EventDriven, &event, event_rss),
+        (CoreMode::PollDriven, &poll, poll_rss),
+    ] {
+        println!(
+            "{:<14} {:>10} {:>10.3} {:>12.4} {:>11} {:>12.1}",
+            mode.as_str(),
+            out.events,
+            out.wall_secs,
+            out.mean_overhead_ms_per_job,
+            out.peak_queue,
+            rss as f64 / (1024.0 * 1024.0),
+        );
+    }
+
+    // the two cores must have made identical decisions: same schedule
+    assert_eq!(event.makespan_millis, poll.makespan_millis);
+    assert_eq!(event.events, poll.events);
+    assert_eq!(event.peak_queue, poll.peak_queue);
+    assert!(
+        event.wall_secs < poll.wall_secs,
+        "event-driven core must beat the poll-driven sweep \
+         ({:.3}s vs {:.3}s)",
+        event.wall_secs,
+        poll.wall_secs
+    );
+
+    let speedup = poll.wall_secs / event.wall_secs.max(1e-9);
+    println!(
+        "\nidentical schedules (makespan {} ms, {} events); event-driven \
+         core is {speedup:.1}x faster on scheduler overhead",
+        event.makespan_millis, event.events
+    );
+
+    let json = format!(
+        "{{\n{},\n{},\n  \"speedup\": {:.2},\n  \
+         \"note\": \"regenerate with: cargo bench --bench scale\"\n}}\n",
+        json_entry(CoreMode::EventDriven, &event, event_rss),
+        json_entry(CoreMode::PollDriven, &poll, poll_rss),
+        speedup,
+    );
+    match std::fs::write("BENCH_scale.json", &json) {
+        Ok(()) => println!("wrote BENCH_scale.json"),
+        Err(e) => eprintln!("scale: writing BENCH_scale.json failed: {e}"),
+    }
+}

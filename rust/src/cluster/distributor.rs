@@ -13,6 +13,8 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -48,6 +50,66 @@ impl StagingStats {
     }
 }
 
+/// Lock-free per-shard staging counters. Staging paths bump these with
+/// relaxed atomics while holding the distributor's structural lock;
+/// reporting reads (`ClusterScheduler::staging_totals`, the batch report)
+/// snapshot through a shared `Arc` without taking that lock at all, so a
+/// long transfer never stalls a stats read. `simulated_secs` is an `f64`
+/// stored as IEEE-754 bits in an `AtomicU64` (single-writer-per-call CAS
+/// add; readers decode with `from_bits`).
+#[derive(Debug, Default)]
+pub struct StagingCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes: AtomicU64,
+    simulated_secs_bits: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl StagingCounters {
+    fn add_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_miss(&self, bytes: u64, secs: f64) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.add_secs(secs);
+    }
+
+    fn add_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_secs(&self, secs: f64) {
+        let _ = self
+            .simulated_secs_bits
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + secs).to_bits())
+            });
+    }
+
+    /// A plain-struct copy of the counters at this instant.
+    pub fn snapshot(&self) -> StagingStats {
+        StagingStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            simulated_secs: f64::from_bits(self.simulated_secs_bits.load(Ordering::Relaxed)),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Sum a slice of shard counters into cluster-wide totals (no lock taken).
+pub fn staging_totals_of(counters: &[StagingCounters]) -> StagingStats {
+    let mut t = StagingStats::default();
+    for c in counters {
+        t.accumulate(&c.snapshot());
+    }
+    t
+}
+
 /// Stages registry bundles into per-shard local stores keyed by digest.
 pub struct ImageDistributor {
     /// Root of the shard-local stores (`<root>/shard-<i>/<digest>`).
@@ -62,7 +124,8 @@ pub struct ImageDistributor {
     sources: BTreeMap<String, (String, PathBuf)>,
     /// digest -> source bundle size in bytes (computed once).
     sizes: BTreeMap<String, u64>,
-    stats: Vec<StagingStats>,
+    /// Shared with the cluster so reporting reads skip this struct's lock.
+    stats: Arc<Vec<StagingCounters>>,
 }
 
 impl ImageDistributor {
@@ -87,8 +150,14 @@ impl ImageDistributor {
             lru: (0..shards).map(|_| Lru::new(cap_bytes)).collect(),
             sources: BTreeMap::new(),
             sizes: BTreeMap::new(),
-            stats: vec![StagingStats::default(); shards],
+            stats: Arc::new((0..shards).map(|_| StagingCounters::default()).collect()),
         }
+    }
+
+    /// The shared counter block: clone the `Arc` once and read staging
+    /// stats forever after without locking the distributor.
+    pub fn counters(&self) -> Arc<Vec<StagingCounters>> {
+        Arc::clone(&self.stats)
     }
 
     pub fn shard_count(&self) -> usize {
@@ -137,7 +206,7 @@ impl ImageDistributor {
         self.sources
             .insert(tag.to_string(), (digest.to_string(), source.to_path_buf()));
         if let Some(local) = self.present[shard].get(digest) {
-            self.stats[shard].hits += 1;
+            self.stats[shard].add_hit();
             self.lru[shard].touch(&digest.to_string());
             return Ok(local.clone());
         }
@@ -151,10 +220,10 @@ impl ImageDistributor {
             Err(_) => (source.to_path_buf(), 0),
         };
         self.sizes.insert(digest.to_string(), bytes);
-        let st = &mut self.stats[shard];
-        st.misses += 1;
-        st.bytes += bytes;
-        st.simulated_secs += STAGE_LATENCY_SECS + bytes as f64 / STAGE_BANDWIDTH_BYTES_PER_SEC;
+        self.stats[shard].add_miss(
+            bytes,
+            STAGE_LATENCY_SECS + bytes as f64 / STAGE_BANDWIDTH_BYTES_PER_SEC,
+        );
         self.present[shard].insert(digest.to_string(), dir.clone());
         // capacity-bounded store: evict the coldest digests past the cap
         for ev in self.lru[shard].insert(digest.to_string(), bytes) {
@@ -165,7 +234,7 @@ impl ImageDistributor {
                     let _ = std::fs::remove_dir_all(&stale);
                 }
             }
-            self.stats[shard].evictions += 1;
+            self.stats[shard].add_eviction();
         }
         Ok(dir)
     }
@@ -184,16 +253,12 @@ impl ImageDistributor {
 
     /// One shard's staging counters.
     pub fn stats(&self, shard: usize) -> StagingStats {
-        self.stats[shard].clone()
+        self.stats[shard].snapshot()
     }
 
     /// Cluster-wide staging counters.
     pub fn totals(&self) -> StagingStats {
-        let mut t = StagingStats::default();
-        for s in &self.stats {
-            t.accumulate(s);
-        }
-        t
+        staging_totals_of(&self.stats)
     }
 
     fn size_of(&mut self, digest: &str, source: &Path) -> u64 {

@@ -37,16 +37,16 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-pub use distributor::{ImageDistributor, StagingStats};
+pub use distributor::{ImageDistributor, StagingCounters, StagingStats};
 pub use router::{route, ShardLoad, ShardRouter};
 pub use sim::{simulate_cluster, ClusterSimJob, ClusterSimOutcome};
 
-use crate::data::stage::{DataStageStats, StageManager};
+use crate::data::stage::{data_totals_of, DataStageCounters, DataStageStats, StageManager};
 use crate::data::DatasetSpec;
 use crate::frameworks::Target;
 use crate::placement::{PlacementEngine, RebalanceMode};
 use crate::scheduler::{JobId, JobRecord, JobScript, NodeSpec, SchedulePolicy, TorqueServer};
-use crate::util::sync::Signal;
+use crate::util::sync::{EventBus, SchedEvent, Signal};
 
 /// Cluster-global job identifier (stable across shard migrations).
 pub type ClusterJobId = u64;
@@ -133,6 +133,11 @@ pub struct ClusterConfig {
     /// queued jobs only (the default), or also running jobs via
     /// checkpoint/restart.
     pub rebalance: RebalanceMode,
+    /// Migration hysteresis (`--rebalance-margin-secs`): a move must beat
+    /// staying put by at least this many score-seconds. 0.0 keeps the
+    /// historical strict-improvement rule; a positive margin suppresses
+    /// marginal ping-pong migrations under near-symmetric load.
+    pub rebalance_margin_secs: f64,
 }
 
 struct Shard {
@@ -239,13 +244,24 @@ pub struct ClusterScheduler {
     router: ShardRouter,
     /// What the rebalancer may migrate (queued-only or elastic).
     rebalance_mode: RebalanceMode,
+    /// Migration hysteresis margin (score-seconds a move must win by).
+    rebalance_margin_secs: f64,
     distributor: Mutex<ImageDistributor>,
     /// Tiered dataset staging (shared store -> shard cache -> node
     /// scratch); shared with every shard's server for node-tier staging
     /// at dispatch. Lock order: any server lock BEFORE this one.
     stager: Arc<Mutex<StageManager>>,
+    /// Lock-free views of the distributor's / stager's per-shard counters:
+    /// reporting reads (`staging_totals`, `data_totals`, `shard_snapshots`)
+    /// go through these and never contend with in-flight staging writes.
+    image_counters: Arc<Vec<StagingCounters>>,
+    data_counters: Arc<Vec<DataStageCounters>>,
     map: Mutex<MapState>,
     signal: Arc<Signal>,
+    /// Typed scheduler events (submit/dispatch/complete/preempt/
+    /// checkpoint-ready). Wired to wake `signal` on publish, so legacy
+    /// condvar sleepers and event-driven consumers coexist.
+    bus: Arc<EventBus<SchedEvent>>,
 }
 
 impl ClusterScheduler {
@@ -257,18 +273,22 @@ impl ClusterScheduler {
         signal: Arc<Signal>,
     ) -> ClusterScheduler {
         let n = cfg.shards.len();
-        let stager = Arc::new(Mutex::new(StageManager::new(
-            n,
-            cfg.cache_cap_bytes,
-            cfg.cache_cap_bytes,
-        )));
+        // publishes ping the legacy completion signal, so the service's
+        // condvar sleep doubles as the event-bus wakeup
+        let bus = Arc::new(EventBus::new().with_wake(Arc::clone(&signal)));
+        let stager = StageManager::new(n, cfg.cache_cap_bytes, cfg.cache_cap_bytes);
+        let data_counters = stager.counters();
+        let stager = Arc::new(Mutex::new(stager));
         let shards: Vec<Shard> = cfg
             .shards
             .iter()
             .enumerate()
             .map(|(i, spec)| {
-                let mut server =
-                    TorqueServer::boot_nodes(spec.node_specs(), Some(Arc::clone(&signal)));
+                let mut server = TorqueServer::boot_nodes_on_bus(
+                    spec.node_specs(),
+                    Some(Arc::clone(&signal)),
+                    Some((i, Arc::clone(&bus))),
+                );
                 // per-shard policy override, else the cluster default
                 server.set_policy(spec.policy.unwrap_or(cfg.policy));
                 server.attach_data_stager(i, Arc::clone(&stager));
@@ -278,22 +298,28 @@ impl ClusterScheduler {
                 }
             })
             .collect();
+        let distributor = ImageDistributor::with_capacity(
+            store_root.as_ref().join("shard-cache"),
+            n,
+            cfg.cache_cap_bytes,
+        );
+        let image_counters = distributor.counters();
         ClusterScheduler {
             shards,
             router: cfg.router,
             rebalance_mode: cfg.rebalance,
-            distributor: Mutex::new(ImageDistributor::with_capacity(
-                store_root.as_ref().join("shard-cache"),
-                n,
-                cfg.cache_cap_bytes,
-            )),
+            rebalance_margin_secs: cfg.rebalance_margin_secs,
+            distributor: Mutex::new(distributor),
             stager,
+            image_counters,
+            data_counters,
             map: Mutex::new(MapState {
                 next_id: 1,
                 migrations_in: vec![0; n],
                 ..MapState::default()
             }),
             signal,
+            bus,
         }
     }
 
@@ -313,6 +339,14 @@ impl ClusterScheduler {
     /// it; planner workers ping it too).
     pub fn signal(&self) -> Arc<Signal> {
         Arc::clone(&self.signal)
+    }
+
+    /// The typed scheduler-event bus. Every submit, dispatch, completion,
+    /// preemption request, and checkpoint report publishes an event naming
+    /// its shard; consumers drain with [`EventBus::drain_since`] and poll
+    /// only the named shards ([`Self::poll_shards`]).
+    pub fn bus(&self) -> Arc<EventBus<SchedEvent>> {
+        Arc::clone(&self.bus)
     }
 
     /// Run `f` with shard `i`'s server locked.
@@ -387,6 +421,8 @@ impl ClusterScheduler {
                 data_digest: dataset.map(|d| d.digest.clone()),
             },
         );
+        drop(map);
+        self.bus.publish(SchedEvent::Submit { shard, job: gid });
         Ok(gid)
     }
 
@@ -423,10 +459,34 @@ impl ClusterScheduler {
     }
 
     /// Absorb completions on every shard, release the pins of finished
-    /// jobs, then rebalance.
+    /// jobs, then rebalance — the full-sweep backstop. Event-driven
+    /// callers use [`Self::poll_shards`] with the shards named by drained
+    /// events instead.
     pub fn poll(&self) -> Result<()> {
-        for shard in &self.shards {
-            shard.server.lock().unwrap().poll()?;
+        let all: Vec<usize> = (0..self.shards.len()).collect();
+        self.poll_shards(&all)
+    }
+
+    /// Absorb completions on the named shards only — the event-triggered
+    /// pass. Each server lock is held just long enough to pump that
+    /// shard's result channel and is released before the next shard is
+    /// touched (and before pin release / rebalancing run), so one slow
+    /// shard never serialises the rest of the sweep behind its mutex.
+    /// Unknown and duplicate indices are ignored.
+    pub fn poll_shards(&self, shards: &[usize]) -> Result<()> {
+        let mut seen = vec![false; self.shards.len()];
+        for &i in shards {
+            let Some(shard) = self.shards.get(i) else {
+                continue;
+            };
+            if std::mem::replace(&mut seen[i], true) {
+                continue;
+            }
+            // scope the guard: absorb this shard's pending results, then
+            // release before anything else is locked
+            let mut srv = shard.server.lock().unwrap();
+            srv.poll()?;
+            drop(srv);
         }
         self.release_finished_pins();
         self.rebalance()
@@ -517,6 +577,11 @@ impl ClusterScheduler {
                     drop(map);
                     if let Some(gid) = gid {
                         self.move_pin(gid, to);
+                        // a migration is a fresh submit on the destination
+                        self.bus.publish(SchedEvent::Submit {
+                            shard: to,
+                            job: gid,
+                        });
                     }
                 }
                 Err(_) => {
@@ -581,6 +646,11 @@ impl ClusterScheduler {
                             if to != from {
                                 self.move_pin(gid, to);
                             }
+                            // the checkpoint restart re-queued the job
+                            self.bus.publish(SchedEvent::Submit {
+                                shard: to,
+                                job: gid,
+                            });
                         }
                     }
                     Err(_) => {
@@ -663,9 +733,10 @@ impl ClusterScheduler {
             }
             for (local, node_free, node_total) in running {
                 // only preempt jobs this cluster owns
-                if !self.map.lock().unwrap().rev.contains_key(&(from, local)) {
+                let owned = self.map.lock().unwrap().rev.get(&(from, local)).copied();
+                let Some(gid) = owned else {
                     continue;
-                }
+                };
                 let Some(job) = self.job_shape(from, local) else {
                     continue;
                 };
@@ -683,7 +754,13 @@ impl ClusterScheduler {
                 let Some(_best) = self.best_strict_improvement(&snaps, from, &job) else {
                     continue;
                 };
-                let _ = self.shards[from].server.lock().unwrap().preempt(local);
+                let asked = self.shards[from].server.lock().unwrap().preempt(local);
+                if asked.is_ok() {
+                    self.bus.publish(SchedEvent::Preempt {
+                        shard: from,
+                        job: gid,
+                    });
+                }
                 break; // at most one new checkpoint per shard per pass
             }
         }
@@ -720,10 +797,15 @@ impl ClusterScheduler {
             .find(|l| l.shard == best)
             .expect("best came from candidates");
         // strict improvement over staying put (the origin load still
-        // counts a queued job in its backlog)
+        // counts a queued job in its backlog), widened by the configured
+        // hysteresis margin so near-ties never ping-pong
         let origin = snaps[from].load(from, job.class, job.demand, 0.0, 0.0);
-        (PlacementEngine::score(best_load) + 1e-9 < PlacementEngine::score(&origin))
-            .then_some(best)
+        PlacementEngine::improves_by_margin(
+            PlacementEngine::score(best_load),
+            PlacementEngine::score(&origin),
+            self.rebalance_margin_secs,
+        )
+        .then_some(best)
     }
 
     /// Stage the job's image (and dataset) onto `to` and queue it there —
@@ -964,16 +1046,12 @@ impl ClusterScheduler {
         self.map.lock().unwrap().migrations_elastic
     }
 
-    /// Per-shard point-in-time stats for batch reporting.
+    /// Per-shard point-in-time stats for batch reporting. Staging counters
+    /// come from the shared atomic blocks — neither the distributor nor
+    /// the stage manager is locked, so reporting never contends with an
+    /// in-flight transfer.
     pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
-        // dataset counters snapshotted first: the stager lock never nests
-        // inside the distributor's or a server's here
-        let data: Vec<DataStageStats> = {
-            let stager = self.stager.lock().unwrap();
-            (0..self.shards.len()).map(|i| stager.stats(i)).collect()
-        };
         let map = self.map.lock().unwrap();
-        let dist = self.distributor.lock().unwrap();
         self.shards
             .iter()
             .enumerate()
@@ -986,21 +1064,23 @@ impl ClusterScheduler {
                     peak_running: srv.peak_running(),
                     slot_capacity: shard.spec.slot_capacity(),
                     migrations_in: map.migrations_in[i],
-                    staging: dist.stats(i),
-                    data: data[i].clone(),
+                    staging: self.image_counters[i].snapshot(),
+                    data: self.data_counters[i].snapshot(),
                 }
             })
             .collect()
     }
 
-    /// Cluster-wide staging counters.
+    /// Cluster-wide staging counters (atomic snapshot; no distributor
+    /// lock).
     pub fn staging_totals(&self) -> StagingStats {
-        self.distributor.lock().unwrap().totals()
+        distributor::staging_totals_of(&self.image_counters)
     }
 
-    /// Cluster-wide dataset staging counters (both tiers).
+    /// Cluster-wide dataset staging counters, both tiers (atomic snapshot;
+    /// no stage-manager lock).
     pub fn data_totals(&self) -> DataStageStats {
-        self.stager.lock().unwrap().totals()
+        data_totals_of(&self.data_counters)
     }
 
     /// Sum of per-shard running peaks: an upper bound on the most jobs
@@ -1097,6 +1177,7 @@ mod tests {
                 policy: SchedulePolicy::Fifo,
                 cache_cap_bytes: None,
                 rebalance,
+                rebalance_margin_secs: 0.0,
             },
             Arc::new(Signal::new()),
         )

@@ -13,6 +13,8 @@
 //! the dataset-locality router term exists to avoid.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::data::{
     DatasetSpec, IoProfile, NODE_BW_BYTES_PER_SEC, NODE_LATENCY_SECS,
@@ -59,6 +61,74 @@ impl DataStageStats {
     }
 }
 
+/// Lock-free per-shard dataset staging counters, the data-tier twin of
+/// [`crate::cluster::StagingCounters`]. Staging paths bump relaxed atomics;
+/// reporting reads snapshot through a shared `Arc` without taking the
+/// stage manager's lock, so a slow transfer never blocks `data_totals()`.
+/// `simulated_secs` is an `f64` stored as bits in an `AtomicU64`.
+#[derive(Debug, Default)]
+pub struct DataStageCounters {
+    shard_hits: AtomicU64,
+    shard_misses: AtomicU64,
+    node_hits: AtomicU64,
+    node_misses: AtomicU64,
+    bytes_moved: AtomicU64,
+    simulated_secs_bits: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl DataStageCounters {
+    fn add_shard_hit(&self) {
+        self.shard_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_shard_miss(&self, bytes: u64, secs: f64, evictions: u64) {
+        self.shard_misses.fetch_add(1, Ordering::Relaxed);
+        self.charge(bytes, secs, evictions);
+    }
+
+    fn add_node_hit(&self) {
+        self.node_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_node_miss(&self, bytes: u64, secs: f64, evictions: u64) {
+        self.node_misses.fetch_add(1, Ordering::Relaxed);
+        self.charge(bytes, secs, evictions);
+    }
+
+    fn charge(&self, bytes: u64, secs: f64, evictions: u64) {
+        self.bytes_moved.fetch_add(bytes, Ordering::Relaxed);
+        self.evictions.fetch_add(evictions, Ordering::Relaxed);
+        let _ = self
+            .simulated_secs_bits
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + secs).to_bits())
+            });
+    }
+
+    /// A plain-struct copy of the counters at this instant.
+    pub fn snapshot(&self) -> DataStageStats {
+        DataStageStats {
+            shard_hits: self.shard_hits.load(Ordering::Relaxed),
+            shard_misses: self.shard_misses.load(Ordering::Relaxed),
+            node_hits: self.node_hits.load(Ordering::Relaxed),
+            node_misses: self.node_misses.load(Ordering::Relaxed),
+            bytes_moved: self.bytes_moved.load(Ordering::Relaxed),
+            simulated_secs: f64::from_bits(self.simulated_secs_bits.load(Ordering::Relaxed)),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Sum a slice of shard counters into cluster-wide totals (no lock taken).
+pub fn data_totals_of(counters: &[DataStageCounters]) -> DataStageStats {
+    let mut t = DataStageStats::default();
+    for c in counters {
+        t.accumulate(&c.snapshot());
+    }
+    t
+}
+
 /// Digest-keyed tiered staging across a cluster's shards and nodes.
 pub struct StageManager {
     /// Per shard: digest -> LRU slot (bytes = dataset size).
@@ -69,7 +139,8 @@ pub struct StageManager {
     /// name -> spec recorded at first staging: the migration path and the
     /// node dispatch hook look datasets up by the payload's name.
     specs: BTreeMap<String, DatasetSpec>,
-    stats: Vec<DataStageStats>,
+    /// Shared with the cluster so reporting reads skip this struct's lock.
+    stats: Arc<Vec<DataStageCounters>>,
 }
 
 impl StageManager {
@@ -86,8 +157,14 @@ impl StageManager {
             node_caches: BTreeMap::new(),
             node_cap_bytes,
             specs: BTreeMap::new(),
-            stats: vec![DataStageStats::default(); shards],
+            stats: Arc::new((0..shards).map(|_| DataStageCounters::default()).collect()),
         }
+    }
+
+    /// The shared counter block: clone the `Arc` once and read staging
+    /// stats forever after without locking the manager.
+    pub fn counters(&self) -> Arc<Vec<DataStageCounters>> {
+        Arc::clone(&self.stats)
     }
 
     pub fn shard_count(&self) -> usize {
@@ -130,16 +207,12 @@ impl StageManager {
         self.specs.insert(spec.name.clone(), spec.clone());
         let cache = &mut self.shard_caches[shard];
         if cache.touch(&spec.digest) {
-            self.stats[shard].shard_hits += 1;
+            self.stats[shard].add_shard_hit();
             return 0.0;
         }
         let evicted = cache.insert(spec.digest.clone(), spec.size_bytes);
         let secs = spec.transfer_secs(SHARED_LATENCY_SECS, SHARED_BW_BYTES_PER_SEC);
-        let st = &mut self.stats[shard];
-        st.shard_misses += 1;
-        st.bytes_moved += spec.size_bytes;
-        st.simulated_secs += secs;
-        st.evictions += evicted.len() as u64;
+        self.stats[shard].add_shard_miss(spec.size_bytes, secs, evicted.len() as u64);
         secs
     }
 
@@ -160,15 +233,11 @@ impl StageManager {
             .entry((shard, node))
             .or_insert_with(|| Lru::new(cap));
         if cache.touch(&spec.digest) {
-            self.stats[shard].node_hits += 1;
+            self.stats[shard].add_node_hit();
         } else {
             let evicted = cache.insert(spec.digest.clone(), spec.size_bytes);
             let secs = spec.transfer_secs(NODE_LATENCY_SECS, NODE_BW_BYTES_PER_SEC);
-            let st = &mut self.stats[shard];
-            st.node_misses += 1;
-            st.bytes_moved += spec.size_bytes;
-            st.simulated_secs += secs;
-            st.evictions += evicted.len() as u64;
+            self.stats[shard].add_node_miss(spec.size_bytes, secs, evicted.len() as u64);
         }
         Some(IoProfile::for_spec(&spec))
     }
@@ -187,16 +256,12 @@ impl StageManager {
 
     /// One shard's staging counters.
     pub fn stats(&self, shard: usize) -> DataStageStats {
-        self.stats[shard].clone()
+        self.stats[shard].snapshot()
     }
 
     /// Cluster-wide staging counters.
     pub fn totals(&self) -> DataStageStats {
-        let mut t = DataStageStats::default();
-        for s in &self.stats {
-            t.accumulate(s);
-        }
-        t
+        data_totals_of(&self.stats)
     }
 }
 

@@ -43,7 +43,7 @@ USAGE:
               [--policy fifo|sjf|reservation]
               [--policy-shard <shard>=<policy> ...]
               [--shards N] [--router round-robin|least-loaded|perf-aware]
-              [--rebalance queued|elastic]
+              [--rebalance queued|elastic] [--rebalance-margin-secs F]
               [--max-build-workers N] [--slots-per-node N]
               [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
               [--store-cap-mb N]
@@ -75,6 +75,12 @@ COMMON FLAGS:
                           jobs on overloaded shards also checkpoint at an
                           epoch boundary and restart on the engine's pick,
                           keeping every completed epoch)
+  --rebalance-margin-secs <f>
+                          migration hysteresis: a migration must improve
+                          the destination's placement score by at least
+                          this many seconds (default 0 = any strict
+                          improvement); larger margins damp ping-pong
+                          migrations under near-symmetric load
   --shards <n>            scheduler shards (default 1 = single embedded
                           server; more boots a heterogeneous cluster with
                           per-shard image staging + queue rebalancing)
@@ -156,6 +162,15 @@ impl Cli {
                 .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
         }
     }
+
+    fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -227,6 +242,8 @@ fn service_config(cli: &Cli) -> Result<ServiceConfig> {
             Some(m) => RebalanceMode::parse(m)?,
         },
         shard_policies,
+        rebalance_margin_secs: cli
+            .get_f64("rebalance-margin-secs", defaults.rebalance_margin_secs)?,
     })
 }
 

@@ -32,6 +32,7 @@
 //! migration on a skewed arrival mix, and that best-score migration never
 //! picks a worse-scoring shard than first-idle-fit would have.
 
+pub mod scale;
 pub mod sim;
 
 use anyhow::{bail, Result};
@@ -216,6 +217,158 @@ impl PlacementEngine {
             })
             .map(|l| l.shard)
     }
+
+    /// Migration hysteresis: does moving to `candidate_score` beat staying
+    /// at `origin_score` by at least `margin_secs`? The `1e-9` epsilon
+    /// absorbs float noise (exact ties never migrate); `margin_secs`
+    /// (default 0 — the historical strict-improvement rule, bit-for-bit)
+    /// is the configurable dead band that keeps elastic rebalancing from
+    /// thrashing under event-driven (more frequent) scheduling passes:
+    /// a move must now *pay for itself* by the margin before it happens.
+    pub fn improves_by_margin(
+        candidate_score: f64,
+        origin_score: f64,
+        margin_secs: f64,
+    ) -> bool {
+        candidate_score + margin_secs.max(0.0) + 1e-9 < origin_score
+    }
+}
+
+/// Incremental per-shard load ledger: the event-driven core's replacement
+/// for rebuilding every [`ShardLoad`] snapshot on every sweep. Each
+/// scheduling event (submit / dispatch / complete / withdraw) applies an
+/// O(1) delta to exactly the shard it names; scoring then reads the
+/// tracked loads in O(shards) instead of O(resident jobs).
+///
+/// Backlog is kept in **integer milliseconds**, so adding and later
+/// removing the same job's expected work cancels exactly — incremental
+/// scores equal a full-snapshot recompute bit-for-bit, which
+/// [`LoadTracker::verify_against`] asserts (the debug cross-check wired
+/// into the scale sim and pinned in CI).
+#[derive(Debug, Clone, Default)]
+pub struct LoadTracker {
+    shards: Vec<TrackedShard>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct TrackedShard {
+    total_slots: usize,
+    free_slots: usize,
+    queued: usize,
+    backlog_millis: u64,
+}
+
+impl LoadTracker {
+    /// A tracker over `slots_per_shard.len()` idle shards.
+    pub fn new(slots_per_shard: &[usize]) -> LoadTracker {
+        LoadTracker {
+            shards: slots_per_shard
+                .iter()
+                .map(|&slots| TrackedShard {
+                    total_slots: slots,
+                    free_slots: slots,
+                    queued: 0,
+                    backlog_millis: 0,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Submit event: a job joined `shard`'s queue carrying
+    /// `expected_millis` of predicted work.
+    pub fn on_submit(&mut self, shard: usize, expected_millis: u64) {
+        let t = &mut self.shards[shard];
+        t.queued += 1;
+        t.backlog_millis += expected_millis;
+    }
+
+    /// Dispatch event: a queued job started on `shard`, consuming `demand`
+    /// slots. Backlog is unchanged — it covers queued *and* running work.
+    pub fn on_dispatch(&mut self, shard: usize, demand: usize) {
+        let t = &mut self.shards[shard];
+        t.queued = t.queued.saturating_sub(1);
+        t.free_slots = t.free_slots.saturating_sub(demand);
+    }
+
+    /// Complete event: a running job on `shard` finished, releasing
+    /// `demand` slots and retiring its `expected_millis` of backlog.
+    pub fn on_complete(&mut self, shard: usize, demand: usize, expected_millis: u64) {
+        let t = &mut self.shards[shard];
+        t.free_slots = (t.free_slots + demand).min(t.total_slots);
+        t.backlog_millis = t.backlog_millis.saturating_sub(expected_millis);
+    }
+
+    /// Withdraw event: a still-queued job left `shard` (queued migration
+    /// out) — the inverse of [`Self::on_submit`].
+    pub fn on_withdraw(&mut self, shard: usize, expected_millis: u64) {
+        let t = &mut self.shards[shard];
+        t.queued = t.queued.saturating_sub(1);
+        t.backlog_millis = t.backlog_millis.saturating_sub(expected_millis);
+    }
+
+    pub fn free_slots(&self, shard: usize) -> usize {
+        self.shards[shard].free_slots
+    }
+
+    pub fn queued(&self, shard: usize) -> usize {
+        self.shards[shard].queued
+    }
+
+    pub fn backlog_millis(&self, shard: usize) -> u64 {
+        self.shards[shard].backlog_millis
+    }
+
+    /// The tracked [`ShardLoad`] for `shard` (uniform eligibility, no
+    /// staging terms — callers with image/data-warmth terms overlay them).
+    pub fn load(&self, shard: usize) -> ShardLoad {
+        let t = &self.shards[shard];
+        ShardLoad {
+            shard,
+            eligible: true,
+            free_slots: t.free_slots,
+            total_slots: t.total_slots,
+            queued: t.queued,
+            backlog_secs: t.backlog_millis as f64 / 1_000.0,
+            staging_secs: 0.0,
+            data_staging_secs: 0.0,
+        }
+    }
+
+    pub fn loads(&self) -> Vec<ShardLoad> {
+        (0..self.shards.len()).map(|s| self.load(s)).collect()
+    }
+
+    /// The debug cross-check: every tracked field and the resulting
+    /// placement score must equal the full-recompute snapshot EXACTLY —
+    /// not approximately — or the incremental ledger has drifted.
+    pub fn verify_against(&self, snaps: &[ShardLoad]) -> std::result::Result<(), String> {
+        if snaps.len() != self.shards.len() {
+            return Err(format!(
+                "tracker has {} shards, snapshot has {}",
+                self.shards.len(),
+                snaps.len()
+            ));
+        }
+        for snap in snaps {
+            let tracked = self.load(snap.shard);
+            if tracked.free_slots != snap.free_slots
+                || tracked.total_slots != snap.total_slots
+                || tracked.queued != snap.queued
+                || tracked.backlog_secs != snap.backlog_secs
+                || PlacementEngine::score(&tracked) != PlacementEngine::score(snap)
+            {
+                return Err(format!(
+                    "shard {} drifted: tracked {:?} vs snapshot {:?}",
+                    snap.shard, tracked, snap
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -324,5 +477,85 @@ mod tests {
         assert_eq!(PlacementEngine::best_scoring(&[a.clone(), b.clone()]), Some(1));
         b.free_slots = 1;
         assert_eq!(PlacementEngine::best_scoring(&[a, b]), Some(0));
+    }
+
+    /// Satellite (hysteresis): margin 0 is the historical strict rule —
+    /// any real improvement migrates, exact ties never do; a positive
+    /// margin adds a dead band that small gains cannot cross.
+    #[test]
+    fn improves_by_margin_gates_small_gains() {
+        // margin 0: strictly better wins, ties lose
+        assert!(PlacementEngine::improves_by_margin(9.0, 10.0, 0.0));
+        assert!(!PlacementEngine::improves_by_margin(10.0, 10.0, 0.0));
+        // a 0.5s gain is real at margin 0 but inside a 1s dead band
+        assert!(PlacementEngine::improves_by_margin(9.5, 10.0, 0.0));
+        assert!(!PlacementEngine::improves_by_margin(9.5, 10.0, 1.0));
+        // a gain clearing the margin still migrates
+        assert!(PlacementEngine::improves_by_margin(8.0, 10.0, 1.0));
+        // negative margins never loosen the strict rule
+        assert!(!PlacementEngine::improves_by_margin(10.0, 10.0, -5.0));
+    }
+
+    /// Tentpole: the incremental ledger applies O(1) deltas per event and
+    /// lands on EXACTLY the load a full snapshot recompute would build —
+    /// field-for-field and score-for-score.
+    #[test]
+    fn load_tracker_deltas_match_full_recompute_exactly() {
+        let mut t = LoadTracker::new(&[2, 4]);
+        assert_eq!(t.shard_count(), 2);
+
+        // submit 3 jobs: two on shard 0 (1500ms, 2500ms), one on shard 1
+        t.on_submit(0, 1500);
+        t.on_submit(0, 2500);
+        t.on_submit(1, 7000);
+        // dispatch one job per shard
+        t.on_dispatch(0, 1);
+        t.on_dispatch(1, 2);
+        // shard 0 finishes its running job
+        t.on_complete(0, 1, 1500);
+        // the remaining queued job on shard 0 migrates away
+        t.on_withdraw(0, 2500);
+        t.on_submit(1, 2500);
+
+        // full recompute of the same history: shard 0 is empty again,
+        // shard 1 has one running (7000ms) + one queued (2500ms) job
+        let snap = vec![
+            ShardLoad {
+                shard: 0,
+                eligible: true,
+                free_slots: 2,
+                total_slots: 2,
+                queued: 0,
+                backlog_secs: 0.0,
+                staging_secs: 0.0,
+                data_staging_secs: 0.0,
+            },
+            ShardLoad {
+                shard: 1,
+                eligible: true,
+                free_slots: 2,
+                total_slots: 4,
+                queued: 1,
+                backlog_secs: 9.5,
+                staging_secs: 0.0,
+                data_staging_secs: 0.0,
+            },
+        ];
+        t.verify_against(&snap).unwrap();
+        assert_eq!(
+            PlacementEngine::score(&t.load(1)),
+            PlacementEngine::score(&snap[1])
+        );
+    }
+
+    #[test]
+    fn load_tracker_verify_reports_drift() {
+        let mut t = LoadTracker::new(&[2]);
+        t.on_submit(0, 1000);
+        let mut snap = vec![t.load(0)];
+        t.verify_against(&snap).unwrap();
+        snap[0].backlog_secs += 0.001; // any drift, however small, is fatal
+        let err = t.verify_against(&snap).unwrap_err();
+        assert!(err.contains("shard 0 drifted"), "{err}");
     }
 }

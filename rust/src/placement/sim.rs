@@ -163,11 +163,30 @@ impl SimShard {
     }
 }
 
+/// Full simulation shape, including the migration-hysteresis margin the
+/// event-driven core needs (`--rebalance-margin-secs`): with scheduling
+/// passes firing per event instead of per poll tick, a marginal
+/// improvement gets many more chances to trigger, so a move must beat
+/// staying put by at least `rebalance_margin_secs` — not merely by the
+/// float-noise epsilon.
+#[derive(Debug, Clone)]
+pub struct PlacementSimConfig {
+    pub strategy: PlacementStrategy,
+    pub policy: SchedulePolicy,
+    pub mode: RebalanceMode,
+    /// Restage overhead charged per cross-shard move.
+    pub restage_secs: f64,
+    pub horizon: f64,
+    /// Migration hysteresis dead band (0 = the historical strict-
+    /// improvement rule, bit-for-bit).
+    pub rebalance_margin_secs: f64,
+}
+
 /// Simulate `jobs` over cpu-only shards under one placement strategy,
 /// dispatch policy, and rebalance mode. Cross-shard moves (queued or
 /// elastic) charge `restage_secs` of overhead before the next segment
 /// trains — the simulated analogue of re-staging the image and dataset on
-/// the destination.
+/// the destination. Margin-0 shorthand for [`simulate_placement_cfg`].
 pub fn simulate_placement(
     strategy: PlacementStrategy,
     policy: SchedulePolicy,
@@ -177,7 +196,30 @@ pub fn simulate_placement(
     restage_secs: f64,
     horizon: f64,
 ) -> PlacementSimOutcome {
-    let engine = PlacementEngine::new(strategy);
+    simulate_placement_cfg(
+        &PlacementSimConfig {
+            strategy,
+            policy,
+            mode,
+            restage_secs,
+            horizon,
+            rebalance_margin_secs: 0.0,
+        },
+        jobs,
+        shards,
+    )
+}
+
+/// [`simulate_placement`] with the full config, including the
+/// rebalance-margin hysteresis.
+pub fn simulate_placement_cfg(
+    cfg: &PlacementSimConfig,
+    jobs: &[PlacementSimJob],
+    shards: &[Vec<NodeState>],
+) -> PlacementSimOutcome {
+    let (policy, mode, restage_secs, horizon) =
+        (cfg.policy, cfg.mode, cfg.restage_secs, cfg.horizon);
+    let engine = PlacementEngine::new(cfg.strategy);
     let mut pending: Vec<PlacementSimJob> = jobs.to_vec();
     pending.sort_by(|a, b| a.arrive.total_cmp(&b.arrive).then(a.id.cmp(&b.id)));
     let mut pending: VecDeque<PlacementSimJob> = pending.into();
@@ -274,7 +316,14 @@ pub fn simulate_placement(
             }
         }
         dispatch_all(&mut cluster, t, policy, &mut out);
-        rebalance(&mut cluster, t, mode, restage_secs, &mut out);
+        rebalance(
+            &mut cluster,
+            t,
+            mode,
+            restage_secs,
+            cfg.rebalance_margin_secs,
+            &mut out,
+        );
         // migrated queued work starts on its new shard in the same tick
         dispatch_all(&mut cluster, t, policy, &mut out);
     }
@@ -341,12 +390,14 @@ fn dispatch_all(
 /// Cross-shard rebalancing: queued jobs migrate to the best-scoring idle
 /// shard; under elastic mode, one running job per overloaded shard is
 /// scheduled to checkpoint at its next epoch boundary and restart where
-/// the engine points.
+/// the engine points. Every move must clear the hysteresis `margin`
+/// ([`PlacementEngine::improves_by_margin`]) on top of strict improvement.
 fn rebalance(
     cluster: &mut [SimShard],
     t: f64,
     mode: RebalanceMode,
     restage_secs: f64,
+    margin: f64,
     out: &mut PlacementSimOutcome,
 ) {
     let n = cluster.len();
@@ -377,11 +428,15 @@ fn rebalance(
                     out.score_regressions += 1;
                 }
             }
-            // migrate only on a strict improvement over staying put (the
-            // origin load still counts this job in its backlog, so an
-            // idle shard beats any queue worth leaving)
+            // migrate only on a strict improvement ≥ the hysteresis margin
+            // over staying put (the origin load still counts this job in
+            // its backlog, so an idle shard beats any queue worth leaving)
             let origin = cluster[from].load(from, t, demand, 0.0);
-            if PlacementEngine::score(best_load) + 1e-9 >= PlacementEngine::score(&origin) {
+            if !PlacementEngine::improves_by_margin(
+                PlacementEngine::score(best_load),
+                PlacementEngine::score(&origin),
+                margin,
+            ) {
                 continue;
             }
             let idx = cluster[from]
@@ -457,9 +512,15 @@ fn rebalance(
             };
             let dest_load = loads.iter().find(|l| l.shard == dest).unwrap();
             let origin = cluster[from].load(from, t, demand, 0.0);
-            // migrate only on a strict win: the move pays a restage, so a
-            // tie is not worth a checkpoint
-            if PlacementEngine::score(dest_load) + 1e-9 >= PlacementEngine::score(&origin) {
+            // migrate only on a strict win ≥ the hysteresis margin: the
+            // move pays a restage AND a checkpoint, so a marginal gain —
+            // which event-driven passes would re-test on every event —
+            // is not worth thrashing over
+            if !PlacementEngine::improves_by_margin(
+                PlacementEngine::score(dest_load),
+                PlacementEngine::score(&origin),
+                margin,
+            ) {
                 continue;
             }
             // the checkpoint lands at the NEXT epoch boundary: completed
@@ -619,6 +680,54 @@ mod tests {
         let a = run_mode(RebalanceMode::Elastic);
         let b = run_mode(RebalanceMode::Elastic);
         assert_eq!(a, b);
+    }
+
+    /// Satellite (hysteresis, pinned in CI): on a symmetric two-shard
+    /// cluster with a near-balanced load, the margin-0 rule migrates a
+    /// queued job for a ~0.05 s predicted gain — the thrash vector once
+    /// event-driven passes re-test every marginal move on every event. A
+    /// 0.5 s `--rebalance-margin-secs` dead band pins migrations to ZERO
+    /// (no ping-pong), at identical completion (all jobs finish).
+    #[test]
+    fn hysteresis_margin_pins_zero_ping_pong_on_symmetric_shards() {
+        // two identical 2-slot shards; j1 fills shard 0, j2/j3 keep shard
+        // 1 near the same pressure, j4 queues behind j1
+        let jobs = vec![
+            PlacementSimJob { id: 1, demand: 2, epochs: 5, epoch_secs: 2.0, arrive: 0.0 },
+            PlacementSimJob { id: 2, demand: 1, epochs: 1, epoch_secs: 7.9, arrive: 0.0 },
+            PlacementSimJob { id: 3, demand: 1, epochs: 1, epoch_secs: 4.0, arrive: 0.5 },
+            PlacementSimJob { id: 4, demand: 1, epochs: 1, epoch_secs: 2.0, arrive: 1.0 },
+        ];
+        let shards = vec![vec![cpu_node(0, 2)], vec![cpu_node(0, 2)]];
+        let run = |margin: f64| {
+            simulate_placement_cfg(
+                &PlacementSimConfig {
+                    strategy: PlacementStrategy::CostBased,
+                    policy: SchedulePolicy::Fifo,
+                    mode: RebalanceMode::Elastic,
+                    restage_secs: 2.0,
+                    horizon: 100_000.0,
+                    rebalance_margin_secs: margin,
+                },
+                &jobs,
+                &shards,
+            )
+        };
+        // margin 0 (historical rule): the marginal move fires
+        let strict = run(0.0);
+        assert_eq!(strict.unfinished, 0, "{strict:?}");
+        assert_eq!(strict.queued_migrations, 1, "{strict:?}");
+        assert_eq!(strict.elastic_migrations, 0, "{strict:?}");
+        // with the dead band: zero migrations of either kind — no
+        // ping-pong — and the batch still completes
+        let damped = run(0.5);
+        assert_eq!(damped.unfinished, 0, "{damped:?}");
+        assert_eq!(
+            damped.queued_migrations + damped.elastic_migrations,
+            0,
+            "hysteresis must suppress the marginal move: {damped:?}"
+        );
+        assert_eq!(damped.lost_progress_secs, 0.0);
     }
 
     /// With nothing overloaded, elastic mode changes nothing: no

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, Result};
 
@@ -150,12 +150,13 @@ impl Registry {
 /// This replaces the seed's `&mut Registry` borrow threading: the
 /// optimiser, figure harness, and deployment service all hold cheap clones
 /// of one handle, so many requests can be planned and built concurrently.
-/// Reads take the registry lock briefly; builds run *outside* the lock on
-/// the [`BuildPool`], which deduplicates identical in-flight builds by
-/// definition digest.
+/// Reads share an RwLock read guard (concurrent planners never serialise
+/// on lookups); only `mark_built` takes the write side. Builds run
+/// *outside* the lock on the [`BuildPool`], which deduplicates identical
+/// in-flight builds by definition digest.
 #[derive(Clone)]
 pub struct RegistryHandle {
-    inner: Arc<Mutex<Registry>>,
+    inner: Arc<RwLock<Registry>>,
     pool: Arc<BuildPool>,
 }
 
@@ -181,7 +182,7 @@ impl RegistryHandle {
     ) -> RegistryHandle {
         let store = store.as_ref().to_path_buf();
         RegistryHandle {
-            inner: Arc::new(Mutex::new(Registry::open(&store))),
+            inner: Arc::new(RwLock::new(Registry::open(&store))),
             pool: Arc::new(BuildPool::with_capacity(
                 &store,
                 artifacts.clone(),
@@ -191,9 +192,9 @@ impl RegistryHandle {
         }
     }
 
-    /// Run `f` with the registry locked (read helper).
+    /// Run `f` with the registry read-locked (read helper).
     pub fn with<R>(&self, f: impl FnOnce(&Registry) -> R) -> R {
-        f(&self.inner.lock().unwrap())
+        f(&self.inner.read().unwrap())
     }
 
     pub fn len(&self) -> usize {
@@ -226,7 +227,7 @@ impl RegistryHandle {
     /// itself runs with the registry lock *released*.
     pub fn ensure_built(&self, tag: &str) -> Result<Image> {
         let (profile, prebuilt) = {
-            let reg = self.inner.lock().unwrap();
+            let reg = self.inner.read().unwrap();
             let entry = reg.get(tag)?;
             let prebuilt = entry.bundle.as_ref().and_then(|d| Image::load(d).ok());
             (entry.profile.clone(), prebuilt)
@@ -238,7 +239,7 @@ impl RegistryHandle {
         let def = definition_for(&profile);
         let (name, tagpart) = split_ref(tag);
         let image = self.pool.build_cached(&name, &tagpart, &def)?;
-        self.inner.lock().unwrap().mark_built(tag, &image);
+        self.inner.write().unwrap().mark_built(tag, &image);
         Ok(image)
     }
 

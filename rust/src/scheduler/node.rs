@@ -30,7 +30,7 @@ use crate::frameworks::Target;
 use crate::runtime::Engine;
 use crate::scheduler::job::Payload;
 use crate::trainer::Checkpoint;
-use crate::util::sync::{CancelToken, Signal};
+use crate::util::sync::{CancelToken, EventBus, SchedEvent, Signal};
 use crate::util::timer::Stopwatch;
 
 /// Node identity + class + capacity.
@@ -80,12 +80,22 @@ pub struct NodeResult {
 pub struct ResultSink {
     tx: Sender<NodeResult>,
     signal: Option<Arc<Signal>>,
+    /// Typed event hook: (this node pool's shard id, the cluster's event
+    /// bus). When set, every result also publishes a [`SchedEvent`] —
+    /// `CheckpointReady` for a preemption report, `Complete` otherwise —
+    /// so event-driven consumers learn WHICH shard to poll instead of
+    /// sweeping all of them.
+    events: Option<(usize, Arc<EventBus<SchedEvent>>)>,
 }
 
 impl ResultSink {
     /// A plain sink with no wakeup signal (unit tests, standalone servers).
     pub fn new(tx: Sender<NodeResult>) -> ResultSink {
-        ResultSink { tx, signal: None }
+        ResultSink {
+            tx,
+            signal: None,
+            events: None,
+        }
     }
 
     /// A sink that pings `signal` after every result lands.
@@ -93,13 +103,39 @@ impl ResultSink {
         ResultSink {
             tx,
             signal: Some(signal),
+            events: None,
         }
     }
 
+    /// Attach a typed event bus: results from this sink publish
+    /// shard-scoped completion/checkpoint events.
+    pub fn with_events(mut self, shard: usize, bus: Arc<EventBus<SchedEvent>>) -> ResultSink {
+        self.events = Some((shard, bus));
+        self
+    }
+
     /// Deliver a result (best-effort: a dropped receiver means the server
-    /// is gone and there is nobody left to care) and wake sleepers.
+    /// is gone and there is nobody left to care) and wake sleepers. The
+    /// result is enqueued BEFORE the event publishes, so a consumer woken
+    /// by the event always finds the result ready to absorb.
     pub fn send(&self, res: NodeResult) {
+        let event = self.events.as_ref().map(|(shard, bus)| {
+            let ev = match &res.outcome {
+                Ok(RunOutcome::Preempted(_)) => SchedEvent::CheckpointReady {
+                    shard: *shard,
+                    job: res.job_id,
+                },
+                _ => SchedEvent::Complete {
+                    shard: *shard,
+                    job: res.job_id,
+                },
+            };
+            (Arc::clone(bus), ev)
+        });
         let _ = self.tx.send(res);
+        if let Some((bus, ev)) = event {
+            bus.publish(ev);
+        }
         if let Some(s) = &self.signal {
             s.notify();
         }

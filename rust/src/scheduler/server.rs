@@ -32,7 +32,7 @@ use crate::scheduler::job::JobScript;
 use crate::scheduler::node::{NodeHandle, NodeResult, NodeSpec, NodeTask, ResultSink};
 use crate::scheduler::policy::{plan_dispatch, NodeState, QueuedJob, RunningJob, SchedulePolicy};
 use crate::trainer::Checkpoint;
-use crate::util::sync::{CancelToken, Signal};
+use crate::util::sync::{CancelToken, EventBus, SchedEvent, Signal};
 
 /// Completed work is not discarded for overshooting its walltime by mere
 /// absorption/channel latency: the node watchdog already kills genuinely
@@ -141,6 +141,11 @@ pub struct TorqueServer {
     /// dropped on absorption): [`Self::preempt`] trips one to withdraw a
     /// running job at its next epoch boundary.
     preempt_tokens: BTreeMap<JobId, CancelToken>,
+    /// Typed event hook (this server's shard id, the cluster's bus): when
+    /// set, every dispatch publishes `SchedEvent::Dispatch` and the nodes'
+    /// result sink publishes `Complete`/`CheckpointReady`, so an
+    /// event-driven consumer polls only the shards that changed.
+    events: Option<(usize, Arc<EventBus<SchedEvent>>)>,
 }
 
 impl TorqueServer {
@@ -175,11 +180,27 @@ impl TorqueServer {
     /// what the cluster scheduler and the deployment service's
     /// condvar-based `await_batch` build on.
     pub fn boot_nodes(specs: Vec<NodeSpec>, signal: Option<Arc<Signal>>) -> TorqueServer {
+        TorqueServer::boot_nodes_on_bus(specs, signal, None)
+    }
+
+    /// [`Self::boot_nodes`] wired to a cluster event bus: this shard's
+    /// dispatches and its nodes' results publish typed [`SchedEvent`]s
+    /// naming shard `shard`, which is what lets the cluster's event-driven
+    /// poll touch only the shards that actually changed. The bus must be
+    /// attached at boot — nodes capture their result sink when they spawn.
+    pub fn boot_nodes_on_bus(
+        specs: Vec<NodeSpec>,
+        signal: Option<Arc<Signal>>,
+        events: Option<(usize, Arc<EventBus<SchedEvent>>)>,
+    ) -> TorqueServer {
         let (results_tx, results_rx) = channel();
-        let results_sink = match signal {
+        let mut results_sink = match signal {
             Some(s) => ResultSink::with_signal(results_tx, s),
             None => ResultSink::new(results_tx),
         };
+        if let Some((shard, bus)) = &events {
+            results_sink = results_sink.with_events(*shard, Arc::clone(bus));
+        }
         let nodes = specs
             .into_iter()
             .map(|spec| NodeHandle::boot(spec, results_sink.clone()))
@@ -199,6 +220,7 @@ impl TorqueServer {
             policy: SchedulePolicy::Fifo,
             data_stager: None,
             preempt_tokens: BTreeMap::new(),
+            events,
         }
     }
 
@@ -489,6 +511,12 @@ impl TorqueServer {
         self.running.insert(id, (node_id, demand));
         self.queue.retain(|&q| q != id);
         self.peak_running = self.peak_running.max(self.running.len());
+        if let Some((shard, bus)) = &self.events {
+            bus.publish(SchedEvent::Dispatch {
+                shard: *shard,
+                job: id,
+            });
+        }
         Ok(())
     }
 

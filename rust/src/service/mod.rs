@@ -26,9 +26,13 @@
 //! with `shards > 1` — a heterogeneous multi-shard cluster where every
 //! dispatch is routed by the pluggable [`ShardRouter`], bundles are staged
 //! into shard-local stores by the image distributor, and still-queued work
-//! is rebalanced off backlogged shards. Batch completion is signalled by a
-//! condvar ([`Signal`]) pinged by every node result and planner report, so
-//! `await_batch` wakes on the event instead of a poll tick.
+//! is rebalanced off backlogged shards. Batch completion is event-driven
+//! end to end: scheduler events (submit/dispatch/complete/preempt/
+//! checkpoint-ready) flow over the cluster's typed
+//! [`EventBus`](crate::util::sync::EventBus), every publish pings the
+//! shared condvar ([`Signal`]), and `await_batch` drains the bus on each
+//! wake to poll only the shards the events name — the full-cluster sweep
+//! survives only as a timeout/overflow backstop.
 //!
 //! The performance model is closed-loop: predictions ride into the
 //! scheduler on each job script (driving `sjf` packing and `reservation`
@@ -38,7 +42,7 @@
 
 use std::collections::HashSet;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -92,6 +96,12 @@ pub struct ServiceConfig {
     /// repeatable); unlisted shards run `policy`. Out-of-range indices
     /// are ignored.
     pub shard_policies: Vec<(usize, SchedulePolicy)>,
+    /// Migration hysteresis (`--rebalance-margin-secs`): a migration must
+    /// improve the destination's placement score by at least this many
+    /// seconds over the origin's. 0.0 keeps the historical strict
+    /// "any improvement" rule; larger margins damp ping-pong migrations
+    /// under near-symmetric load.
+    pub rebalance_margin_secs: f64,
 }
 
 impl Default for ServiceConfig {
@@ -108,6 +118,7 @@ impl Default for ServiceConfig {
             store_cap_mb: None,
             rebalance: RebalanceMode::Queued,
             shard_policies: Vec::new(),
+            rebalance_margin_secs: 0.0,
         }
     }
 }
@@ -505,8 +516,10 @@ fn truncate(s: &str, n: usize) -> String {
 pub struct DeploymentService {
     registry: RegistryHandle,
     /// Shared mutable model: planners snapshot it per request; completed
-    /// jobs feed measured wall times back into it (online refit).
-    model: Arc<Mutex<PerfModel>>,
+    /// jobs feed measured wall times back into it (online refit). An
+    /// RwLock so concurrent planner snapshots never serialise on each
+    /// other — only the refit takes the write side.
+    model: Arc<RwLock<PerfModel>>,
     manifest: Manifest,
     /// Dataset catalog `dataset:` blocks resolve against (immutable:
     /// ad-hoc DSL declarations carry their own shape).
@@ -567,6 +580,7 @@ impl DeploymentService {
             policy: cfg.policy,
             cache_cap_bytes: cfg.cache_cap_bytes(),
             rebalance: cfg.rebalance,
+            rebalance_margin_secs: cfg.rebalance_margin_secs,
         };
         let store_root = registry.with(|r| r.store().to_path_buf());
         let cluster = Arc::new(ClusterScheduler::new(
@@ -576,7 +590,7 @@ impl DeploymentService {
         ));
         DeploymentService {
             registry,
-            model: Arc::new(Mutex::new(model)),
+            model: Arc::new(RwLock::new(model)),
             manifest,
             catalog: Arc::new(DatasetCatalog::builtin()),
             cluster,
@@ -611,10 +625,10 @@ impl DeploymentService {
         self.cluster.with_job(id, f)
     }
 
-    /// Run `f` with the performance model locked (feedback inspection,
-    /// persisting, tests).
+    /// Run `f` with the performance model read-locked (feedback
+    /// inspection, persisting, tests).
     pub fn with_model<R>(&self, f: impl FnOnce(&PerfModel) -> R) -> R {
-        f(&self.model.lock().unwrap())
+        f(&self.model.read().unwrap())
     }
 
     /// Submit a batch of requests. Returns one handle per request, in
@@ -681,17 +695,27 @@ impl DeploymentService {
     /// `makespan_secs` left at 0 (callers that timed the batch fill it in;
     /// [`Self::run_batch`] does this automatically).
     ///
-    /// Completion latency is event-driven, not poll-quantised: every node
-    /// result and planner report pings the shared [`Signal`], and this
-    /// loop sleeps on it between sweeps. The epoch is read *before* each
-    /// sweep, so an event landing mid-sweep makes the wait return
-    /// immediately — no lost wakeups. The wait's timeout is only a
-    /// rebalancing tick + robustness backstop.
+    /// Completion latency is event-driven, not poll-quantised: every
+    /// scheduler event (submit/dispatch/complete/preempt/checkpoint-ready)
+    /// lands on the cluster's typed [`EventBus`](crate::util::sync::EventBus)
+    /// whose publishes ping the shared [`Signal`], and this loop sleeps on
+    /// it between sweeps. Each wake drains the bus and polls **only the
+    /// shards named in the drained events**; a full-cluster sweep runs
+    /// only when the drain comes back empty (the periodic rebalance tick)
+    /// or the consumer fell behind the bus ring (`missed > 0`). The epoch
+    /// is read *before* each sweep, so an event landing mid-sweep makes
+    /// the wait return immediately — no lost wakeups. The wait's timeout
+    /// is only a rebalancing tick + robustness backstop.
     pub fn await_batch(
         &self,
         handles: &mut [PlanHandle],
         mut on_poll: impl FnMut(&ClusterScheduler),
     ) -> BatchReport {
+        let bus = self.cluster.bus();
+        // cursor 0: the first drain replays every event since boot, so
+        // submits that landed before this call still get a targeted pass
+        // (or overflow into the full-sweep backstop)
+        let mut cursor = 0u64;
         loop {
             let seen = self.signal.epoch();
             let mut all_planned = true;
@@ -708,8 +732,21 @@ impl DeploymentService {
             // terminal jobs release their store-GC image pins: their
             // bundles become ordinary LRU prey again
             self.release_finished_image_pins(handles);
-            // absorb completions on every shard + rebalance queued work
-            let _ = self.cluster.poll();
+            // absorb completions: a targeted pass over the shards named in
+            // drained events, falling back to the full sweep when there is
+            // nothing to aim at (timeout tick) or events were lost to the
+            // ring cap
+            let drained = bus.drain_since(cursor);
+            cursor = drained.seen;
+            if drained.missed > 0 || drained.events.is_empty() {
+                let _ = self.cluster.poll();
+            } else {
+                let mut shards: Vec<usize> =
+                    drained.events.iter().map(|e| e.shard()).collect();
+                shards.sort_unstable();
+                shards.dedup();
+                let _ = self.cluster.poll_shards(&shards);
+            }
             on_poll(&self.cluster);
             let pending_jobs = handles
                 .iter()
@@ -810,7 +847,7 @@ impl DeploymentService {
         if fresh.is_empty() && waits.is_empty() {
             return;
         }
-        let mut model = self.model.lock().unwrap();
+        let mut model = self.model.write().unwrap();
         for w in waits {
             model.observe_wait(w);
         }
@@ -841,7 +878,7 @@ impl DeploymentService {
         // model guard dropped before any shard lock: no code path in this
         // service holds both at once (see feed_back_measurements)
         let model_r2 = {
-            let model = self.model.lock().unwrap();
+            let model = self.model.read().unwrap();
             model.is_trained().then_some(model.r2)
         };
         let mut jobs = Vec::with_capacity(handles.len());
@@ -1018,7 +1055,7 @@ impl DeploymentService {
 #[allow(clippy::too_many_arguments)] // the service's full planning context
 fn plan_and_dispatch(
     registry: &RegistryHandle,
-    model: &Mutex<PerfModel>,
+    model: &RwLock<PerfModel>,
     manifest: &Manifest,
     catalog: &DatasetCatalog,
     cluster: &Arc<ClusterScheduler>,
@@ -1028,8 +1065,9 @@ fn plan_and_dispatch(
 ) -> PlanOutcome {
     // snapshot the model per request: planning (which may block on a
     // container build) runs lock-free, and later requests in a batch see
-    // coefficients refreshed by earlier completions' feedback
-    let model = model.lock().unwrap().clone();
+    // coefficients refreshed by earlier completions' feedback. The read
+    // lock means a whole batch of planners can snapshot concurrently.
+    let model = model.read().unwrap().clone();
     let plan = match plan_deployment(registry, &model, manifest, catalog, &req.dsl, cfg) {
         Ok(p) => p,
         Err(e) => {

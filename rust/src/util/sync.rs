@@ -6,10 +6,18 @@
 //!   looked. This is what replaced the deployment service's fixed-interval
 //!   poll loop: batch-completion latency now tracks the event, not the
 //!   poll quantum.
+//! * [`EventBus`] — the typed generalisation of [`Signal`]: a bounded,
+//!   sequence-numbered ring of events with per-consumer cursors. Where the
+//!   signal says "something happened", the bus says *what* happened and
+//!   *which shard* it touched ([`SchedEvent`]), so consumers run targeted
+//!   scheduling passes instead of full sweeps. Multi-consumer fan-out is
+//!   exactly-once per cursor; a consumer that lags past the ring capacity
+//!   sees a non-zero `missed` count and falls back to a full sweep.
 //! * [`CancelToken`] — a shared kill flag threaded from the node watchdog
 //!   into the training step loop, so a walltime-killed payload actually
 //!   stops instead of burning CPU detached.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -57,6 +65,192 @@ impl Signal {
             .unwrap();
         e = guard;
         *e
+    }
+}
+
+/// One scheduling event on the cluster bus. Every variant names the shard
+/// it touched, so consumers can run a scheduling pass over exactly that
+/// shard instead of sweeping the whole cluster. Job ids are the raw
+/// numeric ids (cluster-global where published by the cluster, per-shard
+/// where published by a node sink — consumers only use them for logging
+/// and dedup, never for cross-layer lookups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// A job was routed and queued on `shard`.
+    Submit { shard: usize, job: u64 },
+    /// A job was (re)dispatched onto `shard` — a migration re-queue or a
+    /// checkpoint restart landing on its destination.
+    Dispatch { shard: usize, job: u64 },
+    /// A node on `shard` reported the job's terminal result.
+    Complete { shard: usize, job: u64 },
+    /// The rebalancer asked a running job on `shard` to checkpoint.
+    Preempt { shard: usize, job: u64 },
+    /// A node on `shard` delivered a checkpoint (preempted outcome): the
+    /// job is ready to restart elsewhere.
+    CheckpointReady { shard: usize, job: u64 },
+}
+
+impl SchedEvent {
+    /// The shard this event touched (every variant names exactly one).
+    pub fn shard(&self) -> usize {
+        match self {
+            SchedEvent::Submit { shard, .. }
+            | SchedEvent::Dispatch { shard, .. }
+            | SchedEvent::Complete { shard, .. }
+            | SchedEvent::Preempt { shard, .. }
+            | SchedEvent::CheckpointReady { shard, .. } => *shard,
+        }
+    }
+
+    pub fn job(&self) -> u64 {
+        match self {
+            SchedEvent::Submit { job, .. }
+            | SchedEvent::Dispatch { job, .. }
+            | SchedEvent::Complete { job, .. }
+            | SchedEvent::Preempt { job, .. }
+            | SchedEvent::CheckpointReady { job, .. } => *job,
+        }
+    }
+}
+
+/// What a consumer gets back from [`EventBus::drain_since`]: the events
+/// published after its cursor, the new cursor, and how many events (if
+/// any) were evicted from the ring before it drained them.
+#[derive(Debug, Clone)]
+pub struct Drained<E> {
+    /// New cursor: pass this to the next `drain_since`/`wait_events`.
+    pub seen: u64,
+    /// Every event with sequence > the old cursor still in the ring,
+    /// oldest first.
+    pub events: Vec<E>,
+    /// Events published after the old cursor but already evicted (the
+    /// consumer lagged past the ring capacity). Non-zero means the event
+    /// stream has a gap: fall back to a full sweep.
+    pub missed: u64,
+}
+
+struct BusInner<E> {
+    /// Total events ever published; event *k* (1-based) has sequence *k*.
+    seq: u64,
+    /// The most recent events, oldest first, as `(sequence, event)`.
+    buf: VecDeque<(u64, E)>,
+}
+
+/// The typed generalisation of [`Signal`]: a bounded ring of
+/// sequence-numbered events plus a condvar. Producers [`EventBus::publish`];
+/// each consumer keeps its own cursor (the last sequence it has seen) and
+/// drains everything newer — multi-consumer fan-out is exactly-once per
+/// cursor, with the same no-lost-wakeup contract as `Signal`: read the
+/// cursor BEFORE inspecting shared state, then `wait_events(cursor, ..)`.
+///
+/// An optional wake [`Signal`] is notified on every publish, so legacy
+/// sleepers (the deployment service's condvar loop) wake on bus traffic
+/// without waiting on two primitives.
+pub struct EventBus<E> {
+    inner: Mutex<BusInner<E>>,
+    cv: Condvar,
+    cap: usize,
+    wake: Option<Arc<Signal>>,
+}
+
+impl<E: Clone> Default for EventBus<E> {
+    fn default() -> EventBus<E> {
+        EventBus::new()
+    }
+}
+
+impl<E: Clone> EventBus<E> {
+    /// A bus with the default ring capacity (large enough that a consumer
+    /// draining once per scheduling pass never lags in practice).
+    pub fn new() -> EventBus<E> {
+        EventBus::with_capacity(4096)
+    }
+
+    pub fn with_capacity(cap: usize) -> EventBus<E> {
+        EventBus {
+            inner: Mutex::new(BusInner {
+                seq: 0,
+                buf: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+            wake: None,
+        }
+    }
+
+    /// Also notify `signal` on every publish (bridges bus traffic into a
+    /// legacy [`Signal`] sleep loop).
+    pub fn with_wake(mut self, signal: Arc<Signal>) -> EventBus<E> {
+        self.wake = Some(signal);
+        self
+    }
+
+    /// Sequence of the latest published event (0 = none yet). Read this
+    /// BEFORE checking the state the events describe, then pass it to
+    /// [`Self::wait_events`] — same lost-wakeup-free contract as
+    /// [`Signal::epoch`].
+    pub fn seq(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Publish an event: assign it the next sequence, evict the oldest
+    /// entry past capacity, wake every waiter. Returns the sequence.
+    pub fn publish(&self, ev: E) -> u64 {
+        let seq = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.seq += 1;
+            let seq = inner.seq;
+            inner.buf.push_back((seq, ev));
+            while inner.buf.len() > self.cap {
+                inner.buf.pop_front();
+            }
+            self.cv.notify_all();
+            seq
+        };
+        if let Some(s) = &self.wake {
+            s.notify();
+        }
+        seq
+    }
+
+    fn drain_locked(inner: &BusInner<E>, seen: u64) -> Drained<E> {
+        // oldest sequence still in the ring (inner.seq + 1 when empty)
+        let oldest = inner.seq - inner.buf.len() as u64 + 1;
+        let missed = (oldest.saturating_sub(1)).saturating_sub(seen);
+        let events = inner
+            .buf
+            .iter()
+            .filter(|(s, _)| *s > seen)
+            .map(|(_, e)| e.clone())
+            .collect();
+        Drained {
+            seen: inner.seq,
+            events,
+            missed,
+        }
+    }
+
+    /// Every event published since `seen` (exactly-once per cursor: the
+    /// returned `seen` advances to the latest sequence). Never blocks.
+    pub fn drain_since(&self, seen: u64) -> Drained<E> {
+        let inner = self.inner.lock().unwrap();
+        Self::drain_locked(&inner, seen)
+    }
+
+    /// Block until an event newer than `seen` is published or `timeout`
+    /// elapses, then drain. On timeout the result carries `seen`
+    /// unchanged and no events — the latest generation the consumer has
+    /// observed, exactly like [`Signal::wait_past`].
+    pub fn wait_events(&self, seen: u64, timeout: Duration) -> Drained<E> {
+        let inner = self.inner.lock().unwrap();
+        if inner.seq > seen {
+            return Self::drain_locked(&inner, seen);
+        }
+        let (guard, _res) = self
+            .cv
+            .wait_timeout_while(inner, timeout, |i| i.seq <= seen)
+            .unwrap();
+        Self::drain_locked(&guard, seen)
     }
 }
 
@@ -130,5 +324,129 @@ mod tests {
         let seen = s.epoch();
         let woke = s.wait_past(seen, Duration::from_millis(10));
         assert_eq!(woke, seen);
+    }
+
+    fn ev(shard: usize, job: u64) -> SchedEvent {
+        SchedEvent::Submit { shard, job }
+    }
+
+    #[test]
+    fn sched_event_names_its_shard_and_job() {
+        let events = [
+            SchedEvent::Submit { shard: 3, job: 7 },
+            SchedEvent::Dispatch { shard: 3, job: 7 },
+            SchedEvent::Complete { shard: 3, job: 7 },
+            SchedEvent::Preempt { shard: 3, job: 7 },
+            SchedEvent::CheckpointReady { shard: 3, job: 7 },
+        ];
+        for e in events {
+            assert_eq!(e.shard(), 3, "{e:?}");
+            assert_eq!(e.job(), 7, "{e:?}");
+        }
+    }
+
+    /// Satellite: timeout returns the latest seen generation — the cursor
+    /// comes back unchanged with no events, exactly like `Signal`.
+    #[test]
+    fn bus_times_out_with_latest_seen_generation() {
+        let bus: EventBus<SchedEvent> = EventBus::new();
+        bus.publish(ev(0, 1));
+        let d = bus.drain_since(0);
+        assert_eq!(d.seen, 1);
+        assert_eq!(d.events.len(), 1);
+        // nothing new: the wait times out and hands the cursor back
+        let d2 = bus.wait_events(d.seen, Duration::from_millis(10));
+        assert_eq!(d2.seen, d.seen);
+        assert!(d2.events.is_empty());
+        assert_eq!(d2.missed, 0);
+    }
+
+    /// Satellite: no lost wakeup when publish races the wait — an event
+    /// landing between the cursor read and the wait returns immediately.
+    #[test]
+    fn bus_publish_racing_wait_is_not_lost() {
+        let bus: EventBus<SchedEvent> = EventBus::new();
+        let seen = bus.seq();
+        bus.publish(ev(2, 9)); // lands after the cursor read, before the wait
+        let d = bus.wait_events(seen, Duration::from_secs(30));
+        assert_eq!(d.events, vec![ev(2, 9)]);
+        assert_eq!(d.seen, 1);
+
+        // and the genuinely-cross-thread case
+        let bus = Arc::new(EventBus::<SchedEvent>::new());
+        let seen = bus.seq();
+        let b2 = Arc::clone(&bus);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            b2.publish(ev(5, 11));
+        });
+        let d = bus.wait_events(seen, Duration::from_secs(30));
+        assert_eq!(d.events, vec![ev(5, 11)]);
+        t.join().unwrap();
+    }
+
+    /// Satellite: multi-consumer fan-out delivers every event exactly once
+    /// per consumer — three consumers with independent cursors each see
+    /// the full stream, in order, no duplicates, no gaps.
+    #[test]
+    fn bus_multi_consumer_fanout_is_exactly_once() {
+        const N: u64 = 200;
+        let bus = Arc::new(EventBus::<SchedEvent>::with_capacity(N as usize));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let bus = Arc::clone(&bus);
+                std::thread::spawn(move || {
+                    let mut cursor = 0u64;
+                    let mut got: Vec<SchedEvent> = Vec::new();
+                    while (got.len() as u64) < N {
+                        let d = bus.wait_events(cursor, Duration::from_secs(30));
+                        assert_eq!(d.missed, 0, "consumer lagged past capacity");
+                        cursor = d.seen;
+                        got.extend(d.events);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for j in 0..N {
+            bus.publish(ev((j % 7) as usize, j));
+        }
+        for c in consumers {
+            let got = c.join().unwrap();
+            assert_eq!(got.len() as u64, N);
+            for (j, e) in got.iter().enumerate() {
+                assert_eq!(*e, ev(j % 7, j as u64), "event {j} out of order");
+            }
+        }
+    }
+
+    /// A consumer that lags past the ring capacity sees the gap reported
+    /// in `missed` instead of silently losing events.
+    #[test]
+    fn bus_overflow_reports_missed_events() {
+        let bus: EventBus<SchedEvent> = EventBus::with_capacity(4);
+        for j in 0..10 {
+            bus.publish(ev(0, j));
+        }
+        let d = bus.drain_since(0);
+        assert_eq!(d.missed, 6);
+        assert_eq!(d.events.len(), 4);
+        assert_eq!(d.events[0], ev(0, 6));
+        assert_eq!(d.seen, 10);
+        // a caught-up consumer sees no gap
+        let d2 = bus.drain_since(d.seen);
+        assert_eq!(d2.missed, 0);
+        assert!(d2.events.is_empty());
+    }
+
+    /// The bridge into legacy sleep loops: every publish pings the wake
+    /// signal, so a `Signal` sleeper wakes on bus traffic.
+    #[test]
+    fn bus_publish_pings_the_wake_signal() {
+        let signal = Arc::new(Signal::new());
+        let bus = EventBus::<SchedEvent>::new().with_wake(Arc::clone(&signal));
+        let seen = signal.epoch();
+        bus.publish(ev(1, 1));
+        assert!(signal.wait_past(seen, Duration::from_secs(30)) > seen);
     }
 }
