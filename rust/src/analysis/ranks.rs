@@ -1,0 +1,165 @@
+//! The declared lock hierarchy as the analyzer sees it: every static
+//! lock site in the tree is assigned a [`LockRank`] by matching its
+//! receiver (the expression the lock was taken on) against this table,
+//! and nested acquisitions must strictly ascend the hierarchy
+//! (`registry < perfmodel < cluster < shard-server < stager <
+//! counters`). The runtime twin lives in `util::sync::rank_acquire`.
+//!
+//! The analyzer also accumulates the **acquires-graph** — an edge for
+//! every observed "rank A held while rank B is taken", recorded even
+//! when the site carries an allowlist escape — and fails the lint when
+//! that graph has a cycle: acyclicity is the actual deadlock-freedom
+//! argument; the per-site ascent rule is what keeps it acyclic by
+//! construction.
+
+use std::collections::BTreeMap;
+
+use crate::util::sync::LockRank;
+
+/// One rank assignment: lock sites in files ending with `file_suffix`
+/// whose receiver's last path segment is `receiver` get `rank`. An empty
+/// suffix matches any file (the generic entries cover the canonical
+/// field names used across the tree); specific entries are listed first
+/// and win.
+pub struct RankEntry {
+    pub file_suffix: &'static str,
+    pub receiver: &'static str,
+    pub rank: LockRank,
+}
+
+/// The rank table. Adding a lock to the tree means adding (or reusing)
+/// a row here — `modak lint` reports any site it cannot rank.
+pub const RANK_TABLE: &[RankEntry] = &[
+    // file-specific rows first (they shadow the generic ones)
+    RankEntry {
+        file_suffix: "registry/mod.rs",
+        receiver: "inner",
+        rank: LockRank::Registry,
+    },
+    RankEntry {
+        file_suffix: "container/builder.rs",
+        receiver: "state",
+        rank: LockRank::Registry,
+    },
+    RankEntry {
+        file_suffix: "util/sync.rs",
+        receiver: "inner",
+        rank: LockRank::Counters,
+    },
+    RankEntry {
+        file_suffix: "util/sync.rs",
+        receiver: "epoch",
+        rank: LockRank::Counters,
+    },
+    // generic rows: the canonical lock field names, rankable anywhere
+    RankEntry {
+        file_suffix: "",
+        receiver: "model",
+        rank: LockRank::PerfModel,
+    },
+    RankEntry {
+        file_suffix: "",
+        receiver: "fed_back",
+        rank: LockRank::PerfModel,
+    },
+    RankEntry {
+        file_suffix: "",
+        receiver: "unpinned",
+        rank: LockRank::PerfModel,
+    },
+    RankEntry {
+        file_suffix: "",
+        receiver: "work_rx",
+        rank: LockRank::PerfModel,
+    },
+    RankEntry {
+        file_suffix: "",
+        receiver: "map",
+        rank: LockRank::Cluster,
+    },
+    RankEntry {
+        file_suffix: "",
+        receiver: "distributor",
+        rank: LockRank::Cluster,
+    },
+    RankEntry {
+        file_suffix: "",
+        receiver: "server",
+        rank: LockRank::ShardServer,
+    },
+    RankEntry {
+        file_suffix: "",
+        receiver: "stager",
+        rank: LockRank::Stager,
+    },
+];
+
+/// The rank of a lock site: `file` is the repo-relative path, `receiver`
+/// the normalized receiver (last path segment, `self`/indexing already
+/// stripped by the rules layer).
+pub fn rank_of(file: &str, receiver: &str) -> Option<LockRank> {
+    RANK_TABLE
+        .iter()
+        .find(|e| file.ends_with(e.file_suffix) && e.receiver == receiver)
+        .map(|e| e.rank)
+}
+
+/// The static acquires-graph: a directed edge `(held, taken)` for every
+/// nested acquisition the scan observed, with the first site that
+/// produced it (for the diagnostic). Edges are recorded even for
+/// allowlisted sites — an escape silences the per-site message, not the
+/// global acyclicity argument.
+#[derive(Default)]
+pub struct AcquiresGraph {
+    edges: BTreeMap<(LockRank, LockRank), (String, usize)>,
+}
+
+impl AcquiresGraph {
+    pub fn record(&mut self, held: LockRank, taken: LockRank, file: &str, line: usize) {
+        self.edges
+            .entry((held, taken))
+            .or_insert_with(|| (file.to_string(), line));
+    }
+
+    /// Every observed edge, ordered.
+    pub fn edges(&self) -> Vec<(LockRank, LockRank)> {
+        self.edges.keys().copied().collect()
+    }
+
+    /// The first site that produced `edge`, if observed.
+    pub fn site(&self, edge: (LockRank, LockRank)) -> Option<(&str, usize)> {
+        self.edges.get(&edge).map(|(f, l)| (f.as_str(), *l))
+    }
+
+    /// A cycle in the acquires-graph, as the ranks along it (first rank
+    /// repeated at the end), or `None` when the graph is a DAG.
+    pub fn find_cycle(&self) -> Option<Vec<LockRank>> {
+        // tiny graph (≤ 6 nodes): plain DFS with an explicit path
+        for &start in LockRank::ALL.iter() {
+            let mut path = vec![start];
+            if let Some(cycle) = self.dfs(start, &mut path) {
+                return Some(cycle);
+            }
+        }
+        None
+    }
+
+    fn dfs(&self, at: LockRank, path: &mut Vec<LockRank>) -> Option<Vec<LockRank>> {
+        for &(from, to) in self.edges.keys() {
+            if from != at {
+                continue;
+            }
+            if let Some(pos) = path.iter().position(|&r| r == to) {
+                let mut cycle: Vec<LockRank> = path[pos..].to_vec();
+                cycle.push(to);
+                return Some(cycle);
+            }
+            path.push(to);
+            if let Some(cycle) = self.dfs(to, path) {
+                return Some(cycle);
+            }
+            path.pop();
+        }
+        None
+    }
+}

@@ -1,0 +1,118 @@
+//! Machine-readable lint output: one diagnostic per line in
+//! `file:line: severity[rule-id]: message (fix: suggestion)` form, plus
+//! a scan summary naming the acquires-graph shape — the format CI greps
+//! and humans read.
+
+use crate::util::sync::LockRank;
+
+/// How bad a finding is. Errors always fail the lint; warnings fail it
+/// only under `--deny-warnings` (the CI configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding, anchored to a file and line.
+#[derive(Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    pub suggestion: String,
+}
+
+impl Diagnostic {
+    /// The one-line machine-readable form.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: {}[{}]: {} (fix: {})",
+            self.file,
+            self.line,
+            self.severity.label(),
+            self.rule,
+            self.message,
+            self.suggestion
+        )
+    }
+}
+
+/// Outcome of a full lint pass.
+#[derive(Default)]
+pub struct Report {
+    /// Findings, ordered by (file, line).
+    pub diags: Vec<Diagnostic>,
+    /// `.rs` files scanned.
+    pub files: usize,
+    /// Lock acquisitions seen (raw or via the recovery helpers).
+    pub lock_sites: usize,
+    /// The observed acquires-graph edges (held → taken).
+    pub edges: Vec<(LockRank, LockRank)>,
+    /// A cycle in the acquires-graph, if one exists.
+    pub cycle: Option<Vec<LockRank>>,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Warning)
+            .count()
+    }
+
+    /// Does `rule` appear among the findings?
+    pub fn flags(&self, rule: &str) -> bool {
+        self.diags.iter().any(|d| d.rule == rule)
+    }
+
+    /// Full human/CI output: diagnostics, the acquires-graph, a summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        if !self.edges.is_empty() {
+            out.push_str("acquires-graph (held -> taken):\n");
+            for (from, to) in &self.edges {
+                out.push_str(&format!("  {} -> {}\n", from.name(), to.name()));
+            }
+        }
+        match &self.cycle {
+            Some(cycle) => {
+                let path: Vec<&str> = cycle.iter().map(|r| r.name()).collect();
+                out.push_str(&format!(
+                    "acquires-graph CYCLE: {} (deadlock possible)\n",
+                    path.join(" -> ")
+                ));
+            }
+            None => out.push_str("acquires-graph: cycle-free\n"),
+        }
+        out.push_str(&format!(
+            "modak lint: {} file(s), {} lock site(s), {} error(s), {} warning(s)\n",
+            self.files,
+            self.lock_sites,
+            self.errors(),
+            self.warnings()
+        ));
+        out
+    }
+}

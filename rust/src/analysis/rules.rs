@@ -1,0 +1,437 @@
+//! The five concurrency rules, checked per file over the stripped line
+//! model. Each diagnostic is machine-readable (file:line, rule id,
+//! suggestion) and every rule honours the `modak-lint: allow(<rule>)`
+//! comment escape on (or immediately above) the offending line.
+//!
+//! * `guard-across-publish` — no `Mutex`/`RwLock` guard may be live
+//!   across an `EventBus::publish`, a `Signal` wake, or a `ResultSink`
+//!   enqueue. Publishing under a guard re-creates the contention the
+//!   event-driven core removed, and a consumer woken by the event can
+//!   block on the very lock the publisher still holds.
+//! * `lock-rank` — every lock site gets a rank from `analysis/ranks.rs`
+//!   (`registry < perfmodel < cluster < shard-server < stager <
+//!   counters`); nested acquisitions must strictly ascend. The observed
+//!   acquires-graph is accumulated for the global cycle check.
+//! * `publish-after-mutate` — a `SchedEvent` publish must lexically
+//!   follow a state mutation in its enclosing function: events announce
+//!   state, so publishing before mutating lets a consumer read the
+//!   pre-mutation state (warning severity — a lexical heuristic).
+//! * `no-mutexed-counters` — the hit/miss/bytes counters in
+//!   `cluster/distributor.rs` and `data/stage.rs` stay relaxed atomics;
+//!   reintroducing `Mutex<`/`RwLock<` there reintroduces the reporting
+//!   contention PR 6 removed.
+//! * `poison-policy` — no bare `.lock().unwrap()` (or read/write) outside
+//!   `util/sync.rs`; call sites go through the poison-recovery helpers so
+//!   one panicked worker cannot wedge the service.
+
+use super::ranks::{rank_of, AcquiresGraph};
+use super::report::{Diagnostic, Severity};
+use super::scanner::{model_source, SourceModel};
+use crate::util::sync::LockRank;
+
+pub const GUARD_ACROSS_PUBLISH: &str = "guard-across-publish";
+pub const LOCK_RANK: &str = "lock-rank";
+pub const PUBLISH_AFTER_MUTATE: &str = "publish-after-mutate";
+pub const NO_MUTEXED_COUNTERS: &str = "no-mutexed-counters";
+pub const POISON_POLICY: &str = "poison-policy";
+
+/// Rule id → one-line summary (the CLI listing and README table source).
+pub const RULES: [(&str, &str); 5] = [
+    (
+        GUARD_ACROSS_PUBLISH,
+        "no lock guard live across EventBus::publish / Signal wake / ResultSink enqueue",
+    ),
+    (
+        LOCK_RANK,
+        "nested lock acquisitions must strictly ascend the declared rank hierarchy",
+    ),
+    (
+        PUBLISH_AFTER_MUTATE,
+        "SchedEvent publishes must lexically follow the state mutation they announce",
+    ),
+    (
+        NO_MUTEXED_COUNTERS,
+        "staging counters stay relaxed atomics (no Mutex/RwLock in the counter files)",
+    ),
+    (
+        POISON_POLICY,
+        "no bare .lock().unwrap()/.read().unwrap()/.write().unwrap() outside util/sync.rs",
+    ),
+];
+
+/// Raw acquisition pattern → the recovery helper that replaces it.
+const RAW_PATTERNS: [(&str, &str); 3] = [
+    (".lock().unwrap()", "util::sync::lock_or_recover"),
+    (".read().unwrap()", "util::sync::read_or_recover"),
+    (".write().unwrap()", "util::sync::write_or_recover"),
+];
+
+/// Sanctioned acquisition forms (the helpers themselves).
+const HELPER_PATTERNS: [&str; 3] = [
+    "lock_or_recover(",
+    "read_or_recover(",
+    "write_or_recover(",
+];
+
+/// Lines that publish an event, wake a signal, or enqueue a result.
+const PUBLISH_TRIGGERS: [&str; 3] = [".publish(", ".notify()", "sink.send("];
+
+/// A lock guard currently live at some point of the scan.
+struct Guard {
+    name: String,
+    rank: Option<LockRank>,
+    /// Brace depth of the line that declared it (dies when depth drops
+    /// below this).
+    depth: usize,
+    line: usize,
+}
+
+/// One acquisition found on a line.
+struct Acq {
+    /// Normalized receiver (last path segment).
+    receiver: String,
+    /// `Some(name)` when the statement binds the guard to a local that
+    /// outlives the line (`let g = <acquire>;`), `None` for temporaries.
+    binding: Option<String>,
+}
+
+/// Check one file; returns its diagnostics and the number of lock sites
+/// seen (acquires-graph edges accumulate into `graph` across files).
+pub fn check_file(
+    file: &str,
+    text: &str,
+    graph: &mut AcquiresGraph,
+) -> (Vec<Diagnostic>, usize) {
+    let model = model_source(text);
+    let poison_exempt = file.ends_with("util/sync.rs");
+    let counters_file =
+        file.ends_with("cluster/distributor.rs") || file.ends_with("data/stage.rs");
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut sites = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+
+    for (idx, line) in model.lines.iter().enumerate() {
+        let n = idx + 1;
+        let code = line.code.as_str();
+        // scope exit and explicit drop() both end a guard's liveness
+        guards.retain(|g| g.depth <= line.depth_before);
+        for name in dropped_names(code) {
+            guards.retain(|g| g.name != name);
+        }
+        let allowed =
+            |rule: &str| line.allows.iter().any(|a| a == rule || a == "all");
+
+        // rule: no-mutexed-counters
+        if counters_file
+            && (code.contains("Mutex<") || code.contains("RwLock<"))
+            && !allowed(NO_MUTEXED_COUNTERS)
+        {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: n,
+                rule: NO_MUTEXED_COUNTERS,
+                severity: Severity::Error,
+                message: "lock type in a counters file — these counters are \
+                          relaxed atomics so reporting never contends with transfers"
+                    .to_string(),
+                suggestion: "use the existing atomic counter blocks \
+                             (StagingCounters / DataStageCounters)"
+                    .to_string(),
+            });
+        }
+
+        // rule: poison-policy
+        if !poison_exempt {
+            for (pat, helper) in RAW_PATTERNS {
+                if code.contains(pat) && !allowed(POISON_POLICY) {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: n,
+                        rule: POISON_POLICY,
+                        severity: Severity::Error,
+                        message: format!(
+                            "bare `{pat}` — a panicked holder poisons the lock and \
+                             this unwrap cascades the panic into every later caller"
+                        ),
+                        suggestion: format!("acquire through `{helper}`"),
+                    });
+                }
+            }
+        }
+
+        // acquisitions: rank assignment, ascent check, acquires-graph
+        let acq = find_acquisition(code);
+        if let Some(acq) = &acq {
+            sites += 1;
+            match rank_of(file, &acq.receiver) {
+                None => {
+                    if !allowed(LOCK_RANK) {
+                        diags.push(Diagnostic {
+                            file: file.to_string(),
+                            line: n,
+                            rule: LOCK_RANK,
+                            severity: Severity::Error,
+                            message: format!(
+                                "unranked lock site (receiver `{}`) — every lock \
+                                 belongs to a declared rank family",
+                                acq.receiver
+                            ),
+                            suggestion: "add the receiver to the table in \
+                                         analysis/ranks.rs"
+                                .to_string(),
+                        });
+                    }
+                }
+                Some(taken) => {
+                    for g in &guards {
+                        let Some(held) = g.rank else { continue };
+                        // the edge is recorded even when allowlisted: the
+                        // escape silences the message, not the cycle check
+                        graph.record(held, taken, file, n);
+                        if taken <= held && !allowed(LOCK_RANK) {
+                            diags.push(Diagnostic {
+                                file: file.to_string(),
+                                line: n,
+                                rule: LOCK_RANK,
+                                severity: Severity::Error,
+                                message: format!(
+                                    "acquiring {} (rank {}) while `{}` holds {} \
+                                     (rank {}, line {}) — nested acquisitions must \
+                                     strictly ascend",
+                                    taken.name(),
+                                    taken as u8,
+                                    g.name,
+                                    held.name(),
+                                    held as u8,
+                                    g.line
+                                ),
+                                suggestion: "reorder the acquisitions or narrow the \
+                                             outer guard to a scoped block"
+                                    .to_string(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // rule: guard-across-publish
+        if !guards.is_empty() {
+            for trig in PUBLISH_TRIGGERS {
+                if code.contains(trig) && !allowed(GUARD_ACROSS_PUBLISH) {
+                    let held: Vec<String> = guards
+                        .iter()
+                        .map(|g| format!("`{}` (line {})", g.name, g.line))
+                        .collect();
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: n,
+                        rule: GUARD_ACROSS_PUBLISH,
+                        severity: Severity::Error,
+                        message: format!(
+                            "`{trig}` fires while {} is held — a woken consumer \
+                             can block on the very lock the publisher holds",
+                            held.join(", ")
+                        ),
+                        suggestion: "narrow the guard to a scoped block (or \
+                                     drop() it) before publishing"
+                            .to_string(),
+                    });
+                    break;
+                }
+            }
+        }
+
+        // rule: publish-after-mutate
+        if code.contains(".publish(")
+            && !allowed(PUBLISH_AFTER_MUTATE)
+            && !preceded_by_mutation(&model, idx)
+        {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: n,
+                rule: PUBLISH_AFTER_MUTATE,
+                severity: Severity::Warning,
+                message: "event published before any state mutation in its \
+                          enclosing function — consumers may observe \
+                          pre-mutation state"
+                    .to_string(),
+                suggestion: "mutate first, publish last (the PR 6 ordering \
+                             invariant)"
+                    .to_string(),
+            });
+        }
+
+        // the new guard goes live only after this line's checks ran
+        if let Some(acq) = acq {
+            if let Some(name) = acq.binding {
+                guards.push(Guard {
+                    rank: rank_of(file, &acq.receiver),
+                    name,
+                    depth: line.depth_before,
+                    line: n,
+                });
+            }
+        }
+    }
+    (diags, sites)
+}
+
+/// Does any line between the enclosing `fn` and `idx` mutate state?
+/// (Assignments, collection edits, or an explicit `drop` — the lexical
+/// shapes the tree's mutate-then-publish sites take.) `true` when no
+/// enclosing function is found: the rule only fires on provable
+/// publish-first shapes.
+fn preceded_by_mutation(model: &SourceModel, idx: usize) -> bool {
+    let depth = model.lines[idx].depth_before;
+    let mut fn_idx = None;
+    for j in (0..idx).rev() {
+        let lj = &model.lines[j];
+        if lj.depth_before < depth && lj.code.contains("fn ") {
+            fn_idx = Some(j);
+            break;
+        }
+    }
+    let Some(fn_idx) = fn_idx else { return true };
+    model.lines[fn_idx + 1..idx]
+        .iter()
+        .any(|l| is_mutation(&l.code))
+}
+
+fn is_mutation(code: &str) -> bool {
+    for m in [".push(", ".insert(", ".remove(", ".retain(", ".send(", "drop("] {
+        if code.contains(m) {
+            return true;
+        }
+    }
+    let cleaned = code
+        .replace("==", "  ")
+        .replace("!=", "  ")
+        .replace("<=", "  ")
+        .replace(">=", "  ")
+        .replace("=>", "  ")
+        .replace("->", "  ");
+    cleaned.contains('=')
+}
+
+/// The first lock acquisition on the line, if any (repo style keeps one
+/// acquisition per line; chains split across lines are not acquisition
+/// sites — the migration to the helpers keeps them single-line).
+fn find_acquisition(code: &str) -> Option<Acq> {
+    for pat in HELPER_PATTERNS {
+        if let Some(ix) = code.find(pat) {
+            let after = &code[ix + pat.len()..];
+            let close = matching_paren(after)?;
+            let receiver = normalize_receiver(&after[..close]);
+            let binding = if after[close + 1..].trim() == ";" {
+                let_binding(code)
+            } else {
+                None
+            };
+            return Some(Acq { receiver, binding });
+        }
+    }
+    for (pat, _) in RAW_PATTERNS {
+        if let Some(ix) = code.find(pat) {
+            let receiver = receiver_before(code, ix);
+            let binding = if code[ix + pat.len()..].trim() == ";" {
+                let_binding(code)
+            } else {
+                None
+            };
+            return Some(Acq { receiver, binding });
+        }
+    }
+    None
+}
+
+/// Index of the `)` closing the paren opened just before `s` starts.
+fn matching_paren(s: &str) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' if depth == 0 => return Some(i),
+            ')' => depth -= 1,
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The receiver expression ending at byte `ix`, normalized.
+fn receiver_before(code: &str, ix: usize) -> String {
+    let prefix = &code[..ix];
+    let start = prefix
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| c.is_alphanumeric() || matches!(c, '_' | '.' | '[' | ']'))
+        .last()
+        .map(|(i, _)| i)
+        .unwrap_or(prefix.len());
+    normalize_receiver(&prefix[start..])
+}
+
+/// `&self.shards[shard].server` → `server`: strip borrows, `self`, and
+/// index expressions; keep the last path segment (the lock field name).
+fn normalize_receiver(s: &str) -> String {
+    let s = s.trim().trim_start_matches('&').trim();
+    let s = s.strip_prefix("mut ").unwrap_or(s);
+    let mut flat = String::new();
+    let mut bracket = 0usize;
+    for c in s.chars() {
+        match c {
+            '[' => bracket += 1,
+            ']' => bracket = bracket.saturating_sub(1),
+            _ if bracket == 0 => flat.push(c),
+            _ => {}
+        }
+    }
+    flat.split('.')
+        .filter(|seg| !seg.is_empty() && *seg != "self")
+        .next_back()
+        .unwrap_or("")
+        .to_string()
+}
+
+/// `let g = …;` / `let mut g = …;` → the bound name.
+fn let_binding(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Names explicitly dropped on this line via `drop(name)`.
+fn dropped_names(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = code;
+    while let Some(ix) = rest.find("drop(") {
+        let preceded_by_ident = rest[..ix]
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_' || c == '.');
+        let after = &rest[ix + "drop(".len()..];
+        if !preceded_by_ident {
+            if let Some(close) = after.find(')') {
+                let name = after[..close].trim().trim_start_matches('&');
+                if !name.is_empty()
+                    && name.chars().all(|c| c.is_alphanumeric() || c == '_')
+                {
+                    out.push(name.to_string());
+                }
+            }
+        }
+        rest = after;
+    }
+    out
+}

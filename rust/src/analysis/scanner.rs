@@ -1,0 +1,260 @@
+//! A minimal lexical model of a Rust source file — just enough structure
+//! for the concurrency lint rules, built with no dependencies and no
+//! rustc plumbing (this container ships no toolchain, so the analyzer is
+//! plain library code over the source text).
+//!
+//! The model is per-line: comments and string/char-literal contents are
+//! blanked (so patterns inside docs, fixtures, and format strings never
+//! trigger rules), brace depth is tracked per line (scopes), and
+//! allowlist escapes written in comments are captured *before* stripping
+//! and attached to the line they govern. A standalone allow comment on
+//! its own line applies to the next line of code.
+//!
+//! Known, accepted limits of a lexical model: a method-call chain split
+//! across lines is seen one line at a time (acquisition patterns are
+//! expected on a single line — the repo's own style keeps them there),
+//! and macro bodies are treated as ordinary code.
+
+/// One physical source line after lexical stripping.
+#[derive(Debug)]
+pub struct Line {
+    /// The line's code with comments and string/char contents removed
+    /// (string delimiters are kept, so token shapes stay separated).
+    pub code: String,
+    /// Brace depth at the start of the line.
+    pub depth_before: usize,
+    /// Rules allowlisted for this line via `modak-lint: allow(...)`.
+    pub allows: Vec<String>,
+}
+
+/// The whole file as stripped, depth-annotated lines (1-based numbering:
+/// `lines[i]` is source line `i + 1`).
+#[derive(Debug, Default)]
+pub struct SourceModel {
+    pub lines: Vec<Line>,
+}
+
+#[derive(Clone, Copy)]
+enum Lex {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+}
+
+/// Lex `text` into the per-line model.
+pub fn model_source(text: &str) -> SourceModel {
+    let chars: Vec<char> = text.chars().collect();
+    let mut raw: Vec<(String, String)> = Vec::new(); // (code, comment text)
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = Lex::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            raw.push((std::mem::take(&mut code), std::mem::take(&mut comment)));
+            if matches!(state, Lex::LineComment) {
+                state = Lex::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            Lex::Code => {
+                let prev_ident = i > 0 && is_ident(chars[i - 1]);
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = Lex::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = Lex::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = Lex::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_ident {
+                    match raw_str_open(&chars, i) {
+                        Some((hashes, next)) => {
+                            code.push('"');
+                            state = Lex::RawStr(hashes);
+                            i = next;
+                        }
+                        None => {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == 'b' && !prev_ident && chars.get(i + 1) == Some(&'r') {
+                    match raw_str_open(&chars, i + 1) {
+                        Some((hashes, next)) => {
+                            code.push('"');
+                            state = Lex::RawStr(hashes);
+                            i = next;
+                        }
+                        None => {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == '\'' {
+                    match char_literal_end(&chars, i) {
+                        // skip the whole literal (crucially including any
+                        // brace characters inside it)
+                        Some(next) => i = next,
+                        // a lifetime tick: ordinary code
+                        None => {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Lex::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Lex::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth <= 1 {
+                        Lex::Code
+                    } else {
+                        Lex::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = Lex::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Lex::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = Lex::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Lex::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    code.push('"');
+                    state = Lex::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        raw.push((code, comment));
+    }
+
+    let mut model = SourceModel::default();
+    let mut depth = 0usize;
+    // allows on standalone comment lines carry forward to the next code
+    let mut pending: Vec<String> = Vec::new();
+    for (code, comment) in raw {
+        let mut allows = parse_allows(&comment);
+        let depth_before = depth;
+        for ch in code.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+        }
+        if code.trim().is_empty() {
+            pending.append(&mut allows);
+            model.lines.push(Line {
+                code,
+                depth_before,
+                allows: Vec::new(),
+            });
+        } else {
+            allows.append(&mut pending);
+            model.lines.push(Line {
+                code,
+                depth_before,
+                allows,
+            });
+        }
+    }
+    model
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `r`, `r#`, `r##`… followed by `"` at `chars[i]` (which must be `r`):
+/// returns (hash count, index just past the opening quote).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    debug_assert_eq!(chars.get(i), Some(&'r'));
+    let mut j = i + 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j - i - 1, j + 1))
+    } else {
+        None
+    }
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    debug_assert_eq!(chars.get(i), Some(&'"'));
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If `chars[i]` (a `'`) opens a char literal, the index just past its
+/// closing quote; `None` for a lifetime tick.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    debug_assert_eq!(chars.get(i), Some(&'\''));
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // escaped literal: scan for the closing quote within a short,
+            // bounded window (covers \n, \', \\, \x41, \u{...})
+            let mut j = i + 2;
+            while j < chars.len() && j - i < 12 && chars[j] != '\n' {
+                if chars[j] == '\'' {
+                    return Some(j + 1);
+                }
+                j += 1;
+            }
+            None
+        }
+        Some(_) if chars.get(i + 2) == Some(&'\'') => Some(i + 3),
+        _ => None,
+    }
+}
+
+/// Extract rule names from a `modak-lint: allow(rule-a, rule-b)` comment.
+fn parse_allows(comment: &str) -> Vec<String> {
+    let Some(at) = comment.find("modak-lint:") else {
+        return Vec::new();
+    };
+    let rest = &comment[at + "modak-lint:".len()..];
+    let Some(open) = rest.find("allow(") else {
+        return Vec::new();
+    };
+    let body = &rest[open + "allow(".len()..];
+    let Some(close) = body.find(')') else {
+        return Vec::new();
+    };
+    body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect()
+}

@@ -1,0 +1,315 @@
+//! Analyzer unit tests: scanner lexing, rank table, acquires-graph
+//! cycles, one seeded-violation fixture per rule (plus allowlist and
+//! clean-shape fixtures), and the self-hosting pass over the real tree.
+
+use std::path::Path;
+
+use super::ranks::{rank_of, AcquiresGraph};
+use super::rules::{
+    GUARD_ACROSS_PUBLISH, LOCK_RANK, NO_MUTEXED_COUNTERS, POISON_POLICY,
+    PUBLISH_AFTER_MUTATE, RULES,
+};
+use super::scanner::model_source;
+use super::{lint_text, lint_tree};
+use crate::util::sync::LockRank;
+
+// ---- scanner ----------------------------------------------------------
+
+#[test]
+fn scanner_strips_comments_and_string_contents() {
+    let m = model_source("let x = 1; // .publish( in a comment\n");
+    assert!(!m.lines[0].code.contains(".publish("));
+    let m = model_source("let s = \".lock().unwrap()\";\n");
+    assert!(!m.lines[0].code.contains(".lock().unwrap()"));
+    assert!(m.lines[0].code.contains('"'));
+}
+
+#[test]
+fn scanner_strips_raw_strings_and_keeps_depth() {
+    let src = "let s = r#\"has a \" quote inside\"#;\nlet y = 2;\n";
+    let m = model_source(src);
+    assert!(!m.lines[0].code.contains("inside"));
+    assert_eq!(m.lines[1].depth_before, 0);
+}
+
+#[test]
+fn scanner_ignores_braces_inside_char_literals() {
+    let src = "fn f() {\n    let open = '{';\n    let close = '}';\n}\nfn g() {}\n";
+    let m = model_source(src);
+    assert_eq!(m.lines[3].depth_before, 1, "inside f before its close");
+    assert_eq!(m.lines[4].depth_before, 0, "fn g starts at top level");
+}
+
+#[test]
+fn scanner_captures_inline_and_standalone_allows() {
+    let m = model_source("foo(); // modak-lint: allow(poison-policy, lock-rank)\n");
+    assert_eq!(m.lines[0].allows, ["poison-policy", "lock-rank"]);
+    let m = model_source("// modak-lint: allow(lock-rank)\nbar();\n");
+    assert!(m.lines[0].allows.is_empty());
+    assert_eq!(m.lines[1].allows, ["lock-rank"]);
+}
+
+// ---- ranks & acquires-graph ------------------------------------------
+
+#[test]
+fn rank_table_resolves_specific_and_generic_rows() {
+    assert_eq!(rank_of("registry/mod.rs", "inner"), Some(LockRank::Registry));
+    assert_eq!(rank_of("util/sync.rs", "inner"), Some(LockRank::Counters));
+    assert_eq!(rank_of("service/mod.rs", "model"), Some(LockRank::PerfModel));
+    assert_eq!(rank_of("cluster/mod.rs", "server"), Some(LockRank::ShardServer));
+    assert_eq!(rank_of("cluster/mod.rs", "mystery"), None);
+}
+
+#[test]
+fn acquires_graph_detects_cycles() {
+    let mut g = AcquiresGraph::default();
+    g.record(LockRank::Cluster, LockRank::ShardServer, "a.rs", 1);
+    g.record(LockRank::ShardServer, LockRank::Stager, "a.rs", 2);
+    assert!(g.find_cycle().is_none(), "an ascending chain is a DAG");
+    g.record(LockRank::Stager, LockRank::Cluster, "b.rs", 3);
+    let cycle = g.find_cycle().expect("closing the loop makes a cycle");
+    assert_eq!(cycle.first(), cycle.last());
+    assert!(cycle.len() >= 3);
+    assert_eq!(g.site((LockRank::Stager, LockRank::Cluster)), Some(("b.rs", 3)));
+}
+
+// ---- seeded violations: one fixture per rule --------------------------
+
+const FIX_GUARD_PUBLISH: &str = r#"
+impl Cluster {
+    pub fn submit(&self) {
+        let mut map = lock_or_recover(&self.map);
+        map.fwd.insert(1, 2);
+        self.bus.publish(SchedEvent::Submit { job: 1 });
+    }
+}
+"#;
+
+#[test]
+fn detects_guard_held_across_publish() {
+    let r = lint_text("cluster/mod.rs", FIX_GUARD_PUBLISH);
+    assert!(r.flags(GUARD_ACROSS_PUBLISH), "{}", r.render());
+    assert_eq!(r.errors(), 1, "{}", r.render());
+    assert_eq!(r.diags[0].line, 6);
+    assert!(r.diags[0].render().contains("cluster/mod.rs:6: error[guard-across-publish]"));
+}
+
+const FIX_GUARD_NOTIFY: &str = r#"
+impl Signal {
+    fn wake(&self) {
+        let mut e = lock_or_recover(&self.epoch);
+        *e += 1;
+        self.other.notify();
+    }
+}
+"#;
+
+#[test]
+fn detects_guard_held_across_signal_wake() {
+    let r = lint_text("util/sync.rs", FIX_GUARD_NOTIFY);
+    assert!(r.flags(GUARD_ACROSS_PUBLISH), "{}", r.render());
+    assert_eq!(r.errors(), 1, "{}", r.render());
+}
+
+const FIX_RANK_DESCENT: &str = r#"
+impl Cluster {
+    fn bad(&self) {
+        let mut srv = lock_or_recover(&self.server);
+        let mut map = lock_or_recover(&self.map);
+        map.clear();
+        srv.tick();
+    }
+}
+"#;
+
+#[test]
+fn detects_lock_rank_descent() {
+    let r = lint_text("cluster/mod.rs", FIX_RANK_DESCENT);
+    assert!(r.flags(LOCK_RANK), "{}", r.render());
+    assert_eq!(r.errors(), 1, "{}", r.render());
+    assert_eq!(r.edges, [(LockRank::ShardServer, LockRank::Cluster)]);
+}
+
+const FIX_UNRANKED: &str = r#"
+impl Thing {
+    fn poke(&self) {
+        let g = lock_or_recover(&self.mystery);
+        drop(g);
+    }
+}
+"#;
+
+#[test]
+fn detects_unranked_lock_site() {
+    let r = lint_text("cluster/mod.rs", FIX_UNRANKED);
+    assert!(r.flags(LOCK_RANK), "{}", r.render());
+    assert!(r.diags[0].message.contains("unranked"), "{}", r.render());
+}
+
+const FIX_PUBLISH_FIRST: &str = r#"
+impl Cluster {
+    fn announce(&self) {
+        self.bus.publish(SchedEvent::Finish { job: 7 });
+        self.jobs.clear();
+    }
+}
+"#;
+
+#[test]
+fn detects_publish_before_mutation() {
+    let r = lint_text("cluster/mod.rs", FIX_PUBLISH_FIRST);
+    assert!(r.flags(PUBLISH_AFTER_MUTATE), "{}", r.render());
+    assert_eq!(r.errors(), 0, "{}", r.render());
+    assert_eq!(r.warnings(), 1, "{}", r.render());
+}
+
+const FIX_MUTEXED_COUNTER: &str = r#"
+pub struct StagingCounters {
+    hits: Mutex<u64>,
+}
+"#;
+
+#[test]
+fn detects_mutexed_counters_in_counter_files() {
+    let r = lint_text("cluster/distributor.rs", FIX_MUTEXED_COUNTER);
+    assert!(r.flags(NO_MUTEXED_COUNTERS), "{}", r.render());
+    let clean = lint_text("service/mod.rs", FIX_MUTEXED_COUNTER);
+    assert!(!clean.flags(NO_MUTEXED_COUNTERS), "only the counter files");
+}
+
+const FIX_BARE_UNWRAP: &str = r#"
+impl Cluster {
+    fn peek(&self) {
+        let map = self.map.lock().unwrap();
+        drop(map);
+    }
+}
+"#;
+
+#[test]
+fn detects_bare_lock_unwrap_outside_sync() {
+    let r = lint_text("cluster/mod.rs", FIX_BARE_UNWRAP);
+    assert!(r.flags(POISON_POLICY), "{}", r.render());
+    let exempt = lint_text("util/sync.rs", FIX_BARE_UNWRAP);
+    assert!(!exempt.flags(POISON_POLICY), "util/sync.rs is exempt");
+}
+
+// ---- allowlist escapes and clean shapes -------------------------------
+
+const FIX_ALLOW_INLINE: &str = r#"
+impl Cluster {
+    fn legacy(&self) {
+        let map = self.map.lock().unwrap(); // modak-lint: allow(poison-policy)
+        drop(map);
+    }
+}
+"#;
+
+const FIX_ALLOW_ABOVE: &str = r#"
+impl Cluster {
+    fn legacy(&self) {
+        // modak-lint: allow(poison-policy)
+        let map = self.map.lock().unwrap();
+        drop(map);
+    }
+}
+"#;
+
+#[test]
+fn allowlist_silences_a_rule_inline_or_from_the_line_above() {
+    for fix in [FIX_ALLOW_INLINE, FIX_ALLOW_ABOVE] {
+        let r = lint_text("cluster/mod.rs", fix);
+        assert_eq!(r.errors(), 0, "{}", r.render());
+        assert_eq!(r.warnings(), 0, "{}", r.render());
+    }
+}
+
+const FIX_CYCLE: &str = r#"
+impl Cluster {
+    fn a(&self) {
+        let st = lock_or_recover(&self.stager);
+        let srv = lock_or_recover(&self.server); // modak-lint: allow(lock-rank)
+        srv.tick();
+        drop(st);
+    }
+    fn b(&self) {
+        let srv = lock_or_recover(&self.server);
+        let st = lock_or_recover(&self.stager);
+        st.tick();
+        drop(srv);
+    }
+}
+"#;
+
+#[test]
+fn allowlisted_edges_still_feed_the_cycle_check() {
+    let r = lint_text("cluster/mod.rs", FIX_CYCLE);
+    assert_eq!(r.errors(), 0, "the descent itself is allowlisted: {}", r.render());
+    let cycle = r.cycle.expect("the two fns close a stager <-> shard-server loop");
+    assert!(cycle.contains(&LockRank::Stager));
+    assert!(cycle.contains(&LockRank::ShardServer));
+}
+
+const FIX_DROP_THEN_PUBLISH: &str = r#"
+impl Cluster {
+    fn good(&self) {
+        let mut map = lock_or_recover(&self.map);
+        map.fwd.insert(1, 2);
+        drop(map);
+        self.bus.publish(SchedEvent::Submit { job: 1 });
+    }
+}
+"#;
+
+const FIX_SCOPED_PUBLISH: &str = r#"
+impl Cluster {
+    fn good(&self) {
+        {
+            let mut map = lock_or_recover(&self.map);
+            map.fwd.insert(1, 2);
+        }
+        self.bus.publish(SchedEvent::Submit { job: 1 });
+    }
+}
+"#;
+
+#[test]
+fn drop_and_scope_exit_both_end_guard_liveness() {
+    for fix in [FIX_DROP_THEN_PUBLISH, FIX_SCOPED_PUBLISH] {
+        let r = lint_text("cluster/mod.rs", fix);
+        assert_eq!(r.errors(), 0, "{}", r.render());
+        assert_eq!(r.warnings(), 0, "{}", r.render());
+    }
+}
+
+// ---- self-hosting -----------------------------------------------------
+
+#[test]
+fn rule_catalogue_names_all_five_rules() {
+    let ids: Vec<&str> = RULES.iter().map(|(id, _)| *id).collect();
+    for id in [
+        GUARD_ACROSS_PUBLISH,
+        LOCK_RANK,
+        PUBLISH_AFTER_MUTATE,
+        NO_MUTEXED_COUNTERS,
+        POISON_POLICY,
+    ] {
+        assert!(ids.contains(&id));
+    }
+}
+
+#[test]
+fn the_real_tree_is_lint_clean_and_cycle_free() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+    let rep = lint_tree(&root).expect("lint pass over the source tree");
+    let rendered = rep.render();
+    assert!(rep.files >= 30, "expected the full tree, got {rendered}");
+    assert!(rep.lock_sites >= 40, "expected the tree's lock sites, got {rendered}");
+    assert_eq!(rep.errors(), 0, "dogfooding must stay clean:\n{rendered}");
+    assert_eq!(rep.warnings(), 0, "dogfooding must stay clean:\n{rendered}");
+    assert!(rep.cycle.is_none(), "acquires-graph must be a DAG:\n{rendered}");
+    assert!(
+        !rep.edges.is_empty(),
+        "the tree has nested acquisitions; the graph should see them:\n{rendered}"
+    );
+}

@@ -46,7 +46,7 @@ use crate::data::DatasetSpec;
 use crate::frameworks::Target;
 use crate::placement::{PlacementEngine, RebalanceMode};
 use crate::scheduler::{JobId, JobRecord, JobScript, NodeSpec, SchedulePolicy, TorqueServer};
-use crate::util::sync::{EventBus, SchedEvent, Signal};
+use crate::util::sync::{lock_or_recover, EventBus, SchedEvent, Signal};
 
 /// Cluster-global job identifier (stable across shard migrations).
 pub type ClusterJobId = u64;
@@ -351,7 +351,7 @@ impl ClusterScheduler {
 
     /// Run `f` with shard `i`'s server locked.
     pub fn with_shard<R>(&self, i: usize, f: impl FnOnce(&mut TorqueServer) -> R) -> R {
-        f(&mut self.shards[i].server.lock().unwrap())
+        f(&mut lock_or_recover(&self.shards[i].server))
     }
 
     /// Route + stage + qsub one job; returns its cluster-global id.
@@ -376,7 +376,7 @@ impl ClusterScheduler {
         let demand = script.resources.slot_demand();
         let loads = self.loads(class, demand, digest, bundle_dir, dataset);
         let shard = {
-            let mut map = self.map.lock().unwrap();
+            let mut map = lock_or_recover(&self.map);
             route(self.router, &loads, &mut map.rr_cursor)
         }
         .ok_or_else(|| {
@@ -386,29 +386,26 @@ impl ClusterScheduler {
                 self.shards.len()
             )
         })?;
-        let local_dir = self
-            .distributor
-            .lock()
-            .unwrap()
-            .stage(shard, tag, digest, bundle_dir)?;
+        let local_dir =
+            lock_or_recover(&self.distributor).stage(shard, tag, digest, bundle_dir)?;
         // shard-tier data staging BEFORE qsub: dispatch may fire inside
         // qsub, and its node-tier staging pulls from this shard's cache
         if let Some(spec) = dataset {
-            self.stager.lock().unwrap().stage_to_shard(shard, spec);
+            lock_or_recover(&self.stager).stage_to_shard(shard, spec);
         }
         let local = {
-            let mut srv = self.shards[shard].server.lock().unwrap();
+            let mut srv = lock_or_recover(&self.shards[shard].server);
             srv.register_image(tag, local_dir);
             srv.qsub(script)?
         };
         // reference-pin the staged artefacts for this job's lifetime:
         // eviction under cache pressure must never GC a digest a live job
         // still points at (released when the job is observed terminal)
-        self.distributor.lock().unwrap().pin(shard, digest);
+        lock_or_recover(&self.distributor).pin(shard, digest);
         if let Some(spec) = dataset {
-            self.stager.lock().unwrap().pin_shard(shard, &spec.digest);
+            lock_or_recover(&self.stager).pin_shard(shard, &spec.digest);
         }
-        let mut map = self.map.lock().unwrap();
+        let mut map = lock_or_recover(&self.map);
         let gid = map.next_id;
         map.next_id += 1;
         map.fwd.insert(gid, (shard, local));
@@ -437,13 +434,13 @@ impl ClusterScheduler {
     ) -> Vec<ShardLoad> {
         // dataset-locality estimates first, under the stager lock alone
         // (lock order: server before stager — never interleave them here)
-        let data_secs = self.stager.lock().unwrap().estimate_all_shards(dataset);
-        let mut dist = self.distributor.lock().unwrap();
+        let data_secs = lock_or_recover(&self.stager).estimate_all_shards(dataset);
+        let mut dist = lock_or_recover(&self.distributor);
         self.shards
             .iter()
             .enumerate()
             .map(|(i, shard)| {
-                let srv = shard.server.lock().unwrap();
+                let srv = lock_or_recover(&shard.server);
                 ShardLoad {
                     shard: i,
                     eligible: srv.max_node_slots(class).is_some_and(|m| m >= demand),
@@ -484,7 +481,7 @@ impl ClusterScheduler {
             }
             // scope the guard: absorb this shard's pending results, then
             // release before anything else is locked
-            let mut srv = shard.server.lock().unwrap();
+            let mut srv = lock_or_recover(&shard.server);
             srv.poll()?;
             drop(srv);
         }
@@ -549,20 +546,14 @@ impl ClusterScheduler {
             // global-id mapping is either mid-submit (qsub done, mapping
             // not inserted yet — moving it now would orphan its id) or
             // was qsub'd directly into the shard; leave both in place
-            if !self
-                .map
-                .lock()
-                .unwrap()
-                .rev
-                .contains_key(&(from, local))
-            {
+            if !lock_or_recover(&self.map).rev.contains_key(&(from, local)) {
                 continue;
             }
             // the withdrawn state carries any checkpoint + prior-segment
             // accounting: a restarted job migrated AGAIN while still
             // queued must not lose its completed epochs
             let (script, submitted_at, resume, prior_run_secs) =
-                match self.shards[from].server.lock().unwrap().withdraw(local) {
+                match lock_or_recover(&self.shards[from].server).withdraw(local) {
                     Ok(s) => s,
                     Err(_) => continue, // dispatched since the snapshot
                 };
@@ -571,7 +562,7 @@ impl ClusterScheduler {
             match placed {
                 Ok(nl) => {
                     let gid = self.remap(from, local, to, nl);
-                    let mut map = self.map.lock().unwrap();
+                    let mut map = lock_or_recover(&self.map);
                     map.migrations += 1;
                     map.migrations_in[to] += 1;
                     drop(map);
@@ -601,7 +592,7 @@ impl ClusterScheduler {
     /// cumulative run seconds all ride along.
     fn restart_preempted(&self) -> Result<()> {
         for from in 0..self.shards.len() {
-            let taken = self.shards[from].server.lock().unwrap().take_preempted();
+            let taken = lock_or_recover(&self.shards[from].server).take_preempted();
             for (old_local, script, submitted_at, ckpt, run_secs) in taken {
                 let job = JobShape {
                     class: TorqueServer::class_of(&script),
@@ -635,7 +626,7 @@ impl ClusterScheduler {
                 match queued {
                     Ok(nl) => {
                         let gid = self.remap(from, old_local, to, nl);
-                        let mut map = self.map.lock().unwrap();
+                        let mut map = lock_or_recover(&self.map);
                         if to != from {
                             map.migrations += 1;
                             map.migrations_elastic += 1;
@@ -655,7 +646,7 @@ impl ClusterScheduler {
                     }
                     Err(_) => {
                         // restart failed on the pick: resume on the origin
-                        let fallback = self.shards[from].server.lock().unwrap().qsub_resume(
+                        let fallback = lock_or_recover(&self.shards[from].server).qsub_resume(
                             script,
                             submitted_at,
                             Some(ckpt),
@@ -674,7 +665,7 @@ impl ClusterScheduler {
                                 eprintln!(
                                     "cluster: restarting checkpointed job failed: {e:#}"
                                 );
-                                let mut map = self.map.lock().unwrap();
+                                let mut map = lock_or_recover(&self.map);
                                 if let Some(gid) = map.rev.remove(&(from, old_local)) {
                                     map.fwd.remove(&gid);
                                 }
@@ -703,7 +694,7 @@ impl ClusterScheduler {
             // blocked queued jobs + movable running candidates (with their
             // node's slot state), snapshotted under one server lock
             let (blocked, running, already_preempting) = {
-                let srv = self.shards[from].server.lock().unwrap();
+                let srv = lock_or_recover(&self.shards[from].server);
                 let blocked: Vec<(Target, usize)> = srv
                     .queued_ids()
                     .iter()
@@ -733,7 +724,7 @@ impl ClusterScheduler {
             }
             for (local, node_free, node_total) in running {
                 // only preempt jobs this cluster owns
-                let owned = self.map.lock().unwrap().rev.get(&(from, local)).copied();
+                let owned = lock_or_recover(&self.map).rev.get(&(from, local)).copied();
                 let Some(gid) = owned else {
                     continue;
                 };
@@ -754,7 +745,7 @@ impl ClusterScheduler {
                 let Some(_best) = self.best_strict_improvement(&snaps, from, &job) else {
                     continue;
                 };
-                let asked = self.shards[from].server.lock().unwrap().preempt(local);
+                let asked = lock_or_recover(&self.shards[from].server).preempt(local);
                 if asked.is_ok() {
                     self.bus.publish(SchedEvent::Preempt {
                         shard: from,
@@ -821,26 +812,22 @@ impl ClusterScheduler {
         let tag = script.payload.image.clone();
         // bound to a let so the distributor guard is released before any
         // shard lock is taken
-        let source_info = self.distributor.lock().unwrap().source_of(&tag);
+        let source_info = lock_or_recover(&self.distributor).source_of(&tag);
         let Some((digest, source)) = source_info else {
             return Err(anyhow!("image {tag:?} never staged through this cluster"));
         };
-        let staged = self
-            .distributor
-            .lock()
-            .unwrap()
-            .stage(to, &tag, &digest, &source)?;
+        let staged = lock_or_recover(&self.distributor).stage(to, &tag, &digest, &source)?;
         // re-stage the migrated job's dataset on the destination shard
         // (a hit when the destination already holds it, a single fresh
         // miss otherwise — the counters record exactly one event, so
         // migration never double-counts staging in the batch report)
         if let Some(name) = &script.payload.dataset {
-            let spec = self.stager.lock().unwrap().spec_of(name);
+            let spec = lock_or_recover(&self.stager).spec_of(name);
             if let Some(spec) = spec {
-                self.stager.lock().unwrap().stage_to_shard(to, &spec);
+                lock_or_recover(&self.stager).stage_to_shard(to, &spec);
             }
         }
-        let mut srv = self.shards[to].server.lock().unwrap();
+        let mut srv = lock_or_recover(&self.shards[to].server);
         srv.register_image(&tag, staged);
         srv.qsub_resume(script.clone(), submitted_at, resume, prior_run_secs)
     }
@@ -856,10 +843,7 @@ impl ClusterScheduler {
         resume: Option<crate::trainer::Checkpoint>,
         prior_run_secs: f64,
     ) -> Result<JobId> {
-        self.shards[shard]
-            .server
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.shards[shard].server)
             .qsub_resume(script, submitted_at, resume, prior_run_secs)
     }
 
@@ -872,7 +856,7 @@ impl ClusterScheduler {
         to: usize,
         new_local: JobId,
     ) -> Option<ClusterJobId> {
-        let mut map = self.map.lock().unwrap();
+        let mut map = lock_or_recover(&self.map);
         let gid = map.rev.remove(&(from, old_local))?;
         map.fwd.insert(gid, (to, new_local));
         map.rev.insert((to, new_local), gid);
@@ -885,7 +869,7 @@ impl ClusterScheduler {
         self.shards
             .iter()
             .map(|shard| {
-                let srv = shard.server.lock().unwrap();
+                let srv = lock_or_recover(&shard.server);
                 let mut free = BTreeMap::new();
                 let mut total = BTreeMap::new();
                 let mut max_slots = BTreeMap::new();
@@ -909,7 +893,7 @@ impl ClusterScheduler {
 
     /// The placement-relevant shape of one resident job.
     fn job_shape(&self, shard: usize, local: JobId) -> Option<JobShape> {
-        let srv = self.shards[shard].server.lock().unwrap();
+        let srv = lock_or_recover(&self.shards[shard].server);
         let rec = srv.job(local).ok()?;
         Some(JobShape {
             class: TorqueServer::class_of(&rec.script),
@@ -923,7 +907,7 @@ impl ClusterScheduler {
     /// Per-shard image-staging estimates for a job (None when its tag was
     /// never staged through this cluster — it cannot be restaged).
     fn image_estimates(&self, job: &JobShape) -> Option<Vec<f64>> {
-        let mut dist = self.distributor.lock().unwrap();
+        let mut dist = lock_or_recover(&self.distributor);
         let (digest, source) = dist.source_of(&job.tag)?;
         Some(
             (0..self.shards.len())
@@ -934,7 +918,7 @@ impl ClusterScheduler {
 
     /// Per-shard dataset-staging estimates for a job (zeros without one).
     fn data_estimates(&self, job: &JobShape) -> Vec<f64> {
-        let stager = self.stager.lock().unwrap();
+        let stager = lock_or_recover(&self.stager);
         match job.dataset.as_ref().and_then(|n| stager.spec_of(n)) {
             Some(spec) => (0..self.shards.len())
                 .map(|t| stager.estimate_shard_secs(t, &spec))
@@ -945,22 +929,22 @@ impl ClusterScheduler {
 
     /// Re-point a migrated job's reference pins at its new shard.
     fn move_pin(&self, gid: ClusterJobId, to: usize) {
-        let rec = { self.map.lock().unwrap().pins.get(&gid).cloned() };
+        let rec = { lock_or_recover(&self.map).pins.get(&gid).cloned() };
         let Some(rec) = rec else { return };
         if rec.shard == to {
             return;
         }
         {
-            let mut dist = self.distributor.lock().unwrap();
+            let mut dist = lock_or_recover(&self.distributor);
             dist.unpin(rec.shard, &rec.image_digest);
             dist.pin(to, &rec.image_digest);
         }
         if let Some(d) = &rec.data_digest {
-            let mut stager = self.stager.lock().unwrap();
+            let mut stager = lock_or_recover(&self.stager);
             stager.unpin_shard(rec.shard, d);
             stager.pin_shard(to, d);
         }
-        if let Some(r) = self.map.lock().unwrap().pins.get_mut(&gid) {
+        if let Some(r) = lock_or_recover(&self.map).pins.get_mut(&gid) {
             r.shard = to;
         }
     }
@@ -969,7 +953,7 @@ impl ClusterScheduler {
     /// (their bundles/datasets become ordinary LRU prey again).
     fn release_finished_pins(&self) {
         let candidates: Vec<(ClusterJobId, Option<(usize, JobId)>)> = {
-            let map = self.map.lock().unwrap();
+            let map = lock_or_recover(&self.map);
             map.pins
                 .keys()
                 .map(|gid| (*gid, map.fwd.get(gid).copied()))
@@ -980,7 +964,7 @@ impl ClusterScheduler {
             let terminal = match loc {
                 None => true, // unmapped pin: nothing can release it later
                 Some((shard, local)) => {
-                    let srv = self.shards[shard].server.lock().unwrap();
+                    let srv = lock_or_recover(&self.shards[shard].server);
                     srv.job(local).map(|r| r.state.is_terminal()).unwrap_or(true)
                 }
             };
@@ -992,16 +976,16 @@ impl ClusterScheduler {
             return;
         }
         let recs: Vec<PinRecord> = {
-            let mut map = self.map.lock().unwrap();
+            let mut map = lock_or_recover(&self.map);
             done.iter().filter_map(|gid| map.pins.remove(gid)).collect()
         };
         {
-            let mut dist = self.distributor.lock().unwrap();
+            let mut dist = lock_or_recover(&self.distributor);
             for r in &recs {
                 dist.unpin(r.shard, &r.image_digest);
             }
         }
-        let mut stager = self.stager.lock().unwrap();
+        let mut stager = lock_or_recover(&self.stager);
         for r in &recs {
             if let Some(d) = &r.data_digest {
                 stager.unpin_shard(r.shard, d);
@@ -1011,7 +995,7 @@ impl ClusterScheduler {
 
     /// Which shard currently owns the job.
     pub fn shard_of(&self, id: ClusterJobId) -> Option<usize> {
-        self.map.lock().unwrap().fwd.get(&id).map(|&(s, _)| s)
+        lock_or_recover(&self.map).fwd.get(&id).map(|&(s, _)| s)
     }
 
     /// Run `f` on the job's current record (wherever it lives).
@@ -1020,14 +1004,11 @@ impl ClusterScheduler {
         id: ClusterJobId,
         f: impl FnOnce(&JobRecord) -> R,
     ) -> Result<R> {
-        let (shard, local) = *self
-            .map
-            .lock()
-            .unwrap()
+        let (shard, local) = *lock_or_recover(&self.map)
             .fwd
             .get(&id)
             .ok_or_else(|| anyhow!("unknown cluster job {id}"))?;
-        let srv = self.shards[shard].server.lock().unwrap();
+        let srv = lock_or_recover(&self.shards[shard].server);
         Ok(f(srv.job(local)?))
     }
 
@@ -1038,12 +1019,12 @@ impl ClusterScheduler {
 
     /// Total migrations executed by the rebalancer.
     pub fn migrations(&self) -> u64 {
-        self.map.lock().unwrap().migrations
+        lock_or_recover(&self.map).migrations
     }
 
     /// Slice of [`Self::migrations`] executed via checkpoint/restart.
     pub fn elastic_migrations(&self) -> u64 {
-        self.map.lock().unwrap().migrations_elastic
+        lock_or_recover(&self.map).migrations_elastic
     }
 
     /// Per-shard point-in-time stats for batch reporting. Staging counters
@@ -1051,12 +1032,12 @@ impl ClusterScheduler {
     /// the stage manager is locked, so reporting never contends with an
     /// in-flight transfer.
     pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
-        let map = self.map.lock().unwrap();
+        let map = lock_or_recover(&self.map);
         self.shards
             .iter()
             .enumerate()
             .map(|(i, shard)| {
-                let srv = shard.server.lock().unwrap();
+                let srv = lock_or_recover(&shard.server);
                 ShardSnapshot {
                     shard: i,
                     running: srv.running_count(),
@@ -1088,17 +1069,17 @@ impl ClusterScheduler {
     pub fn peak_running_sum(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.server.lock().unwrap().peak_running())
+            .map(|s| lock_or_recover(&s.server).peak_running())
             .sum()
     }
 
     /// One-line qstat across shards:
     /// `s0: 1:R(n0) 2:Q [r1 q1] | s1: - [r0 q0]`.
     pub fn qstat_line(&self) -> String {
-        let map = self.map.lock().unwrap();
+        let map = lock_or_recover(&self.map);
         let mut shards_out = Vec::new();
         for (i, shard) in self.shards.iter().enumerate() {
-            let srv = shard.server.lock().unwrap();
+            let srv = lock_or_recover(&shard.server);
             let mut parts: Vec<String> = Vec::new();
             for rec in srv.qstat() {
                 let gid = map

@@ -17,7 +17,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -26,6 +26,7 @@ use crate::runtime::{Manifest, VariantBinding};
 use crate::util::dir_size;
 use crate::util::json::Json;
 use crate::util::lru::Lru;
+use crate::util::sync::lock_or_recover;
 
 use super::definition::DefinitionFile;
 use super::image::{Digest, Image, Layer};
@@ -378,7 +379,7 @@ impl BuildPool {
             Missing,
         }
         let key = Self::cache_key(name, tag, def);
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         loop {
             let found = match st.slots.get(&key) {
                 Some(BuildSlot::Done(img)) => Found::Done(img.clone()),
@@ -397,14 +398,14 @@ impl BuildPool {
                     return Err(anyhow!("cached build failure for {name}:{tag}: {e}"));
                 }
                 Found::InFlight => {
-                    st = self.cv.wait(st).unwrap();
+                    st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
                     continue;
                 }
                 Found::Missing => {}
             }
             if st.active >= self.max_workers {
                 // all worker slots busy; wait, then re-check the cache first
-                st = self.cv.wait(st).unwrap();
+                st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
                 continue;
             }
             st.slots.insert(key.clone(), BuildSlot::InFlight);
@@ -417,7 +418,7 @@ impl BuildPool {
             .builder
             .build(name, tag, def, &BuildOptions::default());
 
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         st.active -= 1;
         let mut evicted_dirs: Vec<PathBuf> = Vec::new();
         let index_snapshot = match &result {
@@ -465,7 +466,7 @@ impl BuildPool {
     /// Record a cache hit that bypassed the pool entirely (a prebuilt
     /// bundle found on disk by the registry).
     pub fn note_prebuilt_hit(&self) {
-        self.state.lock().unwrap().stats.cache_hits += 1;
+        lock_or_recover(&self.state).stats.cache_hits += 1;
     }
 
     /// Reference-pin every cached bundle for image `reference`
@@ -474,7 +475,7 @@ impl BuildPool {
     /// pin after `build_cached`/`ensure_built` returns, unpin when the job
     /// is terminal).
     pub fn pin_image(&self, reference: &str) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         for key in bundle_keys(&st, reference) {
             st.lru.pin(&key);
         }
@@ -482,14 +483,14 @@ impl BuildPool {
 
     /// Drop one pin reference on every cached bundle for `reference`.
     pub fn unpin_image(&self, reference: &str) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         for key in bundle_keys(&st, reference) {
             st.lru.unpin(&key);
         }
     }
 
     pub fn stats(&self) -> BuildStats {
-        self.state.lock().unwrap().stats.clone()
+        lock_or_recover(&self.state).stats.clone()
     }
 }
 

@@ -10,6 +10,7 @@
 //! * L2/L1 (build-time Python, never on this path): JAX models + Pallas
 //!   kernels AOT-lowered to `artifacts/*.hlo.txt` by `make artifacts`.
 
+pub mod analysis;
 pub mod cluster;
 pub mod container;
 pub mod data;

@@ -55,6 +55,14 @@ USAGE:
               [--workload W] [--steps N] [--threads N]
   modak bench <table1|fig3|fig4_left|fig4_right|fig5_left|fig5_right|all>
               [--out <markdown file>]
+  modak lint [--root <dir>] [--deny-warnings] [--rules]
+              concurrency invariant analyzer: scans the source tree
+              (default --root rust/src) for lock guards held across
+              event publishes, lock-rank descents / acquires-graph
+              cycles, publish-before-mutate shapes, mutexed counters,
+              and bare .lock().unwrap() outside util/sync.rs.
+              --rules lists the rule catalogue; escape hatch:
+              // modak-lint: allow(<rule>) on the offending line
 
 COMMON FLAGS:
   --artifacts <dir>       AOT artifact dir (default: artifacts)
@@ -199,8 +207,33 @@ fn run(args: &[String]) -> Result<()> {
         "train" => cmd_train(&cli, artifacts_dir, store),
         "probe" => cmd_probe(&cli, artifacts_dir),
         "bench" => cmd_bench(&cli, artifacts_dir, store, history),
+        "lint" => cmd_lint(&cli),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// `modak lint` — run the concurrency invariant analyzer over the tree.
+fn cmd_lint(cli: &Cli) -> Result<()> {
+    if cli.get("rules").is_some() {
+        for (id, what) in modak::analysis::rules::RULES {
+            println!("{id:22} {what}");
+        }
+        return Ok(());
+    }
+    let root = cli.get("root").unwrap_or("rust/src");
+    let report = modak::analysis::lint_tree(std::path::Path::new(root))
+        .with_context(|| format!("linting {root}"))?;
+    print!("{}", report.render());
+    if report.cycle.is_some() {
+        bail!("acquires-graph has a cycle (deadlock possible)");
+    }
+    if report.errors() > 0 {
+        bail!("{} lint error(s)", report.errors());
+    }
+    if cli.get("deny-warnings").is_some() && report.warnings() > 0 {
+        bail!("{} lint warning(s) with --deny-warnings", report.warnings());
+    }
+    Ok(())
 }
 
 /// Service shape from the common serve flags.

@@ -30,6 +30,8 @@ use std::collections::{BinaryHeap, VecDeque};
 use std::time::Instant;
 
 use crate::placement::{LoadTracker, PlacementEngine, ShardLoad};
+#[cfg(debug_assertions)]
+use crate::util::sync::{rank_acquire, LockRank};
 
 /// Which scheduler core runs the simulation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -223,6 +225,16 @@ pub fn run_scale(cfg: &ScaleConfig) -> ScaleOutcome {
 
     let t0 = Instant::now();
     while let Some(Reverse((now, _, ev))) = heap.pop() {
+        // mirror the real cluster's per-event acquisition order (routing
+        // map -> shard server -> load counters); debug builds assert the
+        // declared lock ranks strictly ascend on every one of the sim's
+        // deterministic events, release builds compile this to nothing
+        #[cfg(debug_assertions)]
+        let _order = (
+            rank_acquire(LockRank::Cluster),
+            rank_acquire(LockRank::ShardServer),
+            rank_acquire(LockRank::Counters),
+        );
         match ev {
             Ev::Arrive(j) => {
                 events += 1;
@@ -325,6 +337,16 @@ mod tests {
             mode,
             cross_check,
         }
+    }
+
+    /// Satellite (PR 7): every simulated event runs under the debug-build
+    /// runtime lock-order assertion — a mis-declared rank hierarchy would
+    /// panic here on thousands of deterministic events.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn scale_sim_upholds_the_runtime_lock_rank_order() {
+        let out = run_scale(&small(CoreMode::EventDriven, false));
+        assert_eq!(out.completed, 2_000, "rank witnesses must not disturb the sim");
     }
 
     #[test]

@@ -26,6 +26,8 @@ use crate::scheduler::policy::{
     plan_dispatch, NodeState, QueuedJob, RunningJob, SchedulePolicy,
 };
 use crate::scheduler::JobId;
+#[cfg(debug_assertions)]
+use crate::util::sync::{rank_acquire, LockRank};
 
 /// A synthetic epoch-granular job: `epochs * epoch_secs` seconds of work,
 /// checkpointable only at epoch boundaries.
@@ -238,6 +240,16 @@ pub fn simulate_placement_cfg(
         ..PlacementSimOutcome::default()
     };
     loop {
+        // mirror the real cluster's per-pass acquisition order (routing
+        // map -> shard server -> data stager); debug builds assert the
+        // declared lock ranks strictly ascend on every deterministic
+        // simulation step, release builds compile this to nothing
+        #[cfg(debug_assertions)]
+        let _order = (
+            rank_acquire(LockRank::Cluster),
+            rank_acquire(LockRank::ShardServer),
+            rank_acquire(LockRank::Stager),
+        );
         // next event: an arrival, a completion, or a checkpoint boundary
         let next_arrival = pending.front().map(|j| j.arrive).unwrap_or(f64::INFINITY);
         let next_done = cluster
@@ -552,6 +564,25 @@ fn rebalance(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Satellite (PR 7): the deterministic sim drives every step through
+    /// the debug-build runtime lock-order assertion — a mis-declared rank
+    /// hierarchy panics here rather than deadlocking a live cluster.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn placement_sim_upholds_the_runtime_lock_rank_order() {
+        let (jobs, shards) = skewed();
+        let out = simulate_placement(
+            PlacementStrategy::RoundRobin,
+            SchedulePolicy::Fifo,
+            RebalanceMode::Elastic,
+            &jobs,
+            &shards,
+            0.0,
+            100_000.0,
+        );
+        assert_eq!(out.unfinished, 0, "rank witnesses must not disturb the sim");
+    }
 
     fn cpu_node(id: usize, slots: usize) -> NodeState {
         NodeState {

@@ -16,6 +16,7 @@ use crate::container::{BuildPool, BuildStats, DefinitionFile, Image};
 use crate::container::definition::Bootstrap;
 use crate::frameworks::{all_profiles, ImageSource, Profile, Target};
 use crate::runtime::Manifest;
+use crate::util::sync::{read_or_recover, write_or_recover};
 
 /// A registry entry: profile metadata + build state.
 #[derive(Debug, Clone)]
@@ -194,7 +195,7 @@ impl RegistryHandle {
 
     /// Run `f` with the registry read-locked (read helper).
     pub fn with<R>(&self, f: impl FnOnce(&Registry) -> R) -> R {
-        f(&self.inner.read().unwrap())
+        f(&read_or_recover(&self.inner))
     }
 
     pub fn len(&self) -> usize {
@@ -227,7 +228,7 @@ impl RegistryHandle {
     /// itself runs with the registry lock *released*.
     pub fn ensure_built(&self, tag: &str) -> Result<Image> {
         let (profile, prebuilt) = {
-            let reg = self.inner.read().unwrap();
+            let reg = read_or_recover(&self.inner);
             let entry = reg.get(tag)?;
             let prebuilt = entry.bundle.as_ref().and_then(|d| Image::load(d).ok());
             (entry.profile.clone(), prebuilt)
@@ -239,7 +240,7 @@ impl RegistryHandle {
         let def = definition_for(&profile);
         let (name, tagpart) = split_ref(tag);
         let image = self.pool.build_cached(&name, &tagpart, &def)?;
-        self.inner.write().unwrap().mark_built(tag, &image);
+        write_or_recover(&self.inner).mark_built(tag, &image);
         Ok(image)
     }
 

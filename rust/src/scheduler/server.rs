@@ -32,7 +32,7 @@ use crate::scheduler::job::JobScript;
 use crate::scheduler::node::{NodeHandle, NodeResult, NodeSpec, NodeTask, ResultSink};
 use crate::scheduler::policy::{plan_dispatch, NodeState, QueuedJob, RunningJob, SchedulePolicy};
 use crate::trainer::Checkpoint;
-use crate::util::sync::{CancelToken, EventBus, SchedEvent, Signal};
+use crate::util::sync::{lock_or_recover, CancelToken, EventBus, SchedEvent, Signal};
 
 /// Completed work is not discarded for overshooting its walltime by mere
 /// absorption/channel latency: the node watchdog already kills genuinely
@@ -485,7 +485,7 @@ impl TorqueServer {
         // free hit). Unstaged/unknown names fall back to synthetic data.
         let io = match (&self.data_stager, &payload.dataset) {
             (Some((shard, stager)), Some(name)) => {
-                stager.lock().unwrap().stage_to_node(*shard, node_id, name)
+                lock_or_recover(stager).stage_to_node(*shard, node_id, name)
             }
             _ => None,
         };
@@ -1177,14 +1177,14 @@ mod tests {
         let mut server = TorqueServer::boot(1, 0);
         let stager = Arc::new(Mutex::new(StageManager::new(1, None, None)));
         let spec = DatasetSpec::new("mnist-60k", 1024, 100, 1);
-        stager.lock().unwrap().stage_to_shard(0, &spec);
+        lock_or_recover(&stager).stage_to_shard(0, &spec);
         server.attach_data_stager(0, Arc::clone(&stager));
         server.register_image("img:1", "/not/a/bundle".into());
         let mut s = script("img:1", 0);
         s.payload.dataset = Some("mnist-60k".into());
         server.qsub(s).unwrap();
         server.wait_all().unwrap();
-        let st = stager.lock().unwrap().stats(0);
+        let st = lock_or_recover(&stager).stats(0);
         assert_eq!(st.shard_misses, 1, "{st:?}");
         assert_eq!(st.node_misses, 1, "staged node-local at dispatch: {st:?}");
         // a dataset name never staged through the manager: synthetic
@@ -1193,7 +1193,7 @@ mod tests {
         s.payload.dataset = Some("ghost-set".into());
         server.qsub(s).unwrap();
         server.wait_all().unwrap();
-        let st = stager.lock().unwrap().stats(0);
+        let st = lock_or_recover(&stager).stats(0);
         assert_eq!(st.node_misses, 1, "{st:?}");
     }
 

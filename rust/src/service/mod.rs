@@ -61,7 +61,7 @@ use crate::registry::RegistryHandle;
 use crate::runtime::Manifest;
 use crate::scheduler::{JobState, SchedulePolicy, TorqueServer};
 use crate::trainer::TrainConfig;
-use crate::util::sync::Signal;
+use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover, Signal};
 use crate::util::timer::Stopwatch;
 
 /// Shape of the service's testbed + worker pools.
@@ -628,7 +628,7 @@ impl DeploymentService {
     /// Run `f` with the performance model read-locked (feedback
     /// inspection, persisting, tests).
     pub fn with_model<R>(&self, f: impl FnOnce(&PerfModel) -> R) -> R {
-        f(&self.model.read().unwrap())
+        f(&read_or_recover(&self.model))
     }
 
     /// Submit a batch of requests. Returns one handle per request, in
@@ -674,7 +674,7 @@ impl DeploymentService {
                     // the lock is only held for the dequeue: all work was
                     // enqueued before the workers started, so recv never
                     // blocks other workers out
-                    let work = work_rx.lock().unwrap().recv();
+                    let work = lock_or_recover(&work_rx).recv();
                     let Ok(Work { req, done }) = work else { break };
                     let outcome = plan_and_dispatch(
                         &registry, &model, &manifest, &catalog, &cluster, &req, &cfg,
@@ -769,19 +769,28 @@ impl DeploymentService {
     /// reference-pinned-eviction contract is "never GC what a queued or
     /// running job still points at" — finished jobs stop pointing.
     fn release_finished_image_pins(&self, handles: &[PlanHandle]) {
-        let mut unpinned = self.unpinned.lock().unwrap();
-        for h in handles.iter() {
-            let Some(out) = h.outcome.as_ref() else { continue };
-            let (Ok(plan), Some(id)) = (&out.plan, out.job_id) else {
-                continue;
-            };
-            if unpinned.contains(&id) {
-                continue;
-            }
+        // collect-then-release: candidates are gathered under the set
+        // lock, but the cluster probe and the registry unpin run with it
+        // dropped — releasing pins must never hold a PerfModel-family
+        // guard across Cluster/Registry work (lock-rank discipline)
+        let candidates: Vec<(ClusterJobId, String)> = {
+            let unpinned = lock_or_recover(&self.unpinned);
+            handles
+                .iter()
+                .filter_map(|h| {
+                    let out = h.outcome.as_ref()?;
+                    let (Ok(plan), Some(id)) = (&out.plan, out.job_id) else {
+                        return None;
+                    };
+                    (!unpinned.contains(&id)).then(|| (id, plan.profile.image_tag()))
+                })
+                .collect()
+        };
+        for (id, tag) in candidates {
             // unknown id (migrated bookkeeping hiccup) counts as finished
             if self.cluster.job_terminal(id).unwrap_or(true) {
-                self.registry.unpin_image(&plan.profile.image_tag());
-                unpinned.insert(id);
+                self.registry.unpin_image(&tag);
+                lock_or_recover(&self.unpinned).insert(id);
             }
         }
     }
@@ -803,7 +812,7 @@ impl DeploymentService {
     /// once.
     fn feed_back_measurements(&self, handles: &[PlanHandle]) {
         let (fresh, waits): (Vec<Record>, Vec<f64>) = {
-            let mut fed = self.fed_back.lock().unwrap();
+            let mut fed = lock_or_recover(&self.fed_back);
             let mut fresh = Vec::new();
             let mut waits = Vec::new();
             for h in handles.iter() {
@@ -847,7 +856,7 @@ impl DeploymentService {
         if fresh.is_empty() && waits.is_empty() {
             return;
         }
-        let mut model = self.model.write().unwrap();
+        let mut model = write_or_recover(&self.model);
         for w in waits {
             model.observe_wait(w);
         }
@@ -878,7 +887,7 @@ impl DeploymentService {
         // model guard dropped before any shard lock: no code path in this
         // service holds both at once (see feed_back_measurements)
         let model_r2 = {
-            let model = self.model.read().unwrap();
+            let model = read_or_recover(&self.model);
             model.is_trained().then_some(model.r2)
         };
         let mut jobs = Vec::with_capacity(handles.len());
@@ -1067,7 +1076,7 @@ fn plan_and_dispatch(
     // container build) runs lock-free, and later requests in a batch see
     // coefficients refreshed by earlier completions' feedback. The read
     // lock means a whole batch of planners can snapshot concurrently.
-    let model = model.read().unwrap().clone();
+    let model = read_or_recover(model).clone();
     let plan = match plan_deployment(registry, &model, manifest, catalog, &req.dsl, cfg) {
         Ok(p) => p,
         Err(e) => {
@@ -1252,6 +1261,61 @@ mod tests {
         assert_eq!(report.completed(), 0);
         // render() must not panic on degenerate reports
         assert!(report.render().contains("makespan"));
+    }
+
+    /// Satellite (PR 7): concurrent publishers overrun the bounded event
+    /// ring before the batch is awaited — `drain_since` must report the
+    /// overflow, and `await_batch` (whose own cursor starts at 0, so its
+    /// first drain sees the same overrun) must fall back to the full
+    /// `poll()` sweep and still resolve every handle.
+    #[test]
+    fn await_batch_survives_event_ring_overflow_via_full_poll_fallback() {
+        use crate::util::sync::SchedEvent;
+        let service = DeploymentService::new(
+            store("overflow"),
+            empty_manifest(),
+            PerfModel::new(),
+            &ServiceConfig { planner_workers: 2, ..ServiceConfig::default() },
+        );
+        // 4 publishers x 2000 events into a 4096-slot ring: over half the
+        // sequence space is evicted before anyone drains
+        let bus = service.cluster().bus();
+        let publishers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let b = Arc::clone(&bus);
+                std::thread::spawn(move || {
+                    for j in 0..2_000u64 {
+                        b.publish(SchedEvent::Submit { shard: 0, job: t * 10_000 + j });
+                    }
+                })
+            })
+            .collect();
+        for p in publishers {
+            p.join().unwrap();
+        }
+        let drained = bus.drain_since(0);
+        assert_eq!(drained.seen, 8_000);
+        assert!(
+            drained.missed > 0,
+            "8000 publishes must overrun the ring: {:?}",
+            (drained.seen, drained.missed, drained.events.len())
+        );
+        // the batch still resolves end-to-end: the overflow forces the
+        // full-sweep backstop instead of a targeted pass, and no handle is
+        // lost or left hanging
+        let cfg = TrainConfig { epochs: 1, steps_per_epoch: 1, seed: 0 };
+        let mut handles = service.submit_many(
+            vec![BatchRequest { label: "x".into(), dsl: dsl("pytorch", "1.14") }],
+            &cfg,
+            true,
+        );
+        let report = service.await_batch(&mut handles, |_| {});
+        assert_eq!(report.jobs.len(), 1);
+        assert_eq!(report.jobs[0].state, 'E'); // build failed without artifacts
+        // the cursor caught up: a fresh drain from the returned position
+        // is clean (nothing further was missed)
+        let after = bus.drain_since(drained.seen);
+        assert_eq!(after.missed, 0, "{:?}", (after.seen, after.events.len()));
     }
 
     /// Tentpole smoke test (no artifacts needed): a multi-shard service

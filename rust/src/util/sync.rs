@@ -16,11 +16,157 @@
 //! * [`CancelToken`] — a shared kill flag threaded from the node watchdog
 //!   into the training step loop, so a walltime-killed payload actually
 //!   stops instead of burning CPU detached.
+//! * [`lock_or_recover`] / [`read_or_recover`] / [`write_or_recover`] —
+//!   poison-recovering lock acquisition. A worker that panics while
+//!   holding a lock poisons it; every other path that then calls
+//!   `.unwrap()` panics too, wedging the whole service off one bad
+//!   request. All MODAK state is either rebuilt per scheduling pass or
+//!   monotonic counters, so recovering the inner value is always safe.
+//!   These helpers are the ONLY sanctioned way to take a lock outside
+//!   this module — `modak lint` (the `poison-policy` rule) enforces it.
+//! * [`LockRank`] / [`rank_acquire`] — the declared lock hierarchy
+//!   (`Registry < PerfModel < Cluster < ShardServer < Stager <
+//!   Counters`). Nested acquisitions must strictly ascend; the static
+//!   side is checked by `modak lint` (`lock-rank` rule, cycle detection
+//!   over the acquires-graph), and `rank_acquire` cross-checks the same
+//!   order dynamically in debug builds via a thread-local held-rank
+//!   stack (wired into the deterministic placement sims).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
 use std::time::Duration;
+
+/// Acquire `m`, recovering the inner value if a previous holder panicked.
+///
+/// Poison is a *notification*, not an invariant violation: every MODAK
+/// structure behind a mutex is either re-derived each scheduling pass
+/// (queues, snapshots) or monotonic bookkeeping (stats, maps), so the
+/// value a panicking thread left behind is still usable. Recovering keeps
+/// one poisoned planner from wedging every subsequent request.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-acquire `l`, recovering from poison (see [`lock_or_recover`]).
+pub fn read_or_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-acquire `l`, recovering from poison (see [`lock_or_recover`]).
+pub fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The declared lock hierarchy, lowest first. Nested acquisitions must
+/// strictly ascend this order (`Registry` outermost, `Counters`
+/// innermost), which makes the acquires-graph a DAG by construction —
+/// deadlock freedom without ever reasoning about individual paths.
+///
+/// The same ranks drive two checkers: `analysis::ranks` assigns one to
+/// every static lock site `modak lint` finds, and [`rank_acquire`]
+/// asserts the dynamic order in debug builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LockRank {
+    /// Registry catalogue + build-pool state (`registry::RegistryHandle`
+    /// inner, `container::BuildPool` state).
+    Registry = 1,
+    /// Service-level model state (`PerfModel` RwLock, feedback/unpin
+    /// sets, planner work queue).
+    PerfModel = 2,
+    /// Cluster-global maps (`ClusterScheduler` id map, image
+    /// distributor).
+    Cluster = 3,
+    /// One shard's `TorqueServer`.
+    ShardServer = 4,
+    /// The dataset `StageManager`.
+    Stager = 5,
+    /// Leaf bookkeeping: `EventBus` ring, `Signal` epoch. Always safe to
+    /// take last; never hold one while calling outward.
+    Counters = 6,
+}
+
+impl LockRank {
+    /// Every rank, ascending.
+    pub const ALL: [LockRank; 6] = [
+        LockRank::Registry,
+        LockRank::PerfModel,
+        LockRank::Cluster,
+        LockRank::ShardServer,
+        LockRank::Stager,
+        LockRank::Counters,
+    ];
+
+    /// The rank's name as `modak lint` spells it.
+    pub fn name(self) -> &'static str {
+        match self {
+            LockRank::Registry => "registry",
+            LockRank::PerfModel => "perfmodel",
+            LockRank::Cluster => "cluster",
+            LockRank::ShardServer => "shard-server",
+            LockRank::Stager => "stager",
+            LockRank::Counters => "counters",
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks this thread currently holds (debug builds only).
+    static HELD_RANKS: std::cell::RefCell<Vec<LockRank>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// RAII witness of a ranked acquisition: dropping it releases the rank
+/// from the thread's held stack (debug builds; free in release).
+pub struct RankWitness {
+    #[cfg_attr(not(debug_assertions), allow(dead_code))]
+    rank: LockRank,
+}
+
+impl Drop for RankWitness {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        HELD_RANKS.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|&r| r == self.rank) {
+                held.remove(pos);
+            }
+        });
+    }
+}
+
+/// Record a ranked lock acquisition on this thread. In debug builds this
+/// asserts the acquisition strictly ascends every rank already held —
+/// the dynamic twin of the `modak lint` static `lock-rank` rule — and
+/// panics on a violation naming both ranks. Release builds keep only the
+/// RAII shape (no bookkeeping, no cost on the hot path).
+///
+/// The deterministic placement sims call this along their event loops,
+/// so one CI run exercises the declared order both statically and
+/// dynamically.
+#[must_use = "the witness releases the rank on drop; binding it to _ releases immediately"]
+pub fn rank_acquire(rank: LockRank) -> RankWitness {
+    #[cfg(debug_assertions)]
+    HELD_RANKS.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(&top) = held.iter().max() {
+            assert!(
+                rank > top,
+                "lock-rank violation: acquiring {} (rank {}) while {} (rank {}) is held \
+                 — nested acquisitions must strictly ascend the declared hierarchy",
+                rank.name(),
+                rank as u8,
+                top.name(),
+                top as u8,
+            );
+        }
+        held.push(rank);
+    });
+    RankWitness { rank }
+}
 
 /// Epoch-counting condvar. Every `notify()` bumps the epoch and wakes all
 /// waiters; `wait_past(seen, timeout)` returns as soon as the epoch exceeds
@@ -448,5 +594,126 @@ mod tests {
         let seen = signal.epoch();
         bus.publish(ev(1, 1));
         assert!(signal.wait_past(seen, Duration::from_secs(30)) > seen);
+    }
+
+    /// Satellite (overflow path): concurrent publishers overrun a small
+    /// ring from four threads at once. No publish is ever lost from the
+    /// sequence numbering — the drain reports exactly how many events
+    /// the ring evicted, and the survivors are the newest `cap` in
+    /// publication order.
+    #[test]
+    fn bus_concurrent_publishers_overflow_reports_every_missed_event() {
+        const THREADS: u64 = 4;
+        const PER: u64 = 100;
+        const CAP: usize = 8;
+        let bus = Arc::new(EventBus::<SchedEvent>::with_capacity(CAP));
+        let publishers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let bus = Arc::clone(&bus);
+                std::thread::spawn(move || {
+                    for j in 0..PER {
+                        bus.publish(ev(t as usize, j));
+                    }
+                })
+            })
+            .collect();
+        for p in publishers {
+            p.join().unwrap();
+        }
+        let d = bus.drain_since(0);
+        assert_eq!(d.seen, THREADS * PER, "every publish got a sequence");
+        assert_eq!(d.events.len(), CAP, "ring keeps the newest cap events");
+        assert_eq!(
+            d.missed,
+            THREADS * PER - CAP as u64,
+            "the gap is reported exactly, never silently swallowed"
+        );
+        // a consumer that drains from the reported cursor sees no gap
+        let d2 = bus.drain_since(d.seen);
+        assert_eq!(d2.missed, 0);
+        assert!(d2.events.is_empty());
+    }
+
+    /// A thread that panics while holding the lock poisons it; the
+    /// recovery helpers hand the inner value back instead of cascading
+    /// the panic into every later caller.
+    #[test]
+    fn lock_or_recover_survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41u64));
+        let m2 = Arc::clone(&m);
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("worker dies while holding the lock");
+        });
+        assert!(t.join().is_err());
+        assert!(m.lock().is_err(), "the mutex really is poisoned");
+        let mut g = lock_or_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn read_write_or_recover_survive_a_poisoned_rwlock() {
+        let l = Arc::new(RwLock::new(7u64));
+        let l2 = Arc::clone(&l);
+        let t = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("writer dies while holding the lock");
+        });
+        assert!(t.join().is_err());
+        assert!(l.read().is_err(), "the rwlock really is poisoned");
+        assert_eq!(*read_or_recover(&l), 7);
+        *write_or_recover(&l) += 1;
+        assert_eq!(*read_or_recover(&l), 8);
+    }
+
+    /// Ascending the declared hierarchy is fine, including re-ascending
+    /// after a release; the witness stack unwinds in any drop order.
+    #[test]
+    fn rank_acquire_accepts_strictly_ascending_chains() {
+        let a = rank_acquire(LockRank::Cluster);
+        let b = rank_acquire(LockRank::ShardServer);
+        let c = rank_acquire(LockRank::Counters);
+        drop(c);
+        let c2 = rank_acquire(LockRank::Counters);
+        drop(b);
+        drop(c2);
+        drop(a);
+        // fully released: starting over from the bottom is legal again
+        let _r = rank_acquire(LockRank::Registry);
+    }
+
+    /// Descending (or repeating) a rank while a higher one is held is
+    /// the deadlock shape the hierarchy bans: debug builds panic.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn rank_acquire_panics_on_descent() {
+        let t = std::thread::spawn(|| {
+            let _srv = rank_acquire(LockRank::ShardServer);
+            let _reg = rank_acquire(LockRank::Registry); // descent: boom
+        });
+        assert!(
+            t.join().is_err(),
+            "acquiring registry under shard-server must panic in debug builds"
+        );
+    }
+
+    #[test]
+    fn lock_rank_order_matches_the_declared_hierarchy() {
+        let names: Vec<&str> = LockRank::ALL.iter().map(|r| r.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "registry",
+                "perfmodel",
+                "cluster",
+                "shard-server",
+                "stager",
+                "counters"
+            ]
+        );
+        for w in LockRank::ALL.windows(2) {
+            assert!(w[0] < w[1], "{:?} must rank below {:?}", w[0], w[1]);
+        }
     }
 }
