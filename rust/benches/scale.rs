@@ -26,6 +26,10 @@ fn json_entry(mode: CoreMode, out: &ScaleOutcome, rss: u64) -> String {
         "  \"{}\": {{\n    \"jobs\": {},\n    \"shards\": 64,\n    \
          \"events\": {},\n    \"wall_secs\": {:.4},\n    \
          \"mean_overhead_ms_per_job\": {:.4},\n    \
+         \"p50_queue_wait_secs\": {},\n    \
+         \"p99_queue_wait_secs\": {},\n    \
+         \"p50_overhead_secs\": {},\n    \
+         \"p99_overhead_secs\": {},\n    \
          \"makespan_millis\": {},\n    \"peak_queue\": {},\n    \
          \"peak_rss_bytes\": {}\n  }}",
         mode.as_str().replace('-', "_"),
@@ -33,6 +37,10 @@ fn json_entry(mode: CoreMode, out: &ScaleOutcome, rss: u64) -> String {
         out.events,
         out.wall_secs,
         out.mean_overhead_ms_per_job,
+        out.p50_queue_wait_secs,
+        out.p99_queue_wait_secs,
+        out.p50_overhead_secs,
+        out.p99_overhead_secs,
         out.makespan_millis,
         out.peak_queue,
         rss,
@@ -65,6 +73,27 @@ fn main() {
             rss as f64 / (1024.0 * 1024.0),
         );
     }
+
+    // obs histogram percentiles (ISSUE 8): queue wait is simulated time
+    // (deterministic, identical across cores); overhead is real time
+    println!(
+        "\n{:<14} {:>14} {:>14} {:>14} {:>14}",
+        "percentiles", "p50 wait(s)", "p99 wait(s)", "p50 ovh(us)", "p99 ovh(us)"
+    );
+    for (mode, out) in [(CoreMode::EventDriven, &event), (CoreMode::PollDriven, &poll)] {
+        println!(
+            "{:<14} {:>14.6} {:>14.6} {:>14.2} {:>14.2}",
+            mode.as_str(),
+            out.p50_queue_wait_secs,
+            out.p99_queue_wait_secs,
+            out.p50_overhead_secs * 1e6,
+            out.p99_overhead_secs * 1e6,
+        );
+    }
+    assert_eq!(
+        event.p99_queue_wait_secs, poll.p99_queue_wait_secs,
+        "identical schedules must produce identical simulated waits"
+    );
 
     // the two cores must have made identical decisions: same schedule
     assert_eq!(event.makespan_millis, poll.makespan_millis);

@@ -3,7 +3,7 @@
 //! receiver (the expression the lock was taken on) against this table,
 //! and nested acquisitions must strictly ascend the hierarchy
 //! (`registry < perfmodel < cluster < shard-server < stager <
-//! counters`). The runtime twin lives in `util::sync::rank_acquire`.
+//! counters < obs`). The runtime twin lives in `util::sync::rank_acquire`.
 //!
 //! The analyzer also accumulates the **acquires-graph** — an edge for
 //! every observed "rank A held while rank B is taken", recorded even
@@ -92,6 +92,11 @@ pub const RANK_TABLE: &[RankEntry] = &[
         receiver: "stager",
         rank: LockRank::Stager,
     },
+    RankEntry {
+        file_suffix: "",
+        receiver: "collector",
+        rank: LockRank::Obs,
+    },
 ];
 
 /// The rank of a lock site: `file` is the repo-relative path, `receiver`
@@ -134,7 +139,7 @@ impl AcquiresGraph {
     /// A cycle in the acquires-graph, as the ranks along it (first rank
     /// repeated at the end), or `None` when the graph is a DAG.
     pub fn find_cycle(&self) -> Option<Vec<LockRank>> {
-        // tiny graph (≤ 6 nodes): plain DFS with an explicit path
+        // tiny graph (≤ 7 nodes): plain DFS with an explicit path
         for &start in LockRank::ALL.iter() {
             let mut path = vec![start];
             if let Some(cycle) = self.dfs(start, &mut path) {

@@ -10,7 +10,7 @@
 //!   block on the very lock the publisher still holds.
 //! * `lock-rank` — every lock site gets a rank from `analysis/ranks.rs`
 //!   (`registry < perfmodel < cluster < shard-server < stager <
-//!   counters`); nested acquisitions must strictly ascend. The observed
+//!   counters < obs`); nested acquisitions must strictly ascend. The observed
 //!   acquires-graph is accumulated for the global cycle check.
 //! * `publish-after-mutate` — a `SchedEvent` publish must lexically
 //!   follow a state mutation in its enclosing function: events announce

@@ -419,6 +419,7 @@ impl ClusterScheduler {
             },
         );
         drop(map);
+        crate::obs::metrics::global().jobs_submitted.inc();
         self.bus.publish(SchedEvent::Submit { shard, job: gid });
         Ok(gid)
     }
@@ -566,6 +567,7 @@ impl ClusterScheduler {
                     map.migrations += 1;
                     map.migrations_in[to] += 1;
                     drop(map);
+                    crate::obs::metrics::global().migrations.inc();
                     if let Some(gid) = gid {
                         self.move_pin(gid, to);
                         // a migration is a fresh submit on the destination
@@ -633,6 +635,11 @@ impl ClusterScheduler {
                             map.migrations_in[to] += 1;
                         }
                         drop(map);
+                        if to != from {
+                            let m = crate::obs::metrics::global();
+                            m.migrations.inc();
+                            m.migrations_elastic.inc();
+                        }
                         if let Some(gid) = gid {
                             if to != from {
                                 self.move_pin(gid, to);
@@ -747,6 +754,7 @@ impl ClusterScheduler {
                 };
                 let asked = lock_or_recover(&self.shards[from].server).preempt(local);
                 if asked.is_ok() {
+                    crate::obs::metrics::global().jobs_preempted.inc();
                     self.bus.publish(SchedEvent::Preempt {
                         shard: from,
                         job: gid,

@@ -390,11 +390,14 @@ impl BuildPool {
             match found {
                 Found::Done(img) => {
                     st.stats.cache_hits += 1;
+                    // cross-batch observability (an atomic bump, no lock)
+                    crate::obs::metrics::global().build_cache_hits.inc();
                     st.lru.touch(&key); // keep hot bundles off the GC list
                     return Ok(img);
                 }
                 Found::Failed(e) => {
                     st.stats.cache_hits += 1;
+                    crate::obs::metrics::global().build_cache_hits.inc();
                     return Err(anyhow!("cached build failure for {name}:{tag}: {e}"));
                 }
                 Found::InFlight => {
@@ -424,6 +427,7 @@ impl BuildPool {
         let index_snapshot = match &result {
             Ok(img) => {
                 st.stats.builds += 1;
+                crate::obs::metrics::global().builds.inc();
                 st.slots.insert(key.clone(), BuildSlot::Done(img.clone()));
                 // store GC: track the new bundle, collect whatever the LRU
                 // pushed past the cap (never the bundle just built)
@@ -467,6 +471,7 @@ impl BuildPool {
     /// bundle found on disk by the registry).
     pub fn note_prebuilt_hit(&self) {
         lock_or_recover(&self.state).stats.cache_hits += 1;
+        crate::obs::metrics::global().build_cache_hits.inc();
     }
 
     /// Reference-pin every cached bundle for image `reference`

@@ -213,6 +213,7 @@ impl StageManager {
         let evicted = cache.insert(spec.digest.clone(), spec.size_bytes);
         let secs = spec.transfer_secs(SHARED_LATENCY_SECS, SHARED_BW_BYTES_PER_SEC);
         self.stats[shard].add_shard_miss(spec.size_bytes, secs, evicted.len() as u64);
+        crate::obs::metrics::global().staging_seconds.observe(secs);
         secs
     }
 
@@ -238,6 +239,7 @@ impl StageManager {
             let evicted = cache.insert(spec.digest.clone(), spec.size_bytes);
             let secs = spec.transfer_secs(NODE_LATENCY_SECS, NODE_BW_BYTES_PER_SEC);
             self.stats[shard].add_node_miss(spec.size_bytes, secs, evicted.len() as u64);
+            crate::obs::metrics::global().staging_seconds.observe(secs);
         }
         Some(IoProfile::for_spec(&spec))
     }

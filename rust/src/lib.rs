@@ -16,6 +16,7 @@ pub mod container;
 pub mod data;
 pub mod dsl;
 pub mod metrics;
+pub mod obs;
 pub mod optimiser;
 pub mod perfmodel;
 pub mod placement;

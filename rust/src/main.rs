@@ -12,6 +12,9 @@
 //!   probe       — run one (variant, policy) combo outside the scheduler,
 //!                 optionally on N concurrent engines
 //!   bench       — regenerate the paper's tables and figures
+//!   trace       — summarise a Chrome-trace file emitted by the flight
+//!                 recorder (per-phase percentiles + per-job critical path)
+//!   sim-trace   — emit the deterministic placement-sim golden trace
 //!
 //! Both `optimise --submit` and `serve-batch` run through the same
 //! [`DeploymentService`], so a single request is just a batch of one.
@@ -46,7 +49,7 @@ USAGE:
               [--rebalance queued|elastic] [--rebalance-margin-secs F]
               [--max-build-workers N] [--slots-per-node N]
               [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
-              [--store-cap-mb N]
+              [--store-cap-mb N] [--trace-out <file>] [--metrics-out <file>]
   modak build --tag <image:tag>
   modak registry [--table1]
   modak submit --script <file>
@@ -55,6 +58,15 @@ USAGE:
               [--workload W] [--steps N] [--threads N]
   modak bench <table1|fig3|fig4_left|fig4_right|fig5_left|fig5_right|all>
               [--out <markdown file>]
+  modak trace <trace.json> [--check]
+              summarise a flight-recorder Chrome trace: per-phase
+              p50/p95/p99 + per-job critical-path breakdown (wall time
+              accounted phase by phase, unexplained gaps explicit).
+              --check exits non-zero on span-tree invariant violations
+  modak sim-trace [--out <file>]
+              emit the deterministic placement-sim golden trace (the
+              elastic two-shard fixture; byte-stable across runs — CI
+              diffs it against GOLDEN_trace.json)
   modak lint [--root <dir>] [--deny-warnings] [--rules]
               concurrency invariant analyzer: scans the source tree
               (default --root rust/src) for lock guards held across
@@ -103,6 +115,11 @@ COMMON FLAGS:
                           block; MODAK stages it shared store -> shard
                           cache -> node scratch and overlaps streaming IO
                           with compute (see README, data pipeline)
+  --trace-out <file>      serve-batch: write the batch's span tree as
+                          Chrome trace_event JSON (load in Perfetto /
+                          chrome://tracing, or feed to `modak trace`)
+  --metrics-out <file>    serve-batch: write the metrics registry in
+                          Prometheus text exposition format
 ";
 
 fn main() {
@@ -207,6 +224,8 @@ fn run(args: &[String]) -> Result<()> {
         "train" => cmd_train(&cli, artifacts_dir, store),
         "probe" => cmd_probe(&cli, artifacts_dir),
         "bench" => cmd_bench(&cli, artifacts_dir, store, history),
+        "trace" => cmd_trace(&cli),
+        "sim-trace" => cmd_sim_trace(&cli),
         "lint" => cmd_lint(&cli),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
@@ -428,6 +447,60 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
     });
 
     println!("\n{}", report.render());
+
+    // flight-recorder exports: the span tree as a Perfetto-loadable
+    // Chrome trace, the metrics registry as Prometheus text exposition
+    if let Some(path) = cli.get("trace-out") {
+        let spans = service.recorder().finish();
+        let json = modak::obs::export::chrome_trace(&spans);
+        std::fs::write(path, json).with_context(|| format!("writing trace {path:?}"))?;
+        println!(
+            "trace: {} span(s) over {} job(s) -> {path}",
+            spans.len(),
+            spans.jobs().len()
+        );
+    }
+    if let Some(path) = cli.get("metrics-out") {
+        let text = modak::obs::metrics::global().render_prometheus();
+        std::fs::write(path, text)
+            .with_context(|| format!("writing metrics {path:?}"))?;
+        println!("metrics: prometheus exposition -> {path}");
+    }
+    Ok(())
+}
+
+/// `modak trace` — summarise a flight-recorder Chrome trace: per-phase
+/// latency percentiles plus a per-job critical-path breakdown that
+/// accounts for each job's wall time phase by phase.
+fn cmd_trace(cli: &Cli) -> Result<()> {
+    let path = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("trace needs a <trace.json> file"))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+    let spans = modak::obs::export::parse_chrome_trace(&text)
+        .map_err(|e| anyhow!("parsing trace {path:?}: {e}"))?;
+    let summary = modak::obs::export::summarise(&spans);
+    print!("{}", summary.render());
+    if cli.get("check").is_some() && !summary.violations.is_empty() {
+        bail!("{} span-tree violation(s)", summary.violations.len());
+    }
+    Ok(())
+}
+
+/// `modak sim-trace` — emit the deterministic placement-sim golden trace
+/// (byte-stable: CI diffs it against the committed GOLDEN_trace.json).
+fn cmd_sim_trace(cli: &Cli) -> Result<()> {
+    let json = modak::placement::sim::golden_trace_json();
+    match cli.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json)
+                .with_context(|| format!("writing golden trace {path:?}"))?;
+            println!("golden trace -> {path}");
+        }
+        None => print!("{json}"),
+    }
     Ok(())
 }
 

@@ -1,0 +1,339 @@
+//! Span collection: a pure state machine over the `SchedEvent` taxonomy
+//! plus explicit instrumentation points, wrapped in a thread-safe
+//! [`Recorder`] that taps the cluster's [`EventBus`] without consuming
+//! anyone else's cursor.
+//!
+//! [`Collector`] is clock-free — every transition takes an explicit
+//! microsecond timestamp — so the event→span derivation is unit-testable
+//! and the deterministic sims can drive it with simulated time. The
+//! [`Recorder`] adds the wall clock (an `Instant` origin), its own bus
+//! cursor, and a `LockRank::Obs`-ranked mutex that is always taken
+//! *after* the bus lock has been released (obs ranks innermost; holding
+//! it across a bus call would descend the hierarchy).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::obs::span::{Span, SpanSet, ROOT};
+use crate::util::sync::{lock_or_recover, EventBus, SchedEvent};
+
+/// Pure span-derivation state machine. Event semantics (matching the
+/// publish sites in cluster/scheduler):
+/// * `Submit` — the job is queued on a shard: open a `queue` span. A
+///   re-`Submit` while already queued is a queued-job migration (keep
+///   the original wait start, move the shard); a `Submit` after a
+///   checkpoint is the restart re-queue (new sibling `queue` span).
+/// * `Dispatch` — close the `queue` span, open a `train` span.
+/// * `Preempt` — the rebalancer asked for a checkpoint; the job keeps
+///   training until the boundary, so this only counts.
+/// * `CheckpointReady` — close the current `train` segment (a sibling
+///   segment opens at the restart `Dispatch`).
+/// * `Complete` — close the `train` segment and mark completion; the
+///   root span is synthesised in [`Collector::finish`].
+#[derive(Debug, Default)]
+pub struct Collector {
+    /// job → (queue-wait start µs, shard currently queued on)
+    open_queue: BTreeMap<u64, (u64, usize)>,
+    /// job → (train segment start µs, shard running on)
+    open_train: BTreeMap<u64, (u64, usize)>,
+    /// job → (completion µs, shard it completed on)
+    completed: BTreeMap<u64, (u64, usize)>,
+    preemptions: u64,
+    spans: Vec<Span>,
+}
+
+impl Collector {
+    pub fn new() -> Collector {
+        Collector::default()
+    }
+
+    pub fn apply(&mut self, ev: &SchedEvent, t_us: u64) {
+        match *ev {
+            SchedEvent::Submit { shard, job } => {
+                // keep the original wait start on migration re-submits
+                let start = self.open_queue.get(&job).map(|&(s, _)| s).unwrap_or(t_us);
+                self.open_queue.insert(job, (start, shard));
+            }
+            SchedEvent::Dispatch { shard, job } => {
+                if let Some((start, _)) = self.open_queue.remove(&job) {
+                    self.push_closed(job, "queue", start, t_us, shard);
+                }
+                self.open_train.entry(job).or_insert((t_us, shard));
+            }
+            SchedEvent::Preempt { .. } => {
+                self.preemptions += 1;
+            }
+            SchedEvent::CheckpointReady { job, .. } => {
+                if let Some((start, on)) = self.open_train.remove(&job) {
+                    self.push_closed(job, "train", start, t_us, on);
+                }
+            }
+            SchedEvent::Complete { shard, job } => {
+                if let Some((start, on)) = self.open_train.remove(&job) {
+                    self.push_closed(job, "train", start, t_us, on);
+                }
+                self.completed.entry(job).or_insert((t_us, shard));
+            }
+        }
+    }
+
+    /// Explicit instrumentation for phases the bus never announces
+    /// (`plan`, `build`, `stage:image`, `stage:dataset`).
+    pub fn record_span(&mut self, job: u64, name: &str, start_us: u64, end_us: u64, shard: usize) {
+        self.push_closed(job, name, start_us, end_us.max(start_us), shard);
+    }
+
+    fn push_closed(&mut self, job: u64, name: &str, start_us: u64, end_us: u64, shard: usize) {
+        self.spans.push(Span {
+            job,
+            name: name.to_string(),
+            start_us,
+            dur_us: end_us - start_us,
+            shard,
+            node: 0,
+        });
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// The finished span tree: all closed spans plus one synthetic
+    /// [`ROOT`] per *completed* job spanning first-seen → completion.
+    /// Jobs still in flight (open queue/train state) contribute their
+    /// closed spans but no root — the span-tree `check()` reports them
+    /// as orphans, which is exactly the "no orphan spans after
+    /// `await_batch` returns" invariant.
+    pub fn finish(&self) -> SpanSet {
+        let mut set = SpanSet::new();
+        for s in &self.spans {
+            set.push(s.clone());
+        }
+        for (&job, &(done_us, shard)) in &self.completed {
+            let first = self
+                .spans
+                .iter()
+                .filter(|s| s.job == job)
+                .map(|s| s.start_us)
+                .min()
+                .unwrap_or(done_us);
+            set.push(Span {
+                job,
+                name: ROOT.to_string(),
+                start_us: first,
+                dur_us: done_us - first,
+                shard,
+                node: 0,
+            });
+        }
+        set.normalize();
+        set
+    }
+}
+
+/// Thread-safe flight recorder: a [`Collector`] behind an `Obs`-ranked
+/// mutex, a private bus cursor, and a wall-clock origin.
+///
+/// Single-drainer contract: one consumer (the deployment service's
+/// `await_batch` loop) calls [`Recorder::drain`]; concurrent drains
+/// could interleave cursor updates and apply a window twice. The cursor
+/// lives outside the collector lock so the bus's internal lock (rank
+/// `counters`) is fully released before the obs lock is taken.
+#[derive(Debug)]
+pub struct Recorder {
+    collector: Mutex<Collector>,
+    cursor: AtomicU64,
+    /// Bus events evicted before we drained them (ring overflow); the
+    /// affected spans may be missing edges. Surfaced, never silent.
+    missed: AtomicU64,
+    origin: Instant,
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            collector: Mutex::new(Collector::new()),
+            cursor: AtomicU64::new(0),
+            missed: AtomicU64::new(0),
+            origin: Instant::now(),
+        }
+    }
+
+    /// Microseconds since the recorder was created.
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Drain every bus event published since our cursor and fold it
+    /// into the collector. Non-consuming for other subscribers: the
+    /// bus is multi-consumer per cursor, and this cursor is ours alone.
+    pub fn drain(&self, bus: &EventBus<SchedEvent>) {
+        let d = bus.drain_since(self.cursor.load(Ordering::Acquire));
+        self.cursor.store(d.seen, Ordering::Release);
+        self.missed.fetch_add(d.missed, Ordering::Relaxed);
+        if d.events.is_empty() {
+            return;
+        }
+        let t = self.now_us();
+        let mut c = lock_or_recover(&self.collector);
+        for ev in &d.events {
+            c.apply(ev, t);
+        }
+    }
+
+    /// Explicit instrumentation entry (plan/build/stage phases).
+    pub fn record_span(&self, job: u64, name: &str, start_us: u64, end_us: u64, shard: usize) {
+        let mut c = lock_or_recover(&self.collector);
+        c.record_span(job, name, start_us, end_us, shard);
+    }
+
+    pub fn missed(&self) -> u64 {
+        self.missed.load(Ordering::Relaxed)
+    }
+
+    pub fn finish(&self) -> SpanSet {
+        lock_or_recover(&self.collector).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::{rank_acquire, LockRank};
+
+    fn drive(collector: &mut Collector, script: &[(SchedEvent, u64)]) {
+        for (ev, t) in script {
+            collector.apply(ev, *t);
+        }
+    }
+
+    /// Satellite (span-tree invariants): a plain submit → dispatch →
+    /// complete lifecycle yields exactly one complete root span and a
+    /// sound tree.
+    #[test]
+    fn plain_lifecycle_yields_one_complete_root() {
+        let mut c = Collector::new();
+        drive(
+            &mut c,
+            &[
+                (SchedEvent::Submit { shard: 0, job: 1 }, 0),
+                (SchedEvent::Dispatch { shard: 0, job: 1 }, 5),
+                (SchedEvent::Complete { shard: 0, job: 1 }, 105),
+            ],
+        );
+        let set = c.finish();
+        assert!(set.check().is_empty(), "{:?}", set.check());
+        let roots: Vec<_> = set.spans_for(1).into_iter().filter(|s| s.name == ROOT).collect();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].start_us, 0);
+        assert_eq!(roots[0].dur_us, 105);
+        let queue: Vec<_> = set.spans_for(1).into_iter().filter(|s| s.name == "queue").collect();
+        assert_eq!((queue[0].start_us, queue[0].dur_us), (0, 5));
+    }
+
+    /// Satellite (span-tree invariants): a preempted job carries ≥2
+    /// sibling `train` segments whose wall times sum to the cumulative
+    /// training time — the checkpoint gap is queue+stage, never
+    /// double-counted train time.
+    #[test]
+    fn preempted_job_carries_sibling_train_segments_without_double_count() {
+        let mut c = Collector::new();
+        drive(
+            &mut c,
+            &[
+                (SchedEvent::Submit { shard: 0, job: 7 }, 0),
+                (SchedEvent::Dispatch { shard: 0, job: 7 }, 0),
+                (SchedEvent::Preempt { shard: 0, job: 7 }, 40),
+                (SchedEvent::CheckpointReady { shard: 0, job: 7 }, 50),
+                (SchedEvent::Submit { shard: 1, job: 7 }, 50), // restart re-queue
+                (SchedEvent::Dispatch { shard: 1, job: 7 }, 60),
+                (SchedEvent::Complete { shard: 1, job: 7 }, 100),
+            ],
+        );
+        let set = c.finish();
+        assert!(set.check().is_empty(), "{:?}", set.check());
+        let trains: Vec<_> = set.spans_for(7).into_iter().filter(|s| s.name == "train").collect();
+        assert_eq!(trains.len(), 2, "one segment per side of the checkpoint");
+        assert_eq!(trains.iter().map(|s| s.dur_us).sum::<u64>(), 50 + 40);
+        assert_eq!(trains[0].shard, 0, "first segment on the source shard");
+        assert_eq!(trains[1].shard, 1, "restart segment on the destination");
+        assert_eq!(c.preemptions(), 1);
+    }
+
+    /// A queued-job migration re-`Submit` keeps the original wait start
+    /// (queue wait is measured from first submission, not the move).
+    #[test]
+    fn queued_migration_preserves_the_original_wait_start() {
+        let mut c = Collector::new();
+        drive(
+            &mut c,
+            &[
+                (SchedEvent::Submit { shard: 0, job: 3 }, 10),
+                (SchedEvent::Submit { shard: 1, job: 3 }, 30), // migrated while queued
+                (SchedEvent::Dispatch { shard: 1, job: 3 }, 50),
+                (SchedEvent::Complete { shard: 1, job: 3 }, 90),
+            ],
+        );
+        let set = c.finish();
+        let queue: Vec<_> = set.spans_for(3).into_iter().filter(|s| s.name == "queue").collect();
+        assert_eq!(queue.len(), 1);
+        assert_eq!((queue[0].start_us, queue[0].dur_us, queue[0].shard), (10, 40, 1));
+    }
+
+    /// Satellite (span-tree invariants): in-flight jobs stay rootless —
+    /// finish() marks them as orphans until their `Complete` arrives,
+    /// which is how "no orphans after `await_batch` returns" is checked.
+    #[test]
+    fn in_flight_jobs_have_no_root_until_complete() {
+        let mut c = Collector::new();
+        c.apply(&SchedEvent::Submit { shard: 0, job: 9 }, 0);
+        c.apply(&SchedEvent::Dispatch { shard: 0, job: 9 }, 5);
+        let mid = c.finish();
+        assert_eq!(mid.check().len(), 1, "open job reports as an orphan");
+        c.apply(&SchedEvent::Complete { shard: 0, job: 9 }, 50);
+        assert!(c.finish().check().is_empty());
+    }
+
+    /// The recorder tap is non-consuming: its cursor is private, so a
+    /// second subscriber still sees the full stream; ring overflow is
+    /// surfaced in `missed()` instead of silently dropping spans.
+    #[test]
+    fn recorder_taps_the_bus_without_consuming_and_reports_overflow() {
+        let bus: EventBus<SchedEvent> = EventBus::with_capacity(4);
+        let rec = Recorder::new();
+        bus.publish(SchedEvent::Submit { shard: 0, job: 1 });
+        bus.publish(SchedEvent::Dispatch { shard: 0, job: 1 });
+        rec.drain(&bus);
+        bus.publish(SchedEvent::Complete { shard: 0, job: 1 });
+        rec.drain(&bus);
+        assert_eq!(rec.missed(), 0);
+        assert!(rec.finish().check().is_empty());
+        // an independent cursor drains the same ring unaffected
+        let d = bus.drain_since(0);
+        assert_eq!(d.events.len(), 3);
+        // overflow a tiny ring: the gap is counted, not swallowed
+        for j in 10..20 {
+            bus.publish(SchedEvent::Submit { shard: 0, job: j });
+        }
+        rec.drain(&bus);
+        assert!(rec.missed() > 0);
+    }
+
+    /// The obs lock ranks innermost: taking it under the full scheduler
+    /// stack is legal, and the recorder never holds it across a bus
+    /// call (drain releases the bus lock before locking the collector).
+    #[test]
+    fn obs_lock_ranks_innermost_under_the_full_stack() {
+        let _cluster = rank_acquire(LockRank::Cluster);
+        let _counters = rank_acquire(LockRank::Counters);
+        let _obs = rank_acquire(LockRank::Obs);
+    }
+}

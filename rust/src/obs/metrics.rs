@@ -1,0 +1,441 @@
+//! Lock-free metrics: counters, gauges, and log-bucketed histograms on
+//! relaxed atomics, plus the process-global [`Registry`] and Prometheus
+//! text exposition.
+//!
+//! Deliberately passes the PR 7 `no-mutexed-counters` discipline: every
+//! primitive here is a bare atomic — incrementing a counter or observing
+//! a histogram sample never takes a lock, so instrumentation sites can
+//! sit on scheduler hot paths without widening any critical section.
+//! Readers (`get`, quantiles, exposition) are racy-by-design snapshots,
+//! exactly like `data::stage::DataStageCounters`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// A monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value (f64 stored as bits).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of finite log₂ buckets: bounds `1e-6 · 2^i` for `i = 0..40`
+/// (1 µs up to ~6.4 days in seconds), plus one `+Inf` overflow bucket.
+pub const FINITE_BUCKETS: usize = 40;
+
+/// Upper bounds of the finite buckets. Repeated doubling from `1e-6` is
+/// exact in f64 (only the exponent moves), so the bounds — and their
+/// shortest-round-trip `Display` forms in the exposition — are stable.
+pub fn bucket_bounds() -> Vec<f64> {
+    let mut bounds = Vec::with_capacity(FINITE_BUCKETS);
+    let mut b = 1e-6;
+    for _ in 0..FINITE_BUCKETS {
+        bounds.push(b);
+        b *= 2.0;
+    }
+    bounds
+}
+
+/// A log₂-bucketed histogram of non-negative f64 samples (seconds, by
+/// convention). `observe` is three relaxed atomic ops — no locks; the
+/// running sum is a CAS loop over the f64 bit pattern.
+#[derive(Debug)]
+pub struct Histogram {
+    /// `FINITE_BUCKETS + 1` slots; the last is the `+Inf` overflow.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Running sum of samples, f64 stored as bits and CAS-accumulated.
+    sum_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let mut buckets = Vec::with_capacity(FINITE_BUCKETS + 1);
+        for _ in 0..=FINITE_BUCKETS {
+            buckets.push(AtomicU64::new(0));
+        }
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Index of the bucket a sample lands in: the first bound `>= v`
+    /// (values at a bound land in that bound's bucket), overflow past
+    /// the last finite bound. Negative/NaN samples clamp to bucket 0.
+    fn index(v: f64) -> usize {
+        if v.is_nan() || v <= 1e-6 {
+            return 0;
+        }
+        // bounds are 1e-6 * 2^i: the index is ceil(log2(v / 1e-6)),
+        // computed by doubling to stay bit-exact with bucket_bounds()
+        let mut bound = 1e-6;
+        for i in 0..FINITE_BUCKETS {
+            if v <= bound {
+                return i;
+            }
+            bound *= 2.0;
+        }
+        FINITE_BUCKETS
+    }
+
+    pub fn observe(&self, v: f64) {
+        self.buckets[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let _ = self
+            .sum_bits
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + v).to_bits())
+            });
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket counts (racy snapshot, oldest-first).
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Nearest-rank quantile, resolved to the upper bound of the bucket
+    /// holding that rank (`+Inf` overflow reports `f64::INFINITY`, an
+    /// empty histogram 0.0). `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let snap = self.snapshot();
+        let total: u64 = snap.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let bounds = bucket_bounds();
+        let mut seen = 0u64;
+        for (i, n) in snap.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return if i < FINITE_BUCKETS {
+                    bounds[i]
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Fold `other` into `self` (bucket-wise add). Merging per-shard
+    /// histograms must equal the whole-cluster histogram — pinned in
+    /// tests below.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.snapshot()) {
+            mine.fetch_add(theirs, Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        let add = other.sum();
+        let _ = self
+            .sum_bits
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + add).to_bits())
+            });
+    }
+}
+
+/// The metric catalogue. One instance per process via [`global`]; tests
+/// construct local instances so concurrent test threads never share
+/// state through the global.
+#[derive(Debug, Default)]
+pub struct Registry {
+    /// Jobs accepted by `ClusterScheduler::submit`.
+    pub jobs_submitted: Counter,
+    /// Jobs whose terminal result a node reported.
+    pub jobs_completed: Counter,
+    /// Elastic-rebalance checkpoint requests issued to running jobs.
+    pub jobs_preempted: Counter,
+    /// Queued-job cross-shard migrations.
+    pub migrations: Counter,
+    /// Checkpoint/restart (elastic) migrations.
+    pub migrations_elastic: Counter,
+    /// Container builds executed (cache misses).
+    pub builds: Counter,
+    /// Builds satisfied from the digest-keyed cache.
+    pub build_cache_hits: Counter,
+    /// Jobs still in flight at the service's last `await_batch` sweep.
+    pub queue_depth: Gauge,
+    /// Seconds from submission to dispatch, net of prior run time.
+    pub queue_wait_seconds: Histogram,
+    /// Scheduler bookkeeping seconds per job (event-driven core).
+    pub scheduler_overhead_seconds: Histogram,
+    /// Seconds spent staging a dataset to a shard cache (misses only).
+    pub staging_seconds: Histogram,
+    /// Wall seconds per training epoch.
+    pub train_epoch_seconds: Histogram,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn counters(&self) -> [(&'static str, &Counter); 7] {
+        [
+            ("modak_jobs_submitted", &self.jobs_submitted),
+            ("modak_jobs_completed", &self.jobs_completed),
+            ("modak_jobs_preempted", &self.jobs_preempted),
+            ("modak_migrations", &self.migrations),
+            ("modak_migrations_elastic", &self.migrations_elastic),
+            ("modak_builds", &self.builds),
+            ("modak_build_cache_hits", &self.build_cache_hits),
+        ]
+    }
+
+    fn histograms(&self) -> [(&'static str, &Histogram); 4] {
+        [
+            ("modak_queue_wait_seconds", &self.queue_wait_seconds),
+            (
+                "modak_scheduler_overhead_seconds",
+                &self.scheduler_overhead_seconds,
+            ),
+            ("modak_staging_seconds", &self.staging_seconds),
+            ("modak_train_epoch_seconds", &self.train_epoch_seconds),
+        ]
+    }
+
+    /// Prometheus text exposition (v0.0.4): counters, the gauge, then
+    /// histograms with cumulative `le` buckets + `_sum`/`_count`. All
+    /// numbers use shortest-round-trip `Display`, so
+    /// [`parse_exposition`] recovers them exactly.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        let _ = writeln!(out, "# TYPE modak_queue_depth gauge");
+        let _ = writeln!(out, "modak_queue_depth {}", self.queue_depth.get());
+        let bounds = bucket_bounds();
+        for (name, h) in self.histograms() {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let snap = h.snapshot();
+            let mut cum = 0u64;
+            for (i, n) in snap.iter().enumerate() {
+                cum += n;
+                if i < FINITE_BUCKETS {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", bounds[i]);
+                } else {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+                }
+            }
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+}
+
+/// Parse a text exposition back to `sample name (with labels) → value`.
+/// The round-trip partner of [`Registry::render_prometheus`]; also what
+/// the CI smoke check uses to validate `--metrics-out`.
+pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // the value is everything after the LAST space (label values
+        // never contain spaces in our exposition)
+        if let Some(cut) = line.rfind(' ') {
+            let (name, val) = line.split_at(cut);
+            if let Ok(v) = val.trim().parse::<f64>() {
+                out.insert(name.to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+/// The process-global registry every instrumentation site writes to.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(3.25);
+        assert_eq!(g.get(), 3.25);
+    }
+
+    /// Satellite: log-bucket boundary cases. A sample exactly at a bound
+    /// lands in that bound's bucket; one ulp-ish past it in the next;
+    /// zero/negative clamp to bucket 0; past the last finite bound is
+    /// overflow.
+    #[test]
+    fn histogram_bucket_boundaries() {
+        let bounds = bucket_bounds();
+        assert_eq!(bounds.len(), FINITE_BUCKETS);
+        assert_eq!(bounds[0], 1e-6);
+        assert_eq!(bounds[1], 2e-6);
+        assert_eq!(Histogram::index(0.0), 0);
+        assert_eq!(Histogram::index(-4.0), 0);
+        assert_eq!(Histogram::index(1e-6), 0);
+        assert_eq!(Histogram::index(1.1e-6), 1);
+        assert_eq!(Histogram::index(2e-6), 1);
+        assert_eq!(Histogram::index(bounds[FINITE_BUCKETS - 1]), FINITE_BUCKETS - 1);
+        assert_eq!(
+            Histogram::index(bounds[FINITE_BUCKETS - 1] * 1.5),
+            FINITE_BUCKETS
+        );
+    }
+
+    #[test]
+    fn histogram_quantiles_resolve_to_bucket_bounds() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram reports 0");
+        // 0.5 s lands in the bucket bounded by 1e-6 * 2^19 = 0.524288 s;
+        // 100 s in the one bounded by 1e-6 * 2^27 = 134.217728 s
+        for _ in 0..99 {
+            h.observe(0.5);
+        }
+        h.observe(100.0);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.5), 0.524288);
+        assert_eq!(h.quantile(0.95), 0.524288);
+        assert_eq!(h.quantile(0.999), 134.217728);
+        let over = Histogram::new();
+        over.observe(1e9); // past every finite bound
+        assert!(over.quantile(0.5).is_infinite());
+    }
+
+    /// Satellite: merging per-shard histograms equals the whole-cluster
+    /// histogram — bucket-wise, count, and sum (samples chosen dyadic so
+    /// f64 addition is exact in any order).
+    #[test]
+    fn histogram_merge_of_shards_equals_whole_cluster() {
+        let shard_a = Histogram::new();
+        let shard_b = Histogram::new();
+        let whole = Histogram::new();
+        for v in [0.25, 0.5, 4.0] {
+            shard_a.observe(v);
+            whole.observe(v);
+        }
+        for v in [0.125, 8.0] {
+            shard_b.observe(v);
+            whole.observe(v);
+        }
+        let merged = Histogram::new();
+        merged.merge(&shard_a);
+        merged.merge(&shard_b);
+        assert_eq!(merged.snapshot(), whole.snapshot());
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.sum(), whole.sum());
+        assert_eq!(merged.quantile(0.5), whole.quantile(0.5));
+    }
+
+    /// Satellite: the exposition parses back to the same values — the
+    /// cumulative `le` series de-cumulates to the raw buckets, and the
+    /// f64 `_sum` survives the Display/parse round trip exactly.
+    #[test]
+    fn prometheus_exposition_parses_back_to_the_same_values() {
+        let r = Registry::new();
+        r.jobs_submitted.add(7);
+        r.build_cache_hits.add(3);
+        r.queue_depth.set(2.0);
+        for v in [0.001, 0.5, 0.5, 97.3] {
+            r.queue_wait_seconds.observe(v);
+        }
+        let text = r.render_prometheus();
+        let parsed = parse_exposition(&text);
+        assert_eq!(parsed["modak_jobs_submitted"], 7.0);
+        assert_eq!(parsed["modak_build_cache_hits"], 3.0);
+        assert_eq!(parsed["modak_queue_depth"], 2.0);
+        assert_eq!(parsed["modak_queue_wait_seconds_count"], 4.0);
+        assert_eq!(
+            parsed["modak_queue_wait_seconds_sum"],
+            r.queue_wait_seconds.sum(),
+            "shortest-round-trip Display must parse back exactly"
+        );
+        // de-cumulate the le series and compare against the raw buckets
+        let bounds = bucket_bounds();
+        let mut prev = 0.0;
+        let mut raw = Vec::new();
+        for b in &bounds {
+            let cum = parsed[&format!("modak_queue_wait_seconds_bucket{{le=\"{b}\"}}")];
+            raw.push((cum - prev) as u64);
+            prev = cum;
+        }
+        let inf = parsed["modak_queue_wait_seconds_bucket{le=\"+Inf\"}"];
+        raw.push((inf - prev) as u64);
+        assert_eq!(raw, r.queue_wait_seconds.snapshot());
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let a = global() as *const Registry;
+        let b = global() as *const Registry;
+        assert_eq!(a, b);
+    }
+}

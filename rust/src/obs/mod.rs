@@ -1,0 +1,35 @@
+//! Flight recorder: end-to-end job lifecycle tracing and a lock-free
+//! metrics registry (ISSUE 8, grounded in the per-phase measurement
+//! methodology of PAPERS.md 1711.03386 / 2208.02498 — container overhead
+//! claims are only credible when startup, IO, and compute are timed
+//! separately).
+//!
+//! Four layers, zero external deps:
+//! * [`span`] — trace spans and the per-job span tree covering
+//!   `submit → plan → build → stage → queue → dispatch → train →
+//!   complete`, with preempt/checkpoint/restart producing sibling
+//!   `train` segments under the same cluster-global job id.
+//! * [`metrics`] — counters, gauges, and log-bucketed histograms on
+//!   relaxed atomics (no mutexed counters, by construction: the PR 7
+//!   lint discipline applies to this module too).
+//! * [`collect`] — a non-consuming [`crate::util::sync::EventBus`]
+//!   subscriber deriving span edges from the `SchedEvent` taxonomy,
+//!   plus explicit `record_span` instrumentation points for the
+//!   phases the bus never sees (plan, build, stage).
+//! * [`export`] — Chrome `trace_event` JSON (Perfetto-loadable, one
+//!   track per shard/node), Prometheus text exposition, a JSONL span
+//!   log, and the `modak trace` summariser (per-phase p50/p95/p99,
+//!   per-job critical-path breakdown).
+//!
+//! The recorder's own lock ranks **innermost** (`LockRank::Obs`): it is
+//! taken only after every scheduler/bus lock has been released, so
+//! instrumentation can never extend a hot-path critical section.
+
+pub mod collect;
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use collect::{Collector, Recorder};
+pub use metrics::{global, Counter, Gauge, Histogram, Registry};
+pub use span::{Span, SpanSet};

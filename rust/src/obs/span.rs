@@ -1,0 +1,211 @@
+//! Trace spans and the per-job span tree.
+//!
+//! A [`Span`] is one closed phase of a job's lifecycle on one shard:
+//! `plan`, `build`, `stage:image`, `stage:dataset`, `queue`, `train`, or
+//! the synthetic root `job` covering submit → complete. Spans carry
+//! integer microsecond timestamps relative to the recorder's origin, so
+//! deterministic sims produce byte-identical traces. Preempt/checkpoint/
+//! restart yield *sibling* `train` segments under the same job id — the
+//! tree survives cross-shard migration because the id is cluster-global.
+
+use std::collections::BTreeMap;
+
+/// Name of the synthetic per-job root span (submit → complete).
+pub const ROOT: &str = "job";
+
+/// One closed phase of a job's lifecycle on one shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Cluster-global job id (stable across migration and restart).
+    pub job: u64,
+    /// Phase name: `plan` | `build` | `stage:image` | `stage:dataset` |
+    /// `queue` | `train` | [`ROOT`].
+    pub name: String,
+    /// Start, integer microseconds from the trace origin.
+    pub start_us: u64,
+    /// Duration in microseconds (0 is legal: an instant dispatch).
+    pub dur_us: u64,
+    /// Shard the phase ran on (Chrome-trace `pid` — one track per shard).
+    pub shard: usize,
+    /// Node within the shard (Chrome-trace `tid`), 0 when not known.
+    pub node: usize,
+}
+
+impl Span {
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+}
+
+/// A flat, canonically-ordered set of spans — the unit every exporter
+/// and the invariant checker consume.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpanSet {
+    spans: Vec<Span>,
+}
+
+impl SpanSet {
+    pub fn new() -> SpanSet {
+        SpanSet::default()
+    }
+
+    pub fn push(&mut self, s: Span) {
+        self.spans.push(s);
+    }
+
+    /// Canonical order: (job, start, dur, name, shard). Every exporter
+    /// normalises first, so trace bytes are independent of collection
+    /// order — the property that makes golden-trace CI diffs possible.
+    pub fn normalize(&mut self) {
+        self.spans.sort_by(|a, b| {
+            (a.job, a.start_us, a.dur_us, &a.name, a.shard).cmp(&(
+                b.job,
+                b.start_us,
+                b.dur_us,
+                &b.name,
+                b.shard,
+            ))
+        });
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Job ids present, ascending, deduplicated.
+    pub fn jobs(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.spans.iter().map(|s| s.job).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    pub fn spans_for(&self, job: u64) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.job == job).collect()
+    }
+
+    /// Span-tree invariants (the ISSUE 8 contract). Returns one message
+    /// per violation; empty means the tree is sound:
+    /// * every job with any span has **exactly one** [`ROOT`] span
+    ///   (no orphans, no duplicate roots),
+    /// * every child span lies inside its root's interval,
+    /// * sibling `train` segments never overlap (a job trains on one
+    ///   shard at a time; segments must not double-count wall time).
+    pub fn check(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let mut by_job: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+        for s in &self.spans {
+            by_job.entry(s.job).or_default().push(s);
+        }
+        for (job, spans) in &by_job {
+            let roots: Vec<&&Span> = spans.iter().filter(|s| s.name == ROOT).collect();
+            match roots.len() {
+                0 => {
+                    errs.push(format!("job {job}: orphan spans (no `{ROOT}` root)"));
+                    continue;
+                }
+                1 => {}
+                n => errs.push(format!("job {job}: {n} `{ROOT}` roots (expected 1)")),
+            }
+            let root = roots[0];
+            for s in spans.iter().filter(|s| s.name != ROOT) {
+                if s.start_us < root.start_us || s.end_us() > root.end_us() {
+                    errs.push(format!(
+                        "job {job}: `{}` [{}..{}] escapes root [{}..{}]",
+                        s.name,
+                        s.start_us,
+                        s.end_us(),
+                        root.start_us,
+                        root.end_us()
+                    ));
+                }
+            }
+            let mut trains: Vec<&&Span> = spans.iter().filter(|s| s.name == "train").collect();
+            trains.sort_by_key(|s| s.start_us);
+            for w in trains.windows(2) {
+                if w[1].start_us < w[0].end_us() {
+                    errs.push(format!(
+                        "job {job}: train segments overlap ([{}..{}] and [{}..{}])",
+                        w[0].start_us,
+                        w[0].end_us(),
+                        w[1].start_us,
+                        w[1].end_us()
+                    ));
+                }
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(job: u64, name: &str, start_us: u64, dur_us: u64) -> Span {
+        Span {
+            job,
+            name: name.to_string(),
+            start_us,
+            dur_us,
+            shard: 0,
+            node: 0,
+        }
+    }
+
+    #[test]
+    fn normalize_orders_by_job_then_time() {
+        let mut s = SpanSet::new();
+        s.push(span(2, "queue", 5, 1));
+        s.push(span(1, "train", 10, 4));
+        s.push(span(1, "queue", 0, 10));
+        s.normalize();
+        let names: Vec<&str> = s.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, ["queue", "train", "queue"]);
+        assert_eq!(s.jobs(), [1, 2]);
+    }
+
+    #[test]
+    fn check_accepts_a_sound_tree_with_sibling_train_segments() {
+        let mut s = SpanSet::new();
+        s.push(span(1, ROOT, 0, 100));
+        s.push(span(1, "queue", 0, 10));
+        s.push(span(1, "train", 10, 40)); // pre-preemption segment
+        s.push(span(1, "train", 60, 40)); // post-restart sibling
+        assert!(s.check().is_empty(), "{:?}", s.check());
+    }
+
+    #[test]
+    fn check_flags_orphans_duplicate_roots_and_escapes() {
+        let mut s = SpanSet::new();
+        s.push(span(1, "queue", 0, 10)); // orphan: no root
+        s.push(span(2, ROOT, 0, 10));
+        s.push(span(2, ROOT, 0, 10)); // duplicate root
+        s.push(span(3, ROOT, 10, 10));
+        s.push(span(3, "train", 5, 30)); // escapes the root interval
+        let errs = s.check();
+        assert_eq!(errs.len(), 3, "{errs:?}");
+        assert!(errs[0].contains("orphan"));
+        assert!(errs[1].contains("2 `job` roots"));
+        assert!(errs[2].contains("escapes"));
+    }
+
+    #[test]
+    fn check_flags_overlapping_train_segments() {
+        let mut s = SpanSet::new();
+        s.push(span(1, ROOT, 0, 100));
+        s.push(span(1, "train", 0, 60));
+        s.push(span(1, "train", 50, 50)); // double-counts [50..60]
+        let errs = s.check();
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("overlap"));
+    }
+}

@@ -29,6 +29,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 use std::time::Instant;
 
+use crate::obs::metrics::Histogram;
 use crate::placement::{LoadTracker, PlacementEngine, ShardLoad};
 #[cfg(debug_assertions)]
 use crate::util::sync::{rank_acquire, LockRank};
@@ -97,6 +98,13 @@ pub struct ScaleOutcome {
     pub cross_checks: u64,
     /// Largest total queue depth observed across the run.
     pub peak_queue: usize,
+    /// Simulated queue wait (arrival → dispatch), p50/p99 from the
+    /// obs log-bucket histogram — deterministic, like the schedule.
+    pub p50_queue_wait_secs: f64,
+    pub p99_queue_wait_secs: f64,
+    /// Real per-event scheduler overhead, p50/p99 (host-dependent).
+    pub p50_overhead_secs: f64,
+    pub p99_overhead_secs: f64,
 }
 
 #[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -168,12 +176,17 @@ fn dispatch_ready(
     heap: &mut BinaryHeap<Reverse<(u64, u64, Ev)>>,
     seq: &mut u64,
     events: &mut u64,
+    wait_hist: &Histogram,
 ) {
     let s = &mut shards[shard_idx];
     while s.free > 0 {
         let Some(j) = s.queue.pop_front() else { break };
         s.free -= 1;
         s.running.push(j);
+        // arrival times are closed-form (every 1.25 ms): queue wait is
+        // dispatch time minus arrival, in simulated seconds
+        let arrived = j as u64 + j as u64 / 4;
+        wait_hist.observe((now - arrived) as f64 / 1_000.0);
         if event_mode {
             tracker.on_dispatch(shard_idx, 1);
         }
@@ -222,9 +235,14 @@ pub fn run_scale(cfg: &ScaleConfig) -> ScaleOutcome {
     let mut cross_checks: u64 = 0;
     let mut queued_total: usize = 0;
     let mut peak_queue: usize = 0;
+    // local histograms (not the global registry): concurrent runs — and
+    // concurrent tests — must not share samples
+    let wait_hist = Histogram::new();
+    let overhead_hist = Histogram::new();
 
     let t0 = Instant::now();
     while let Some(Reverse((now, _, ev))) = heap.pop() {
+        let ev_t0 = Instant::now();
         // mirror the real cluster's per-event acquisition order (routing
         // map -> shard server -> load counters); debug builds assert the
         // declared lock ranks strictly ascend on every one of the sim's
@@ -256,7 +274,7 @@ pub fn run_scale(cfg: &ScaleConfig) -> ScaleOutcome {
                 let before = shards[dest].queue.len();
                 dispatch_ready(
                     dest, now, &mut shards, &durations, &mut tracker, event_mode,
-                    &mut heap, &mut seq, &mut events,
+                    &mut heap, &mut seq, &mut events, &wait_hist,
                 );
                 queued_total -= before - shards[dest].queue.len();
             }
@@ -279,11 +297,12 @@ pub fn run_scale(cfg: &ScaleConfig) -> ScaleOutcome {
                 let before = shards[shard].queue.len();
                 dispatch_ready(
                     shard, now, &mut shards, &durations, &mut tracker, event_mode,
-                    &mut heap, &mut seq, &mut events,
+                    &mut heap, &mut seq, &mut events, &wait_hist,
                 );
                 queued_total -= before - shards[shard].queue.len();
             }
         }
+        overhead_hist.observe(ev_t0.elapsed().as_secs_f64());
         if event_mode && cfg.cross_check {
             let snap = full_snapshot(&shards, &durations, cfg.slots_per_shard);
             if let Err(e) = tracker.verify_against(&snap) {
@@ -302,6 +321,10 @@ pub fn run_scale(cfg: &ScaleConfig) -> ScaleOutcome {
         mean_overhead_ms_per_job: wall_secs * 1_000.0 / cfg.jobs.max(1) as f64,
         cross_checks,
         peak_queue,
+        p50_queue_wait_secs: wait_hist.quantile(0.50),
+        p99_queue_wait_secs: wait_hist.quantile(0.99),
+        p50_overhead_secs: overhead_hist.quantile(0.50),
+        p99_overhead_secs: overhead_hist.quantile(0.99),
     }
 }
 
@@ -373,6 +396,22 @@ mod tests {
         assert_eq!(poll.makespan_millis, event.makespan_millis);
         assert_eq!(poll.events, event.events);
         assert_eq!(poll.peak_queue, event.peak_queue);
+    }
+
+    /// Satellite (ISSUE 8): queue-wait percentiles come off the obs
+    /// log-bucket histogram over the SIMULATED clock, so they are
+    /// deterministic and ordered; overhead percentiles are real time,
+    /// so only their ordering is asserted.
+    #[test]
+    fn scale_sim_reports_deterministic_queue_wait_percentiles() {
+        let a = run_scale(&small(CoreMode::EventDriven, false));
+        let b = run_scale(&small(CoreMode::EventDriven, false));
+        assert_eq!(a.p50_queue_wait_secs, b.p50_queue_wait_secs);
+        assert_eq!(a.p99_queue_wait_secs, b.p99_queue_wait_secs);
+        assert!(a.p50_queue_wait_secs <= a.p99_queue_wait_secs);
+        assert!(a.p99_queue_wait_secs > 0.0, "{a:?}");
+        assert!(a.p50_overhead_secs <= a.p99_overhead_secs);
+        assert!(a.p99_overhead_secs > 0.0, "{a:?}");
     }
 
     /// CI-pinned: the incremental placement scores match a full-snapshot

@@ -21,6 +21,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::frameworks::Target;
+use crate::obs::span::{Span, SpanSet, ROOT};
 use crate::placement::{PlacementEngine, PlacementStrategy, RebalanceMode, ShardLoad};
 use crate::scheduler::policy::{
     plan_dispatch, NodeState, QueuedJob, RunningJob, SchedulePolicy,
@@ -47,6 +48,29 @@ impl PlacementSimJob {
     }
 }
 
+/// What one simulated segment was doing: waiting in a queue, paying the
+/// cross-shard restage cost, or training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    Queue,
+    Restage,
+    Train,
+}
+
+/// One closed interval of a job's simulated lifecycle, recorded by the
+/// event loop as the flight-recorder feed: the deterministic sim emits
+/// the same segment stream on every run, which is what makes the
+/// Chrome-trace export golden-pinnable in CI ([`trace_spans`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimSegment {
+    pub job: JobId,
+    pub shard: usize,
+    pub node: usize,
+    pub kind: SegKind,
+    pub start: f64,
+    pub end: f64,
+}
+
 /// Outcome of a [`simulate_placement`] run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct PlacementSimOutcome {
@@ -69,6 +93,11 @@ pub struct PlacementSimOutcome {
     /// Times the best-scoring pick scored WORSE than first-idle-fit would
     /// have (must be 0: the argmin can tie but never lose).
     pub score_regressions: u64,
+    /// Every queue/restage/train segment, in event order (the flight-
+    /// recorder feed; see [`trace_spans`]).
+    pub segments: Vec<SimSegment>,
+    /// job id -> completion time.
+    pub completed_at: BTreeMap<JobId, f64>,
 }
 
 /// A queued entry: the job plus progress carried from prior segments and
@@ -80,6 +109,10 @@ struct QEntry {
     done_secs: f64,
     /// Restage cost charged at the start of the next segment.
     overhead: f64,
+    /// When this entry started waiting (arrival or checkpoint time);
+    /// queued-job migrations keep it — queue wait is measured from the
+    /// first submission, not the move.
+    queued_at: f64,
 }
 
 impl QEntry {
@@ -269,10 +302,14 @@ pub fn simulate_placement_cfg(
             break;
         }
         // completions
-        for s in cluster.iter_mut() {
+        for (si, s) in cluster.iter_mut().enumerate() {
+            let (segments, completed_at, makespan) =
+                (&mut out.segments, &mut out.completed_at, &mut out.makespan);
             s.running.retain(|r| {
                 if r.end <= t {
-                    out.makespan = out.makespan.max(r.end);
+                    *makespan = makespan.max(r.end);
+                    push_run_segments(segments, r, si, r.end);
+                    completed_at.insert(r.job.id, r.end);
                     false
                 } else {
                     true
@@ -282,7 +319,8 @@ pub fn simulate_placement_cfg(
         // checkpoint boundaries: withdraw the segment, requeue on the
         // destination with every completed epoch preserved
         let mut restarts: Vec<(QEntry, usize)> = Vec::new();
-        for s in cluster.iter_mut() {
+        for (si, s) in cluster.iter_mut().enumerate() {
+            let segments = &mut out.segments;
             s.running.retain(|r| match r.preempt {
                 Some(p) if p.at <= t && p.at < r.end => {
                     // MEASURED progress loss: epoch-seconds the segment
@@ -292,11 +330,13 @@ pub fn simulate_placement_cfg(
                     // so a boundary/accounting bug cannot hide.
                     let trained = r.done_before + (p.at - r.seg_start - r.overhead).max(0.0);
                     out.lost_progress_secs += (trained - p.done_total).max(0.0);
+                    push_run_segments(segments, r, si, p.at);
                     restarts.push((
                         QEntry {
                             job: r.job.clone(),
                             done_secs: p.done_total,
                             overhead: restage_secs,
+                            queued_at: p.at,
                         },
                         p.dest,
                     ));
@@ -319,11 +359,15 @@ pub fn simulate_placement_cfg(
                 .map(|(i, s)| s.load(i, t, job.demand, 0.0))
                 .collect();
             match engine.choose(&loads, &mut rr_cursor) {
-                Some(shard) => cluster[shard].queued.push(QEntry {
-                    job,
-                    done_secs: 0.0,
-                    overhead: 0.0,
-                }),
+                Some(shard) => {
+                    let queued_at = job.arrive;
+                    cluster[shard].queued.push(QEntry {
+                        job,
+                        done_secs: 0.0,
+                        overhead: 0.0,
+                        queued_at,
+                    })
+                }
                 None => unroutable += 1,
             }
         }
@@ -385,6 +429,14 @@ fn dispatch_all(
             let entry = s.queued.remove(idx);
             out.started.entry(entry.job.id).or_insert((si, t));
             out.per_shard_started[si] += 1;
+            out.segments.push(SimSegment {
+                job: entry.job.id,
+                shard: si,
+                node: d.node,
+                kind: SegKind::Queue,
+                start: entry.queued_at,
+                end: t,
+            });
             let end = t + entry.remaining();
             s.running.push(Run {
                 job: entry.job,
@@ -397,6 +449,133 @@ fn dispatch_all(
             });
         }
     }
+}
+
+/// Record the restage + train segments of a run that just ended — by
+/// completion or checkpoint withdrawal — at time `end`.
+fn push_run_segments(segments: &mut Vec<SimSegment>, r: &Run, shard: usize, end: f64) {
+    let train_start = r.seg_start + r.overhead;
+    if r.overhead > 0.0 {
+        segments.push(SimSegment {
+            job: r.job.id,
+            shard,
+            node: r.node,
+            kind: SegKind::Restage,
+            start: r.seg_start,
+            end: train_start.min(end),
+        });
+    }
+    if end > train_start {
+        segments.push(SimSegment {
+            job: r.job.id,
+            shard,
+            node: r.node,
+            kind: SegKind::Train,
+            start: train_start,
+            end,
+        });
+    }
+}
+
+/// Project a sim outcome into flight-recorder spans: simulated seconds
+/// become integer microseconds (exact for the dyadic fixture times) and
+/// every completed job gains its synthetic root span, shard-attributed
+/// to where its last train segment ran. Because the sim is
+/// deterministic, `chrome_trace(&trace_spans(..))` is byte-identical
+/// across runs — the golden-trace CI property.
+pub fn trace_spans(out: &PlacementSimOutcome) -> SpanSet {
+    let us = |t: f64| (t * 1e6).round() as u64;
+    let mut set = SpanSet::new();
+    for seg in &out.segments {
+        let name = match seg.kind {
+            SegKind::Queue => "queue",
+            SegKind::Restage => "stage:dataset",
+            SegKind::Train => "train",
+        };
+        set.push(Span {
+            job: seg.job,
+            name: name.to_string(),
+            start_us: us(seg.start),
+            dur_us: us(seg.end) - us(seg.start),
+            shard: seg.shard,
+            node: seg.node,
+        });
+    }
+    for (&job, &done) in &out.completed_at {
+        let mine: Vec<&SimSegment> = out.segments.iter().filter(|s| s.job == job).collect();
+        let first = mine.iter().map(|s| us(s.start)).min().unwrap_or(us(done));
+        let shard = mine
+            .iter()
+            .filter(|s| s.kind == SegKind::Train)
+            .max_by(|a, b| a.end.total_cmp(&b.end))
+            .map(|s| s.shard)
+            .unwrap_or(0);
+        set.push(Span {
+            job,
+            name: ROOT.to_string(),
+            start_us: first,
+            dur_us: us(done) - first,
+            shard,
+            node: 0,
+        });
+    }
+    set.normalize();
+    set
+}
+
+/// A single-slot cpu node (shared by the fixtures below, the placement
+/// bench, and the `modak sim-trace` CLI).
+pub fn cpu_node(id: usize, slots: usize) -> NodeState {
+    NodeState {
+        id,
+        class: Target::Cpu,
+        free_slots: slots,
+        total_slots: slots,
+    }
+}
+
+/// The skewed arrival mix behind the elastic-beats-queued regression: a
+/// long 10-epoch job lands on the wide shard first, then a 2-slot job
+/// arrives that ONLY the wide shard can ever hold — queued-only
+/// migration is stuck (the narrow shard is ineligible), elastic
+/// checkpoint/restart moves the running 1-slot job out instead.
+pub fn skewed_fixture() -> (Vec<PlacementSimJob>, Vec<Vec<NodeState>>) {
+    let jobs = vec![
+        PlacementSimJob {
+            id: 1,
+            demand: 1,
+            epochs: 10,
+            epoch_secs: 10.0,
+            arrive: 0.0,
+        },
+        PlacementSimJob {
+            id: 2,
+            demand: 2,
+            epochs: 1,
+            epoch_secs: 10.0,
+            arrive: 1.0,
+        },
+    ];
+    let shards = vec![vec![cpu_node(0, 2)], vec![cpu_node(0, 1)]];
+    (jobs, shards)
+}
+
+/// The deterministic golden trace: the skewed elastic run (the same one
+/// `elastic_beats_queued_on_skewed_arrivals` pins at a 102 s makespan)
+/// exported as Chrome trace JSON. CI diffs this byte-for-byte against
+/// the committed `GOLDEN_trace.json`; `modak sim-trace` prints it.
+pub fn golden_trace_json() -> String {
+    let (jobs, shards) = skewed_fixture();
+    let out = simulate_placement(
+        PlacementStrategy::CostBased,
+        SchedulePolicy::Fifo,
+        RebalanceMode::Elastic,
+        &jobs,
+        &shards,
+        2.0,
+        100_000.0,
+    );
+    crate::obs::export::chrome_trace(&trace_spans(&out))
 }
 
 /// Cross-shard rebalancing: queued jobs migrate to the best-scoring idle
@@ -571,7 +750,7 @@ mod tests {
     #[test]
     #[cfg(debug_assertions)]
     fn placement_sim_upholds_the_runtime_lock_rank_order() {
-        let (jobs, shards) = skewed();
+        let (jobs, shards) = skewed_fixture();
         let out = simulate_placement(
             PlacementStrategy::RoundRobin,
             SchedulePolicy::Fifo,
@@ -584,43 +763,8 @@ mod tests {
         assert_eq!(out.unfinished, 0, "rank witnesses must not disturb the sim");
     }
 
-    fn cpu_node(id: usize, slots: usize) -> NodeState {
-        NodeState {
-            id,
-            class: Target::Cpu,
-            free_slots: slots,
-            total_slots: slots,
-        }
-    }
-
-    /// The skewed arrival mix: a long 10-epoch job lands on the wide shard
-    /// first, then a 2-slot job arrives that ONLY the wide shard can ever
-    /// hold — queued-only migration is stuck (the narrow shard is
-    /// ineligible), elastic checkpoint/restart moves the running 1-slot
-    /// job out instead.
-    fn skewed() -> (Vec<PlacementSimJob>, Vec<Vec<NodeState>>) {
-        let jobs = vec![
-            PlacementSimJob {
-                id: 1,
-                demand: 1,
-                epochs: 10,
-                epoch_secs: 10.0,
-                arrive: 0.0,
-            },
-            PlacementSimJob {
-                id: 2,
-                demand: 2,
-                epochs: 1,
-                epoch_secs: 10.0,
-                arrive: 1.0,
-            },
-        ];
-        let shards = vec![vec![cpu_node(0, 2)], vec![cpu_node(0, 1)]];
-        (jobs, shards)
-    }
-
     fn run_mode(mode: RebalanceMode) -> PlacementSimOutcome {
-        let (jobs, shards) = skewed();
+        let (jobs, shards) = skewed_fixture();
         simulate_placement(
             PlacementStrategy::CostBased,
             SchedulePolicy::Fifo,
@@ -711,6 +855,46 @@ mod tests {
         let a = run_mode(RebalanceMode::Elastic);
         let b = run_mode(RebalanceMode::Elastic);
         assert_eq!(a, b);
+    }
+
+    /// Acceptance (pinned in CI): the deterministic skewed elastic run
+    /// traces to EXACTLY the committed golden Chrome-trace bytes. Any
+    /// change to placement, dispatch order, segment recording, or JSON
+    /// serialisation shows up as a diff here before it ships.
+    #[test]
+    fn golden_trace_is_byte_identical() {
+        assert_eq!(
+            golden_trace_json(),
+            include_str!("../../../GOLDEN_trace.json"),
+            "regenerate GOLDEN_trace.json via `modak sim-trace` if the \
+             timeline change is intentional"
+        );
+    }
+
+    /// Acceptance: `modak trace` on the golden trace reports the same
+    /// 102 s makespan the elastic regression asserts, a sound span tree
+    /// (one root per job, ≥2 sibling train segments for the migrated
+    /// job), and ≥99% critical-path coverage for every job.
+    #[test]
+    fn golden_trace_summary_reports_the_asserted_elastic_makespan() {
+        let spans =
+            crate::obs::export::parse_chrome_trace(&golden_trace_json()).expect("golden parses");
+        let sum = crate::obs::export::summarise(&spans);
+        assert!(sum.violations.is_empty(), "{:?}", sum.violations);
+        assert_eq!(sum.makespan_s, 102.0);
+        assert_eq!(sum.jobs.len(), 2);
+        for j in &sum.jobs {
+            assert!(j.coverage() >= 0.99, "job {} coverage {}", j.job, j.coverage());
+        }
+        // the preempted job carries one train segment per side of the
+        // checkpoint, summing to its full 100 s of work — no double-count
+        let trains: Vec<_> = spans
+            .spans_for(1)
+            .into_iter()
+            .filter(|s| s.name == "train")
+            .collect();
+        assert_eq!(trains.len(), 2);
+        assert_eq!(trains.iter().map(|s| s.dur_us).sum::<u64>(), 100_000_000);
     }
 
     /// Satellite (hysteresis, pinned in CI): on a symmetric two-shard

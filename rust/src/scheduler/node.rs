@@ -134,6 +134,9 @@ impl ResultSink {
         });
         let _ = self.tx.send(res);
         if let Some((bus, ev)) = event {
+            if matches!(ev, SchedEvent::Complete { .. }) {
+                crate::obs::metrics::global().jobs_completed.inc();
+            }
             bus.publish(ev);
         }
         if let Some(s) = &self.signal {

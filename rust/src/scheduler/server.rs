@@ -507,6 +507,9 @@ impl TorqueServer {
         rec.queue_wait_secs =
             Some((rec.submitted_at.elapsed().as_secs_f64() - rec.prior_run_secs).max(0.0));
         rec.node = Some(node_id);
+        if let Some(wait) = rec.queue_wait_secs {
+            crate::obs::metrics::global().queue_wait_seconds.observe(wait);
+        }
         *self.used.entry(node_id).or_insert(0) += demand;
         self.running.insert(id, (node_id, demand));
         self.queue.retain(|&q| q != id);

@@ -55,6 +55,7 @@ use crate::container::BuildStats;
 use crate::data::stage::DataStageStats;
 use crate::data::DatasetCatalog;
 use crate::dsl::Optimisation;
+use crate::obs::collect::Recorder;
 use crate::optimiser::{plan_deployment, DeploymentPlan};
 use crate::perfmodel::{Features, PerfModel, Record};
 use crate::registry::RegistryHandle;
@@ -531,6 +532,11 @@ pub struct DeploymentService {
     /// shards) and every planner report; `await_batch` sleeps on it.
     signal: Arc<Signal>,
     planner_workers: usize,
+    /// Flight recorder: taps the cluster's event bus (non-consuming, own
+    /// cursor) for lifecycle spans and takes explicit `plan`/`build` span
+    /// reports from the planner workers. Shared so workers can record
+    /// while `await_batch` drains.
+    recorder: Arc<Recorder>,
     /// Jobs whose measured results were already fed back to the model.
     fed_back: Mutex<HashSet<ClusterJobId>>,
     /// Jobs whose store-GC image pin was already released (terminal).
@@ -596,6 +602,7 @@ impl DeploymentService {
             cluster,
             signal,
             planner_workers: cfg.planner_workers.max(1),
+            recorder: Arc::new(Recorder::new()),
             fed_back: Mutex::new(HashSet::new()),
             unpinned: Mutex::new(HashSet::new()),
         }
@@ -608,6 +615,13 @@ impl DeploymentService {
     /// The scheduler cluster behind this service.
     pub fn cluster(&self) -> &Arc<ClusterScheduler> {
         &self.cluster
+    }
+
+    /// The batch's flight recorder (span trees + bus-tap lifecycle
+    /// events). Drained by `await_batch`; exporters read it via
+    /// [`Recorder::finish`] after the batch settles.
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.recorder
     }
 
     /// Run `f` with shard 0's batch server locked (qstat snapshots,
@@ -667,6 +681,7 @@ impl DeploymentService {
             let catalog = Arc::clone(&self.catalog);
             let cluster = Arc::clone(&self.cluster);
             let signal = Arc::clone(&self.signal);
+            let recorder = Arc::clone(&self.recorder);
             let cfg = cfg.clone();
             std::thread::Builder::new()
                 .name(format!("planner-{w}"))
@@ -677,8 +692,8 @@ impl DeploymentService {
                     let work = lock_or_recover(&work_rx).recv();
                     let Ok(Work { req, done }) = work else { break };
                     let outcome = plan_and_dispatch(
-                        &registry, &model, &manifest, &catalog, &cluster, &req, &cfg,
-                        dispatch,
+                        &registry, &model, &manifest, &catalog, &cluster, &recorder, &req,
+                        &cfg, dispatch,
                     );
                     let _ = done.send(outcome);
                     // wake await_batch: a handle just became resolvable
@@ -738,6 +753,10 @@ impl DeploymentService {
             // ring cap
             let drained = bus.drain_since(cursor);
             cursor = drained.seen;
+            // the flight recorder tails the same bus on its own cursor:
+            // a second consumer, so this sweep's targeted drain above is
+            // unaffected (exactly-once is per cursor, not per bus)
+            self.recorder.drain(&bus);
             if drained.missed > 0 || drained.events.is_empty() {
                 let _ = self.cluster.poll();
             } else {
@@ -753,12 +772,18 @@ impl DeploymentService {
                 .filter_map(|h| h.outcome.as_ref().and_then(|o| o.job_id))
                 .filter(|id| !self.cluster.job_terminal(*id).unwrap_or(true))
                 .count();
+            crate::obs::metrics::global()
+                .queue_depth
+                .set(pending_jobs as f64);
             if all_planned && pending_jobs == 0 {
                 break;
             }
             self.signal.wait_past(seen, Duration::from_millis(200));
         }
-        // final sweep: completions absorbed by the last poll above
+        // final sweep: completions absorbed by the last poll above; the
+        // recorder absorbs any events published between the loop's last
+        // drain and the final terminal-state probe
+        self.recorder.drain(&bus);
         self.feed_back_measurements(handles);
         self.release_finished_image_pins(handles);
         self.report(handles, 0.0)
@@ -1068,6 +1093,7 @@ fn plan_and_dispatch(
     manifest: &Manifest,
     catalog: &DatasetCatalog,
     cluster: &Arc<ClusterScheduler>,
+    recorder: &Recorder,
     req: &BatchRequest,
     cfg: &TrainConfig,
     dispatch: bool,
@@ -1077,6 +1103,7 @@ fn plan_and_dispatch(
     // coefficients refreshed by earlier completions' feedback. The read
     // lock means a whole batch of planners can snapshot concurrently.
     let model = read_or_recover(model).clone();
+    let plan_start = recorder.now_us();
     let plan = match plan_deployment(registry, &model, manifest, catalog, &req.dsl, cfg) {
         Ok(p) => p,
         Err(e) => {
@@ -1086,6 +1113,7 @@ fn plan_and_dispatch(
             }
         }
     };
+    let plan_end = recorder.now_us();
     let job_id = if dispatch {
         // route to a shard, stage the bundle (and the declared dataset)
         // into its local stores, qsub
@@ -1100,6 +1128,11 @@ fn plan_and_dispatch(
                 // reference-pin the bundle against store GC while this
                 // job lives (released when it is observed terminal)
                 registry.pin_image(&plan.profile.image_tag());
+                // the cluster-global job id exists only now, so the
+                // planning span (profile selection + container build,
+                // which runs on the service host: shard 0 by convention)
+                // is recorded retroactively under it
+                recorder.record_span(id, "plan", plan_start, plan_end, 0);
                 Some(id)
             }
             Err(e) => {

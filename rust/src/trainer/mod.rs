@@ -241,7 +241,11 @@ pub fn train_resumable(
             report.step_loss.push(loss);
             loss_sum += loss as f64;
         }
-        report.epoch_secs.push(sw.elapsed_secs());
+        let epoch_secs = sw.elapsed_secs();
+        crate::obs::metrics::global()
+            .train_epoch_seconds
+            .observe(epoch_secs);
+        report.epoch_secs.push(epoch_secs);
         report.epoch_loss.push(loss_sum / cfg.steps_per_epoch as f64);
         epochs_run += 1;
     }

@@ -26,7 +26,7 @@
 //!   this module — `modak lint` (the `poison-policy` rule) enforces it.
 //! * [`LockRank`] / [`rank_acquire`] — the declared lock hierarchy
 //!   (`Registry < PerfModel < Cluster < ShardServer < Stager <
-//!   Counters`). Nested acquisitions must strictly ascend; the static
+//!   Counters < Obs`). Nested acquisitions must strictly ascend; the static
 //!   side is checked by `modak lint` (`lock-rank` rule, cycle detection
 //!   over the acquires-graph), and `rank_acquire` cross-checks the same
 //!   order dynamically in debug builds via a thread-local held-rank
@@ -86,17 +86,23 @@ pub enum LockRank {
     /// Leaf bookkeeping: `EventBus` ring, `Signal` epoch. Always safe to
     /// take last; never hold one while calling outward.
     Counters = 6,
+    /// Observability collector/recorder state (`obs::Recorder`).
+    /// Innermost of all: instrumentation may run under any scheduler
+    /// lock, but the recorder never calls outward while held (the bus
+    /// is drained before this rank is taken).
+    Obs = 7,
 }
 
 impl LockRank {
     /// Every rank, ascending.
-    pub const ALL: [LockRank; 6] = [
+    pub const ALL: [LockRank; 7] = [
         LockRank::Registry,
         LockRank::PerfModel,
         LockRank::Cluster,
         LockRank::ShardServer,
         LockRank::Stager,
         LockRank::Counters,
+        LockRank::Obs,
     ];
 
     /// The rank's name as `modak lint` spells it.
@@ -108,6 +114,7 @@ impl LockRank {
             LockRank::ShardServer => "shard-server",
             LockRank::Stager => "stager",
             LockRank::Counters => "counters",
+            LockRank::Obs => "obs",
         }
     }
 }
@@ -709,7 +716,8 @@ mod tests {
                 "cluster",
                 "shard-server",
                 "stager",
-                "counters"
+                "counters",
+                "obs"
             ]
         );
         for w in LockRank::ALL.windows(2) {
