@@ -28,6 +28,8 @@ fn json_entry(mode: CoreMode, out: &ScaleOutcome, rss: u64) -> String {
          \"mean_overhead_ms_per_job\": {:.4},\n    \
          \"p50_queue_wait_secs\": {},\n    \
          \"p99_queue_wait_secs\": {},\n    \
+         \"rolling_p50_queue_wait_secs\": {},\n    \
+         \"rolling_p99_queue_wait_secs\": {},\n    \
          \"p50_overhead_secs\": {},\n    \
          \"p99_overhead_secs\": {},\n    \
          \"makespan_millis\": {},\n    \"peak_queue\": {},\n    \
@@ -39,6 +41,8 @@ fn json_entry(mode: CoreMode, out: &ScaleOutcome, rss: u64) -> String {
         out.mean_overhead_ms_per_job,
         out.p50_queue_wait_secs,
         out.p99_queue_wait_secs,
+        out.rolling_p50_queue_wait_secs,
+        out.rolling_p99_queue_wait_secs,
         out.p50_overhead_secs,
         out.p99_overhead_secs,
         out.makespan_millis,
@@ -93,6 +97,18 @@ fn main() {
     assert_eq!(
         event.p99_queue_wait_secs, poll.p99_queue_wait_secs,
         "identical schedules must produce identical simulated waits"
+    );
+
+    // rolling-window view (PR 9): the same dispatch stream through the
+    // live plane's SnapshotRing, restricted to the closing 60 s of sim
+    // time — steady-state tail vs the whole-run percentiles above
+    println!(
+        "rolling 60s    {:>14.6} {:>14.6}           (sim-clock window)",
+        event.rolling_p50_queue_wait_secs, event.rolling_p99_queue_wait_secs,
+    );
+    assert_eq!(
+        event.rolling_p99_queue_wait_secs, poll.rolling_p99_queue_wait_secs,
+        "identical schedules must agree in the rolling window too"
     );
 
     // the two cores must have made identical decisions: same schedule

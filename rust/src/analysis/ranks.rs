@@ -97,6 +97,14 @@ pub const RANK_TABLE: &[RankEntry] = &[
         receiver: "collector",
         rank: LockRank::Obs,
     },
+    // the live plane (rolling windows + SLO watchdog) shares the
+    // recorder's innermost rank: sampled after every scheduler lock is
+    // released, published after its own guard drops
+    RankEntry {
+        file_suffix: "",
+        receiver: "plane",
+        rank: LockRank::Obs,
+    },
 ];
 
 /// The rank of a lock site: `file` is the repo-relative path, `receiver`

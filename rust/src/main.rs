@@ -15,6 +15,9 @@
 //!   trace       — summarise a Chrome-trace file emitted by the flight
 //!                 recorder (per-phase percentiles + per-job critical path)
 //!   sim-trace   — emit the deterministic placement-sim golden trace
+//!   top         — live scrape client for a `serve-batch --listen` plane
+//!   sim-slo     — deterministic seeded SLO-watchdog simulation (the CI
+//!                 fixture: overload fires exactly one alert, control none)
 //!
 //! Both `optimise --submit` and `serve-batch` run through the same
 //! [`DeploymentService`], so a single request is just a batch of one.
@@ -22,6 +25,7 @@
 //! Arg parsing is hand-rolled (no clap in the vendored crate set).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -50,6 +54,7 @@ USAGE:
               [--max-build-workers N] [--slots-per-node N]
               [--cpu-nodes N] [--gpu-nodes N] [--planner-workers N]
               [--store-cap-mb N] [--trace-out <file>] [--metrics-out <file>]
+              [--listen <addr>]
   modak build --tag <image:tag>
   modak registry [--table1]
   modak submit --script <file>
@@ -58,15 +63,30 @@ USAGE:
               [--workload W] [--steps N] [--threads N]
   modak bench <table1|fig3|fig4_left|fig4_right|fig5_left|fig5_right|all>
               [--out <markdown file>]
-  modak trace <trace.json> [--check]
+  modak trace <trace.json> [--check] [--json]
               summarise a flight-recorder Chrome trace: per-phase
               p50/p95/p99 + per-job critical-path breakdown (wall time
               accounted phase by phase, unexplained gaps explicit).
-              --check exits non-zero on span-tree invariant violations
+              --check exits non-zero on span-tree invariant violations;
+              --json emits the summary as machine-readable JSON (the
+              exact document /summary serves; round-trips losslessly)
   modak sim-trace [--out <file>]
               emit the deterministic placement-sim golden trace (the
               elastic two-shard fixture; byte-stable across runs — CI
               diffs it against GOLDEN_trace.json)
+  modak top <addr> [--interval-millis N] [--count K]
+              live scrape client for a `serve-batch --listen` plane:
+              polls /metrics + /alerts and prints one status line per
+              scrape (lifetime counters, queue depth, rolling-window
+              queue-wait percentiles, alert count). --count 0 = forever
+  modak sim-slo [--overload] [--listen <addr>] [--hold-millis N]
+              deterministic seeded SLO-watchdog simulation: 120 ticks of
+              synthetic queue waits through the rolling-window + burn-rate
+              machinery. With --overload the waits jump at t=60s and
+              exactly one queue-wait-p99 alert fires at t=65s; without it
+              zero alerts fire (the CI contract). --listen additionally
+              serves the sim's /alerts, /metrics, /healthz for
+              --hold-millis ms so a scraper can curl the plane
   modak lint [--root <dir>] [--deny-warnings] [--rules]
               concurrency invariant analyzer: scans the source tree
               (default --root rust/src) for lock guards held across
@@ -120,6 +140,14 @@ COMMON FLAGS:
                           chrome://tracing, or feed to `modak trace`)
   --metrics-out <file>    serve-batch: write the metrics registry in
                           Prometheus text exposition format
+  --listen <addr>         serve-batch: bind the live observability plane
+                          (e.g. 127.0.0.1:9100, or 127.0.0.1:0 for an
+                          ephemeral port — the bound address is printed).
+                          Serves GET /metrics (lifetime counters +
+                          rolling-window gauges, Prometheus text),
+                          /healthz, /summary, /shards, /alerts for the
+                          duration of the batch; `modak top <addr>`
+                          renders it live
 ";
 
 fn main() {
@@ -226,6 +254,8 @@ fn run(args: &[String]) -> Result<()> {
         "bench" => cmd_bench(&cli, artifacts_dir, store, history),
         "trace" => cmd_trace(&cli),
         "sim-trace" => cmd_sim_trace(&cli),
+        "top" => cmd_top(&cli),
+        "sim-slo" => cmd_sim_slo(&cli),
         "lint" => cmd_lint(&cli),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
@@ -436,7 +466,27 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
         svc_cfg.policy,
     );
 
-    let service = DeploymentService::new(store, manifest, model, &svc_cfg);
+    let service = Arc::new(DeploymentService::new(store, manifest, model, &svc_cfg));
+
+    // live plane: bind the scrape endpoint before the batch starts so a
+    // scraper (modak top, curl, Prometheus) watches it end to end
+    let obs_server = match cli.get("listen") {
+        Some(addr) => {
+            let srv = modak::obs::ObsServer::bind(
+                addr,
+                service.plane_state(),
+                modak::util::sync::CancelToken::new(),
+            )
+            .with_context(|| format!("binding observability endpoint {addr:?}"))?;
+            println!(
+                "observability: http://{}  (/metrics /healthz /summary /shards /alerts)",
+                srv.local_addr()
+            );
+            Some(srv)
+        }
+        None => None,
+    };
+
     let mut last_snapshot = String::new();
     let report = service.run_batch(reqs, &cfg, |cluster| {
         let snapshot = cluster.qstat_line();
@@ -466,6 +516,9 @@ fn cmd_serve_batch(cli: &Cli, artifacts: &str, store: &str, history: &str) -> Re
             .with_context(|| format!("writing metrics {path:?}"))?;
         println!("metrics: prometheus exposition -> {path}");
     }
+    if let Some(mut srv) = obs_server {
+        srv.shutdown();
+    }
     Ok(())
 }
 
@@ -482,7 +535,11 @@ fn cmd_trace(cli: &Cli) -> Result<()> {
     let spans = modak::obs::export::parse_chrome_trace(&text)
         .map_err(|e| anyhow!("parsing trace {path:?}: {e}"))?;
     let summary = modak::obs::export::summarise(&spans);
-    print!("{}", summary.render());
+    if cli.get("json").is_some() {
+        println!("{}", summary.to_json().to_string_pretty());
+    } else {
+        print!("{}", summary.render());
+    }
     if cli.get("check").is_some() && !summary.violations.is_empty() {
         bail!("{} span-tree violation(s)", summary.violations.len());
     }
@@ -500,6 +557,117 @@ fn cmd_sim_trace(cli: &Cli) -> Result<()> {
             println!("golden trace -> {path}");
         }
         None => print!("{json}"),
+    }
+    Ok(())
+}
+
+/// `modak top` — live scrape client for a `serve-batch --listen` plane:
+/// polls `/metrics` + `/alerts` over plain HTTP and prints one status
+/// line per scrape. Pure client — shares the dependency-free
+/// [`modak::obs::http::http_get`] with the endpoint's own tests.
+fn cmd_top(cli: &Cli) -> Result<()> {
+    let addr = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("top needs an <addr> (e.g. 127.0.0.1:9100)"))?;
+    let interval = cli.get_usize("interval-millis", 1000)? as u64;
+    let count = cli.get_usize("count", 0)?;
+
+    let mut scrapes = 0usize;
+    loop {
+        let (status, _ctype, body) = modak::obs::http::http_get(addr, "/metrics")
+            .with_context(|| format!("scraping http://{addr}/metrics"))?;
+        if status != 200 {
+            bail!("GET /metrics -> HTTP {status}");
+        }
+        let metrics = modak::obs::metrics::parse_exposition(&body);
+        // lifetime series have bare keys; window gauges carry a
+        // {window="..."} label, so match those by prefix
+        let flat = |key: &str| metrics.get(key).copied().unwrap_or(0.0);
+        let windowed = |prefix: &str| {
+            metrics
+                .iter()
+                .find(|(k, _)| k.starts_with(prefix))
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0)
+        };
+        let alerts = match modak::obs::http::http_get(addr, "/alerts") {
+            Ok((200, _, doc)) => modak::util::json::Json::parse(&doc)
+                .ok()
+                .and_then(|j| j.get("count").as_usize())
+                .unwrap_or(0),
+            _ => 0,
+        };
+        println!(
+            "top: submitted {} completed {} preempted {} | queue {} | \
+             win queue-wait p50 {:.3}s p99 {:.3}s | alerts {}",
+            flat("modak_jobs_submitted") as u64,
+            flat("modak_jobs_completed") as u64,
+            flat("modak_jobs_preempted") as u64,
+            flat("modak_queue_depth") as i64,
+            windowed("modak_window_queue_wait_seconds_p50"),
+            windowed("modak_window_queue_wait_seconds_p99"),
+            alerts,
+        );
+        scrapes += 1;
+        if count > 0 && scrapes >= count {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval));
+    }
+}
+
+/// `modak sim-slo` — the deterministic seeded SLO-watchdog simulation
+/// (the CI fixture): synthetic queue waits driven through the real
+/// rolling-window + burn-rate machinery. `--overload` makes the waits
+/// jump at t=60s and exactly one queue-wait-p99 alert fires at t=65s;
+/// the control run fires zero. With `--listen`, the sim's alert log is
+/// additionally served at `/alerts` (plus `/metrics`, `/healthz`) for
+/// `--hold-millis` ms so CI can curl the live plane.
+fn cmd_sim_slo(cli: &Cli) -> Result<()> {
+    let overload = cli.get("overload").is_some();
+    let report = modak::obs::slo::seeded_overload_sim(overload);
+    let mode = if overload { "overload" } else { "control" };
+    println!(
+        "sim-slo: mode {mode} | {} ticks | {} alert(s)",
+        report.ticks,
+        report.alerts.len()
+    );
+    for a in &report.alerts {
+        println!(
+            "alert {}: {} at t={}ms measured {} threshold {} burn {:.2}",
+            a.seq,
+            a.kind.name(),
+            a.t_ms,
+            a.measured,
+            a.threshold,
+            a.burn
+        );
+    }
+
+    if let Some(addr) = cli.get("listen") {
+        let hold = cli.get_usize("hold-millis", 10_000)? as u64;
+        let watchdog = Arc::new(report.watchdog);
+        let alerts: modak::obs::Provider =
+            Arc::new(move || watchdog.alerts_json().to_string_pretty());
+        let state = modak::obs::PlaneState {
+            metrics: Arc::new(|| modak::obs::metrics::global().render_prometheus()),
+            summary: None,
+            shards: None,
+            alerts: Some(alerts),
+        };
+        let mut srv = modak::obs::ObsServer::bind(
+            addr,
+            state,
+            modak::util::sync::CancelToken::new(),
+        )
+        .with_context(|| format!("binding sim-slo endpoint {addr:?}"))?;
+        println!(
+            "sim-slo: serving http://{} (/alerts /metrics /healthz) for {hold} ms",
+            srv.local_addr()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(hold));
+        srv.shutdown();
     }
     Ok(())
 }

@@ -41,6 +41,7 @@ pub struct Collector {
     /// job → (completion µs, shard it completed on)
     completed: BTreeMap<u64, (u64, usize)>,
     preemptions: u64,
+    slo_alerts: u64,
     spans: Vec<Span>,
 }
 
@@ -76,6 +77,11 @@ impl Collector {
                 }
                 self.completed.entry(job).or_insert((t_us, shard));
             }
+            SchedEvent::SloAlert { .. } => {
+                // watchdog output, not a job transition: count it so the
+                // summary can say "N alerts fired during this batch"
+                self.slo_alerts += 1;
+            }
         }
     }
 
@@ -98,6 +104,12 @@ impl Collector {
 
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// `SloAlert` events seen (the watchdog's violations, counted like
+    /// preemptions — they shape no span tree of their own).
+    pub fn slo_alerts(&self) -> u64 {
+        self.slo_alerts
     }
 
     /// The finished span tree: all closed spans plus one synthetic
@@ -179,6 +191,12 @@ impl Recorder {
         let d = bus.drain_since(self.cursor.load(Ordering::Acquire));
         self.cursor.store(d.seen, Ordering::Release);
         self.missed.fetch_add(d.missed, Ordering::Relaxed);
+        if d.missed > 0 {
+            // surface the overflow gap in the scrapeable registry too —
+            // a live operator sees it at /metrics, not just in the
+            // post-batch report
+            crate::obs::metrics::global().events_missed.add(d.missed);
+        }
         if d.events.is_empty() {
             return;
         }
@@ -305,6 +323,33 @@ mod tests {
     /// The recorder tap is non-consuming: its cursor is private, so a
     /// second subscriber still sees the full stream; ring overflow is
     /// surfaced in `missed()` instead of silently dropping spans.
+    /// An `SloAlert` is watchdog output, not a job transition: it counts,
+    /// opens no span, and leaves the tree sound.
+    #[test]
+    fn slo_alerts_count_without_disturbing_the_span_tree() {
+        use crate::util::sync::SloKind;
+        let mut c = Collector::new();
+        drive(
+            &mut c,
+            &[
+                (SchedEvent::Submit { shard: 0, job: 1 }, 0),
+                (SchedEvent::Dispatch { shard: 0, job: 1 }, 5),
+                (
+                    SchedEvent::SloAlert {
+                        shard: 0,
+                        job: 1,
+                        kind: SloKind::QueueWaitP99,
+                    },
+                    6,
+                ),
+                (SchedEvent::Complete { shard: 0, job: 1 }, 105),
+            ],
+        );
+        assert_eq!(c.slo_alerts(), 1);
+        let set = c.finish();
+        assert!(set.check().is_empty(), "{:?}", set.check());
+    }
+
     #[test]
     fn recorder_taps_the_bus_without_consuming_and_reports_overflow() {
         let bus: EventBus<SchedEvent> = EventBus::with_capacity(4);
@@ -319,12 +364,19 @@ mod tests {
         // an independent cursor drains the same ring unaffected
         let d = bus.drain_since(0);
         assert_eq!(d.events.len(), 3);
-        // overflow a tiny ring: the gap is counted, not swallowed
+        // overflow a tiny ring: the gap is counted, not swallowed — and
+        // mirrored into the scrapeable registry (satellite: the counter
+        // is exported at /metrics, asserted end-to-end in obs::http)
+        let exported_before = crate::obs::metrics::global().events_missed.get();
         for j in 10..20 {
             bus.publish(SchedEvent::Submit { shard: 0, job: j });
         }
         rec.drain(&bus);
         assert!(rec.missed() > 0);
+        assert!(
+            crate::obs::metrics::global().events_missed.get() >= exported_before + rec.missed(),
+            "the overflow gap must reach the global registry"
+        );
     }
 
     /// The obs lock ranks innermost: taking it under the full scheduler

@@ -253,6 +253,146 @@ pub fn summarise(spans: &SpanSet) -> TraceSummary {
 }
 
 impl TraceSummary {
+    /// The machine-readable summary (`modak trace --json`, `/summary`):
+    /// same content as [`Self::render`], as deterministic JSON.
+    /// `coverage` is included per job as a derived convenience field;
+    /// [`Self::from_json`] recomputes it.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("makespan_s", Json::Num(self.makespan_s));
+        j.set(
+            "phases",
+            Json::Arr(
+                self.phases
+                    .iter()
+                    .map(|p| {
+                        let mut o = Json::obj();
+                        o.set("name", Json::from(p.name.as_str()));
+                        o.set("count", Json::from(p.count));
+                        o.set("p50_s", Json::Num(p.p50_s));
+                        o.set("p95_s", Json::Num(p.p95_s));
+                        o.set("p99_s", Json::Num(p.p99_s));
+                        o.set("total_s", Json::Num(p.total_s));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "jobs",
+            Json::Arr(
+                self.jobs
+                    .iter()
+                    .map(|jp| {
+                        let mut o = Json::obj();
+                        o.set("job", Json::Num(jp.job as f64));
+                        o.set("wall_s", Json::Num(jp.wall_s));
+                        o.set("covered_s", Json::Num(jp.covered_s));
+                        o.set("gap_s", Json::Num(jp.gap_s));
+                        o.set("coverage", Json::Num(jp.coverage()));
+                        o.set(
+                            "by_phase",
+                            Json::Obj(
+                                jp.by_phase
+                                    .iter()
+                                    .map(|(n, s)| (n.clone(), Json::Num(*s)))
+                                    .collect(),
+                            ),
+                        );
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "violations",
+            Json::Arr(
+                self.violations
+                    .iter()
+                    .map(|v| Json::from(v.as_str()))
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Parse a [`Self::to_json`] document back. The round-trip partner
+    /// pinned in tests; tooling consuming `modak trace --json` gets the
+    /// same shape-checking for free.
+    pub fn from_json(j: &Json) -> Result<TraceSummary, String> {
+        fn num(j: &Json, k: &str) -> Result<f64, String> {
+            j.get(k)
+                .as_f64()
+                .ok_or(format!("summary: missing/non-numeric `{k}`"))
+        }
+        fn s(j: &Json, k: &str) -> Result<String, String> {
+            Ok(j.get(k)
+                .as_str()
+                .ok_or(format!("summary: missing `{k}`"))?
+                .to_string())
+        }
+        let phases = j
+            .get("phases")
+            .as_arr()
+            .ok_or("summary: missing `phases`")?
+            .iter()
+            .map(|p| {
+                Ok(PhaseStats {
+                    name: s(p, "name")?,
+                    count: num(p, "count")? as usize,
+                    p50_s: num(p, "p50_s")?,
+                    p95_s: num(p, "p95_s")?,
+                    p99_s: num(p, "p99_s")?,
+                    total_s: num(p, "total_s")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let jobs = j
+            .get("jobs")
+            .as_arr()
+            .ok_or("summary: missing `jobs`")?
+            .iter()
+            .map(|jp| {
+                let by_phase = jp
+                    .get("by_phase")
+                    .as_obj()
+                    .ok_or("summary: missing `by_phase`")?
+                    .iter()
+                    .map(|(n, v)| {
+                        Ok((
+                            n.clone(),
+                            v.as_f64().ok_or(format!("summary: bad phase `{n}`"))?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok(JobPath {
+                    job: num(jp, "job")? as u64,
+                    wall_s: num(jp, "wall_s")?,
+                    by_phase,
+                    covered_s: num(jp, "covered_s")?,
+                    gap_s: num(jp, "gap_s")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let violations = j
+            .get("violations")
+            .as_arr()
+            .ok_or("summary: missing `violations`")?
+            .iter()
+            .map(|v| {
+                Ok(v.as_str()
+                    .ok_or("summary: non-string violation")?
+                    .to_string())
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(TraceSummary {
+            makespan_s: num(j, "makespan_s")?,
+            phases,
+            jobs,
+            violations,
+        })
+    }
+
     /// The `modak trace` report: per-phase percentile table, per-job
     /// critical-path breakdown (gaps explicit), violations last.
     pub fn render(&self) -> String {
@@ -414,6 +554,40 @@ mod tests {
         let sum = summarise(&s);
         assert_eq!(sum.jobs[0].covered_s, 50.0);
         assert!(sum.violations.iter().any(|v| v.contains("overlap")));
+    }
+
+    /// Satellite: the machine-readable summary round-trips exactly —
+    /// every field a consumer reads parses back to the struct the
+    /// summariser produced (f64s survive via shortest-round-trip
+    /// Display, like the exposition).
+    #[test]
+    fn summary_json_roundtrips_exactly() {
+        let mut set = sample_set();
+        // a second job with a deliberate coverage gap, so violations
+        // round-trip too
+        set.push(span(2, ROOT, 0, 100_000_000, 0));
+        set.push(span(2, "train", 0, 50_000_000, 0));
+        set.normalize();
+        let sum = summarise(&set);
+        assert!(!sum.violations.is_empty());
+        let text = sum.to_json().to_string_pretty();
+        let back = TraceSummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, sum);
+        // the derived coverage field is present for consumers
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("jobs").as_arr().unwrap()[0].get("coverage").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn summary_from_json_rejects_malformed_documents() {
+        for bad in [
+            "{}",
+            r#"{"makespan_s":1,"phases":[],"jobs":[]}"#,
+            r#"{"makespan_s":1,"phases":[{"name":"q"}],"jobs":[],"violations":[]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(TraceSummary::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

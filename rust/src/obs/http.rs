@@ -1,0 +1,484 @@
+//! Live scrape surface: a minimal HTTP/1.1 server over
+//! `std::net::TcpListener`, just enough protocol for Prometheus and
+//! `curl`. No external crates, no TLS, no keep-alive — every response
+//! closes the connection, which keeps the state machine trivial and the
+//! worker pool bounded.
+//!
+//! The server is deliberately decoupled from the scheduler: each route
+//! is backed by a [`Provider`] closure handed in at bind time, so this
+//! module never touches cluster or service types (and holds **no**
+//! locks of its own — connections reach workers over per-worker bounded
+//! channels, not a shared mutexed queue).
+//!
+//! Routes:
+//!
+//! | path       | content type                  | body                     |
+//! |------------|-------------------------------|--------------------------|
+//! | `/healthz` | `text/plain; charset=utf-8`   | `ok\n` liveness probe    |
+//! | `/metrics` | `text/plain; version=0.0.4`   | Prometheus exposition    |
+//! | `/summary` | `application/json`            | `TraceSummary` JSON      |
+//! | `/shards`  | `application/json`            | per-shard queue/staging  |
+//! | `/alerts`  | `application/json`            | SLO watchdog state       |
+//!
+//! Shutdown is cooperative: cancel the [`CancelToken`], the accept loop
+//! notices within one poll interval and drops the worker channels, the
+//! workers finish in-flight responses (bounded by the 500 ms socket
+//! timeouts) and exit on the closed channel.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::util::sync::CancelToken;
+
+/// A route body, produced on demand at request time. Providers run on a
+/// worker thread; anything they lock internally must respect the usual
+/// rank order (they are ordinary call sites, not part of this module).
+pub type Provider = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// Handler worker count: scrapes are tiny and infrequent, so a small
+/// fixed pool bounds thread use without meaningfully queueing.
+pub const WORKERS: usize = 4;
+
+/// Per-worker connection queue depth; a full queue sheds with 503
+/// rather than blocking the accept loop.
+const QUEUE_DEPTH: usize = 32;
+
+/// Hard cap on request-head bytes; anything longer is malformed for our
+/// purposes (we only ever serve small GETs).
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Socket read/write budget per connection — bounds how long a worker
+/// can be pinned by a slow or stuck client, and therefore how long
+/// [`ObsServer::shutdown`] can take to join.
+const IO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Accept-loop poll interval while idle (the listener is non-blocking
+/// so cancellation is noticed promptly).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+const TEXT: &str = "text/plain; charset=utf-8";
+const JSON: &str = "application/json";
+/// The exposition content type Prometheus scrapers negotiate on.
+pub const PROMETHEUS_TEXT: &str = "text/plain; version=0.0.4";
+
+/// What each route serves. `metrics` is mandatory (the plane exists to
+/// be scraped); the JSON routes answer 404 until a provider is wired,
+/// so a bare metrics server is still a valid deployment.
+pub struct PlaneState {
+    pub metrics: Provider,
+    pub summary: Option<Provider>,
+    pub shards: Option<Provider>,
+    pub alerts: Option<Provider>,
+}
+
+impl PlaneState {
+    /// A plane that serves only `/metrics` (and `/healthz`, which is
+    /// static) — the smallest useful scrape surface.
+    pub fn metrics_only(metrics: Provider) -> PlaneState {
+        PlaneState {
+            metrics,
+            summary: None,
+            shards: None,
+            alerts: None,
+        }
+    }
+}
+
+/// A running scrape endpoint: one accept thread plus [`WORKERS`]
+/// handler threads. Dropping the server shuts it down cleanly.
+pub struct ObsServer {
+    addr: SocketAddr,
+    cancel: CancelToken,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`, or port `0` to let the OS
+    /// pick) and start serving. The returned server owns its threads;
+    /// cancelling `cancel` — or calling [`Self::shutdown`], or dropping
+    /// the server — stops them.
+    pub fn bind(addr: &str, state: PlaneState, cancel: CancelToken) -> io::Result<ObsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(state);
+
+        let mut senders = Vec::with_capacity(WORKERS);
+        let mut workers = Vec::with_capacity(WORKERS);
+        for i in 0..WORKERS {
+            let (tx, rx) = sync_channel::<TcpStream>(QUEUE_DEPTH);
+            senders.push(tx);
+            let st = Arc::clone(&state);
+            let handle = thread::Builder::new()
+                .name(format!("obs-http-{i}"))
+                .spawn(move || {
+                    // the channel closes when the accept loop drops the
+                    // senders; drain what was already queued, then exit
+                    while let Ok(conn) = rx.recv() {
+                        handle_conn(conn, &st);
+                    }
+                })
+                .map_err(|e| io::Error::other(format!("spawn http worker: {e}")))?;
+            workers.push(handle);
+        }
+
+        let c = cancel.clone();
+        let accept = thread::Builder::new()
+            .name("obs-http-accept".into())
+            .spawn(move || {
+                let mut next = 0usize;
+                while !c.is_cancelled() {
+                    match listener.accept() {
+                        Ok((conn, _peer)) => {
+                            let tx = &senders[next % senders.len()];
+                            next = next.wrapping_add(1);
+                            if let Err(TrySendError::Full(conn)) = tx.try_send(conn) {
+                                // shed rather than block the accept
+                                // loop behind a saturated pool
+                                respond(conn, 503, TEXT, "busy\n");
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            thread::sleep(ACCEPT_POLL)
+                        }
+                        // transient accept errors (ECONNABORTED and
+                        // friends): back off and keep serving
+                        Err(_) => thread::sleep(ACCEPT_POLL),
+                    }
+                }
+            })
+            .map_err(|e| io::Error::other(format!("spawn http accept: {e}")))?;
+
+        Ok(ObsServer {
+            addr: local,
+            cancel,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The bound address — useful when binding port 0.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain in-flight requests, join every thread.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.cancel.cancel();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read the request head, parse the request line, route. Every exit
+/// path writes a complete response (or drops a connection that never
+/// sent a byte) — malformed input is a 400, never a panic.
+fn handle_conn(mut conn: TcpStream, state: &PlaneState) {
+    let _ = conn.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = conn.set_write_timeout(Some(IO_TIMEOUT));
+
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match conn.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= MAX_HEAD_BYTES {
+                    break;
+                }
+            }
+            // timeout or reset; respond to whatever we did read
+            Err(_) => break,
+        }
+    }
+    if head.is_empty() {
+        return; // client connected and said nothing
+    }
+
+    let Some((method, path)) = parse_request_line(&head) else {
+        respond(conn, 400, TEXT, "bad request\n");
+        return;
+    };
+    if method != "GET" {
+        respond(conn, 405, TEXT, "method not allowed\n");
+        return;
+    }
+    // queries are accepted and ignored — scrapers sometimes tack on
+    // cache-busters
+    let path = path.split('?').next().unwrap_or(path);
+
+    match path {
+        "/healthz" => respond(conn, 200, TEXT, "ok\n"),
+        "/metrics" => respond(conn, 200, PROMETHEUS_TEXT, &(state.metrics)()),
+        "/summary" => respond_opt(conn, state.summary.as_ref()),
+        "/shards" => respond_opt(conn, state.shards.as_ref()),
+        "/alerts" => respond_opt(conn, state.alerts.as_ref()),
+        _ => respond(conn, 404, TEXT, "not found\n"),
+    }
+}
+
+/// `GET /path HTTP/1.1` → `("GET", "/path")`. Anything else — no CRLF,
+/// non-UTF-8, wrong token count, a version that is not `HTTP/…` — is
+/// malformed.
+fn parse_request_line(head: &[u8]) -> Option<(&str, &str)> {
+    let end = head.windows(2).position(|w| w == b"\r\n")?;
+    let line = std::str::from_utf8(&head[..end]).ok()?;
+    let mut parts = line.split(' ');
+    let (method, path, version) = (parts.next()?, parts.next()?, parts.next()?);
+    if parts.next().is_some() || !version.starts_with("HTTP/") || !path.starts_with('/') {
+        return None;
+    }
+    Some((method, path))
+}
+
+/// Serve an optional route: 404 until a provider is wired.
+fn respond_opt(conn: TcpStream, provider: Option<&Provider>) {
+    match provider {
+        Some(p) => respond(conn, 200, JSON, &p()),
+        None => respond(conn, 404, TEXT, "not found\n"),
+    }
+}
+
+/// Write a complete response and close. Write errors are ignored — the
+/// client hung up, and there is nobody left to tell.
+fn respond(mut conn: TcpStream, status: u16, ctype: &str, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let _ = conn.set_write_timeout(Some(IO_TIMEOUT));
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = conn.write_all(head.as_bytes());
+    let _ = conn.write_all(body.as_bytes());
+    let _ = conn.flush();
+}
+
+/// A one-shot GET against a plane endpoint, returning
+/// `(status, content_type, body)`. Shared by `modak top`, the CI
+/// endpoint smoke, and the tests below — the protocol lives in one
+/// place on both sides.
+pub fn http_get(addr: &str, path: &str) -> io::Result<(u16, String, String)> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(2)))?;
+    conn.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: modak\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut raw = Vec::new();
+    conn.read_to_end(&mut raw)?; // server closes every connection
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| io::Error::other("truncated response"))?;
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::other("bad status line"))?;
+    let ctype = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Type: "))
+        .unwrap_or("")
+        .to_string();
+    Ok((status, ctype, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::collect::Recorder;
+    use crate::obs::metrics::{global, parse_exposition};
+    use crate::util::sync::{CancelToken, EventBus, SchedEvent};
+
+    fn plane() -> PlaneState {
+        PlaneState {
+            metrics: Arc::new(|| global().render_prometheus()),
+            summary: Some(Arc::new(|| "{\"makespan_s\":0}".to_string())),
+            shards: None,
+            alerts: Some(Arc::new(|| "{\"alerts\":[],\"count\":0}".to_string())),
+        }
+    }
+
+    fn serve(state: PlaneState) -> ObsServer {
+        ObsServer::bind("127.0.0.1:0", state, CancelToken::new()).expect("bind loopback")
+    }
+
+    fn addr(s: &ObsServer) -> String {
+        s.local_addr().to_string()
+    }
+
+    #[test]
+    fn healthz_is_a_static_liveness_probe() {
+        let srv = serve(plane());
+        let (status, ctype, body) = http_get(&addr(&srv), "/healthz").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok\n"));
+        assert_eq!(ctype, TEXT);
+    }
+
+    /// Satellite: `/metrics` declares the Prometheus exposition content
+    /// type and its body round-trips through our own parser.
+    #[test]
+    fn metrics_scrape_parses_back_through_the_exposition_parser() {
+        let srv = serve(plane());
+        let (status, ctype, body) = http_get(&addr(&srv), "/metrics").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(ctype, PROMETHEUS_TEXT);
+        let parsed = parse_exposition(&body);
+        assert!(parsed.contains_key("modak_jobs_submitted"), "got: {body}");
+        assert!(parsed.contains_key("modak_events_missed"));
+    }
+
+    #[test]
+    fn unknown_paths_and_unwired_providers_answer_404() {
+        let srv = serve(plane());
+        let (status, _, _) = http_get(&addr(&srv), "/nope").unwrap();
+        assert_eq!(status, 404);
+        // `shards` has no provider in this plane
+        let (status, _, _) = http_get(&addr(&srv), "/shards").unwrap();
+        assert_eq!(status, 404);
+        // but wired JSON routes answer with the JSON content type
+        let (status, ctype, body) = http_get(&addr(&srv), "/alerts").unwrap();
+        assert_eq!((status, ctype.as_str()), (200, JSON));
+        assert!(body.contains("\"count\""));
+    }
+
+    /// Satellite: malformed requests get a 400 and never take the
+    /// server down — it keeps answering well-formed requests after each
+    /// piece of garbage.
+    #[test]
+    fn malformed_requests_get_400_without_panicking() {
+        let srv = serve(plane());
+        let a = addr(&srv);
+        let garbage: [&[u8]; 4] = [
+            b"garbage\r\n\r\n",
+            b"\xff\xfe\x00\x01\r\n\r\n",
+            b"GET /metrics\r\n\r\n",                // missing version
+            b"GET /metrics HTTP/1.1 extra\r\n\r\n", // too many tokens
+        ];
+        for g in garbage {
+            let mut conn = TcpStream::connect(&a).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            conn.write_all(g).unwrap();
+            let mut raw = Vec::new();
+            let _ = conn.read_to_end(&mut raw);
+            let text = String::from_utf8_lossy(&raw);
+            assert!(text.starts_with("HTTP/1.1 400"), "got: {text}");
+        }
+        // non-GET is its own status
+        let mut conn = TcpStream::connect(&a).unwrap();
+        conn.write_all(b"POST /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let mut raw = Vec::new();
+        let _ = conn.read_to_end(&mut raw);
+        assert!(String::from_utf8_lossy(&raw).starts_with("HTTP/1.1 405"));
+        // and the server is still healthy
+        let (status, _, body) = http_get(&a, "/healthz").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok\n"));
+    }
+
+    /// Satellite: concurrent scrapes across the worker pool all succeed
+    /// and all carry complete bodies.
+    #[test]
+    fn concurrent_scrapes_all_succeed() {
+        let srv = serve(plane());
+        let a = addr(&srv);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..4 {
+                    let (status, _, body) = http_get(&a, "/metrics").expect("scrape");
+                    assert_eq!(status, 200);
+                    assert!(parse_exposition(&body).contains_key("modak_jobs_submitted"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("scraper thread");
+        }
+    }
+
+    /// Satellite: shutting down while a client hammers the endpoint is
+    /// clean — in-flight responses stay well-formed, the listener
+    /// closes, and every thread joins.
+    #[test]
+    fn shutdown_while_scraping_is_clean() {
+        let mut srv = serve(plane());
+        let a = addr(&srv);
+        let hammer = {
+            let a = a.clone();
+            std::thread::spawn(move || {
+                let mut served = 0u32;
+                loop {
+                    match http_get(&a, "/metrics") {
+                        Ok((status, _, body)) => {
+                            assert_eq!(status, 200);
+                            assert!(body.ends_with('\n'), "truncated body");
+                            served += 1;
+                        }
+                        // listener closed mid-hammer: shutdown won
+                        Err(_) => return served,
+                    }
+                }
+            })
+        };
+        // let the hammer land at least one scrape, then pull the plug
+        std::thread::sleep(Duration::from_millis(30));
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        let _served = hammer.join().expect("hammer thread");
+        // the port no longer answers
+        assert!(http_get(&a, "/healthz").is_err());
+    }
+
+    /// Satellite: overrunning the event ring is visible in the scrape —
+    /// the Recorder exports its `missed` count through the registry and
+    /// `/metrics` shows it.
+    #[test]
+    fn ring_overflow_is_exported_at_the_metrics_route() {
+        let bus = EventBus::with_capacity(8);
+        let rec = Recorder::new();
+        // publish far past capacity before the single drain
+        for j in 0..64 {
+            bus.publish(SchedEvent::Submit { shard: 0, job: j });
+        }
+        let before = global().events_missed.get();
+        rec.drain(&bus);
+        assert!(rec.missed() > 0, "ring should have overflowed");
+
+        let srv = serve(plane());
+        let (status, _, body) = http_get(&addr(&srv), "/metrics").unwrap();
+        assert_eq!(status, 200);
+        let parsed = parse_exposition(&body);
+        let exported = parsed["modak_events_missed"];
+        assert!(
+            exported >= (before + rec.missed()) as f64,
+            "missed={} before={before} exported={exported}",
+            rec.missed()
+        );
+    }
+}

@@ -176,6 +176,23 @@ impl Histogram {
         f64::INFINITY
     }
 
+    /// Add raw per-bucket counts (a cumulative-snapshot delta) into this
+    /// histogram. This is how `obs::window` rebuilds a time-bucketed
+    /// histogram from two snapshots of a live one without re-observing
+    /// every sample; extra slots in `buckets` are ignored, missing ones
+    /// add nothing.
+    pub fn add_counts(&self, buckets: &[u64], count: u64, sum: f64) {
+        for (mine, theirs) in self.buckets.iter().zip(buckets) {
+            mine.fetch_add(*theirs, Ordering::Relaxed);
+        }
+        self.count.fetch_add(count, Ordering::Relaxed);
+        let _ = self
+            .sum_bits
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + sum).to_bits())
+            });
+    }
+
     /// Fold `other` into `self` (bucket-wise add). Merging per-shard
     /// histograms must equal the whole-cluster histogram — pinned in
     /// tests below.
@@ -212,6 +229,9 @@ pub struct Registry {
     pub builds: Counter,
     /// Builds satisfied from the digest-keyed cache.
     pub build_cache_hits: Counter,
+    /// `EventBus` ring entries evicted before a subscriber drained them
+    /// (the `Recorder`'s overflow gap, surfaced instead of silent).
+    pub events_missed: Counter,
     /// Jobs still in flight at the service's last `await_batch` sweep.
     pub queue_depth: Gauge,
     /// Seconds from submission to dispatch, net of prior run time.
@@ -229,7 +249,7 @@ impl Registry {
         Registry::default()
     }
 
-    fn counters(&self) -> [(&'static str, &Counter); 7] {
+    fn counters(&self) -> [(&'static str, &Counter); 8] {
         [
             ("modak_jobs_submitted", &self.jobs_submitted),
             ("modak_jobs_completed", &self.jobs_completed),
@@ -238,6 +258,7 @@ impl Registry {
             ("modak_migrations_elastic", &self.migrations_elastic),
             ("modak_builds", &self.builds),
             ("modak_build_cache_hits", &self.build_cache_hits),
+            ("modak_events_missed", &self.events_missed),
         ]
     }
 
@@ -393,6 +414,38 @@ mod tests {
         assert_eq!(merged.count(), whole.count());
         assert_eq!(merged.sum(), whole.sum());
         assert_eq!(merged.quantile(0.5), whole.quantile(0.5));
+    }
+
+    /// Rebuilding a histogram from a cumulative-snapshot delta via
+    /// `add_counts` equals observing the delta's samples directly — the
+    /// contract `obs::window` leans on.
+    #[test]
+    fn histogram_add_counts_equals_direct_observation() {
+        let live = Histogram::new();
+        live.observe(0.5);
+        let before = (live.snapshot(), live.count(), live.sum());
+        for v in [0.25, 4.0, 4.0] {
+            live.observe(v);
+        }
+        let delta_buckets: Vec<u64> = live
+            .snapshot()
+            .iter()
+            .zip(&before.0)
+            .map(|(now, then)| now - then)
+            .collect();
+        let rebuilt = Histogram::new();
+        rebuilt.add_counts(
+            &delta_buckets,
+            live.count() - before.1,
+            live.sum() - before.2,
+        );
+        let direct = Histogram::new();
+        for v in [0.25, 4.0, 4.0] {
+            direct.observe(v);
+        }
+        assert_eq!(rebuilt.snapshot(), direct.snapshot());
+        assert_eq!(rebuilt.count(), direct.count());
+        assert_eq!(rebuilt.sum(), direct.sum());
     }
 
     /// Satellite: the exposition parses back to the same values — the

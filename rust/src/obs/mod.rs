@@ -21,15 +21,35 @@
 //!   log, and the `modak trace` summariser (per-phase p50/p95/p99,
 //!   per-job critical-path breakdown).
 //!
+//! PR 9 adds the **live plane** on top of those four:
+//! * [`window`] — rolling-window aggregation: rings of time-bucketed
+//!   histogram/counter snapshots, so `/metrics` can publish "p99 over
+//!   the last minute" next to the lifetime series.
+//! * [`slo`] — a declarative SLO watchdog evaluating budgets as burn
+//!   rates over those windows; violations publish
+//!   `SchedEvent::SloAlert` on the bus (with no obs lock held) and
+//!   surface at `/alerts`.
+//! * [`http`] — a dependency-free HTTP/1.1 scrape endpoint
+//!   (`/metrics`, `/healthz`, `/summary`, `/shards`, `/alerts`) behind
+//!   `serve-batch --listen`, read back by `modak top`.
+//!
 //! The recorder's own lock ranks **innermost** (`LockRank::Obs`): it is
 //! taken only after every scheduler/bus lock has been released, so
-//! instrumentation can never extend a hot-path critical section.
+//! instrumentation can never extend a hot-path critical section. The
+//! live plane keeps that rank — windows and watchdog sit behind one
+//! `Obs`-ranked lock, and alert publication happens after it drops.
 
 pub mod collect;
 pub mod export;
+pub mod http;
 pub mod metrics;
+pub mod slo;
 pub mod span;
+pub mod window;
 
 pub use collect::{Collector, Recorder};
+pub use http::{ObsServer, PlaneState, Provider};
 pub use metrics::{global, Counter, Gauge, Histogram, Registry};
+pub use slo::{SloBudget, SloWatchdog};
 pub use span::{Span, SpanSet};
+pub use window::WindowSet;

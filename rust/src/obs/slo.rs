@@ -1,0 +1,481 @@
+//! Declarative SLO watchdog: budgets over the rolling windows, evaluated
+//! as burn rates, violations published as [`SchedEvent::SloAlert`].
+//!
+//! A budget says "this signal, over its rolling window, must stay on
+//! this side of this threshold". The watchdog is *ticked* (by the
+//! deployment service's `await_batch` sweep, or by a deterministic sim
+//! with simulated time); each tick it measures every budget against the
+//! [`WindowSet`], tracks what fraction of recent ticks were in
+//! violation (the **burn rate** — one bad scrape is noise, a window
+//! half-full of bad ticks is an incident), and fires an alert on the
+//! tick the burn rate crosses the limit. The alert re-arms only after
+//! the burn rate drops back under the limit, so a sustained violation
+//! fires exactly once — deterministic sims pin the exact tick.
+//!
+//! Like [`crate::obs::collect::Collector`], the watchdog is clock-free
+//! and lock-free by itself; the service owns it (together with the
+//! windows it reads) behind one `Obs`-ranked mutex, and publishes the
+//! returned alerts on the [`EventBus`] **after** dropping that guard —
+//! the PR 7 guard-across-publish rule applies to the watchdog like any
+//! other publisher.
+//!
+//! [`EventBus`]: crate::util::sync::EventBus
+
+use crate::obs::window::{CounterRing, WindowSet};
+use crate::util::json::Json;
+use crate::util::sync::{SchedEvent, SloKind};
+
+/// One declarative budget. Units of `threshold` depend on the kind:
+/// seconds for the latency kinds, a rate in `[0, 1]` for
+/// `StagingHitRate`, percent for `ModelErrorMean`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloBudget {
+    pub kind: SloKind,
+    /// The boundary. Latency/error kinds violate *above* it, the hit
+    /// rate violates *below* it.
+    pub threshold: f64,
+    /// Minimum samples in the window before the budget evaluates at all
+    /// (thin data must not alert).
+    pub min_samples: u64,
+    /// Fraction of recent ticks that must be in violation before the
+    /// alert fires (`0.5` = half the burn window).
+    pub burn_limit: f64,
+}
+
+impl SloBudget {
+    /// The default plane budgets: p99 queue wait under 30 s, mean
+    /// scheduler overhead under the CI-pinned 1 ms, staging hit rate
+    /// over 50 %, mean perf-model |error| under 25 %.
+    pub fn default_plane() -> Vec<SloBudget> {
+        vec![
+            SloBudget {
+                kind: SloKind::QueueWaitP99,
+                threshold: 30.0,
+                min_samples: 20,
+                burn_limit: 0.5,
+            },
+            SloBudget {
+                kind: SloKind::SchedulerOverheadMean,
+                threshold: 0.001,
+                min_samples: 100,
+                burn_limit: 0.5,
+            },
+            SloBudget {
+                kind: SloKind::StagingHitRate,
+                threshold: 0.5,
+                min_samples: 20,
+                burn_limit: 0.5,
+            },
+            SloBudget {
+                kind: SloKind::ModelErrorMean,
+                threshold: 25.0,
+                min_samples: 10,
+                burn_limit: 0.5,
+            },
+        ]
+    }
+}
+
+/// One fired alert, as `/alerts` reports it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloAlertRecord {
+    /// Monotonically increasing per-watchdog sequence (carried as the
+    /// `job` field of the bus event).
+    pub seq: u64,
+    /// Watchdog-clock milliseconds when the alert fired.
+    pub t_ms: u64,
+    pub kind: SloKind,
+    /// Shard the violation localises to (0 for cluster-wide budgets —
+    /// every current budget is cluster-wide).
+    pub shard: usize,
+    /// The measured windowed value at fire time.
+    pub measured: f64,
+    pub threshold: f64,
+    /// Burn rate at fire time (violating ticks / ticks in the burn
+    /// window).
+    pub burn: f64,
+}
+
+impl SloAlertRecord {
+    /// The bus event announcing this alert.
+    pub fn event(&self) -> SchedEvent {
+        SchedEvent::SloAlert {
+            shard: self.shard,
+            job: self.seq,
+            kind: self.kind,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seq", Json::Num(self.seq as f64));
+        j.set("t_ms", Json::Num(self.t_ms as f64));
+        j.set("kind", Json::from(self.kind.name()));
+        j.set("shard", Json::from(self.shard));
+        j.set("measured", Json::Num(self.measured));
+        j.set("threshold", Json::Num(self.threshold));
+        j.set("burn", Json::Num(self.burn));
+        j
+    }
+}
+
+/// Per-budget burn tracking: violating/total ticks over the burn window,
+/// plus the re-arm latch.
+#[derive(Debug)]
+struct BudgetState {
+    violating: CounterRing,
+    total: CounterRing,
+    armed: bool,
+}
+
+/// The watchdog: budgets + burn state + the alert log `/alerts` serves.
+#[derive(Debug)]
+pub struct SloWatchdog {
+    budgets: Vec<SloBudget>,
+    states: Vec<BudgetState>,
+    alerts: Vec<SloAlertRecord>,
+    seq: u64,
+    /// Ticks required in the burn window before a burn rate is
+    /// trustworthy (the very first violating tick is burn 1/1 — not an
+    /// incident yet).
+    min_ticks: u64,
+}
+
+impl SloWatchdog {
+    /// A watchdog whose burn rates look at the last `burn_window_ms`
+    /// in `slots` slots.
+    pub fn new(budgets: Vec<SloBudget>, burn_window_ms: u64, slots: usize) -> SloWatchdog {
+        let states = budgets
+            .iter()
+            .map(|_| BudgetState {
+                violating: CounterRing::new(burn_window_ms, slots),
+                total: CounterRing::new(burn_window_ms, slots),
+                armed: true,
+            })
+            .collect();
+        SloWatchdog {
+            budgets,
+            states,
+            alerts: Vec::new(),
+            seq: 0,
+            min_ticks: 5,
+        }
+    }
+
+    /// The default plane watchdog: default budgets, burn rates over the
+    /// last 60 s in 5 s slots.
+    pub fn default_plane() -> SloWatchdog {
+        SloWatchdog::new(SloBudget::default_plane(), 60_000, 12)
+    }
+
+    pub fn budgets(&self) -> &[SloBudget] {
+        &self.budgets
+    }
+
+    /// Every alert fired so far (the `/alerts` log).
+    pub fn alerts(&self) -> &[SloAlertRecord] {
+        &self.alerts
+    }
+
+    /// The measured windowed value for `kind` at `now_ms`, or `None`
+    /// below the budget's sample floor.
+    fn measure(kind: SloKind, now_ms: u64, w: &WindowSet, min_samples: u64) -> Option<f64> {
+        match kind {
+            SloKind::QueueWaitP99 => {
+                let h = w.queue_wait.windowed(now_ms);
+                (h.count() >= min_samples).then(|| h.quantile(0.99))
+            }
+            SloKind::SchedulerOverheadMean => {
+                let h = w.scheduler_overhead.windowed(now_ms);
+                (h.count() >= min_samples).then(|| h.sum() / h.count() as f64)
+            }
+            SloKind::StagingHitRate => w.staging_hit_rate(now_ms, min_samples),
+            SloKind::ModelErrorMean => {
+                let h = w.model_abs_err_pct.windowed(now_ms);
+                (h.count() >= min_samples).then(|| h.sum() / h.count() as f64)
+            }
+        }
+    }
+
+    fn violates(kind: SloKind, measured: f64, threshold: f64) -> bool {
+        match kind {
+            SloKind::StagingHitRate => measured < threshold,
+            _ => measured > threshold,
+        }
+    }
+
+    /// Evaluate every budget at `now_ms` against `w`. Returns the alerts
+    /// that fired **this tick** — the caller publishes their
+    /// [`SloAlertRecord::event`]s on the bus with no obs guard held.
+    pub fn tick(&mut self, now_ms: u64, w: &WindowSet) -> Vec<SloAlertRecord> {
+        let mut fired = Vec::new();
+        for (b, st) in self.budgets.iter().zip(&mut self.states) {
+            let Some(measured) = Self::measure(b.kind, now_ms, w, b.min_samples) else {
+                continue;
+            };
+            st.total.add(now_ms, 1);
+            if Self::violates(b.kind, measured, b.threshold) {
+                st.violating.add(now_ms, 1);
+            }
+            let total = st.total.windowed_sum(now_ms);
+            if total < self.min_ticks.max(1) {
+                continue;
+            }
+            let burn = st.violating.windowed_sum(now_ms) as f64 / total as f64;
+            if burn >= b.burn_limit {
+                if st.armed {
+                    st.armed = false;
+                    self.seq += 1;
+                    let rec = SloAlertRecord {
+                        seq: self.seq,
+                        t_ms: now_ms,
+                        kind: b.kind,
+                        shard: 0,
+                        measured,
+                        threshold: b.threshold,
+                        burn,
+                    };
+                    self.alerts.push(rec.clone());
+                    fired.push(rec);
+                }
+            } else {
+                st.armed = true;
+            }
+        }
+        fired
+    }
+
+    /// The `/alerts` body: fired alerts plus the budget table, so an
+    /// operator reads thresholds and burn limits off the same surface.
+    pub fn alerts_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "alerts",
+            Json::Arr(self.alerts.iter().map(SloAlertRecord::to_json).collect()),
+        );
+        j.set(
+            "budgets",
+            Json::Arr(
+                self.budgets
+                    .iter()
+                    .map(|b| {
+                        let mut o = Json::obj();
+                        o.set("kind", Json::from(b.kind.name()));
+                        o.set("threshold", Json::Num(b.threshold));
+                        o.set("min_samples", Json::Num(b.min_samples as f64));
+                        o.set("burn_limit", Json::Num(b.burn_limit));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("count", Json::Num(self.alerts.len() as f64));
+        j
+    }
+}
+
+/// Outcome of the seeded deterministic watchdog sim (the CI "Endpoint
+/// smoke" fixture).
+#[derive(Debug)]
+pub struct SloSimReport {
+    /// Every alert the watchdog fired.
+    pub alerts: Vec<SloAlertRecord>,
+    /// Ticks driven (one per simulated second).
+    pub ticks: u64,
+    /// The `SloAlert` events as drained back off the bus they were
+    /// published on (proves the bus round trip, not just the log).
+    pub published: Vec<SchedEvent>,
+    /// The watchdog itself, so a caller (`modak sim-slo --listen`) can
+    /// serve its `/alerts` log live.
+    pub watchdog: SloWatchdog,
+}
+
+/// Drive a deterministic 120-second queue-wait stream through the
+/// rolling windows and the watchdog, publishing every fired alert on a
+/// real [`EventBus`](crate::util::sync::EventBus).
+///
+/// Five 0.2 s queue waits land each simulated second; with `overload`,
+/// every wait from t = 60 s is 8.0 s. Against a 2 s p99 budget over a
+/// 60 s window (burn: ≥ 60 % of the last 10 ticks violating), the
+/// windowed p99 first crosses at t = 60 s and the burn rate reaches
+/// 6/10 at **t = 65 s** — exactly one alert, pinned by tests and CI.
+/// The control run (`overload = false`) fires zero.
+pub fn seeded_overload_sim(overload: bool) -> SloSimReport {
+    use crate::util::sync::EventBus;
+    let mut w = WindowSet::new(60, 12);
+    let mut dog = SloWatchdog::new(
+        vec![SloBudget {
+            kind: SloKind::QueueWaitP99,
+            threshold: 2.0,
+            min_samples: 10,
+            burn_limit: 0.6,
+        }],
+        10_000,
+        10,
+    );
+    let bus: EventBus<SchedEvent> = EventBus::new();
+    let mut ticks = 0u64;
+    for t_s in 0..120u64 {
+        let now_ms = t_s * 1000;
+        let wait = if overload && t_s >= 60 { 8.0 } else { 0.2 };
+        for _ in 0..5 {
+            w.queue_wait.observe(now_ms, wait);
+        }
+        let fired = dog.tick(now_ms, &w);
+        for rec in &fired {
+            bus.publish(rec.event());
+        }
+        ticks += 1;
+    }
+    let published = bus.drain_since(0).events;
+    SloSimReport {
+        alerts: dog.alerts().to_vec(),
+        ticks,
+        published,
+        watchdog: dog,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Acceptance criterion: the seeded overload fires exactly one
+    /// alert, at the pinned tick, and it reaches the bus as a
+    /// `SchedEvent::SloAlert`; the control fires zero.
+    #[test]
+    fn seeded_overload_fires_exactly_one_pinned_alert() {
+        let r = seeded_overload_sim(true);
+        assert_eq!(r.ticks, 120);
+        assert_eq!(r.alerts.len(), 1, "{:?}", r.alerts);
+        let a = &r.alerts[0];
+        assert_eq!(a.seq, 1);
+        assert_eq!(a.t_ms, 65_000, "burn crosses 6/10 five ticks after onset");
+        assert_eq!(a.kind, SloKind::QueueWaitP99);
+        assert_eq!(a.measured, 8.388608, "the 8 s waits' bucket bound");
+        assert_eq!(a.threshold, 2.0);
+        assert_eq!(a.burn, 0.6);
+        assert_eq!(
+            r.published,
+            vec![SchedEvent::SloAlert {
+                shard: 0,
+                job: 1,
+                kind: SloKind::QueueWaitP99,
+            }],
+            "the alert must round-trip through the bus"
+        );
+    }
+
+    #[test]
+    fn control_sim_fires_zero_alerts() {
+        let r = seeded_overload_sim(false);
+        assert_eq!(r.ticks, 120);
+        assert!(r.alerts.is_empty(), "{:?}", r.alerts);
+        assert!(r.published.is_empty());
+    }
+
+    /// The re-arm latch: a sustained violation fires once; recovery then
+    /// a second violation fires again.
+    #[test]
+    fn watchdog_rearms_only_after_recovery() {
+        let mut w = WindowSet::new(60, 12);
+        let mut dog = SloWatchdog::new(
+            vec![SloBudget {
+                kind: SloKind::QueueWaitP99,
+                threshold: 1.0,
+                min_samples: 1,
+                burn_limit: 0.5,
+            }],
+            10_000,
+            10,
+        );
+        dog.min_ticks = 1;
+        let mut fired_total = 0;
+        // 20 violating ticks: exactly one alert
+        for t in 0..20u64 {
+            w.queue_wait.observe(t * 1000, 5.0);
+            fired_total += dog.tick(t * 1000, &w).len();
+        }
+        assert_eq!(fired_total, 1);
+        // recovery: old samples age out, burn drops, the latch re-arms
+        for t in 100..120u64 {
+            w.queue_wait.observe(t * 1000, 0.1);
+            fired_total += dog.tick(t * 1000, &w).len();
+        }
+        assert_eq!(fired_total, 1, "healthy period must not alert");
+        // second incident: fires exactly once more
+        for t in 200..220u64 {
+            w.queue_wait.observe(t * 1000, 5.0);
+            fired_total += dog.tick(t * 1000, &w).len();
+        }
+        assert_eq!(fired_total, 2);
+        assert_eq!(dog.alerts().len(), 2);
+        assert_eq!(dog.alerts()[1].seq, 2);
+    }
+
+    /// The hit-rate budget inverts: violation is *below* threshold.
+    #[test]
+    fn staging_hit_rate_violates_below_threshold() {
+        let mut w = WindowSet::new(60, 12);
+        let mut dog = SloWatchdog::new(
+            vec![SloBudget {
+                kind: SloKind::StagingHitRate,
+                threshold: 0.5,
+                min_samples: 4,
+                burn_limit: 0.5,
+            }],
+            10_000,
+            10,
+        );
+        dog.min_ticks = 2;
+        w.staging_hits.add(0, 1);
+        w.staging_misses.add(0, 9);
+        let mut fired = 0;
+        for t in 0..5u64 {
+            fired += dog.tick(t * 1000, &w).len();
+        }
+        assert_eq!(fired, 1, "10 % hit rate under a 50 % floor must alert");
+        assert_eq!(dog.alerts()[0].kind, SloKind::StagingHitRate);
+        assert_eq!(dog.alerts()[0].measured, 0.1);
+    }
+
+    /// Below the sample floor a budget never evaluates — no alerts from
+    /// thin data, no burn ticks either.
+    #[test]
+    fn budgets_stay_silent_below_the_sample_floor() {
+        let mut w = WindowSet::new(60, 12);
+        let mut dog = SloWatchdog::new(
+            vec![SloBudget {
+                kind: SloKind::QueueWaitP99,
+                threshold: 0.001,
+                min_samples: 50,
+                burn_limit: 0.1,
+            }],
+            10_000,
+            10,
+        );
+        dog.min_ticks = 1;
+        for t in 0..10u64 {
+            w.queue_wait.observe(t * 1000, 100.0); // wildly violating, but only 10 samples
+            assert!(dog.tick(t * 1000, &w).is_empty());
+        }
+        assert!(dog.alerts().is_empty());
+    }
+
+    #[test]
+    fn alerts_json_carries_alerts_budgets_and_count() {
+        let r = seeded_overload_sim(true);
+        let j = r.watchdog.alerts_json();
+        assert_eq!(j.get("count").as_usize(), Some(1));
+        let alerts = j.get("alerts").as_arr().unwrap();
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].get("kind").as_str(), Some("queue-wait-p99"));
+        assert_eq!(alerts[0].get("t_ms").as_usize(), Some(65_000));
+        let budgets = j.get("budgets").as_arr().unwrap();
+        assert_eq!(budgets.len(), 1);
+        assert_eq!(budgets[0].get("threshold").as_f64(), Some(2.0));
+        // and the body is real JSON
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("count").as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,402 @@
+//! Rolling-window aggregation: rings of time-bucketed histogram and
+//! counter snapshots with windowed merge.
+//!
+//! A long-running daemon cannot answer "what is p99 queue wait *right
+//! now*" from the lifetime histograms in [`crate::obs::metrics`] — after
+//! a week of traffic a regression drowns in history. The structures here
+//! slice time into fixed slots (a ring, one histogram/counter per slot)
+//! and answer windowed queries by merging the live slots through
+//! [`Histogram::merge`] — the same shard-merge machinery proven
+//! sample-exact in the metrics tests, so a windowed quantile is exactly
+//! the quantile of the samples that landed in the window.
+//!
+//! Everything here is clock-free, like [`crate::obs::collect::Collector`]:
+//! every entry point takes an explicit millisecond timestamp, so the
+//! deterministic sims drive these rings with simulated time and pin the
+//! SLO watchdog's alert times exactly. The live plane feeds them from
+//! the recorder's wall clock.
+//!
+//! Two feed modes:
+//! * [`SnapshotRing::sample`] — periodic *cumulative* snapshots of a live
+//!   [`Histogram`] (the global registry's); each call attributes the
+//!   delta since the previous call to the current slot. This is how the
+//!   plane gets windows over hot-path metrics without adding a single
+//!   instruction (or lock) to the instrumentation sites.
+//! * [`SnapshotRing::observe`] — direct samples, for sources that have no
+//!   cumulative histogram (perf-model error feedback, sim-driven waits).
+
+use crate::obs::metrics::{Histogram, Registry};
+
+/// One time slot of a ring: the epoch it covers and what landed in it.
+#[derive(Debug)]
+struct Slot {
+    epoch: u64,
+    hist: Histogram,
+}
+
+/// A ring of time-bucketed [`Histogram`]s covering the last
+/// `slots × slot_ms` milliseconds.
+#[derive(Debug)]
+pub struct SnapshotRing {
+    slot_ms: u64,
+    slots: Vec<Slot>,
+    /// Previous cumulative snapshot `(buckets, count, sum)` — the first
+    /// [`Self::sample`] is a baseline only, so lifetime samples observed
+    /// before the ring attached are never attributed to its window.
+    last: Option<(Vec<u64>, u64, f64)>,
+}
+
+impl SnapshotRing {
+    /// A ring covering `window_ms` in `slots` equal slots (minimum 1 ms
+    /// per slot; `slots` must be ≥ 1).
+    pub fn new(window_ms: u64, slots: usize) -> SnapshotRing {
+        let slots = slots.max(1);
+        let slot_ms = (window_ms / slots as u64).max(1);
+        SnapshotRing {
+            slot_ms,
+            slots: (0..slots)
+                .map(|_| Slot {
+                    epoch: 0,
+                    hist: Histogram::new(),
+                })
+                .collect(),
+            last: None,
+        }
+    }
+
+    /// Total window this ring covers, in milliseconds.
+    pub fn window_ms(&self) -> u64 {
+        self.slot_ms * self.slots.len() as u64
+    }
+
+    fn epoch(&self, now_ms: u64) -> u64 {
+        now_ms / self.slot_ms
+    }
+
+    /// The slot for `epoch`, recycled (emptied) if it still holds an
+    /// older epoch's samples.
+    fn slot_mut(&mut self, epoch: u64) -> &mut Slot {
+        let n = self.slots.len() as u64;
+        let idx = (epoch % n) as usize;
+        if self.slots[idx].epoch != epoch {
+            self.slots[idx] = Slot {
+                epoch,
+                hist: Histogram::new(),
+            };
+        }
+        &mut self.slots[idx]
+    }
+
+    /// Record one direct sample at `now_ms`.
+    pub fn observe(&mut self, now_ms: u64, v: f64) {
+        let epoch = self.epoch(now_ms);
+        self.slot_mut(epoch).hist.observe(v);
+    }
+
+    /// Fold the delta since the previous `sample` of `live` (a cumulative
+    /// histogram) into the slot for `now_ms`. The first call establishes
+    /// the baseline and attributes nothing.
+    pub fn sample(&mut self, now_ms: u64, live: &Histogram) {
+        let cum = (live.snapshot(), live.count(), live.sum());
+        if let Some((prev_buckets, prev_count, prev_sum)) = &self.last {
+            let delta: Vec<u64> = cum
+                .0
+                .iter()
+                .zip(prev_buckets)
+                .map(|(now, then)| now.saturating_sub(*then))
+                .collect();
+            let count = cum.1.saturating_sub(*prev_count);
+            if count > 0 {
+                let sum = (cum.2 - prev_sum).max(0.0);
+                let epoch = self.epoch(now_ms);
+                self.slot_mut(epoch).hist.add_counts(&delta, count, sum);
+            }
+        }
+        self.last = Some(cum);
+    }
+
+    /// Merge of every slot still inside the window ending at `now_ms`
+    /// (the current slot and its `slots-1` predecessors). The result is
+    /// a plain [`Histogram`]: quantiles, count, sum as usual.
+    pub fn windowed(&self, now_ms: u64) -> Histogram {
+        let cur = self.epoch(now_ms);
+        let n = self.slots.len() as u64;
+        let out = Histogram::new();
+        for s in &self.slots {
+            if s.epoch <= cur && cur - s.epoch < n {
+                out.merge(&s.hist);
+            }
+        }
+        out
+    }
+}
+
+/// A ring of time-bucketed event counts covering the last
+/// `slots × slot_ms` milliseconds — [`SnapshotRing`]'s shape for plain
+/// counters (staging hits/misses, violating watchdog ticks).
+#[derive(Debug)]
+pub struct CounterRing {
+    slot_ms: u64,
+    /// `(epoch, count)` per slot.
+    slots: Vec<(u64, u64)>,
+    /// Previous cumulative value (first `sample` = baseline, as above).
+    last: Option<u64>,
+}
+
+impl CounterRing {
+    pub fn new(window_ms: u64, slots: usize) -> CounterRing {
+        let slots = slots.max(1);
+        let slot_ms = (window_ms / slots as u64).max(1);
+        CounterRing {
+            slot_ms,
+            slots: vec![(0, 0); slots],
+            last: None,
+        }
+    }
+
+    pub fn window_ms(&self) -> u64 {
+        self.slot_ms * self.slots.len() as u64
+    }
+
+    fn epoch(&self, now_ms: u64) -> u64 {
+        now_ms / self.slot_ms
+    }
+
+    /// Add `n` events directly to the slot for `now_ms`.
+    pub fn add(&mut self, now_ms: u64, n: u64) {
+        let epoch = self.epoch(now_ms);
+        let len = self.slots.len() as u64;
+        let idx = (epoch % len) as usize;
+        if self.slots[idx].0 != epoch {
+            self.slots[idx] = (epoch, 0);
+        }
+        self.slots[idx].1 += n;
+    }
+
+    /// Fold the delta since the previous `sample` of a cumulative counter
+    /// into the slot for `now_ms` (first call = baseline, adds nothing).
+    pub fn sample(&mut self, now_ms: u64, cumulative: u64) {
+        if let Some(prev) = self.last {
+            let delta = cumulative.saturating_sub(prev);
+            if delta > 0 {
+                self.add(now_ms, delta);
+            }
+        }
+        self.last = Some(cumulative);
+    }
+
+    /// Sum of every slot still inside the window ending at `now_ms`.
+    pub fn windowed_sum(&self, now_ms: u64) -> u64 {
+        let cur = self.epoch(now_ms);
+        let n = self.slots.len() as u64;
+        self.slots
+            .iter()
+            .filter(|(e, _)| *e <= cur && cur - e < n)
+            .map(|(_, c)| c)
+            .sum()
+    }
+}
+
+/// The live plane's bundle of rolling windows: one ring per SLO input.
+/// Owned behind one `Obs`-ranked mutex by the deployment service (a
+/// single lock, so sampling the windows and ticking the watchdog never
+/// stacks two same-rank acquisitions).
+#[derive(Debug)]
+pub struct WindowSet {
+    /// Seconds from submission to dispatch (sampled from the registry).
+    pub queue_wait: SnapshotRing,
+    /// Scheduler bookkeeping seconds/job (sampled from the registry).
+    pub scheduler_overhead: SnapshotRing,
+    /// Perf-model |prediction error| in percent (fed directly by the
+    /// service's feedback pass — there is no cumulative histogram).
+    pub model_abs_err_pct: SnapshotRing,
+    /// Dataset staging cache hits (sampled from the cluster totals).
+    pub staging_hits: CounterRing,
+    /// Dataset staging cache misses (sampled from the cluster totals).
+    pub staging_misses: CounterRing,
+}
+
+impl WindowSet {
+    /// Rings covering `window_secs` in `slots` equal slots each.
+    pub fn new(window_secs: u64, slots: usize) -> WindowSet {
+        let w = window_secs.saturating_mul(1000).max(1);
+        WindowSet {
+            queue_wait: SnapshotRing::new(w, slots),
+            scheduler_overhead: SnapshotRing::new(w, slots),
+            model_abs_err_pct: SnapshotRing::new(w, slots),
+            staging_hits: CounterRing::new(w, slots),
+            staging_misses: CounterRing::new(w, slots),
+        }
+    }
+
+    /// The default plane window: last 60 s in 5 s slots.
+    pub fn default_plane() -> WindowSet {
+        WindowSet::new(60, 12)
+    }
+
+    /// Sample the registry-backed rings (queue wait, overhead) at
+    /// `now_ms`.
+    pub fn sample_registry(&mut self, now_ms: u64, r: &Registry) {
+        self.queue_wait.sample(now_ms, &r.queue_wait_seconds);
+        self.scheduler_overhead
+            .sample(now_ms, &r.scheduler_overhead_seconds);
+    }
+
+    /// Rolling staging hit rate over the window, `None` below
+    /// `min_samples` total lookups (thin data must not alert).
+    pub fn staging_hit_rate(&self, now_ms: u64, min_samples: u64) -> Option<f64> {
+        let hits = self.staging_hits.windowed_sum(now_ms);
+        let total = hits + self.staging_misses.windowed_sum(now_ms);
+        if total < min_samples.max(1) {
+            return None;
+        }
+        Some(hits as f64 / total as f64)
+    }
+
+    /// Extra exposition lines for `/metrics`: the windowed view as
+    /// gauges, appended after [`Registry::render_prometheus`] output so
+    /// the lifetime series stay byte-identical. Parses back through
+    /// `parse_exposition` like everything else.
+    pub fn render_gauges(&self, now_ms: u64) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let secs = self.queue_wait.window_ms() / 1000;
+        for (name, ring) in [
+            ("modak_window_queue_wait_seconds", &self.queue_wait),
+            (
+                "modak_window_scheduler_overhead_seconds",
+                &self.scheduler_overhead,
+            ),
+        ] {
+            let h = ring.windowed(now_ms);
+            for (suffix, v) in [
+                ("p50", h.quantile(0.50)),
+                ("p99", h.quantile(0.99)),
+                (
+                    "mean",
+                    if h.count() > 0 {
+                        h.sum() / h.count() as f64
+                    } else {
+                        0.0
+                    },
+                ),
+            ] {
+                let _ = writeln!(out, "# TYPE {name}_{suffix} gauge");
+                let _ = writeln!(out, "{name}_{suffix}{{window=\"{secs}s\"}} {v}");
+            }
+        }
+        let _ = writeln!(out, "# TYPE modak_window_staging_hit_rate gauge");
+        let _ = writeln!(
+            out,
+            "modak_window_staging_hit_rate{{window=\"{secs}s\"}} {}",
+            self.staging_hit_rate(now_ms, 1).unwrap_or(1.0)
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The windowed merge is sample-exact: quantiles over the ring equal
+    /// quantiles over a fresh histogram holding only in-window samples.
+    #[test]
+    fn windowed_quantiles_equal_a_fresh_in_window_histogram() {
+        let mut ring = SnapshotRing::new(10_000, 10); // 10 s, 1 s slots
+        for t in 0..5 {
+            ring.observe(t * 1000, 0.25); // t = 0..4 s: will expire
+        }
+        for t in 5..15 {
+            ring.observe(t * 1000, 8.0); // t = 5..14 s: in-window at t=14 s
+        }
+        let now = 14_000;
+        let win = ring.windowed(now);
+        let direct = Histogram::new();
+        for _ in 5..15 {
+            direct.observe(8.0);
+        }
+        assert_eq!(win.snapshot(), direct.snapshot());
+        assert_eq!(win.count(), direct.count());
+        assert_eq!(win.quantile(0.99), direct.quantile(0.99));
+        // the early 0.25 s samples are gone from the window
+        assert_eq!(win.quantile(0.01), direct.quantile(0.01));
+    }
+
+    /// Quiet periods age samples out: with nothing new observed, moving
+    /// `now` past the window empties it.
+    #[test]
+    fn samples_age_out_of_the_window() {
+        let mut ring = SnapshotRing::new(5_000, 5);
+        ring.observe(0, 1.0);
+        ring.observe(1000, 1.0);
+        assert_eq!(ring.windowed(1000).count(), 2);
+        assert_eq!(ring.windowed(5999).count(), 1, "slot 0 expired");
+        assert_eq!(ring.windowed(60_000).count(), 0, "all expired");
+    }
+
+    /// Cumulative sampling attributes exactly the delta between samples,
+    /// and the first sample is a baseline — lifetime history observed
+    /// before the ring attached never pollutes the window.
+    #[test]
+    fn cumulative_sampling_attributes_only_the_delta() {
+        let live = Histogram::new();
+        for _ in 0..100 {
+            live.observe(0.5); // pre-attach history
+        }
+        let mut ring = SnapshotRing::new(10_000, 10);
+        ring.sample(0, &live); // baseline
+        assert_eq!(ring.windowed(0).count(), 0, "baseline attributes nothing");
+        live.observe(4.0);
+        live.observe(4.0);
+        ring.sample(2000, &live);
+        let win = ring.windowed(2000);
+        assert_eq!(win.count(), 2);
+        assert_eq!(win.quantile(0.5), 4.194304, "only the delta's samples");
+        assert_eq!(win.sum(), 8.0);
+        // no new samples: the next sample call adds nothing
+        ring.sample(3000, &live);
+        assert_eq!(ring.windowed(3000).count(), 2);
+    }
+
+    #[test]
+    fn counter_ring_windows_cumulative_and_direct_feeds() {
+        let mut ring = CounterRing::new(10_000, 10);
+        ring.sample(0, 500); // baseline
+        assert_eq!(ring.windowed_sum(0), 0);
+        ring.sample(1000, 530);
+        ring.add(2000, 7);
+        assert_eq!(ring.windowed_sum(2000), 37);
+        // 30 lands at t=1 s and expires once now-1s leaves the window
+        assert_eq!(ring.windowed_sum(11_500), 7);
+        assert_eq!(ring.windowed_sum(60_000), 0);
+    }
+
+    #[test]
+    fn window_set_reports_hit_rate_with_a_sample_floor() {
+        let mut w = WindowSet::new(60, 12);
+        w.staging_hits.sample(0, 0);
+        w.staging_misses.sample(0, 0);
+        w.staging_hits.sample(1000, 3);
+        w.staging_misses.sample(1000, 1);
+        assert_eq!(w.staging_hit_rate(1000, 10), None, "below the floor");
+        assert_eq!(w.staging_hit_rate(1000, 4), Some(0.75));
+    }
+
+    /// The windowed gauges render into the same exposition dialect the
+    /// round-trip parser understands.
+    #[test]
+    fn window_gauges_parse_back_through_the_exposition_parser() {
+        use crate::obs::metrics::parse_exposition;
+        let mut w = WindowSet::new(60, 12);
+        w.queue_wait.observe(1000, 0.5);
+        w.queue_wait.observe(2000, 0.5);
+        let text = w.render_gauges(2000);
+        let parsed = parse_exposition(&text);
+        assert_eq!(
+            parsed["modak_window_queue_wait_seconds_p99{window=\"60s\"}"],
+            0.524288
+        );
+        assert_eq!(parsed["modak_window_staging_hit_rate{window=\"60s\"}"], 1.0);
+    }
+}

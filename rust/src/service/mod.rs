@@ -56,12 +56,16 @@ use crate::data::stage::DataStageStats;
 use crate::data::DatasetCatalog;
 use crate::dsl::Optimisation;
 use crate::obs::collect::Recorder;
+use crate::obs::http::PlaneState;
+use crate::obs::slo::SloWatchdog;
+use crate::obs::window::WindowSet;
 use crate::optimiser::{plan_deployment, DeploymentPlan};
 use crate::perfmodel::{Features, PerfModel, Record};
 use crate::registry::RegistryHandle;
 use crate::runtime::Manifest;
 use crate::scheduler::{JobState, SchedulePolicy, TorqueServer};
 use crate::trainer::TrainConfig;
+use crate::util::json::Json;
 use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover, Signal};
 use crate::util::timer::Stopwatch;
 
@@ -511,6 +515,17 @@ fn truncate(s: &str, n: usize) -> String {
     }
 }
 
+/// The live observability plane's mutable half: rolling windows over
+/// the registry plus the SLO watchdog that reads them. Both sit behind
+/// ONE `Obs`-ranked lock — sampling and ticking are a single
+/// acquisition, so the plane can never stack two same-rank guards
+/// (strict-ascent discipline), and fired alerts are published only
+/// after the guard drops.
+struct LivePlane {
+    windows: WindowSet,
+    watchdog: SloWatchdog,
+}
+
 /// The deployment service: owns registry handle, performance model,
 /// manifest, and the scheduler cluster, and drives requests through a
 /// work queue of planner threads.
@@ -541,6 +556,11 @@ pub struct DeploymentService {
     fed_back: Mutex<HashSet<ClusterJobId>>,
     /// Jobs whose store-GC image pin was already released (terminal).
     unpinned: Mutex<HashSet<ClusterJobId>>,
+    /// The live observability plane (rolling windows + SLO watchdog),
+    /// sampled once per `await_batch` sweep. Innermost rank (`Obs`),
+    /// like the recorder — taken only with every scheduler lock
+    /// released.
+    plane: Mutex<LivePlane>,
 }
 
 impl DeploymentService {
@@ -605,6 +625,10 @@ impl DeploymentService {
             recorder: Arc::new(Recorder::new()),
             fed_back: Mutex::new(HashSet::new()),
             unpinned: Mutex::new(HashSet::new()),
+            plane: Mutex::new(LivePlane {
+                windows: WindowSet::default_plane(),
+                watchdog: SloWatchdog::default_plane(),
+            }),
         }
     }
 
@@ -757,6 +781,10 @@ impl DeploymentService {
             // a second consumer, so this sweep's targeted drain above is
             // unaffected (exactly-once is per cursor, not per bus)
             self.recorder.drain(&bus);
+            // the sweep is timed: bookkeeping seconds per drained event
+            // feed the lifetime scheduler-overhead histogram, whose
+            // rolling window the SLO watchdog's overhead budget reads
+            let sweep = Stopwatch::start();
             if drained.missed > 0 || drained.events.is_empty() {
                 let _ = self.cluster.poll();
             } else {
@@ -766,6 +794,9 @@ impl DeploymentService {
                 shards.dedup();
                 let _ = self.cluster.poll_shards(&shards);
             }
+            crate::obs::metrics::global()
+                .scheduler_overhead_seconds
+                .observe(sweep.elapsed_secs() / drained.events.len().max(1) as f64);
             on_poll(&self.cluster);
             let pending_jobs = handles
                 .iter()
@@ -775,6 +806,10 @@ impl DeploymentService {
             crate::obs::metrics::global()
                 .queue_depth
                 .set(pending_jobs as f64);
+            // live plane sweep: fold fresh registry/staging deltas into
+            // the rolling windows, tick the SLO watchdog, publish
+            // whatever fired (collect-then-publish; see observe_plane)
+            self.observe_plane();
             if all_planned && pending_jobs == 0 {
                 break;
             }
@@ -787,6 +822,121 @@ impl DeploymentService {
         self.feed_back_measurements(handles);
         self.release_finished_image_pins(handles);
         self.report(handles, 0.0)
+    }
+
+    /// One live-plane sweep: sample the registry's cumulative histograms
+    /// and the cluster's staging totals into the rolling windows, then
+    /// tick the SLO watchdog. The cluster totals are read *before* the
+    /// plane guard (`Cluster` never nests under `Obs`), and fired alerts
+    /// are published on the bus *after* the guard drops — the same
+    /// collect-then-publish shape as every other publisher in this
+    /// service.
+    fn observe_plane(&self) {
+        let now_ms = self.recorder.now_us() / 1_000;
+        let staging = self.cluster.staging_totals();
+        let fired = {
+            let mut plane = lock_or_recover(&self.plane);
+            let LivePlane { windows, watchdog } = &mut *plane;
+            windows.staging_hits.sample(now_ms, staging.hits);
+            windows.staging_misses.sample(now_ms, staging.misses);
+            windows.sample_registry(now_ms, crate::obs::metrics::global());
+            watchdog.tick(now_ms, windows)
+        };
+        for alert in &fired {
+            eprintln!(
+                "slo-alert: {} measured {:.6} against {:.6} (burn {:.2})",
+                alert.kind.name(),
+                alert.measured,
+                alert.threshold,
+                alert.burn
+            );
+            self.cluster.bus().publish(alert.event());
+        }
+    }
+
+    /// Rolling-window gauge lines for `/metrics`, appended after the
+    /// lifetime exposition (which stays byte-identical).
+    pub fn window_gauges(&self) -> String {
+        let now_ms = self.recorder.now_us() / 1_000;
+        lock_or_recover(&self.plane).windows.render_gauges(now_ms)
+    }
+
+    /// The `/alerts` body: the watchdog's fired-alert log plus its
+    /// budget table, as JSON.
+    pub fn alerts_json(&self) -> String {
+        lock_or_recover(&self.plane)
+            .watchdog
+            .alerts_json()
+            .to_string_pretty()
+    }
+
+    /// The `/summary` body: the recorder's trace summary (per-phase
+    /// percentiles + per-job critical paths) as JSON.
+    pub fn summary_json(&self) -> String {
+        let set = self.recorder.finish();
+        crate::obs::export::summarise(&set)
+            .to_json()
+            .to_string_pretty()
+    }
+
+    /// The `/shards` body: per-shard queue depth, slot occupancy, and
+    /// staging counters, as JSON.
+    pub fn shards_json(&self) -> String {
+        let arr: Vec<Json> = self
+            .cluster
+            .shard_snapshots()
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("shard", Json::from(s.shard));
+                o.set("running", Json::from(s.running));
+                o.set("queued", Json::from(s.queued));
+                o.set("peak_running", Json::from(s.peak_running));
+                o.set("slot_capacity", Json::from(s.slot_capacity));
+                o.set("migrations_in", Json::Num(s.migrations_in as f64));
+                let mut st = Json::obj();
+                st.set("hits", Json::Num(s.staging.hits as f64));
+                st.set("misses", Json::Num(s.staging.misses as f64));
+                st.set("bytes", Json::Num(s.staging.bytes as f64));
+                st.set("simulated_secs", Json::Num(s.staging.simulated_secs));
+                st.set("evictions", Json::Num(s.staging.evictions as f64));
+                o.set("staging", st);
+                let mut d = Json::obj();
+                d.set("shard_hits", Json::Num(s.data.shard_hits as f64));
+                d.set("shard_misses", Json::Num(s.data.shard_misses as f64));
+                d.set("node_hits", Json::Num(s.data.node_hits as f64));
+                d.set("node_misses", Json::Num(s.data.node_misses as f64));
+                d.set("bytes_moved", Json::Num(s.data.bytes_moved as f64));
+                d.set("simulated_secs", Json::Num(s.data.simulated_secs));
+                d.set("evictions", Json::Num(s.data.evictions as f64));
+                o.set("data", d);
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("shards", Json::Arr(arr));
+        j.to_string_pretty()
+    }
+
+    /// The HTTP plane's route providers over this service (what
+    /// `serve-batch --listen` binds): lifetime exposition + rolling
+    /// gauges at `/metrics`, the recorder summary at `/summary`, shard
+    /// snapshots at `/shards`, the watchdog log at `/alerts`.
+    pub fn plane_state(self: &Arc<Self>) -> PlaneState {
+        let metrics = Arc::clone(self);
+        let summary = Arc::clone(self);
+        let shards = Arc::clone(self);
+        let alerts = Arc::clone(self);
+        PlaneState {
+            metrics: Arc::new(move || {
+                let mut out = crate::obs::metrics::global().render_prometheus();
+                out.push_str(&metrics.window_gauges());
+                out
+            }),
+            summary: Some(Arc::new(move || summary.summary_json())),
+            shards: Some(Arc::new(move || shards.shards_json())),
+            alerts: Some(Arc::new(move || alerts.alerts_json())),
+        }
     }
 
     /// Release the build-store image pin of every batch job observed
@@ -836,10 +986,11 @@ impl DeploymentService {
     /// code path in this service holds a shard lock and the model lock at
     /// once.
     fn feed_back_measurements(&self, handles: &[PlanHandle]) {
-        let (fresh, waits): (Vec<Record>, Vec<f64>) = {
+        let (fresh, waits, errs): (Vec<Record>, Vec<f64>, Vec<f64>) = {
             let mut fed = lock_or_recover(&self.fed_back);
             let mut fresh = Vec::new();
             let mut waits = Vec::new();
+            let mut errs = Vec::new();
             for h in handles.iter() {
                 let Some(out) = h.outcome.as_ref() else { continue };
                 let (Ok(plan), Some(id)) = (&out.plan, out.job_id) else {
@@ -874,10 +1025,24 @@ impl DeploymentService {
                 if let Some(w) = wait_secs {
                     waits.push(w);
                 }
+                // the plane's model-error window gets |signed error|%
+                if let Some(pred) = plan.predicted_secs.filter(|p| *p > 0.0) {
+                    errs.push(((measured_secs - pred) / pred * 100.0).abs());
+                }
                 fed.insert(id);
             }
-            (fresh, waits)
+            (fresh, waits, errs)
         };
+        // the live plane's model-error window sees the same fresh
+        // measurements; scoped so the refit below never runs under an
+        // Obs-ranked guard
+        if !errs.is_empty() {
+            let now_ms = self.recorder.now_us() / 1_000;
+            let mut plane = lock_or_recover(&self.plane);
+            for e in &errs {
+                plane.windows.model_abs_err_pct.observe(now_ms, *e);
+            }
+        }
         if fresh.is_empty() && waits.is_empty() {
             return;
         }
@@ -1387,6 +1552,50 @@ mod tests {
         assert!(rendered.contains("cluster: 3 shards"), "{rendered}");
         assert!(rendered.contains("router perf-aware"), "{rendered}");
         assert!(rendered.contains("rebalance queued"), "{rendered}");
+    }
+
+    /// Tentpole: every live-plane surface renders from a fresh service —
+    /// valid JSON on the JSON routes, exposition-parseable gauges on the
+    /// windowed metrics — and `await_batch` ticks the plane without
+    /// firing alerts on an idle service.
+    #[test]
+    fn live_plane_surfaces_render_and_stay_quiet_when_idle() {
+        let service = Arc::new(DeploymentService::new(
+            store("plane"),
+            empty_manifest(),
+            PerfModel::new(),
+            &ServiceConfig::default(),
+        ));
+        let cfg = TrainConfig { epochs: 1, steps_per_epoch: 1, seed: 0 };
+        let mut handles = service.submit_many(
+            vec![BatchRequest { label: "x".into(), dsl: dsl("pytorch", "1.14") }],
+            &cfg,
+            true,
+        );
+        // await_batch runs observe_plane every sweep
+        let _ = service.await_batch(&mut handles, |_| {});
+        let alerts = Json::parse(&service.alerts_json()).unwrap();
+        assert_eq!(alerts.get("count").as_usize(), Some(0), "idle service must not alert");
+        assert_eq!(alerts.get("budgets").as_arr().map(Vec::len), Some(4));
+        let shards = Json::parse(&service.shards_json()).unwrap();
+        assert_eq!(shards.get("shards").as_arr().map(Vec::len), Some(1));
+        let snap = &shards.get("shards").as_arr().unwrap()[0];
+        assert_eq!(snap.get("shard").as_usize(), Some(0));
+        assert!(snap.get("staging").get("hits").as_f64().is_some());
+        let summary = Json::parse(&service.summary_json()).unwrap();
+        assert!(summary.get("makespan_s").as_f64().is_some());
+        // windowed gauges speak the exposition dialect
+        let gauges = crate::obs::metrics::parse_exposition(&service.window_gauges());
+        assert!(
+            gauges.keys().any(|k| k.starts_with("modak_window_queue_wait_seconds_p99")),
+            "{gauges:?}"
+        );
+        // the wired plane serves lifetime + windowed series on one scrape
+        let plane = service.plane_state();
+        let scraped = crate::obs::metrics::parse_exposition(&(plane.metrics)());
+        assert!(scraped.contains_key("modak_jobs_submitted"));
+        assert!(scraped.keys().any(|k| k.starts_with("modak_window_")));
+        assert!(plane.summary.is_some() && plane.shards.is_some() && plane.alerts.is_some());
     }
 
     /// Satellite: `--policy-shard N=<policy>` overrides land on the named

@@ -221,6 +221,35 @@ impl Signal {
     }
 }
 
+/// Which SLO budget a watchdog alert names (evaluated by
+/// `obs::slo::SloWatchdog` over the `obs::window` rolling windows).
+/// Lives beside [`SchedEvent`] so the event taxonomy stays
+/// self-contained and `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloKind {
+    /// Rolling-window p99 queue wait exceeded its budget.
+    QueueWaitP99,
+    /// Rolling-window mean scheduler overhead per job exceeded its
+    /// budget (the CI-pinned < 1 ms).
+    SchedulerOverheadMean,
+    /// Rolling-window staging hit rate fell below its budget.
+    StagingHitRate,
+    /// Rolling-window mean perf-model |error|% exceeded its budget.
+    ModelErrorMean,
+}
+
+impl SloKind {
+    /// The budget's name as `/alerts` and `modak top` spell it.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloKind::QueueWaitP99 => "queue-wait-p99",
+            SloKind::SchedulerOverheadMean => "scheduler-overhead-mean",
+            SloKind::StagingHitRate => "staging-hit-rate",
+            SloKind::ModelErrorMean => "model-error-mean",
+        }
+    }
+}
+
 /// One scheduling event on the cluster bus. Every variant names the shard
 /// it touched, so consumers can run a scheduling pass over exactly that
 /// shard instead of sweeping the whole cluster. Job ids are the raw
@@ -241,6 +270,12 @@ pub enum SchedEvent {
     /// A node on `shard` delivered a checkpoint (preempted outcome): the
     /// job is ready to restart elsewhere.
     CheckpointReady { shard: usize, job: u64 },
+    /// The SLO watchdog found `kind`'s burn rate over its rolling window
+    /// past the limit. `shard` is the shard the violation localises to
+    /// (0 for cluster-wide budgets); `job` carries the watchdog's
+    /// monotonically increasing alert sequence, so consumers dedup
+    /// alerts exactly like any other event.
+    SloAlert { shard: usize, job: u64, kind: SloKind },
 }
 
 impl SchedEvent {
@@ -251,7 +286,8 @@ impl SchedEvent {
             | SchedEvent::Dispatch { shard, .. }
             | SchedEvent::Complete { shard, .. }
             | SchedEvent::Preempt { shard, .. }
-            | SchedEvent::CheckpointReady { shard, .. } => *shard,
+            | SchedEvent::CheckpointReady { shard, .. }
+            | SchedEvent::SloAlert { shard, .. } => *shard,
         }
     }
 
@@ -261,7 +297,8 @@ impl SchedEvent {
             | SchedEvent::Dispatch { job, .. }
             | SchedEvent::Complete { job, .. }
             | SchedEvent::Preempt { job, .. }
-            | SchedEvent::CheckpointReady { job, .. } => *job,
+            | SchedEvent::CheckpointReady { job, .. }
+            | SchedEvent::SloAlert { job, .. } => *job,
         }
     }
 }
@@ -491,6 +528,11 @@ mod tests {
             SchedEvent::Complete { shard: 3, job: 7 },
             SchedEvent::Preempt { shard: 3, job: 7 },
             SchedEvent::CheckpointReady { shard: 3, job: 7 },
+            SchedEvent::SloAlert {
+                shard: 3,
+                job: 7,
+                kind: SloKind::QueueWaitP99,
+            },
         ];
         for e in events {
             assert_eq!(e.shard(), 3, "{e:?}");
