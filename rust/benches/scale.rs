@@ -11,7 +11,9 @@
 //! Run: `cargo bench --bench scale` — prints a table and rewrites
 //! `BENCH_scale.json` in the working directory.
 
-use modak::placement::scale::{peak_rss_bytes, run_scale, CoreMode, ScaleConfig, ScaleOutcome};
+use modak::placement::scale::{
+    peak_rss_bytes, run_routing_bench, run_scale, CoreMode, ScaleConfig, ScaleOutcome,
+};
 
 fn run_mode(mode: CoreMode) -> (ScaleOutcome, u64) {
     let out = run_scale(&ScaleConfig::headline(mode));
@@ -130,11 +132,48 @@ fn main() {
         event.makespan_millis, event.events
     );
 
+    // live-cluster routing throughput (PR 10): the same decision stream
+    // scored through the incremental placement ledger vs the pre-ledger
+    // full-snapshot path, on a real (quiescent) ClusterScheduler
+    let routing = run_routing_bench(32, 2_000);
+    println!(
+        "\n{:<14} {:>10} {:>16} {:>16}",
+        "routing", "routes", "ledger(rt/s)", "snapshot(rt/s)"
+    );
+    println!(
+        "{:<14} {:>10} {:>16.0} {:>16.0}",
+        "live cluster",
+        routing.routes,
+        routing.ledger_routes_per_sec,
+        routing.snapshot_routes_per_sec,
+    );
+    assert!(
+        routing.decisions_match,
+        "ledger and snapshot scoring must make identical routing decisions"
+    );
+    assert!(
+        routing.ledger_routes_per_sec > routing.snapshot_routes_per_sec,
+        "ledger routing must beat the snapshot path ({:.0} vs {:.0} routes/sec)",
+        routing.ledger_routes_per_sec,
+        routing.snapshot_routes_per_sec
+    );
+    let routing_ratio = routing.ledger_routes_per_sec / routing.snapshot_routes_per_sec.max(1e-9);
+    println!("ledger routing is {routing_ratio:.1}x the snapshot path (identical decisions)");
+
     let json = format!(
-        "{{\n{},\n{},\n  \"speedup\": {:.2},\n  \
+        "{{\n{},\n{},\n  \"routing\": {{\n    \"shards\": 32,\n    \
+         \"routes\": {},\n    \"ledger_routes_per_sec\": {:.0},\n    \
+         \"snapshot_routes_per_sec\": {:.0},\n    \
+         \"ledger_over_snapshot\": {:.2},\n    \
+         \"decisions_match\": {}\n  }},\n  \"speedup\": {:.2},\n  \
          \"note\": \"regenerate with: cargo bench --bench scale\"\n}}\n",
         json_entry(CoreMode::EventDriven, &event, event_rss),
         json_entry(CoreMode::PollDriven, &poll, poll_rss),
+        routing.routes,
+        routing.ledger_routes_per_sec,
+        routing.snapshot_routes_per_sec,
+        routing_ratio,
+        routing.decisions_match,
         speedup,
     );
     match std::fs::write("BENCH_scale.json", &json) {

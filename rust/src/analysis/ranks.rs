@@ -51,6 +51,14 @@ pub const RANK_TABLE: &[RankEntry] = &[
         receiver: "epoch",
         rank: LockRank::Counters,
     },
+    // the presence mirror is written by staging paths that already hold
+    // a server/stager/distributor guard and read lock-free by routing,
+    // so it ranks with the innermost leaf locks
+    RankEntry {
+        file_suffix: "cluster/presence.rs",
+        receiver: "inner",
+        rank: LockRank::Counters,
+    },
     // generic rows: the canonical lock field names, rankable anywhere
     RankEntry {
         file_suffix: "",
@@ -77,10 +85,15 @@ pub const RANK_TABLE: &[RankEntry] = &[
         receiver: "map",
         rank: LockRank::Cluster,
     },
+    // the distributor ranks WITH the stager (above every shard server):
+    // since the incremental placement ledger took over routing reads,
+    // no path may hold the distributor guard across a server lock — the
+    // old `loads()` did exactly that, and this row is what makes any
+    // regression of it a LOCK_RANK descent
     RankEntry {
         file_suffix: "",
         receiver: "distributor",
-        rank: LockRank::Cluster,
+        rank: LockRank::Stager,
     },
     RankEntry {
         file_suffix: "",
@@ -90,6 +103,14 @@ pub const RANK_TABLE: &[RankEntry] = &[
     RankEntry {
         file_suffix: "",
         receiver: "stager",
+        rank: LockRank::Stager,
+    },
+    // the placement ledger is locked for O(1) delta arithmetic, under a
+    // server guard (registration/settling) but never across a
+    // distributor/stager/server acquisition
+    RankEntry {
+        file_suffix: "",
+        receiver: "ledger",
         rank: LockRank::Stager,
     },
     RankEntry {

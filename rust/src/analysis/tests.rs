@@ -58,6 +58,19 @@ fn rank_table_resolves_specific_and_generic_rows() {
     assert_eq!(rank_of("service/mod.rs", "model"), Some(LockRank::PerfModel));
     assert_eq!(rank_of("cluster/mod.rs", "server"), Some(LockRank::ShardServer));
     assert_eq!(rank_of("cluster/mod.rs", "mystery"), None);
+    // placement-ledger era rows: the presence mirror is an innermost
+    // leaf lock, the ledger sits with the stager (above every server),
+    // and the distributor was re-ranked up beside them — holding it
+    // across a server lock is a descent now
+    assert_eq!(
+        rank_of("cluster/presence.rs", "inner"),
+        Some(LockRank::Counters)
+    );
+    assert_eq!(rank_of("cluster/mod.rs", "ledger"), Some(LockRank::Stager));
+    assert_eq!(
+        rank_of("cluster/mod.rs", "distributor"),
+        Some(LockRank::Stager)
+    );
 }
 
 #[test]
@@ -128,6 +141,32 @@ fn detects_lock_rank_descent() {
     assert!(r.flags(LOCK_RANK), "{}", r.render());
     assert_eq!(r.errors(), 1, "{}", r.render());
     assert_eq!(r.edges, [(LockRank::ShardServer, LockRank::Cluster)]);
+}
+
+// The exact shape the pre-ledger `ClusterScheduler::loads` had: the
+// distributor guard held across every per-shard server lock. The
+// incremental placement ledger exists so the routing hot path never does
+// this again — the distributor's Stager rank makes it a descent forever.
+const FIX_DIST_ACROSS_SERVER: &str = r#"
+impl Cluster {
+    fn loads(&self) {
+        let mut dist = lock_or_recover(&self.distributor);
+        let srv = lock_or_recover(&self.shards[0].server);
+        dist.estimate(srv.queued());
+    }
+}
+"#;
+
+#[test]
+fn routing_may_not_hold_staging_guards_across_server_locks() {
+    let r = lint_text("cluster/mod.rs", FIX_DIST_ACROSS_SERVER);
+    assert!(r.flags(LOCK_RANK), "{}", r.render());
+    assert_eq!(r.errors(), 1, "{}", r.render());
+    assert_eq!(r.edges, [(LockRank::Stager, LockRank::ShardServer)]);
+    // the stager itself across a server lock is the same descent
+    let swapped = FIX_DIST_ACROSS_SERVER.replace("distributor", "stager");
+    let r = lint_text("cluster/mod.rs", &swapped);
+    assert!(r.flags(LOCK_RANK), "{}", r.render());
 }
 
 const FIX_UNRANKED: &str = r#"

@@ -126,6 +126,10 @@ pub struct ImageDistributor {
     sizes: BTreeMap<String, u64>,
     /// Shared with the cluster so reporting reads skip this struct's lock.
     stats: Arc<Vec<StagingCounters>>,
+    /// Presence mirror for the lock-free routing path: every insert and
+    /// eviction below is reflected into it, so `ClusterScheduler::loads`
+    /// prices image staging without taking this struct's lock.
+    presence: Option<Arc<crate::cluster::presence::PresenceIndex>>,
 }
 
 impl ImageDistributor {
@@ -151,7 +155,14 @@ impl ImageDistributor {
             sources: BTreeMap::new(),
             sizes: BTreeMap::new(),
             stats: Arc::new((0..shards).map(|_| StagingCounters::default()).collect()),
+            presence: None,
         }
+    }
+
+    /// Mirror every staging insert/evict into `presence` from now on
+    /// (wired once at cluster boot, before any staging happens).
+    pub fn attach_presence(&mut self, presence: Arc<crate::cluster::presence::PresenceIndex>) {
+        self.presence = Some(presence);
     }
 
     /// The shared counter block: clone the `Arc` once and read staging
@@ -205,6 +216,9 @@ impl ImageDistributor {
         // fresh submit of this tag would run, never a stale first one
         self.sources
             .insert(tag.to_string(), (digest.to_string(), source.to_path_buf()));
+        if let Some(p) = &self.presence {
+            p.note_image_source(tag, digest, source);
+        }
         if let Some(local) = self.present[shard].get(digest) {
             self.stats[shard].add_hit();
             self.lru[shard].touch(&digest.to_string());
@@ -225,6 +239,9 @@ impl ImageDistributor {
             STAGE_LATENCY_SECS + bytes as f64 / STAGE_BANDWIDTH_BYTES_PER_SEC,
         );
         self.present[shard].insert(digest.to_string(), dir.clone());
+        if let Some(p) = &self.presence {
+            p.note_image(shard, digest, bytes);
+        }
         // capacity-bounded store: evict the coldest digests past the cap
         for ev in self.lru[shard].insert(digest.to_string(), bytes) {
             if let Some(stale) = self.present[shard].remove(&ev.key) {
@@ -233,6 +250,9 @@ impl ImageDistributor {
                 if stale.starts_with(&self.root) {
                     let _ = std::fs::remove_dir_all(&stale);
                 }
+            }
+            if let Some(p) = &self.presence {
+                p.drop_image(shard, &ev.key);
             }
             self.stats[shard].add_eviction();
         }

@@ -141,6 +141,10 @@ pub struct StageManager {
     specs: BTreeMap<String, DatasetSpec>,
     /// Shared with the cluster so reporting reads skip this struct's lock.
     stats: Arc<Vec<DataStageCounters>>,
+    /// Presence mirror for the lock-free routing path: shard-tier inserts
+    /// and evictions are reflected into it, so the cluster's dataset-
+    /// warmth term never takes this struct's lock.
+    presence: Option<Arc<crate::cluster::presence::PresenceIndex>>,
 }
 
 impl StageManager {
@@ -158,7 +162,14 @@ impl StageManager {
             node_cap_bytes,
             specs: BTreeMap::new(),
             stats: Arc::new((0..shards).map(|_| DataStageCounters::default()).collect()),
+            presence: None,
         }
+    }
+
+    /// Mirror shard-tier inserts/evictions into `presence` from now on
+    /// (wired once at cluster boot, before any staging happens).
+    pub fn attach_presence(&mut self, presence: Arc<crate::cluster::presence::PresenceIndex>) {
+        self.presence = Some(presence);
     }
 
     /// The shared counter block: clone the `Arc` once and read staging
@@ -205,6 +216,9 @@ impl StageManager {
     /// repeats are hits. Returns the simulated seconds charged (0.0 on hit).
     pub fn stage_to_shard(&mut self, shard: usize, spec: &DatasetSpec) -> f64 {
         self.specs.insert(spec.name.clone(), spec.clone());
+        if let Some(p) = &self.presence {
+            p.note_dataset_spec(spec);
+        }
         let cache = &mut self.shard_caches[shard];
         if cache.touch(&spec.digest) {
             self.stats[shard].add_shard_hit();
@@ -213,6 +227,12 @@ impl StageManager {
         let evicted = cache.insert(spec.digest.clone(), spec.size_bytes);
         let secs = spec.transfer_secs(SHARED_LATENCY_SECS, SHARED_BW_BYTES_PER_SEC);
         self.stats[shard].add_shard_miss(spec.size_bytes, secs, evicted.len() as u64);
+        if let Some(p) = &self.presence {
+            p.note_dataset(shard, spec);
+            for ev in &evicted {
+                p.drop_dataset(shard, &ev.key);
+            }
+        }
         crate::obs::metrics::global().staging_seconds.observe(secs);
         secs
     }

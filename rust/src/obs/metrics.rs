@@ -242,6 +242,10 @@ pub struct Registry {
     pub staging_seconds: Histogram,
     /// Wall seconds per training epoch.
     pub train_epoch_seconds: Histogram,
+    /// Seconds per cluster routing decision (ledger read + route pick)
+    /// around `ClusterScheduler::submit` — the hot path the incremental
+    /// placement ledger keeps lock-free.
+    pub route_decision_seconds: Histogram,
 }
 
 impl Registry {
@@ -262,7 +266,7 @@ impl Registry {
         ]
     }
 
-    fn histograms(&self) -> [(&'static str, &Histogram); 4] {
+    fn histograms(&self) -> [(&'static str, &Histogram); 5] {
         [
             ("modak_queue_wait_seconds", &self.queue_wait_seconds),
             (
@@ -271,6 +275,7 @@ impl Registry {
             ),
             ("modak_staging_seconds", &self.staging_seconds),
             ("modak_train_epoch_seconds", &self.train_epoch_seconds),
+            ("modak_route_decision_seconds", &self.route_decision_seconds),
         ]
     }
 

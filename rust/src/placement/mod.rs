@@ -371,6 +371,212 @@ impl LoadTracker {
     }
 }
 
+/// Per-class slot capacities of one shard as [`ClassLedger`] needs them.
+/// `max_node_slots` is the largest single node's slot count for the class
+/// — the eligibility bound (`slot_demand <= max_node_slots`); a class the
+/// shard does not field at all is `{0, 0}` (never eligible, since every
+/// job demands at least one slot).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassCaps {
+    pub total_slots: usize,
+    pub max_node_slots: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+struct ClassSlots {
+    total: usize,
+    free: usize,
+    max_node: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+struct ClassTrackedShard {
+    classes: Vec<ClassSlots>,
+    queued: usize,
+    backlog_millis: u64,
+}
+
+/// [`LoadTracker`] extended with per-class capacity — the live cluster's
+/// ledger. Where the scale-sim tracker assumes one node class per shard,
+/// the real `TorqueServer` fields heterogeneous node classes, and routing
+/// needs per-class eligibility (`max_node_slots >= slot_demand`) and
+/// per-class free slots for the tie-break. Queue depth and backlog stay
+/// shard-wide (a deep queue delays every class), in the same integer
+/// milliseconds so deltas cancel exactly and
+/// [`ClassLedger::verify_against`] can demand bit-for-bit equality with a
+/// full under-the-lock snapshot recompute.
+#[derive(Debug, Clone, Default)]
+pub struct ClassLedger {
+    shards: Vec<ClassTrackedShard>,
+}
+
+impl ClassLedger {
+    /// A ledger over idle shards; `caps[shard][class]` gives each class's
+    /// total and largest-node slot counts (class indices are the caller's
+    /// mapping and must be consistent across every call).
+    pub fn new(caps: &[Vec<ClassCaps>]) -> ClassLedger {
+        ClassLedger {
+            shards: caps
+                .iter()
+                .map(|shard| ClassTrackedShard {
+                    classes: shard
+                        .iter()
+                        .map(|c| ClassSlots {
+                            total: c.total_slots,
+                            free: c.total_slots,
+                            max_node: c.max_node_slots,
+                        })
+                        .collect(),
+                    queued: 0,
+                    backlog_millis: 0,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Submit: a job joined `shard`'s queue with `expected_millis` of
+    /// predicted work (class-independent: queue depth and backlog are
+    /// shard-wide).
+    pub fn on_submit(&mut self, shard: usize, expected_millis: u64) {
+        let t = &mut self.shards[shard];
+        t.queued += 1;
+        t.backlog_millis += expected_millis;
+    }
+
+    /// Dispatch: a queued job of `class` started, consuming `demand`
+    /// slots. Backlog is unchanged — it covers queued *and* running work.
+    pub fn on_dispatch(&mut self, shard: usize, class: usize, demand: usize) {
+        let t = &mut self.shards[shard];
+        t.queued = t.queued.saturating_sub(1);
+        let c = &mut t.classes[class];
+        c.free = c.free.saturating_sub(demand);
+    }
+
+    /// Complete (or checkpoint-ready): a running job of `class` left the
+    /// shard, releasing `demand` slots and retiring its backlog.
+    pub fn on_complete(&mut self, shard: usize, class: usize, demand: usize, expected_millis: u64) {
+        let t = &mut self.shards[shard];
+        t.backlog_millis = t.backlog_millis.saturating_sub(expected_millis);
+        let c = &mut t.classes[class];
+        c.free = (c.free + demand).min(c.total);
+    }
+
+    /// Withdraw: a still-queued job left `shard` (queued migration out).
+    pub fn on_withdraw(&mut self, shard: usize, expected_millis: u64) {
+        let t = &mut self.shards[shard];
+        t.queued = t.queued.saturating_sub(1);
+        t.backlog_millis = t.backlog_millis.saturating_sub(expected_millis);
+    }
+
+    /// Full-snapshot resync for one shard (ring overflow recovery): drop
+    /// the tracked state and install the values read under that shard's
+    /// server lock. `free_per_class` must be indexed by the same class
+    /// mapping as `new`.
+    pub fn reset_shard(
+        &mut self,
+        shard: usize,
+        free_per_class: &[usize],
+        queued: usize,
+        backlog_millis: u64,
+    ) {
+        let t = &mut self.shards[shard];
+        for (c, &free) in t.classes.iter_mut().zip(free_per_class) {
+            c.free = free.min(c.total);
+        }
+        t.queued = queued;
+        t.backlog_millis = backlog_millis;
+    }
+
+    pub fn free_slots(&self, shard: usize, class: usize) -> usize {
+        self.shards[shard].classes[class].free
+    }
+
+    pub fn queued(&self, shard: usize) -> usize {
+        self.shards[shard].queued
+    }
+
+    pub fn backlog_millis(&self, shard: usize) -> u64 {
+        self.shards[shard].backlog_millis
+    }
+
+    pub fn max_node_slots(&self, shard: usize, class: usize) -> usize {
+        self.shards[shard].classes[class].max_node
+    }
+
+    pub fn total_slots(&self, shard: usize, class: usize) -> usize {
+        self.shards[shard].classes[class].total
+    }
+
+    /// The tracked [`ShardLoad`] for a job of `class` demanding `demand`
+    /// slots; staging terms are the caller's overlay (the presence index
+    /// supplies them lock-free in the live cluster).
+    pub fn load(
+        &self,
+        shard: usize,
+        class: usize,
+        demand: usize,
+        staging_secs: f64,
+        data_staging_secs: f64,
+    ) -> ShardLoad {
+        let t = &self.shards[shard];
+        let c = &t.classes[class];
+        ShardLoad {
+            shard,
+            eligible: c.max_node >= demand.max(1),
+            free_slots: c.free,
+            total_slots: c.total,
+            queued: t.queued,
+            backlog_secs: t.backlog_millis as f64 / 1_000.0,
+            staging_secs,
+            data_staging_secs,
+        }
+    }
+
+    /// The debug cross-check, per class: every tracked field (including
+    /// eligibility for `demand`) and the resulting placement score must
+    /// equal the under-the-lock snapshot EXACTLY, or the ledger drifted.
+    pub fn verify_against(
+        &self,
+        class: usize,
+        demand: usize,
+        snaps: &[ShardLoad],
+    ) -> std::result::Result<(), String> {
+        if snaps.len() != self.shards.len() {
+            return Err(format!(
+                "ledger has {} shards, snapshot has {}",
+                self.shards.len(),
+                snaps.len()
+            ));
+        }
+        for snap in snaps {
+            let tracked = self.load(
+                snap.shard,
+                class,
+                demand,
+                snap.staging_secs,
+                snap.data_staging_secs,
+            );
+            if tracked.eligible != snap.eligible
+                || tracked.free_slots != snap.free_slots
+                || tracked.total_slots != snap.total_slots
+                || tracked.queued != snap.queued
+                || tracked.backlog_secs != snap.backlog_secs
+                || PlacementEngine::score(&tracked) != PlacementEngine::score(snap)
+            {
+                return Err(format!(
+                    "shard {} drifted (class {class}): ledger {:?} vs snapshot {:?}",
+                    snap.shard, tracked, snap
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -557,5 +763,198 @@ mod tests {
         snap[0].backlog_secs += 0.001; // any drift, however small, is fatal
         let err = t.verify_against(&snap).unwrap_err();
         assert!(err.contains("shard 0 drifted"), "{err}");
+    }
+
+    fn two_class_ledger() -> ClassLedger {
+        // shard 0: 4 cpu slots (max node 2), no gpu; shard 1: 2 cpu + 2 gpu
+        ClassLedger::new(&[
+            vec![
+                ClassCaps { total_slots: 4, max_node_slots: 2 },
+                ClassCaps { total_slots: 0, max_node_slots: 0 },
+            ],
+            vec![
+                ClassCaps { total_slots: 2, max_node_slots: 1 },
+                ClassCaps { total_slots: 2, max_node_slots: 2 },
+            ],
+        ])
+    }
+
+    /// Tentpole: per-class eligibility falls out of the stored largest-node
+    /// slot count — a class the shard does not field (max 0) is never
+    /// eligible because every job demands at least one slot, matching the
+    /// server's `max_node_slots(class).is_some_and(|m| m >= demand)`.
+    #[test]
+    fn class_ledger_tracks_eligibility_and_free_slots_per_class() {
+        let mut l = two_class_ledger();
+        assert_eq!(l.shard_count(), 2);
+        // gpu job, demand 1: shard 0 has no gpu nodes at all
+        assert!(!l.load(0, 1, 1, 0.0, 0.0).eligible);
+        assert!(l.load(1, 1, 1, 0.0, 0.0).eligible);
+        // cpu job, demand 2: shard 1's largest cpu node holds only 1 slot
+        assert!(l.load(0, 0, 2, 0.0, 0.0).eligible);
+        assert!(!l.load(1, 0, 2, 0.0, 0.0).eligible);
+
+        // dispatch a 2-slot gpu job on shard 1: gpu free drops, cpu doesn't
+        l.on_submit(1, 4000);
+        l.on_dispatch(1, 1, 2);
+        assert_eq!(l.free_slots(1, 1), 0);
+        assert_eq!(l.free_slots(1, 0), 2);
+        assert_eq!(l.queued(1), 0);
+        assert_eq!(l.backlog_millis(1), 4000);
+        // completion releases exactly the class it consumed
+        l.on_complete(1, 1, 2, 4000);
+        assert_eq!(l.free_slots(1, 1), 2);
+        assert_eq!(l.backlog_millis(1), 0);
+    }
+
+    #[test]
+    fn class_ledger_resync_installs_snapshot_values() {
+        let mut l = two_class_ledger();
+        l.on_submit(0, 9000);
+        l.on_submit(0, 1000);
+        l.on_dispatch(0, 0, 2);
+        // overflow recovery: install what the server lock reported
+        l.reset_shard(0, &[1, 0], 3, 12_345);
+        assert_eq!(l.free_slots(0, 0), 1);
+        assert_eq!(l.queued(0), 3);
+        assert_eq!(l.backlog_millis(0), 12_345);
+        // free is clamped to the class total even on a bogus snapshot
+        l.reset_shard(0, &[99, 99], 0, 0);
+        assert_eq!(l.free_slots(0, 0), 4);
+        assert_eq!(l.free_slots(0, 1), 0);
+    }
+
+    #[test]
+    fn class_ledger_verify_reports_drift_per_class() {
+        let mut l = two_class_ledger();
+        l.on_submit(1, 2500);
+        let snap = |shard: usize| l.load(shard, 0, 1, 0.0, 0.0);
+        let mut snaps = vec![snap(0), snap(1)];
+        l.verify_against(0, 1, &snaps).unwrap();
+        snaps[1].free_slots = 0;
+        let err = l.verify_against(0, 1, &snaps).unwrap_err();
+        assert!(err.contains("shard 1 drifted"), "{err}");
+        // shard-count mismatch is its own diagnostic
+        assert!(l
+            .verify_against(0, 1, &snaps[..1])
+            .unwrap_err()
+            .contains("snapshot has 1"));
+    }
+
+    /// A reference model for the property test: explicit job lists per
+    /// shard, recomputed into per-class snapshot loads from scratch.
+    #[derive(Debug, Clone)]
+    struct ModelJob {
+        class: usize,
+        demand: usize,
+        expected_millis: u64,
+        running: bool,
+    }
+
+    fn recompute(caps: &[Vec<ClassCaps>], jobs: &[Vec<ModelJob>], class: usize) -> Vec<ShardLoad> {
+        caps.iter()
+            .enumerate()
+            .map(|(s, shard_caps)| {
+                let used: usize = jobs[s]
+                    .iter()
+                    .filter(|j| j.running && j.class == class)
+                    .map(|j| j.demand)
+                    .sum();
+                ShardLoad {
+                    shard: s,
+                    eligible: shard_caps[class].max_node_slots >= 1,
+                    free_slots: shard_caps[class].total_slots.saturating_sub(used),
+                    total_slots: shard_caps[class].total_slots,
+                    queued: jobs[s].iter().filter(|j| !j.running).count(),
+                    backlog_secs: jobs[s]
+                        .iter()
+                        .map(|j| j.expected_millis)
+                        .sum::<u64>() as f64
+                        / 1_000.0,
+                    staging_secs: 0.0,
+                    data_staging_secs: 0.0,
+                }
+            })
+            .collect()
+    }
+
+    /// Satellite (ISSUE 10): randomized submit/dispatch/complete/preempt
+    /// sequences over heterogeneous shard shapes keep the ledger's loads
+    /// EXACTLY equal to a full snapshot recompute after every event —
+    /// exact equality, not epsilon, for every class.
+    #[test]
+    fn prop_class_ledger_matches_snapshot_recompute_exactly() {
+        crate::util::prop::check(
+            "class-ledger-exact",
+            48,
+            |rng| {
+                // heterogeneous shapes: 1..=4 shards, 2 classes, uneven caps
+                let shards = rng.range(1, 4);
+                let caps: Vec<Vec<ClassCaps>> = (0..shards)
+                    .map(|_| {
+                        (0..2)
+                            .map(|_| {
+                                let max = rng.below(4); // 0 = class absent
+                                ClassCaps {
+                                    total_slots: if max == 0 { 0 } else { max * rng.range(1, 3) },
+                                    max_node_slots: max,
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let ops: Vec<u64> = (0..rng.range(40, 120)).map(|_| rng.next_u64()).collect();
+                (caps, ops)
+            },
+            |(caps, ops)| {
+                let mut ledger = ClassLedger::new(caps);
+                let mut jobs: Vec<Vec<ModelJob>> = vec![Vec::new(); caps.len()];
+                for &op in ops {
+                    let shard = (op % caps.len() as u64) as usize;
+                    let class = ((op >> 8) % 2) as usize;
+                    match (op >> 16) % 4 {
+                        // submit: demand within the class's largest node
+                        0 if caps[shard][class].max_node_slots > 0 => {
+                            let demand =
+                                1 + ((op >> 24) as usize % caps[shard][class].max_node_slots);
+                            let expected = 500 + (op >> 32) % 10_000;
+                            jobs[shard].push(ModelJob {
+                                class,
+                                demand,
+                                expected_millis: expected,
+                                running: false,
+                            });
+                            ledger.on_submit(shard, expected);
+                        }
+                        // dispatch: first queued job that fits its class
+                        1 => {
+                            let free: Vec<usize> = (0..2)
+                                .map(|c| ledger.free_slots(shard, c))
+                                .collect();
+                            if let Some(j) = jobs[shard]
+                                .iter_mut()
+                                .find(|j| !j.running && j.demand <= free[j.class])
+                            {
+                                j.running = true;
+                                ledger.on_dispatch(shard, j.class, j.demand);
+                            }
+                        }
+                        // complete AND preempt apply the same delta (free
+                        // the slots, retire the backlog, drop the job)
+                        _ => {
+                            if let Some(i) = jobs[shard].iter().position(|j| j.running) {
+                                let j = jobs[shard].remove(i);
+                                ledger.on_complete(shard, j.class, j.demand, j.expected_millis);
+                            }
+                        }
+                    }
+                    for class in 0..2 {
+                        let snaps = recompute(caps, &jobs, class);
+                        ledger.verify_against(class, 1, &snaps)?;
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

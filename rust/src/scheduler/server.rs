@@ -780,6 +780,22 @@ impl TorqueServer {
         queued + running
     }
 
+    /// [`Self::backlog_secs`] without the wall-clock decay, in integer
+    /// milliseconds: every queued AND running job contributes its full
+    /// expected run time, rounded once per job. This is the quantity the
+    /// cluster's incremental placement ledger maintains by O(1) deltas —
+    /// integer sums are order-independent, so the ledger and a full
+    /// under-the-lock recompute agree EXACTLY (and routing stops depending
+    /// on when the clock is read, which also makes decisions replayable).
+    pub fn backlog_expected_millis(&self) -> u64 {
+        self.queue
+            .iter()
+            .chain(self.running.keys())
+            .filter_map(|id| self.jobs.get(id))
+            .map(|r| (r.script.expected_secs() * 1_000.0).round() as u64)
+            .sum()
+    }
+
     /// Most jobs ever Running at once on this server.
     pub fn peak_running(&self) -> usize {
         self.peak_running

@@ -304,6 +304,11 @@ pub struct BatchReport {
     /// Per-shard breakdown (always present when the batch ran through the
     /// service; rendered when the cluster has more than one shard).
     pub cluster: Option<ClusterReport>,
+    /// Routing-decision latency quantiles (ledger read + route pick per
+    /// submit), from the process-wide `route_decision_seconds` histogram;
+    /// None before any cluster routing ran.
+    pub route_p50_secs: Option<f64>,
+    pub route_p99_secs: Option<f64>,
 }
 
 impl BatchReport {
@@ -322,6 +327,12 @@ impl BatchReport {
             .filter(|j| j.state == 'C')
             .filter_map(|j| j.run_secs)
             .sum();
+        let route = &crate::obs::metrics::global().route_decision_seconds;
+        let (route_p50_secs, route_p99_secs) = if route.count() > 0 {
+            (Some(route.quantile(0.50)), Some(route.quantile(0.99)))
+        } else {
+            (None, None)
+        };
         BatchReport {
             jobs,
             makespan_secs,
@@ -330,6 +341,8 @@ impl BatchReport {
             build_stats,
             model_r2,
             cluster: None,
+            route_p50_secs,
+            route_p99_secs,
         }
     }
 
@@ -447,6 +460,13 @@ impl BatchReport {
         if let Some(werr) = self.mean_abs_wait_pct_error() {
             out.push_str(&format!(
                 "queue-wait mean abs err {werr:.1}% (separate wait target)\n"
+            ));
+        }
+        if let (Some(p50), Some(p99)) = (self.route_p50_secs, self.route_p99_secs) {
+            out.push_str(&format!(
+                "routing decision p50 {:.1}us | p99 {:.1}us (incremental ledger)\n",
+                p50 * 1e6,
+                p99 * 1e6
             ));
         }
         // dataset staging summary whenever the batch actually moved data
